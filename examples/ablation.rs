@@ -1,0 +1,41 @@
+//! Ablation demo (paper Figure 3 at example scale): train the `full` and
+//! `no_attention` model variants on the same workload and compare, showing
+//! how the AOT variant system exposes architecture ablations to rust.
+//!
+//!     cargo run --release --example ablation [workload] [steps]
+
+use gdp::coordinator::{train, Session, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let workload = std::env::args().nth(1).unwrap_or_else(|| "gnmt2".into());
+    let steps: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let artifacts = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("full/manifest.json").exists()
+            && artifacts.join("no_attention/manifest.json").exists(),
+        "run `make artifacts` first (needs full + no_attention variants)"
+    );
+
+    let mut results = Vec::new();
+    for variant in ["full", "no_attention"] {
+        println!("=== training variant {variant} on {workload} ({steps} steps) ===");
+        let session = Session::open(artifacts, variant)?;
+        let task = session.task(&workload, 0)?;
+        let mut store = session.init_params()?;
+        let cfg = TrainConfig { steps, verbose: false, ..Default::default() };
+        let res = train(&session.policy, &mut store, &[task], &cfg)?;
+        let best = res.per_task[0].best_time;
+        println!("  best placement: {best:.4}s ({} sim evals)", res.sim_evals);
+        results.push((variant, best));
+    }
+
+    let (full, noat) = (results[0].1, results[1].1);
+    println!(
+        "\nattention gain: {:+.1}% run-time reduction (paper Fig. 3: ~18% avg)",
+        (noat - full) / noat * 100.0
+    );
+    Ok(())
+}

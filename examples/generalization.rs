@@ -1,0 +1,57 @@
+//! Generalization demo (paper §4.3 / Figure 2 at example scale): pretrain
+//! GDP-batch on several workloads, then place an UNSEEN workload zero-shot
+//! and after a short fine-tune, comparing against the human expert.
+//!
+//!     cargo run --release --example generalization [target]
+
+use gdp::coordinator::baseline_eval::eval_human;
+use gdp::coordinator::{infer, train, Session, TrainConfig};
+use gdp::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let target = std::env::args().nth(1).unwrap_or_else(|| "wavenet2".into());
+    let artifacts = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("full/manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+
+    let session = Session::open(artifacts, "full")?;
+
+    // Pretrain on four other families (target held out).
+    let pretrain_ids: Vec<&str> = ["rnnlm2", "gnmt2", "txl2", "inception", "amoebanet"]
+        .into_iter()
+        .filter(|id| *id != target)
+        .collect();
+    println!("pretraining GDP-batch on {pretrain_ids:?} (target {target} held out)");
+    let mut tasks = Vec::new();
+    for id in &pretrain_ids {
+        tasks.push(session.task(id, 0)?);
+    }
+    let mut store = session.init_params()?;
+    let cfg = TrainConfig { steps: 120, verbose: true, log_every: 30, ..Default::default() };
+    train(&session.policy, &mut store, &tasks, &cfg)?;
+
+    // Zero-shot on the held-out target.
+    let task = session.task(&target, 0)?;
+    let zs = infer(&session.policy, &store, &task, 8, 11)?;
+    println!("\nzero-shot on {target}: {:.4}s", zs.best_time);
+
+    // Fine-tune < 50 steps (paper: takes under a minute).
+    store.reset_optimizer()?;
+    let ft_cfg = TrainConfig { steps: 30, lr: 3e-4, verbose: false, ..Default::default() };
+    let ft_task = session.task(&target, 0)?;
+    let ft = train(&session.policy, &mut store, &[ft_task], &ft_cfg)?;
+    let ft_best = ft.per_task[0].best_time.min(zs.best_time);
+    println!("after 30-step fine-tune: {ft_best:.4}s");
+
+    let hp = eval_human(&workloads::by_id(&target).unwrap()).step_time;
+    if let Some(h) = hp {
+        println!("human expert: {h:.4}s");
+        println!(
+            "fine-tuned GDP vs human: {:+.1}%  (paper Fig. 2: beats HP on all six)",
+            (h - ft_best) / h * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: build a custom dataflow graph with the public API, compare
+//! baseline placements in the simulator, and (if `make artifacts` has run)
+//! place it with the GDP policy zero-shot.
+//!
+//!     cargo run --release --example quickstart
+
+use gdp::baselines::{human_expert, metis_place, random_place};
+use gdp::coordinator::{infer, Session};
+use gdp::graph::{GraphBuilder, OpKind};
+use gdp::sim::{Simulator, Topology};
+use gdp::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe a model as an op-level dataflow graph: a toy 2-branch
+    //    encoder feeding a fused head, targeting 2 devices.
+    let mut b = GraphBuilder::new("quickstart", 2);
+    let input = b.op("input", OpKind::Input).shape([32, 1024, 0, 0]).id();
+    let mut branch_ends = Vec::new();
+    for br in 0..2 {
+        let mut x = input;
+        for l in 0..6 {
+            let w = b
+                .op(format!("br{br}/l{l}/w"), OpKind::Variable)
+                .params(4 * 1024 * 1024)
+                .layer(l)
+                .id();
+            x = b
+                .op(format!("br{br}/l{l}/mm"), OpKind::MatMul)
+                .flops(2.0 * 32.0 * 1024.0 * 1024.0 * 64.0)
+                .shape([32, 1024, 0, 0])
+                .layer(l)
+                .after(&[x, w])
+                .id();
+        }
+        branch_ends.push(x);
+    }
+    let concat = b
+        .op("concat", OpKind::Concat)
+        .shape([32, 2048, 0, 0])
+        .layer(6)
+        .after(&branch_ends)
+        .id();
+    let loss = b
+        .op("loss", OpKind::Loss)
+        .flops(32.0 * 2048.0)
+        .shape([1, 0, 0, 0])
+        .layer(7)
+        .after(&[concat])
+        .id();
+    b.op("out", OpKind::Output).layer(7).after(&[loss]);
+    let graph = b.build();
+    println!("graph: {} nodes, {} edges", graph.n(), graph.edges.len());
+
+    // 2. Simulate baseline placements.
+    let topo = Topology::p100_pcie(2);
+    let sim = Simulator::new(&graph, &topo);
+    let mut rng = Rng::new(7);
+    for (name, placement) in [
+        ("single-device", vec![0; graph.n()]),
+        ("human (layer pipeline)", human_expert(&graph).devices),
+        ("metis (min-cut)", metis_place(&graph).devices),
+        ("random", random_place(&graph, &mut rng).devices),
+    ] {
+        let rep = sim.simulate(&placement);
+        println!(
+            "  {name:<24} step {:>8.4}s  comm {:>6.1} MB  peak {:?} GB",
+            rep.step_time,
+            rep.comm_bytes as f64 / 1e6,
+            rep.peak_mem.iter().map(|&x| x >> 30).collect::<Vec<_>>()
+        );
+    }
+
+    // 3. GDP zero-shot placement (skipped when artifacts are absent).
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("full/manifest.json").exists() {
+        let session = Session::open(artifacts, "full")?;
+        let task = gdp::policy::PlacementTask::new(
+            "quickstart",
+            graph,
+            session.feat_dims(),
+            0,
+        );
+        let store = session.init_params()?;
+        let best = infer(&session.policy, &store, &task, 16, 7)?;
+        println!(
+            "  {:<24} step {:>8.4}s  (policy zero-shot, untrained params)",
+            "gdp zero-shot", best.best_time
+        );
+        println!("\nTrain a policy with: gdp train <workload> --save ckpt.bin");
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` to try the policy)");
+    }
+    Ok(())
+}

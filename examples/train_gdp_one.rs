@@ -1,0 +1,83 @@
+//! End-to-end driver (DESIGN.md: the repo's full-system validation run):
+//! train the GDP policy with PPO on a real workload from the paper's
+//! Table 1, through all three layers —
+//!   L1 Pallas kernels + L2 JAX policy (AOT HLO via `make artifacts`)
+//!   -> L3 rust coordinator: PJRT execution, rollout sampling, event-driven
+//!      multi-device simulation for the reward, PPO updates —
+//! logging the reward curve and reporting the paper's headline comparison
+//! (GDP vs human expert / METIS / HDP) for that workload.
+//!
+//!     cargo run --release --example train_gdp_one [workload] [steps]
+
+use gdp::coordinator::baseline_eval::{eval_hdp, eval_human, eval_metis};
+use gdp::coordinator::metrics::RunLogger;
+use gdp::coordinator::{train, Session, TrainConfig};
+use gdp::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let workload = args.get(1).map(String::as_str).unwrap_or("txl2").to_string();
+    let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let artifacts = std::path::Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("full/manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+
+    println!("=== GDP-one end-to-end: {workload}, {steps} PPO steps ===");
+    let session = Session::open(artifacts, "full")?;
+    let task = session.task(&workload, 0)?;
+    println!(
+        "graph: {} ops (coarse {}), {} devices",
+        task.graph.n(),
+        task.n_coarse(),
+        task.graph.num_devices
+    );
+
+    let mut store = session.init_params()?;
+    let cfg = TrainConfig { steps, verbose: true, ..Default::default() };
+    let result = train(&session.policy, &mut store, &[task], &cfg)?;
+    let best = &result.per_task[0];
+
+    // Log the training curve.
+    let mut logger = RunLogger::create(
+        std::path::Path::new("runs"),
+        &format!("train_gdp_one_{workload}"),
+    )?;
+    for s in &result.history {
+        logger.log_step(&workload, s)?;
+    }
+    logger.log_result("gdp-one", &result)?;
+    println!("reward curve -> {}", logger.path().display());
+
+    // Headline comparison for this workload.
+    let g = workloads::by_id(&workload).unwrap();
+    let hp = eval_human(&g).step_time;
+    let metis = eval_metis(&g).step_time;
+    let (hdp, _) = eval_hdp(&g, 600, 7);
+    let fmt = |o: Option<f64>| o.map_or("OOM".into(), |t| format!("{t:.4}s"));
+    println!("\n{:<14} {:>10}", "method", "step time");
+    println!("{:<14} {:>10}", "gdp-one", format!("{:.4}s", best.best_time));
+    println!("{:<14} {:>10}", "human", fmt(hp));
+    println!("{:<14} {:>10}", "metis", fmt(metis));
+    println!("{:<14} {:>10}", "hdp", fmt(hdp.step_time));
+    if let Some(h) = hp {
+        println!(
+            "\nGDP vs human: {:+.1}% run-time reduction (paper Table 1 range: -6%..50%)",
+            (h - best.best_time) / h * 100.0
+        );
+    }
+    println!(
+        "search: {} sim evals, {:.1}s wall ({:.1}s XLA)",
+        result.sim_evals, result.wall_secs, result.xla_secs
+    );
+
+    store.save(
+        std::path::Path::new("runs/ckpt")
+            .join(format!("{workload}.bin"))
+            .as_path(),
+    )?;
+    println!("checkpoint saved to runs/ckpt/{workload}.bin");
+    Ok(())
+}

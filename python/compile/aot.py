@@ -1,0 +1,133 @@
+"""AOT lowering: JAX policy -> HLO *text* artifacts for the rust runtime.
+
+Emits, per model variant (full / no_attention / no_superposition):
+
+    artifacts/<variant>/policy_fwd.hlo.txt   inference (rollout sampling)
+    artifacts/<variant>/train_step.hlo.txt   PPO + Adam update
+    artifacts/<variant>/manifest.json        flattened param order + shapes,
+                                             input/output orders, dims
+    artifacts/<variant>/params_init.bin      f32 LE init params, sorted-key
+                                             concatenation
+
+plus a top-level artifacts/index.json.
+
+HLO TEXT is the interchange format, not ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Python runs ONLY here, at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT_DIMS, VARIANTS, Dims, Variant
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _param_entries(params: dict) -> list:
+    entries, offset = [], 0
+    for name in sorted(params):
+        arr = params[name]
+        n = int(np.prod(arr.shape)) if arr.shape else 1
+        entries.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "elements": n,
+            "offset": offset,
+        })
+        offset += n
+    return entries
+
+
+def _spec_of(arr: np.ndarray) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def lower_variant(dims: Dims, variant: Variant, out_dir: pathlib.Path,
+                  seed: int = 0) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    params = model.init_params(dims, variant, seed=seed)
+    pspecs = {k: _spec_of(v) for k, v in params.items()}
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    bspecs = model.batch_specs(dims)
+    tspecs = model.train_extra_specs(dims)
+
+    fwd = model.make_policy_fwd(dims, variant)
+    fwd_lowered = jax.jit(fwd).lower(pspecs, *bspecs)
+    (out_dir / "policy_fwd.hlo.txt").write_text(to_hlo_text(fwd_lowered))
+
+    step = model.make_train_step(dims, variant)
+    step_lowered = jax.jit(step).lower(
+        pspecs, pspecs, pspecs, scalar, scalar, scalar, *bspecs, *tspecs)
+    (out_dir / "train_step.hlo.txt").write_text(to_hlo_text(step_lowered))
+
+    flat = np.concatenate(
+        [params[name].ravel() for name in sorted(params)]).astype("<f4")
+    (out_dir / "params_init.bin").write_bytes(flat.tobytes())
+
+    manifest = {
+        "variant": variant.name,
+        "use_attention": variant.use_attention,
+        "use_superposition": variant.use_superposition,
+        "dims": dims.to_json(),
+        "seed": seed,
+        "params": _param_entries(params),
+        "total_elements": int(flat.size),
+        # Flattened HLO parameter order (dict leaves are sorted by key):
+        "fwd_inputs": ["params..."] + list(BATCH_INPUT_NAMES),
+        "train_inputs": (["params...", "m...", "v...", "t", "lr", "entc"]
+                         + list(BATCH_INPUT_NAMES)
+                         + ["actions", "logp_old", "adv"]),
+        "train_outputs": ["params...", "m...", "v...",
+                          "loss", "entropy", "approx_kl"],
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+BATCH_INPUT_NAMES = ("feats", "nbr_idx", "nbr_mask", "node_mask", "dev_mask")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default=",".join(v.name for v in VARIANTS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_root = pathlib.Path(args.out_dir)
+    wanted = set(args.variants.split(","))
+    index = {"dims": DEFAULT_DIMS.to_json(), "variants": []}
+    for variant in VARIANTS:
+        if variant.name not in wanted:
+            continue
+        print(f"[aot] lowering variant={variant.name} ...", flush=True)
+        man = lower_variant(DEFAULT_DIMS, variant, out_root / variant.name,
+                            seed=args.seed)
+        index["variants"].append(variant.name)
+        print(f"[aot]   params={man['total_elements']} elements", flush=True)
+    (out_root / "index.json").write_text(json.dumps(index, indent=1))
+    print(f"[aot] wrote {out_root}/index.json")
+
+
+if __name__ == "__main__":
+    main()

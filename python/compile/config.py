@@ -1,0 +1,74 @@
+"""Static AOT dimensions and model variants for the GDP policy.
+
+Everything the rust coordinator needs to marshal buffers is derived from
+these dims and re-exported through ``artifacts/<variant>/manifest.json``.
+All shapes are static because the policy is lowered once (AOT) to HLO text
+and executed from rust via PJRT; dynamic graphs are padded / coarsened to
+``N`` nodes by the rust featurizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    """Static shapes shared by the JAX model, the AOT artifacts and rust."""
+
+    N: int = 256       # max nodes per graph (padded)
+    K: int = 8         # sampled neighbors per node (GraphSAGE-style)
+    F: int = 48        # node feature width (see rust graph::features)
+    H: int = 64        # hidden width
+    D: int = 8         # max devices
+    B: int = 4         # rollouts per PPO minibatch
+    gnn_layers: int = 3
+    placer_layers: int = 2
+    heads: int = 4
+    ffn: int = 128
+    clip_eps: float = 0.2
+
+    @property
+    def dh(self) -> int:
+        assert self.H % self.heads == 0
+        return self.H // self.heads
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dh"] = self.dh
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A lowered model variant (Figure-3 ablations + the paper's
+    segment-level recurrent placer).
+
+    ``segments > 1`` enables Transformer-XL style segment-level recurrence
+    in the placer (paper §3.2): nodes are processed in segments of N //
+    segments, each attending over the cached (stop-gradient) hidden state
+    of the previous segment plus itself — the mechanism that lets GDP
+    scale to graphs far beyond one attention window.
+    """
+
+    name: str
+    use_attention: bool = True
+    use_superposition: bool = True
+    segments: int = 1
+
+
+VARIANTS = (
+    Variant("full", use_attention=True, use_superposition=True),
+    Variant("no_attention", use_attention=False, use_superposition=True),
+    Variant("no_superposition", use_attention=True, use_superposition=False),
+    Variant("segmented", use_attention=True, use_superposition=True, segments=2),
+)
+
+DEFAULT_DIMS = Dims()
+
+
+def variant_by_name(name: str) -> Variant:
+    for v in VARIANTS:
+        if v.name == name:
+            return v
+    raise KeyError(f"unknown variant {name!r}; have {[v.name for v in VARIANTS]}")

@@ -1,0 +1,83 @@
+"""Pallas kernel: fused masked multi-head attention for the placer network.
+
+The GDP placer is a Transformer-XL-style attentive network without
+positional embeddings (topology lives in the graph embedding). Its hot-spot
+is ``softmax(q kT / sqrt(dh) + mask) v``; this kernel fuses the score,
+mask, softmax and value contraction per (batch, head, q-block) grid cell so
+the full [N, N] score matrix never materializes across blocks.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): q-block [BLK, dh] and the
+whole K/V [N, dh] stripes sit in VMEM (N=256, dh=16 -> 16 KiB each); the
+two contractions hit the MXU, the row softmax the VPU. A CUDA flash-attn
+port would instead stream K/V tiles through shared memory. interpret=True
+here (CPU PJRT).
+
+Backward: ``jax.vjp`` of the jnp oracle (kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, mha_ref
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale):
+    q = q_ref[0, 0]       # [BLK, dh]
+    k = k_ref[0, 0]       # [N, dh]
+    v = v_ref[0, 0]       # [N, dh]
+    m = m_ref[0]          # [N]
+    s = jnp.dot(q, k.T) * scale                       # [BLK, N]
+    s = jnp.where(m[None, :] > 0, s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _mha_pallas(q, k, v, mask, block=128):
+    b, nh, n, dh = q.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    grid = (b, nh, n // block)
+    kern = functools.partial(_mha_kernel, scale=1.0 / (dh ** 0.5))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block, dh), lambda bi, hi, i: (bi, hi, i, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda bi, hi, i: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, n, dh), lambda bi, hi, i: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, n), lambda bi, hi, i: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block, dh),
+                               lambda bi, hi, i: (bi, hi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, n, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(q, k, v, mask)
+
+
+@jax.custom_vjp
+def mha(q: jax.Array, k: jax.Array, v: jax.Array,
+        mask: jax.Array) -> jax.Array:
+    """Fused masked MHA; see ``ref.mha_ref`` for semantics."""
+    return _mha_pallas(q, k, v, mask)
+
+
+def _fwd(q, k, v, mask):
+    return mha(q, k, v, mask), (q, k, v, mask)
+
+
+def _bwd(res, g):
+    q, k, v, mask = res
+    _, vjp = jax.vjp(lambda qq, kk, vv: mha_ref(qq, kk, vv, mask), q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+mha.defvjp(_fwd, _bwd)

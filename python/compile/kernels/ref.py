@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness source of truth*: ``pytest python/tests`` checks
+the Pallas kernels (interpret=True) against these functions over randomized
+shapes, and the kernels' custom VJPs are literally ``jax.vjp`` of these
+references, so forward/backward consistency holds by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sage_pool_ref(t: jax.Array, idx: jax.Array, mask: jax.Array) -> jax.Array:
+    """GraphSAGE max-pool aggregation over sampled neighbor lists.
+
+    Args:
+      t:    [B, N, H] transformed node features (already sigma(W h + b)).
+      idx:  [B, N, K] int32 neighbor indices into the N axis.
+      mask: [B, N, K] float, 1.0 where the neighbor slot is valid.
+
+    Returns:
+      [B, N, H] where out[b, v] = max over valid neighbors u of t[b, u],
+      and exactly zero for nodes with no valid neighbors.
+    """
+    # vmap the per-graph gather: t[b][idx[b]] -> [N, K, H]
+    gathered = jax.vmap(lambda tb, ib: tb[ib])(t, idx)
+    masked = jnp.where(mask[..., None] > 0, gathered, NEG_INF)
+    pooled = jnp.max(masked, axis=2)
+    deg = jnp.sum(mask, axis=2, keepdims=True)
+    return jnp.where(deg > 0, pooled, 0.0)
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+            mask: jax.Array) -> jax.Array:
+    """Masked multi-head attention oracle.
+
+    Args:
+      q, k, v: [B, nh, N, dh].
+      mask:    [B, N] float, 1.0 for valid (attendable) key positions.
+
+    Returns:
+      [B, nh, N, dh] = softmax(q kT / sqrt(dh) + log mask) v.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(mask[:, None, None, :] > 0, scores, NEG_INF)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,79 @@
+"""Pallas kernel: fused GraphSAGE max-pool neighbor aggregation (Eq. 2).
+
+The paper aggregates ``h_N(v) = max_u sigma(W h_u + b)`` over a node's
+neighborhood. With GraphSAGE-style fixed-size sampled neighbor lists the
+hot loop is a gather + masked max over ``[N, K, H]``, tiled here over node
+blocks so each grid cell holds one ``[BLK, K, H]`` tile plus the full
+``[N, H]`` feature table in VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the feature table tile is the
+VMEM-resident operand (N*H*4 = 64 KiB at production dims), the per-block
+gather+max runs on the VPU; a CUDA port would stage the table in shared
+memory per threadblock. On this sandbox the kernel runs interpret=True.
+
+Backward: ``jax.vjp`` of the pure-jnp oracle (kernels/ref.py), so the VJP is
+consistent-by-construction with the reference the kernel is tested against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, sage_pool_ref
+
+
+def _sage_pool_kernel(t_ref, idx_ref, mask_ref, o_ref):
+    """One grid cell: pool a [BLK, K] neighbor tile against the full table."""
+    t = t_ref[0]          # [N, H]   full transformed-feature table
+    idx = idx_ref[0]      # [BLK, K] neighbor ids for this node block
+    msk = mask_ref[0]     # [BLK, K] 1.0 = valid neighbor slot
+    gathered = t[idx]                                   # [BLK, K, H]
+    masked = jnp.where(msk[..., None] > 0, gathered, NEG_INF)
+    pooled = jnp.max(masked, axis=1)                    # [BLK, H]
+    deg = jnp.sum(msk, axis=1, keepdims=True)           # [BLK, 1]
+    o_ref[0] = jnp.where(deg > 0, pooled, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _sage_pool_pallas(t, idx, mask, block=128):
+    b, n, h = t.shape
+    k = idx.shape[-1]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    grid = (b, n // block)
+    return pl.pallas_call(
+        _sage_pool_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, h), lambda bi, i: (bi, 0, 0)),
+            pl.BlockSpec((1, block, k), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, block, k), lambda bi, i: (bi, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, h), lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, h), t.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(t, idx, mask)
+
+
+@jax.custom_vjp
+def sage_pool(t: jax.Array, idx: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked neighbor max-pool; see ``ref.sage_pool_ref`` for semantics."""
+    return _sage_pool_pallas(t, idx, mask)
+
+
+def _fwd(t, idx, mask):
+    return sage_pool(t, idx, mask), (t, idx, mask)
+
+
+def _bwd(res, g):
+    t, idx, mask = res
+    _, vjp = jax.vjp(lambda tt: sage_pool_ref(tt, idx, mask), t)
+    (dt,) = vjp(g)
+    return dt, None, None
+
+
+sage_pool.defvjp(_fwd, _bwd)

@@ -1,0 +1,360 @@
+"""L2: the GDP policy network and its PPO train step, in JAX.
+
+Architecture (paper §3, Figure 1):
+
+  node features --[GraphSAGE-style GNN, max-pool aggregation (Eq. 2-3),
+                   Pallas kernel ``sage_pool``]--> per-node embeddings
+  embeddings   --[Transformer placer, no positional embedding, fused
+                   masked MHA Pallas kernel ``attention.mha``]--> logits
+  logits [B, N, D] = a device distribution for EVERY node at once
+                     (no hierarchical grouping stage).
+
+Batch training with parameter superposition (Eq. 4): a feature-conditioning
+layer derived from the pooled graph embedding g elementwise-modulates the
+input of every dense block in the placer, so one shared policy serves
+heterogeneous graphs without interference.
+
+Both ``policy_fwd`` and ``train_step`` (PPO clipped objective + Adam) are
+lowered ONCE to HLO text by ``aot.py``; python never runs on the rust
+training hot path. Params travel as a flat dict with **sorted keys** -- the
+same order rust reads from ``manifest.json``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import Dims, Variant
+from .kernels.attention import mha
+from .kernels.sage_pool import sage_pool
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -1e30
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def init_params(dims: Dims, variant: Variant, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Build the initial parameter dict (numpy, float32, sorted-key order).
+
+    Conditioning (superposition) layers start at identity: W=0, b=0 gives
+    scale = 2*sigmoid(0) = 1, so batch training begins from the plain
+    shared-policy dynamics.
+    """
+    rng = np.random.RandomState(seed)
+    p: Dict[str, np.ndarray] = {}
+
+    def dense(name: str, fan_in: int, fan_out: int, bias: bool = True):
+        std = math.sqrt(2.0 / fan_in)
+        p[f"{name}_w"] = rng.normal(0.0, std, (fan_in, fan_out)).astype(np.float32)
+        if bias:
+            p[f"{name}_b"] = np.zeros((fan_out,), np.float32)
+
+    def layernorm(name: str, width: int):
+        p[f"{name}_s"] = np.ones((width,), np.float32)
+        p[f"{name}_b"] = np.zeros((width,), np.float32)
+
+    H, F, D = dims.H, dims.F, dims.D
+    dense("embed", F, H)
+    for l in range(dims.gnn_layers):
+        dense(f"gnn{l}_agg", H, H)
+        dense(f"gnn{l}_comb", 2 * H, H)
+    for l in range(dims.placer_layers):
+        layernorm(f"pl{l}_ln1", H)
+        if variant.use_attention:
+            dense(f"pl{l}_wq", H, H, bias=False)
+            dense(f"pl{l}_wk", H, H, bias=False)
+            dense(f"pl{l}_wv", H, H, bias=False)
+            dense(f"pl{l}_wo", H, H)
+        else:
+            dense(f"pl{l}_mix", H, H)
+        layernorm(f"pl{l}_ln2", H)
+        dense(f"pl{l}_ffn1", H, dims.ffn)
+        dense(f"pl{l}_ffn2", dims.ffn, H)
+        if variant.use_superposition:
+            p[f"pl{l}_cond1_w"] = np.zeros((H, H), np.float32)
+            p[f"pl{l}_cond1_b"] = np.zeros((H,), np.float32)
+            p[f"pl{l}_cond2_w"] = np.zeros((H, H), np.float32)
+            p[f"pl{l}_cond2_b"] = np.zeros((H,), np.float32)
+    layernorm("head_ln", H)
+    dense("head", H, D)
+    if variant.use_superposition:
+        p["head_cond_w"] = np.zeros((H, H), np.float32)
+        p["head_cond_b"] = np.zeros((H,), np.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _cond_scale(g, w, b):
+    """Superposition conditioning: per-graph multiplicative gate in (0, 2)."""
+    return 2.0 * jax.nn.sigmoid(g @ w + b)
+
+
+def graph_embed(params: Params, dims: Dims, feats, nbr_idx, nbr_mask,
+                node_mask) -> jax.Array:
+    """GraphSAGE-style embedding (paper Eq. 2-3). Returns [B, N, H]."""
+    h = jax.nn.relu(feats @ params["embed_w"] + params["embed_b"])
+    h = h * node_mask[..., None]
+    for l in range(dims.gnn_layers):
+        # Eq. 2: h_N(v) = max_u sigma(W h_u + b)  -- Pallas kernel
+        t = jax.nn.sigmoid(h @ params[f"gnn{l}_agg_w"] + params[f"gnn{l}_agg_b"])
+        hn = sage_pool(t, nbr_idx, nbr_mask)
+        # Eq. 3: h'_v = f(concat(h_v, h_N(v)))
+        h = jax.nn.relu(
+            jnp.concatenate([h, hn], axis=-1) @ params[f"gnn{l}_comb_w"]
+            + params[f"gnn{l}_comb_b"])
+        h = h * node_mask[..., None]
+    return h
+
+
+def _mha_block(params: Params, dims: Dims, l: int, y, kv, kv_mask, B, N, H):
+    """One multi-head attention sub-layer; `kv` may include cached memory
+    (segment-level recurrence), in which case kv_mask covers mem + current."""
+    nh, dh = dims.heads, dims.dh
+    M = kv.shape[1]
+
+    def split(z, length):
+        return z.reshape(B, length, nh, dh).transpose(0, 2, 1, 3)
+
+    q = split(y @ params[f"pl{l}_wq_w"], N)
+    k = split(kv @ params[f"pl{l}_wk_w"], M)
+    v = split(kv @ params[f"pl{l}_wv_w"], M)
+    o = mha(q, k, v, kv_mask)                                    # Pallas
+    o = o.transpose(0, 2, 1, 3).reshape(B, N, H)
+    return o @ params[f"pl{l}_wo_w"] + params[f"pl{l}_wo_b"]
+
+
+def placer_segmented(params: Params, dims: Dims, variant: Variant, h,
+                     node_mask, dev_mask) -> jax.Array:
+    """Segment-level recurrent placer (paper §3.2, Transformer-XL style).
+
+    The node sequence is split into `variant.segments` windows. Layer l of
+    segment s attends over concat(sg(mem), x) where mem is layer l's INPUT
+    hidden state from segment s-1, cached with gradients stopped — extra
+    context at no extra backprop cost, exactly Dai et al.'s recurrence.
+    """
+    S = variant.segments
+    B, N, H = h.shape
+    assert N % S == 0, (N, S)
+    seg = N // S
+
+    denom = jnp.maximum(jnp.sum(node_mask, axis=-1, keepdims=True), 1.0)
+    g = jnp.sum(h * node_mask[..., None], axis=1) / denom        # [B, H]
+
+    seg_logits = []
+    # mem[l] = previous segment's layer-l input (+ its mask)
+    mem = [None] * dims.placer_layers
+    mem_mask = None
+    for s in range(S):
+        x = h[:, s * seg:(s + 1) * seg, :]
+        smask = node_mask[:, s * seg:(s + 1) * seg]
+        for l in range(dims.placer_layers):
+            y = _layer_norm(x, params[f"pl{l}_ln1_s"], params[f"pl{l}_ln1_b"])
+            if variant.use_superposition:
+                y = y * _cond_scale(g, params[f"pl{l}_cond1_w"],
+                                    params[f"pl{l}_cond1_b"])[:, None, :]
+            if mem[l] is None:
+                kv, kv_mask = y, smask
+            else:
+                kv = jnp.concatenate([jax.lax.stop_gradient(mem[l]), y], axis=1)
+                kv_mask = jnp.concatenate([mem_mask, smask], axis=1)
+            new_mem_l = y  # cache THIS segment's layer input for s+1
+            y = _mha_block(params, dims, l, y, kv, kv_mask, B, seg, H)
+            x = x + y * smask[..., None]
+            y = _layer_norm(x, params[f"pl{l}_ln2_s"], params[f"pl{l}_ln2_b"])
+            if variant.use_superposition:
+                y = y * _cond_scale(g, params[f"pl{l}_cond2_w"],
+                                    params[f"pl{l}_cond2_b"])[:, None, :]
+            y = jax.nn.relu(y @ params[f"pl{l}_ffn1_w"] + params[f"pl{l}_ffn1_b"])
+            y = y @ params[f"pl{l}_ffn2_w"] + params[f"pl{l}_ffn2_b"]
+            x = x + y * smask[..., None]
+            mem[l] = new_mem_l
+        mem_mask = smask
+        x = _layer_norm(x, params["head_ln_s"], params["head_ln_b"])
+        if variant.use_superposition:
+            x = x * _cond_scale(g, params["head_cond_w"],
+                                params["head_cond_b"])[:, None, :]
+        seg_logits.append(x @ params["head_w"] + params["head_b"])
+    logits = jnp.concatenate(seg_logits, axis=1)                 # [B, N, D]
+    return jnp.where(dev_mask[:, None, :] > 0, logits, NEG_INF)
+
+
+def placer(params: Params, dims: Dims, variant: Variant, h, node_mask,
+           dev_mask) -> jax.Array:
+    """Attentive placer: per-node device logits [B, N, D] in one shot."""
+    if variant.segments > 1:
+        return placer_segmented(params, dims, variant, h, node_mask, dev_mask)
+    # Pooled graph representation drives the superposition conditioner.
+    denom = jnp.maximum(jnp.sum(node_mask, axis=-1, keepdims=True), 1.0)
+    g = jnp.sum(h * node_mask[..., None], axis=1) / denom        # [B, H]
+
+    x = h
+    B, N, H = x.shape
+    nh, dh = dims.heads, dims.dh
+    for l in range(dims.placer_layers):
+        # --- attention (or token-local mixing) sub-layer ---
+        y = _layer_norm(x, params[f"pl{l}_ln1_s"], params[f"pl{l}_ln1_b"])
+        if variant.use_superposition:
+            y = y * _cond_scale(g, params[f"pl{l}_cond1_w"],
+                                params[f"pl{l}_cond1_b"])[:, None, :]
+        if variant.use_attention:
+            def split(z):
+                return z.reshape(B, N, nh, dh).transpose(0, 2, 1, 3)
+            q = split(y @ params[f"pl{l}_wq_w"])
+            k = split(y @ params[f"pl{l}_wk_w"])
+            v = split(y @ params[f"pl{l}_wv_w"])
+            o = mha(q, k, v, node_mask)                          # Pallas
+            o = o.transpose(0, 2, 1, 3).reshape(B, N, H)
+            y = o @ params[f"pl{l}_wo_w"] + params[f"pl{l}_wo_b"]
+        else:
+            y = jax.nn.relu(y @ params[f"pl{l}_mix_w"] + params[f"pl{l}_mix_b"])
+        x = x + y * node_mask[..., None]
+        # --- feed-forward sub-layer ---
+        y = _layer_norm(x, params[f"pl{l}_ln2_s"], params[f"pl{l}_ln2_b"])
+        if variant.use_superposition:
+            y = y * _cond_scale(g, params[f"pl{l}_cond2_w"],
+                                params[f"pl{l}_cond2_b"])[:, None, :]
+        y = jax.nn.relu(y @ params[f"pl{l}_ffn1_w"] + params[f"pl{l}_ffn1_b"])
+        y = y @ params[f"pl{l}_ffn2_w"] + params[f"pl{l}_ffn2_b"]
+        x = x + y * node_mask[..., None]
+
+    x = _layer_norm(x, params["head_ln_s"], params["head_ln_b"])
+    if variant.use_superposition:
+        x = x * _cond_scale(g, params["head_cond_w"],
+                            params["head_cond_b"])[:, None, :]
+    logits = x @ params["head_w"] + params["head_b"]             # [B, N, D]
+    # Inactive devices can never be sampled.
+    logits = jnp.where(dev_mask[:, None, :] > 0, logits, NEG_INF)
+    return logits
+
+
+def make_policy_fwd(dims: Dims, variant: Variant):
+    """Returns policy_fwd(params, feats, nbr_idx, nbr_mask, node_mask,
+    dev_mask) -> (logits,)."""
+
+    def policy_fwd(params, feats, nbr_idx, nbr_mask, node_mask, dev_mask):
+        h = graph_embed(params, dims, feats, nbr_idx, nbr_mask, node_mask)
+        logits = placer(params, dims, variant, h, node_mask, dev_mask)
+        return (logits,)
+
+    return policy_fwd
+
+
+# ---------------------------------------------------------------------------
+# PPO objective + Adam train step
+# ---------------------------------------------------------------------------
+
+def make_ppo_loss(dims: Dims, variant: Variant):
+    """PPO clipped surrogate with entropy bonus; reward/advantage computed by
+    the rust coordinator (reward = -sqrt(step_time), EMA baseline, -10 for
+    invalid placements -- paper §4.1)."""
+    fwd = make_policy_fwd(dims, variant)
+
+    def loss_fn(params, feats, nbr_idx, nbr_mask, node_mask, dev_mask,
+                actions, logp_old, adv, entc):
+        (logits,) = fwd(params, feats, nbr_idx, nbr_mask, node_mask, dev_mask)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)           # [B, N, D]
+        logp = jnp.take_along_axis(
+            logp_all, actions[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        nmask = node_mask
+        nvalid = jnp.maximum(jnp.sum(nmask), 1.0)
+
+        ratio = jnp.exp(logp - logp_old)
+        clipped = jnp.clip(ratio, 1.0 - dims.clip_eps, 1.0 + dims.clip_eps)
+        a = adv[:, None]
+        surrogate = jnp.minimum(ratio * a, clipped * a)
+        pg_loss = -jnp.sum(surrogate * nmask) / nvalid
+
+        p = jnp.exp(logp_all)
+        ent = -jnp.sum(p * logp_all, axis=-1)                    # [B, N]
+        entropy = jnp.sum(ent * nmask) / nvalid
+
+        approx_kl = jnp.sum((logp_old - logp) * nmask) / nvalid
+        loss = pg_loss - entc * entropy
+        return loss, (entropy, approx_kl)
+
+    return loss_fn
+
+
+def _global_norm_clip(grads: Params, max_norm: float) -> Params:
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / gn)
+    return {k: g * scale for k, g in grads.items()}
+
+
+def make_train_step(dims: Dims, variant: Variant):
+    """Returns train_step(params, m, v, t, lr, entc, <batch...>) ->
+    (new_params, new_m, new_v, loss, entropy, approx_kl).
+
+    t is the 1-based Adam step count as f32 (bias correction)."""
+    loss_fn = make_ppo_loss(dims, variant)
+
+    def train_step(params, m, v, t, lr, entc, feats, nbr_idx, nbr_mask,
+                   node_mask, dev_mask, actions, logp_old, adv):
+        (loss, (entropy, kl)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, feats, nbr_idx, nbr_mask,
+                                   node_mask, dev_mask, actions, logp_old,
+                                   adv, entc)
+        grads = _global_norm_clip(grads, GRAD_CLIP)
+        bc1 = 1.0 - ADAM_B1 ** t
+        bc2 = 1.0 - ADAM_B2 ** t
+        new_p, new_m, new_v = {}, {}, {}
+        for key in params:
+            g = grads[key]
+            mk = ADAM_B1 * m[key] + (1.0 - ADAM_B1) * g
+            vk = ADAM_B2 * v[key] + (1.0 - ADAM_B2) * g * g
+            update = (mk / bc1) / (jnp.sqrt(vk / bc2) + ADAM_EPS)
+            new_p[key] = params[key] - lr * update
+            new_m[key] = mk
+            new_v[key] = vk
+        return new_p, new_m, new_v, loss, entropy, kl
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (shared by aot.py and the tests)
+# ---------------------------------------------------------------------------
+
+def batch_specs(dims: Dims) -> Tuple[jax.ShapeDtypeStruct, ...]:
+    """Specs for (feats, nbr_idx, nbr_mask, node_mask, dev_mask)."""
+    B, N, K, F, D = dims.B, dims.N, dims.K, dims.F, dims.D
+    f32, i32 = jnp.float32, jnp.int32
+    return (
+        jax.ShapeDtypeStruct((B, N, F), f32),
+        jax.ShapeDtypeStruct((B, N, K), i32),
+        jax.ShapeDtypeStruct((B, N, K), f32),
+        jax.ShapeDtypeStruct((B, N), f32),
+        jax.ShapeDtypeStruct((B, D), f32),
+    )
+
+
+def train_extra_specs(dims: Dims) -> Tuple[jax.ShapeDtypeStruct, ...]:
+    """Specs for (actions, logp_old, adv)."""
+    B, N = dims.B, dims.N
+    return (
+        jax.ShapeDtypeStruct((B, N), jnp.int32),
+        jax.ShapeDtypeStruct((B, N), jnp.float32),
+        jax.ShapeDtypeStruct((B,), jnp.float32),
+    )

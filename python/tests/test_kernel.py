@@ -1,0 +1,181 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis-style randomized sweeps over shapes/dtypes are implemented with a
+deterministic parameter grid + seeded numpy RNG (the sandbox has no network
+for installing `hypothesis`; the sweep covers the same space explicitly).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.ref import sage_pool_ref, mha_ref
+from compile.kernels.sage_pool import sage_pool, _sage_pool_pallas
+from compile.kernels.attention import mha, _mha_pallas
+
+RNG = np.random.RandomState(0xC0FFEE)
+
+
+def rand_sage(b, n, k, h, degree_p=0.7):
+    t = jnp.asarray(RNG.randn(b, n, h), jnp.float32)
+    idx = jnp.asarray(RNG.randint(0, n, (b, n, k)), jnp.int32)
+    mask = jnp.asarray((RNG.rand(b, n, k) < degree_p).astype(np.float32))
+    return t, idx, mask
+
+
+def rand_mha(b, nh, n, dh, mask_p=0.8):
+    q = jnp.asarray(RNG.randn(b, nh, n, dh), jnp.float32)
+    k = jnp.asarray(RNG.randn(b, nh, n, dh), jnp.float32)
+    v = jnp.asarray(RNG.randn(b, nh, n, dh), jnp.float32)
+    m = jnp.asarray((RNG.rand(b, n) < mask_p).astype(np.float32))
+    # guarantee at least one valid key per graph (all-masked rows are
+    # never consumed: node_mask zeroes them downstream)
+    m = m.at[:, 0].set(1.0)
+    return q, k, v, m
+
+
+# ---------------------------------------------------------------------------
+# sage_pool
+# ---------------------------------------------------------------------------
+
+SAGE_SHAPES = [
+    (1, 8, 2, 4),
+    (2, 16, 4, 8),
+    (3, 32, 8, 16),
+    (2, 128, 8, 64),   # production-like tile
+    (4, 256, 8, 64),   # production dims
+    (1, 64, 1, 8),     # K=1
+    (2, 8, 16, 4),     # K > distinct nodes
+]
+
+
+@pytest.mark.parametrize("b,n,k,h", SAGE_SHAPES)
+def test_sage_pool_matches_ref(b, n, k, h):
+    t, idx, mask = rand_sage(b, n, k, h)
+    out = sage_pool(t, idx, mask)
+    ref = sage_pool_ref(t, idx, mask)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_sage_pool_zero_degree_rows_are_zero():
+    t, idx, _ = rand_sage(2, 16, 4, 8)
+    mask = jnp.zeros((2, 16, 4), jnp.float32)
+    out = sage_pool(t, idx, mask)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_sage_pool_single_neighbor_identity():
+    # With exactly one valid neighbor, pooling returns that row.
+    b, n, k, h = 1, 8, 4, 4
+    t, _, _ = rand_sage(b, n, k, h)
+    idx = jnp.zeros((b, n, k), jnp.int32).at[:, :, 0].set(3)
+    mask = jnp.zeros((b, n, k), jnp.float32).at[:, :, 0].set(1.0)
+    out = sage_pool(t, idx, mask)
+    np.testing.assert_allclose(out[0, 5], t[0, 3], rtol=1e-6)
+
+
+def test_sage_pool_permutation_invariant_in_slots():
+    # max-pooling is invariant to the order of neighbor slots.
+    t, idx, mask = rand_sage(2, 16, 4, 8)
+    perm = RNG.permutation(4)
+    out1 = sage_pool(t, idx, mask)
+    out2 = sage_pool(t, idx[:, :, perm], mask[:, :, perm])
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+def test_sage_pool_block_sizes_agree():
+    t, idx, mask = rand_sage(2, 64, 4, 8)
+    a = _sage_pool_pallas(t, idx, mask, block=64)
+    b = _sage_pool_pallas(t, idx, mask, block=32)
+    c = _sage_pool_pallas(t, idx, mask, block=16)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(a, c, rtol=1e-6)
+
+
+def test_sage_pool_grad_matches_ref_grad():
+    t, idx, mask = rand_sage(2, 16, 4, 8)
+
+    def loss_kernel(tt):
+        return jnp.sum(sage_pool(tt, idx, mask) ** 2)
+
+    def loss_ref(tt):
+        return jnp.sum(sage_pool_ref(tt, idx, mask) ** 2)
+
+    g1 = jax.grad(loss_kernel)(t)
+    g2 = jax.grad(loss_ref)(t)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+MHA_SHAPES = [
+    (1, 1, 8, 4),
+    (2, 2, 16, 8),
+    (2, 4, 64, 16),
+    (4, 4, 256, 16),   # production dims
+    (1, 8, 32, 4),
+    (3, 1, 128, 32),
+]
+
+
+@pytest.mark.parametrize("b,nh,n,dh", MHA_SHAPES)
+def test_mha_matches_ref(b, nh, n, dh):
+    q, k, v, m = rand_mha(b, nh, n, dh)
+    out = mha(q, k, v, m)
+    ref = mha_ref(q, k, v, m)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_mha_rows_are_convex_combinations():
+    # softmax weights are a distribution: outputs lie within [min, max] of
+    # the unmasked value rows, per channel.
+    q, k, v, m = rand_mha(2, 2, 16, 8, mask_p=1.0)
+    out = np.asarray(mha(q, k, v, m))
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+
+def test_mha_masked_keys_have_no_influence():
+    q, k, v, m = rand_mha(1, 2, 16, 8, mask_p=1.0)
+    m2 = m.at[:, 7].set(0.0)
+    # perturb the masked key/value row wildly: output must not change
+    k2 = k.at[:, :, 7, :].set(100.0)
+    v2 = v.at[:, :, 7, :].set(-100.0)
+    out_a = mha(q, k2, v2, m2)
+    out_b = mha(q, k, v, m2)
+    np.testing.assert_allclose(out_a, out_b, rtol=1e-5, atol=1e-5)
+
+
+def test_mha_uniform_when_keys_identical():
+    # identical keys -> uniform attention -> output = mean of values
+    b, nh, n, dh = 1, 1, 8, 4
+    q = jnp.asarray(RNG.randn(b, nh, n, dh), jnp.float32)
+    k = jnp.ones((b, nh, n, dh), jnp.float32)
+    v = jnp.asarray(RNG.randn(b, nh, n, dh), jnp.float32)
+    m = jnp.ones((b, n), jnp.float32)
+    out = mha(q, k, v, m)
+    np.testing.assert_allclose(
+        out[0, 0, 0], jnp.mean(v[0, 0], axis=0), rtol=1e-5, atol=1e-6)
+
+
+def test_mha_block_sizes_agree():
+    q, k, v, m = rand_mha(2, 2, 64, 8)
+    a = _mha_pallas(q, k, v, m, block=64)
+    b = _mha_pallas(q, k, v, m, block=32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_mha_grads_match_ref():
+    q, k, v, m = rand_mha(1, 2, 16, 8)
+
+    def loss(fn, qq, kk, vv):
+        return jnp.sum(fn(qq, kk, vv, m) ** 2)
+
+    g1 = jax.grad(lambda *a: loss(mha, *a), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: loss(mha_ref, *a), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,30 @@
+//! Bench: baseline placers — METIS partition latency (one-shot), human
+//! heuristic, and HDP-proxy search rate. These are the comparison columns
+//! of Table 1; their costs contextualize the "search speed up" numbers.
+
+use gdp::baselines::hdp::{HdpConfig, HdpSearch};
+use gdp::baselines::{human_expert, metis_place};
+use gdp::util::bench::bench;
+use gdp::workloads;
+
+fn main() {
+    println!("== one-shot baselines ==");
+    for id in ["rnnlm2", "gnmt8", "inception", "wavenet4"] {
+        let g = workloads::by_id(id).unwrap();
+        bench(&format!("human_expert {id}"), 0.3, || {
+            std::hint::black_box(human_expert(&g));
+        });
+        bench(&format!("metis_place {id} ({} nodes)", g.n()), 0.5, || {
+            std::hint::black_box(metis_place(&g));
+        });
+    }
+
+    println!("\n== HDP-proxy search (policy-gradient over groups) ==");
+    for id in ["rnnlm2", "txl4"] {
+        let g = workloads::by_id(id).unwrap();
+        bench(&format!("hdp 10 steps (40 evals) {id}"), 1.0, || {
+            let cfg = HdpConfig { steps: 10, ..Default::default() };
+            std::hint::black_box(HdpSearch::new(&g, cfg).run());
+        });
+    }
+}

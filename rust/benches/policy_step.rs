@@ -1,0 +1,63 @@
+//! Bench: the GDP policy hot path through PJRT — policy_fwd latency,
+//! train_step latency, rollout sampling, and the end-to-end PPO step.
+//! These produce the search-time (wall-clock) side of Table 1.
+//!
+//! Requires `make artifacts`; exits cleanly if they are missing.
+
+use gdp::coordinator::{train, Session, TrainConfig};
+use gdp::policy::sample_from_logits;
+use gdp::runtime::Batch;
+use gdp::util::bench::bench;
+use gdp::util::Rng;
+
+fn main() {
+    let artifacts = std::path::Path::new("artifacts");
+    if !artifacts.join("full/manifest.json").exists() {
+        eprintln!("skipping policy benches: run `make artifacts` first");
+        return;
+    }
+    let session = Session::open(artifacts, "full").expect("open session");
+    let dims = session.manifest().dims;
+    let task = session.task("rnnlm2", 0).unwrap();
+    let mut store = session.init_params().unwrap();
+    let batch = Batch::from_rows(session.manifest(), &[&task.feats]).unwrap();
+
+    println!("== policy network (B={} N={} H={}) ==", dims.b, dims.n, dims.h);
+    bench("policy_fwd", 3.0, || {
+        std::hint::black_box(session.policy.forward(&store, &batch).unwrap());
+    });
+
+    let logits = session.policy.forward(&store, &batch).unwrap();
+    let mut rng = Rng::new(1);
+    bench("rollout sampling (1 row)", 0.5, || {
+        std::hint::black_box(sample_from_logits(
+            &logits[..dims.n * dims.d],
+            dims.n,
+            dims.d,
+            task.n_coarse(),
+            task.graph.num_devices,
+            1.0,
+            &mut rng,
+        ));
+    });
+
+    let actions = vec![0i32; dims.b * dims.n];
+    let logp = vec![-0.7f32; dims.b * dims.n];
+    let adv = vec![0.0f32; dims.b];
+    bench("train_step (PPO+Adam)", 5.0, || {
+        std::hint::black_box(
+            session
+                .policy
+                .train_step(&mut store, &batch, &actions, &logp, &adv, 1e-8, 0.0)
+                .unwrap(),
+        );
+    });
+
+    println!("\n== end-to-end PPO step (fwd + 4 sims + 2 updates) ==");
+    bench("gdp-one 4-step training segment", 10.0, || {
+        let mut s = session.init_params().unwrap();
+        let t = session.task("rnnlm2", 0).unwrap();
+        let cfg = TrainConfig { steps: 4, verbose: false, ..Default::default() };
+        std::hint::black_box(train(&session.policy, &mut s, &[t], &cfg).unwrap());
+    });
+}

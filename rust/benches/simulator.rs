@@ -1,0 +1,46 @@
+//! Bench: simulator throughput — the quantity behind every search method's
+//! cost (GDP rollouts, HDP samples, random search all pay one simulate()
+//! per candidate). Target (DESIGN.md §8): >= 10k evals/s on ~256-node
+//! graphs.
+
+use gdp::baselines::random_place;
+use gdp::sim::{Simulator, Topology};
+use gdp::util::bench::bench;
+use gdp::util::Rng;
+use gdp::workloads;
+
+fn main() {
+    println!("== simulator throughput (one full fwd+bwd step simulation) ==");
+    let mut rng = Rng::new(42);
+    for id in ["rnnlm2", "gnmt8", "txl8", "inception", "amoebanet", "wavenet4"] {
+        let g = workloads::by_id(id).unwrap();
+        let topo = Topology::p100_pcie(g.num_devices);
+        let sim = Simulator::new(&g, &topo);
+        let placements: Vec<Vec<usize>> = (0..32)
+            .map(|_| random_place(&g, &mut rng).devices)
+            .collect();
+        let mut i = 0;
+        bench(
+            &format!("simulate {id} ({} nodes, {} dev)", g.n(), g.num_devices),
+            0.5,
+            || {
+                let p = &placements[i % placements.len()];
+                i += 1;
+                std::hint::black_box(sim.simulate(p));
+            },
+        );
+    }
+
+    println!("\n== graph preparation (amortized once per task) ==");
+    for id in ["gnmt8", "txl8"] {
+        let g = workloads::by_id(id).unwrap();
+        bench(&format!("coarsen {id} to 256"), 0.5, || {
+            std::hint::black_box(gdp::graph::coarsen::coarsen(&g, 256));
+        });
+        let c = gdp::graph::coarsen::coarsen(&g, 256);
+        let dims = gdp::graph::features::FeatDims { n: 256, k: 8, f: 48, d: 8 };
+        bench(&format!("featurize {id}"), 0.5, || {
+            std::hint::black_box(gdp::graph::features::featurize(&c.graph, dims, 0));
+        });
+    }
+}

@@ -1,0 +1,311 @@
+//! METIS-style multilevel k-way graph partitioner (Karypis & Kumar, 1998),
+//! standing in for "TensorFlow METIS placement" in Table 1.
+//!
+//! Faithful to what that baseline does — and to why it loses: it minimizes
+//! weighted edge cut (tensor bytes) subject to COMPUTE balance only. It is
+//! memory-oblivious and schedule-oblivious, so on large recurrent models it
+//! piles parameter-heavy layers onto one device and OOMs, exactly the
+//! Table-1 pattern.
+//!
+//! Pipeline: heavy-edge-matching coarsening -> BFS-grown initial partition
+//! on the coarsest graph -> greedy boundary (FM-style) refinement at every
+//! uncoarsening level.
+
+use crate::graph::OpGraph;
+use crate::placement::Placement;
+use crate::util::Rng;
+
+/// Undirected weighted graph used internally.
+struct WGraph {
+    /// adjacency: per vertex, (neighbor, edge weight)
+    adj: Vec<Vec<(u32, f64)>>,
+    /// vertex weights (compute)
+    vw: Vec<f64>,
+    /// map to the finer level: fine vertex -> this level's vertex
+    fine_map: Option<Vec<u32>>,
+}
+
+impl WGraph {
+    fn n(&self) -> usize {
+        self.vw.len()
+    }
+
+    fn from_opgraph(g: &OpGraph) -> Self {
+        let n = g.n();
+        let mut map = std::collections::HashMap::<(u32, u32), f64>::new();
+        for &(u, v) in &g.edges {
+            let (a, b) = if u < v { (u, v) } else { (v, u) };
+            let w = g.nodes[u as usize].output_bytes as f64 + 1.0;
+            *map.entry((a, b)).or_insert(0.0) += w;
+        }
+        let mut adj = vec![Vec::new(); n];
+        for (&(a, b), &w) in &map {
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+        }
+        // Deterministic adjacency order (HashMap iteration is not).
+        for l in adj.iter_mut() {
+            l.sort_by(|x, y| x.0.cmp(&y.0));
+        }
+        // TF's METIS placement partitions the raw graph: uniform vertex
+        // weight (node count), no cost or memory model. That blindness is
+        // exactly why the paper's METIS column OOMs on the big models.
+        let vw = vec![1.0; n];
+        Self { adj, vw, fine_map: None }
+    }
+
+    /// One round of heavy-edge matching; returns the coarser graph.
+    fn coarsen(&self, rng: &mut Rng) -> WGraph {
+        let n = self.n();
+        let mut matched = vec![u32::MAX; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut next_id = 0u32;
+        for &u in &order {
+            if matched[u] != u32::MAX {
+                continue;
+            }
+            // heaviest unmatched neighbor
+            let mut best: Option<(u32, f64)> = None;
+            for &(v, w) in &self.adj[u] {
+                if matched[v as usize] == u32::MAX
+                    && best.map_or(true, |(_, bw)| w > bw)
+                {
+                    best = Some((v, w));
+                }
+            }
+            match best {
+                Some((v, _)) => {
+                    matched[u] = next_id;
+                    matched[v as usize] = next_id;
+                }
+                None => matched[u] = next_id,
+            }
+            next_id += 1;
+        }
+        let cn = next_id as usize;
+        let mut vw = vec![0f64; cn];
+        for u in 0..n {
+            vw[matched[u] as usize] += self.vw[u];
+        }
+        let mut emap = std::collections::HashMap::<(u32, u32), f64>::new();
+        for u in 0..n {
+            for &(v, w) in &self.adj[u] {
+                if (v as usize) <= u {
+                    continue; // count each undirected edge once
+                }
+                let (a, b) = (matched[u], matched[v as usize]);
+                if a == b {
+                    continue;
+                }
+                let key = if a < b { (a, b) } else { (b, a) };
+                *emap.entry(key).or_insert(0.0) += w;
+            }
+        }
+        let mut adj = vec![Vec::new(); cn];
+        for (&(a, b), &w) in &emap {
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+        }
+        for l in adj.iter_mut() {
+            l.sort_by(|x, y| x.0.cmp(&y.0));
+        }
+        WGraph { adj, vw, fine_map: Some(matched) }
+    }
+
+    /// BFS-grown initial k-way partition balanced by vertex weight.
+    fn initial_partition(&self, k: usize, rng: &mut Rng) -> Vec<usize> {
+        let n = self.n();
+        let total: f64 = self.vw.iter().sum();
+        let quota = total / k as f64;
+        let mut part = vec![usize::MAX; n];
+        let mut order = Vec::with_capacity(n);
+        let mut visited = vec![false; n];
+        // BFS from a random seed to get a locality-preserving order.
+        let mut queue = std::collections::VecDeque::new();
+        let seed = rng.below(n);
+        queue.push_back(seed as u32);
+        visited[seed] = true;
+        while order.len() < n {
+            while let Some(u) = queue.pop_front() {
+                order.push(u as usize);
+                let mut nbrs: Vec<u32> =
+                    self.adj[u as usize].iter().map(|&(v, _)| v).collect();
+                nbrs.sort_unstable();
+                for v in nbrs {
+                    if !visited[v as usize] {
+                        visited[v as usize] = true;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            // disconnected component: restart BFS
+            if order.len() < n {
+                if let Some(u) = (0..n).find(|&u| !visited[u]) {
+                    visited[u] = true;
+                    queue.push_back(u as u32);
+                }
+            }
+        }
+        let mut dev = 0usize;
+        let mut acc = 0f64;
+        for &u in &order {
+            part[u] = dev;
+            acc += self.vw[u];
+            if acc >= quota * (dev + 1) as f64 && dev + 1 < k {
+                dev += 1;
+            }
+        }
+        part
+    }
+
+    /// Greedy FM-style boundary refinement. `imbalance` is the allowed
+    /// max-part overweight factor (e.g. 0.10 = 10%).
+    fn refine(&self, part: &mut [usize], k: usize, imbalance: f64, passes: usize) {
+        let total: f64 = self.vw.iter().sum();
+        let cap = total / k as f64 * (1.0 + imbalance);
+        let mut pw = vec![0f64; k];
+        for u in 0..self.n() {
+            pw[part[u]] += self.vw[u];
+        }
+        for _ in 0..passes {
+            let mut improved = false;
+            for u in 0..self.n() {
+                let cur = part[u];
+                // connectivity of u to each part
+                let mut conn = vec![0f64; k];
+                for &(v, w) in &self.adj[u] {
+                    conn[part[v as usize]] += w;
+                }
+                let mut best_part = cur;
+                let mut best_gain = 0f64;
+                for p in 0..k {
+                    if p == cur {
+                        continue;
+                    }
+                    let gain = conn[p] - conn[cur];
+                    if gain > best_gain && pw[p] + self.vw[u] <= cap {
+                        best_gain = gain;
+                        best_part = p;
+                    }
+                }
+                if best_part != cur {
+                    pw[cur] -= self.vw[u];
+                    pw[best_part] += self.vw[u];
+                    part[u] = best_part;
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+}
+
+/// Weighted edge cut of a partition (for tests/benches).
+pub fn cut_weight(g: &OpGraph, placement: &[usize]) -> f64 {
+    g.edges
+        .iter()
+        .filter(|&&(u, v)| placement[u as usize] != placement[v as usize])
+        .map(|&(u, _)| g.nodes[u as usize].output_bytes as f64 + 1.0)
+        .sum()
+}
+
+/// Multilevel k-way partition of the op graph onto `g.num_devices` devices.
+pub fn metis_place(g: &OpGraph) -> Placement {
+    metis_place_seeded(g, 0x4D45_5449) // "METI"
+}
+
+pub fn metis_place_seeded(g: &OpGraph, seed: u64) -> Placement {
+    let k = g.num_devices;
+    let mut rng = Rng::new(seed);
+    if k == 1 {
+        return Placement::single(g.n());
+    }
+
+    // ---- coarsening phase ----
+    let mut levels = vec![WGraph::from_opgraph(g)];
+    let stop_at = (4 * k).max(64);
+    for _ in 0..20 {
+        let cur = levels.last().unwrap();
+        if cur.n() <= stop_at {
+            break;
+        }
+        let next = cur.coarsen(&mut rng);
+        if next.n() as f64 > cur.n() as f64 * 0.95 {
+            break; // matching stalled
+        }
+        levels.push(next);
+    }
+
+    // ---- initial partition on the coarsest level ----
+    let coarsest = levels.last().unwrap();
+    let mut part = coarsest.initial_partition(k, &mut rng);
+    coarsest.refine(&mut part, k, 0.10, 8);
+
+    // ---- uncoarsen + refine ----
+    for li in (1..levels.len()).rev() {
+        let fine_map = levels[li].fine_map.as_ref().unwrap();
+        let fine = &levels[li - 1];
+        let mut fine_part = vec![0usize; fine.n()];
+        for u in 0..fine.n() {
+            fine_part[u] = part[fine_map[u] as usize];
+        }
+        fine.refine(&mut fine_part, k, 0.10, 4);
+        part = fine_part;
+    }
+
+    Placement::new(part)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn partitions_are_balanced_by_node_count() {
+        let g = workloads::by_id("inception").unwrap();
+        let p = metis_place(&g);
+        assert!(p.check(&g).is_ok());
+        let hist = p.histogram(g.num_devices);
+        let cap = (g.n() as f64 / g.num_devices as f64 * 1.25) as usize;
+        for (d, c) in hist.iter().enumerate() {
+            assert!(*c <= cap, "device {d} overweight: {c} > {cap}");
+        }
+    }
+
+    #[test]
+    fn refinement_reduces_cut_vs_random() {
+        let g = workloads::by_id("txl4").unwrap();
+        let p = metis_place(&g);
+        let mut rng = Rng::new(1);
+        let random: Vec<usize> =
+            (0..g.n()).map(|_| rng.below(g.num_devices)).collect();
+        assert!(
+            cut_weight(&g, &p.devices) < 0.5 * cut_weight(&g, &random),
+            "metis cut {} vs random {}",
+            cut_weight(&g, &p.devices),
+            cut_weight(&g, &random)
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = workloads::by_id("rnnlm2").unwrap();
+        let a = metis_place_seeded(&g, 7);
+        let b = metis_place_seeded(&g, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn memory_oblivious_on_big_models() {
+        // The defining failure mode: on the 8-layer models METIS either
+        // OOMs or at best ignores memory. We only assert it produces a
+        // structurally valid placement; the Table-1 harness reports OOM.
+        let g = workloads::by_id("gnmt8").unwrap();
+        let p = metis_place(&g);
+        assert!(p.check(&g).is_ok());
+    }
+}

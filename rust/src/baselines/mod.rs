@@ -1,0 +1,14 @@
+//! Baseline placers the paper compares against (Table 1): human expert
+//! heuristics, a METIS-style multilevel partitioner, an HDP
+//! (hierarchical device placement) proxy, plus random/single-device
+//! references used by the tests and benches.
+
+pub mod hdp;
+pub mod human;
+pub mod metis;
+pub mod random;
+
+pub use hdp::HdpSearch;
+pub use human::human_expert;
+pub use metis::metis_place;
+pub use random::random_place;

@@ -1,0 +1,44 @@
+//! Random placement references (sanity lower bound for every learner).
+
+use crate::graph::OpGraph;
+use crate::placement::Placement;
+use crate::sim::{Simulator, Topology};
+use crate::util::Rng;
+
+/// Uniform random device per node.
+pub fn random_place(g: &OpGraph, rng: &mut Rng) -> Placement {
+    Placement::new((0..g.n()).map(|_| rng.below(g.num_devices)).collect())
+}
+
+/// Best of `n` random placements by simulated step time (invalid skipped).
+pub fn random_search(g: &OpGraph, n: usize, seed: u64) -> (Placement, f64) {
+    let topo = Topology::p100_pcie(g.num_devices);
+    let sim = Simulator::new(g, &topo);
+    let mut rng = Rng::new(seed);
+    let mut best = Placement::single(g.n());
+    let mut best_t = f64::INFINITY;
+    for _ in 0..n {
+        let p = random_place(g, &mut rng);
+        let r = sim.simulate(&p.devices);
+        if r.valid && r.step_time < best_t {
+            best_t = r.step_time;
+            best = p;
+        }
+    }
+    (best, best_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn random_search_improves_with_budget() {
+        let g = workloads::by_id("inception").unwrap();
+        let (_, t1) = random_search(&g, 1, 3);
+        let (_, t50) = random_search(&g, 50, 3);
+        assert!(t50 <= t1);
+        assert!(t50.is_finite());
+    }
+}

@@ -1,0 +1,247 @@
+//! Shared plumbing for the experiment harnesses: budget options, GDP-one
+//! result caching (several experiments compare against GDP-one), baseline
+//! sweeps and table formatting.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::baseline_eval::{eval_hdp, eval_human, eval_metis};
+use crate::coordinator::{train, Session, TrainConfig};
+use crate::util::cli::Args;
+use crate::util::json::{parse, Json};
+
+/// Budgets + io for one experiment run. `--quick` shrinks everything for
+/// smoke runs; defaults are the EXPERIMENTS.md reference budgets.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub steps: usize,
+    pub batch_steps: usize,
+    pub hdp_steps: usize,
+    pub pretrain_steps: usize,
+    pub finetune_steps: usize,
+    pub zeroshot_samples: usize,
+    pub seed: u64,
+    pub variant: String,
+    pub artifacts: PathBuf,
+    pub out_dir: PathBuf,
+    pub quick: bool,
+}
+
+impl ExpOpts {
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let quick = args.flag("quick");
+        let scale = if quick { 4 } else { 1 };
+        let steps = args.usize_or("steps", 200 / scale).map_err(|e| anyhow!(e))?;
+        Ok(Self {
+            steps,
+            batch_steps: args
+                .usize_or("batch-steps", 400 / scale)
+                .map_err(|e| anyhow!(e))?,
+            hdp_steps: args
+                .usize_or("hdp-steps", 600 / scale)
+                .map_err(|e| anyhow!(e))?,
+            pretrain_steps: args
+                .usize_or("pretrain-steps", 240 / scale)
+                .map_err(|e| anyhow!(e))?,
+            finetune_steps: args
+                .usize_or("finetune-steps", 30 / scale.min(2))
+                .map_err(|e| anyhow!(e))?,
+            zeroshot_samples: 8,
+            seed: args.u64_or("seed", 0xD15C0).map_err(|e| anyhow!(e))?,
+            variant: args.str_or("variant", "full"),
+            artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
+            out_dir: PathBuf::from(args.str_or("out", "runs")),
+            quick,
+        })
+    }
+
+    pub fn train_cfg(&self, steps: usize, seed_salt: u64) -> TrainConfig {
+        TrainConfig {
+            steps,
+            seed: self.seed ^ seed_salt,
+            verbose: false,
+            ..TrainConfig::default()
+        }
+    }
+}
+
+/// Cached GDP-one outcome for one workload.
+#[derive(Clone, Debug)]
+pub struct GdpOneOutcome {
+    pub workload: String,
+    pub best_time: f64,
+    pub valid: bool,
+    pub evals_to_converge: usize,
+    pub sim_evals: usize,
+    pub wall_secs: f64,
+    /// best-so-far improvement trace: (eval index, objective)
+    pub improvements: Vec<(usize, f64)>,
+}
+
+impl GdpOneOutcome {
+    /// Evals needed to reach `threshold`; total evals as penalty if never.
+    pub fn evals_to_reach(&self, threshold: f64) -> usize {
+        self.improvements
+            .iter()
+            .find(|&&(_, v)| v <= threshold)
+            .map(|&(at, _)| at)
+            .unwrap_or(self.sim_evals)
+    }
+}
+
+impl GdpOneOutcome {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(&self.workload)),
+            ("best_time", Json::num(self.best_time)),
+            ("valid", Json::Bool(self.valid)),
+            ("evals_to_converge", Json::num(self.evals_to_converge as f64)),
+            ("sim_evals", Json::num(self.sim_evals as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            (
+                "improvements",
+                Json::arr(
+                    self.improvements
+                        .iter()
+                        .map(|&(at, v)| {
+                            Json::arr(vec![Json::num(at as f64), Json::num(v)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<Self> {
+        Some(Self {
+            workload: v.get("workload")?.as_str()?.to_string(),
+            best_time: v.get("best_time")?.as_f64()?,
+            valid: v.get("valid")?.as_bool()?,
+            evals_to_converge: v.get("evals_to_converge")?.as_usize()?,
+            sim_evals: v.get("sim_evals")?.as_usize()?,
+            wall_secs: v.get("wall_secs")?.as_f64()?,
+            improvements: v
+                .get("improvements")?
+                .as_arr()?
+                .iter()
+                .filter_map(|pair| {
+                    let p = pair.as_arr()?;
+                    Some((p.first()?.as_usize()?, p.get(1)?.as_f64()?))
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Train GDP-one on `workload`, caching under runs/cache/ so table2/fig2/
+/// fig4 reuse table1's trainings (keyed by workload/steps/seed/variant).
+pub fn gdp_one_cached(
+    session: &Session,
+    opts: &ExpOpts,
+    workload: &str,
+) -> Result<GdpOneOutcome> {
+    let cache = opts.out_dir.join("cache").join(format!(
+        "gdp_one_{}_{}_{}_{}.json",
+        workload, opts.steps, opts.seed, opts.variant
+    ));
+    if let Ok(text) = std::fs::read_to_string(&cache) {
+        if let Ok(v) = parse(&text).map_err(|e| anyhow!(e)) {
+            if let Some(o) = GdpOneOutcome::from_json(&v) {
+                return Ok(o);
+            }
+        }
+    }
+    let task = session.task(workload, opts.seed)?;
+    let mut store = session.init_params()?;
+    let cfg = opts.train_cfg(opts.steps, fxhash(workload));
+    let result = train(&session.policy, &mut store, &[task], &cfg)?;
+    let best = &result.per_task[0];
+    let out = GdpOneOutcome {
+        workload: workload.to_string(),
+        best_time: best.best_time,
+        valid: best.best_valid,
+        evals_to_converge: best.tracker.evals_to_within(0.05),
+        sim_evals: result.sim_evals,
+        wall_secs: result.wall_secs,
+        improvements: best.tracker.improvements.clone(),
+    };
+    let _ = std::fs::create_dir_all(cache.parent().unwrap());
+    let _ = std::fs::write(&cache, out.to_json().to_string());
+    Ok(out)
+}
+
+/// Stable tiny hash for seed salting.
+pub fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Baseline sweep for one workload (HP, METIS, HDP + convergence info).
+pub struct BaselineSweep {
+    pub human: Option<f64>,
+    pub metis: Option<f64>,
+    pub hdp: Option<f64>,
+    pub hdp_tracker: crate::util::stats::ConvergenceTracker,
+    pub hdp_evals: usize,
+}
+
+impl BaselineSweep {
+    /// HDP evals to reach `threshold`; total evals as penalty if never.
+    pub fn hdp_evals_to_reach(&self, threshold: f64) -> usize {
+        self.hdp_tracker
+            .evals_to_reach(threshold)
+            .unwrap_or(self.hdp_evals)
+    }
+}
+
+pub fn baselines_for(workload: &str, opts: &ExpOpts) -> Result<BaselineSweep> {
+    let g = crate::workloads::by_id(workload)
+        .ok_or_else(|| anyhow!("unknown workload {workload:?}"))?;
+    let human = eval_human(&g).step_time;
+    let metis = eval_metis(&g).step_time;
+    let (hdp, tracker) = eval_hdp(&g, opts.hdp_steps, opts.seed ^ 0x48_44_50);
+    Ok(BaselineSweep {
+        human,
+        metis,
+        hdp: hdp.step_time,
+        hdp_tracker: tracker,
+        hdp_evals: hdp.search_evals,
+    })
+}
+
+// ---- formatting helpers ----
+
+pub fn fmt_time(t: Option<f64>) -> String {
+    match t {
+        Some(x) if x.is_finite() => format!("{x:.3}"),
+        _ => "OOM".to_string(),
+    }
+}
+
+/// "(base - new)/base" as a percentage string; OOM-aware.
+pub fn fmt_speedup(base: Option<f64>, new: Option<f64>) -> String {
+    match (base, new) {
+        (Some(b), Some(n)) if b.is_finite() && n.is_finite() => {
+            format!("{:+.1}%", (b - n) / b * 100.0)
+        }
+        (None, Some(_)) => "vs OOM".to_string(),
+        _ => "-".to_string(),
+    }
+}
+
+/// Relative speedup factor (base/new), for GEOMEAN rows.
+pub fn ratio(base: Option<f64>, new: Option<f64>) -> Option<f64> {
+    match (base, new) {
+        (Some(b), Some(n)) if b.is_finite() && n.is_finite() && n > 0.0 => Some(b / n),
+        _ => None,
+    }
+}
+
+pub fn print_rule(width: usize) {
+    println!("{}", "-".repeat(width));
+}

@@ -1,0 +1,94 @@
+//! Figure 3: ablation of the placer network — attention and superposition.
+//! Trains the `no_attention` and `no_superposition` AOT variants on the
+//! same mixed batch as the `full` variant and reports per-workload bests.
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::metrics::write_json;
+use crate::coordinator::{train, Session};
+use crate::util::json::Json;
+use crate::util::math::geomean;
+
+/// Mixed batch stressing superposition (small CV graphs + large RNNs, the
+/// combination the paper says fails without it).
+const MIX: [&str; 6] = ["inception", "amoebanet", "rnnlm4", "gnmt4", "txl2", "wavenet2"];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let ids: Vec<&str> = if opts.quick { vec!["inception", "rnnlm4"] } else { MIX.to_vec() };
+    let variants = ["full", "no_attention", "no_superposition"];
+
+    let mut per_variant: Vec<Vec<Option<f64>>> = Vec::new();
+    for variant in &variants {
+        let session = Session::open(&opts.artifacts, variant)?;
+        let mut tasks = Vec::new();
+        for id in &ids {
+            tasks.push(session.task(id, opts.seed ^ fxhash(id))?);
+        }
+        let mut store = session.init_params()?;
+        let cfg = opts.train_cfg(opts.batch_steps, fxhash(variant));
+        eprintln!("[fig3] training variant {variant} ({} steps) ...", cfg.steps);
+        let res = train(&session.policy, &mut store, &tasks, &cfg)?;
+        per_variant.push(
+            ids.iter()
+                .map(|id| {
+                    let b = res.best_for(id).unwrap();
+                    if b.best_valid { Some(b.best_time) } else { None }
+                })
+                .collect(),
+        );
+    }
+
+    println!("\n=== Figure 3: ablation (batch training on a mixed set) ===");
+    println!(
+        "{:<12} {:>9} {:>13} {:>17} {:>12} {:>13}",
+        "Model", "full", "no_attention", "no_superposition", "attn gain", "superpos gain"
+    );
+    print_rule(82);
+    let mut rows = Vec::new();
+    let mut attn_gains = Vec::new();
+    let mut sp_gains = Vec::new();
+    for (i, id) in ids.iter().enumerate() {
+        let full = per_variant[0][i];
+        let noat = per_variant[1][i];
+        let nosp = per_variant[2][i];
+        if let Some(r) = ratio(noat, full) {
+            attn_gains.push(r);
+        }
+        if let Some(r) = ratio(nosp, full) {
+            sp_gains.push(r);
+        }
+        println!(
+            "{:<12} {:>9} {:>13} {:>17} {:>12} {:>13}",
+            id,
+            fmt_time(full),
+            fmt_time(noat),
+            fmt_time(nosp),
+            fmt_speedup(noat, full),
+            fmt_speedup(nosp, full)
+        );
+        rows.push(Json::obj(vec![
+            ("workload", Json::str(*id)),
+            ("full", full.map(Json::num).unwrap_or(Json::Null)),
+            ("no_attention", noat.map(Json::num).unwrap_or(Json::Null)),
+            ("no_superposition", nosp.map(Json::num).unwrap_or(Json::Null)),
+        ]));
+    }
+    print_rule(82);
+    let gm_attn = (1.0 - 1.0 / geomean(&attn_gains)) * 100.0;
+    let gm_sp = (1.0 - 1.0 / geomean(&sp_gains)) * 100.0;
+    println!(
+        "GEOMEAN gains: attention {:+.1}%, superposition {:+.1}%  \
+         (paper: ~18% and ~6.5%)\n",
+        gm_attn, gm_sp
+    );
+    write_json(
+        &opts.out_dir.join("fig3.json"),
+        &Json::obj(vec![
+            ("rows", Json::arr(rows)),
+            ("attention_gain_pct", Json::num(gm_attn)),
+            ("superposition_gain_pct", Json::num(gm_sp)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Figure 4: pre-training + fine-tuning (target INCLUDED in pre-training,
+//! unlike Figure 2). Reports placed-graph run time and search time for
+//! fine-tuning, normalized to GDP-one trained from scratch.
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::metrics::write_json;
+use crate::coordinator::{train, Session};
+use crate::util::json::Json;
+use crate::util::math::geomean;
+use crate::workloads;
+
+const TARGETS: [&str; 6] =
+    ["rnnlm2", "gnmt2", "txl2", "inception", "amoebanet", "wavenet2"];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let session = Session::open(&opts.artifacts, &opts.variant)?;
+    let targets: Vec<&str> =
+        if opts.quick { vec!["rnnlm2", "inception"] } else { TARGETS.to_vec() };
+
+    // --- one shared pretraining over ALL registry workloads ---
+    let mut tasks = Vec::new();
+    for spec in workloads::registry() {
+        tasks.push(session.task(spec.id, opts.seed ^ fxhash(spec.id))?);
+    }
+    let mut pre_store = session.init_params()?;
+    let cfg = opts.train_cfg(opts.pretrain_steps, 0xF14);
+    eprintln!(
+        "[fig4] pretraining on all {} workloads ({} steps) ...",
+        tasks.len(),
+        cfg.steps
+    );
+    train(&session.policy, &mut pre_store, &tasks, &cfg)?;
+    let pre_flat = pre_store.to_flat()?;
+
+    println!("\n=== Figure 4: pretrain(+target) + finetune, normalized to GDP-one ===");
+    println!(
+        "{:<12} {:>9} {:>10} {:>13} {:>14}",
+        "Target", "GDP-one", "finetune", "runtime ratio", "search ratio"
+    );
+    print_rule(64);
+    let mut rows = Vec::new();
+    let mut rt_ratios = Vec::new();
+    let mut st_ratios = Vec::new();
+    for target in &targets {
+        let one = gdp_one_cached(&session, opts, target)?;
+        // fine-tune a fresh copy of the pretrained params
+        let manifest = &session.policy.manifest;
+        let mut store = crate::runtime::ParamStore::from_flat(manifest, &pre_flat)?;
+        store.reset_optimizer()?;
+        let ft_cfg = crate::coordinator::TrainConfig {
+            steps: opts.finetune_steps,
+            lr: 3e-4,
+            seed: opts.seed ^ fxhash(target) ^ 0x44,
+            verbose: false,
+            ..Default::default()
+        };
+        let task = session.task(target, opts.seed)?;
+        let ft = train(&session.policy, &mut store, &[task], &ft_cfg)?;
+        let b = &ft.per_task[0];
+
+        let one_t = if one.valid { Some(one.best_time) } else { None };
+        let ft_t = if b.best_valid { Some(b.best_time) } else { None };
+        let rt_ratio = match (ft_t, one_t) {
+            (Some(f), Some(o)) => f / o,
+            _ => f64::NAN,
+        };
+        // search cost: sim evals to convergence, finetune vs from-scratch
+        let st_ratio = b.tracker.evals_to_within(0.05) as f64
+            / one.evals_to_converge.max(1) as f64;
+        if rt_ratio.is_finite() {
+            rt_ratios.push(rt_ratio);
+        }
+        if st_ratio.is_finite() && st_ratio > 0.0 {
+            st_ratios.push(st_ratio);
+        }
+        println!(
+            "{:<12} {:>9} {:>10} {:>13.2} {:>14.2}",
+            target,
+            fmt_time(one_t),
+            fmt_time(ft_t),
+            rt_ratio,
+            st_ratio
+        );
+        rows.push(Json::obj(vec![
+            ("target", Json::str(*target)),
+            ("gdp_one", one_t.map(Json::num).unwrap_or(Json::Null)),
+            ("finetune", ft_t.map(Json::num).unwrap_or(Json::Null)),
+            ("runtime_ratio", Json::num(rt_ratio)),
+            ("search_ratio", Json::num(st_ratio)),
+        ]));
+    }
+    print_rule(64);
+    let gm_rt = geomean(&rt_ratios);
+    let gm_st = geomean(&st_ratios);
+    println!(
+        "GEOMEAN: runtime ratio {:.2} (paper ~0.95), search-time ratio {:.2} \
+         (paper ~0.14)\n",
+        gm_rt, gm_st
+    );
+    write_json(
+        &opts.out_dir.join("fig4.json"),
+        &Json::obj(vec![
+            ("rows", Json::arr(rows)),
+            ("geomean_runtime_ratio", Json::num(gm_rt)),
+            ("geomean_search_ratio", Json::num(gm_st)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §5).
+//!
+//! Each harness prints the paper-shaped table, records the measured rows
+//! under `runs/<id>.json`, and states the paper's reference numbers so
+//! EXPERIMENTS.md can compare shape (who wins, by roughly what factor).
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::cli::Args;
+use common::ExpOpts;
+
+/// CLI entry: `gdp experiment --id <table1|table2|table3|fig2|fig3|fig4|all>`.
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let id = args.str_or("id", "all");
+    let opts = ExpOpts::from_args(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    run(&id, &opts)
+}
+
+pub fn run(id: &str, opts: &ExpOpts) -> Result<()> {
+    match id {
+        "table1" => table1::run(opts),
+        "table2" => table2::run(opts),
+        "table3" => table3::run(opts),
+        "fig2" => fig2::run(opts),
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(opts),
+        "all" => {
+            table1::run(opts)?;
+            table2::run(opts)?;
+            table3::run(opts)?;
+            fig2::run(opts)?;
+            fig3::run(opts)?;
+            fig4::run(opts)
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}

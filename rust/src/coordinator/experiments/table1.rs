@@ -1,0 +1,105 @@
+//! Table 1: GDP-one vs Human Placement vs METIS vs HDP on the 12
+//! workloads — run time per placement, run-time speedups over HP/HDP and
+//! search speedup (evals-to-convergence ratio vs HDP).
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::metrics::write_json;
+use crate::coordinator::Session;
+use crate::util::json::Json;
+use crate::util::math::geomean;
+use crate::workloads;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let session = Session::open(&opts.artifacts, &opts.variant)?;
+    let ids: Vec<&str> = if opts.quick {
+        vec!["rnnlm2", "gnmt2", "txl2", "inception"]
+    } else {
+        workloads::table1_ids()
+    };
+
+    println!("\n=== Table 1: GDP-one vs HP / METIS / HDP ===");
+    println!(
+        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10} {:>9}",
+        "Model (#devices)", "GDP-one", "HP", "METIS", "HDP",
+        "vs HP", "vs HDP", "search x"
+    );
+    print_rule(100);
+
+    let mut rows = Vec::new();
+    let mut hp_ratios = Vec::new();
+    let mut hdp_ratios = Vec::new();
+    let mut search_ratios = Vec::new();
+
+    for id in &ids {
+        let spec = workloads::spec_by_id(id).unwrap();
+        let gdp = gdp_one_cached(&session, opts, id)?;
+        let bl = baselines_for(id, opts)?;
+        let gdp_t = if gdp.valid { Some(gdp.best_time) } else { None };
+
+        // Search speedup at a COMMON quality target: 5% above GDP's best
+        // placement (methods that never reach it are charged their full
+        // search budget).
+        let target = gdp.best_time * 1.05;
+        let gdp_reach = gdp.evals_to_reach(target).max(1);
+        let hdp_reach = bl.hdp_evals_to_reach(target).max(1);
+        let search_x = hdp_reach as f64 / gdp_reach as f64;
+        println!(
+            "{:<28} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10} {:>8.1}x",
+            spec.display,
+            fmt_time(gdp_t),
+            fmt_time(bl.human),
+            fmt_time(bl.metis),
+            fmt_time(bl.hdp),
+            fmt_speedup(bl.human, gdp_t),
+            fmt_speedup(bl.hdp, gdp_t),
+            search_x
+        );
+        if let Some(r) = ratio(bl.human, gdp_t) {
+            hp_ratios.push(r);
+        }
+        if let Some(r) = ratio(bl.hdp, gdp_t) {
+            hdp_ratios.push(r);
+        }
+        if search_x.is_finite() && search_x > 0.0 {
+            search_ratios.push(search_x);
+        }
+        rows.push(Json::obj(vec![
+            ("workload", Json::str(*id)),
+            ("display", Json::str(spec.display)),
+            ("gdp_one", gdp_t.map(Json::num).unwrap_or(Json::Null)),
+            ("human", bl.human.map(Json::num).unwrap_or(Json::Null)),
+            ("metis", bl.metis.map(Json::num).unwrap_or(Json::Null)),
+            ("hdp", bl.hdp.map(Json::num).unwrap_or(Json::Null)),
+            ("gdp_evals_to_reach_target", Json::num(gdp_reach as f64)),
+            ("hdp_evals_to_reach_target", Json::num(hdp_reach as f64)),
+        ]));
+    }
+
+    print_rule(100);
+    let gm_hp = geomean(&hp_ratios);
+    let gm_hdp = geomean(&hdp_ratios);
+    let gm_search = geomean(&search_ratios);
+    println!(
+        "{:<28} {:>9} {:>9} {:>9} {:>9} {:>9.1}% {:>9.1}% {:>8.1}x",
+        "GEOMEAN", "-", "-", "-", "-",
+        (1.0 - 1.0 / gm_hp) * 100.0,
+        (1.0 - 1.0 / gm_hdp) * 100.0,
+        gm_search
+    );
+    println!(
+        "paper:  run time speedup 16% over HP, 9.2% over HDP; search 15x vs HDP\n"
+    );
+
+    write_json(
+        &opts.out_dir.join("table1.json"),
+        &Json::obj(vec![
+            ("rows", Json::arr(rows)),
+            ("geomean_vs_hp_pct", Json::num((1.0 - 1.0 / gm_hp) * 100.0)),
+            ("geomean_vs_hdp_pct", Json::num((1.0 - 1.0 / gm_hdp) * 100.0)),
+            ("geomean_search_speedup", Json::num(gm_search)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Table 2: GDP-batch vs GDP-one — one policy jointly trained over the 11
+//! Table-2 workloads (shared graph-embedding + placer parameters with
+//! superposition), compared to per-graph training.
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::metrics::write_json;
+use crate::coordinator::{train, Session};
+use crate::util::json::Json;
+
+/// The 11 workloads of the paper's Table 2.
+pub const TABLE2_IDS: [&str; 11] = [
+    "rnnlm2", "rnnlm4", "gnmt2", "gnmt4", "txl2", "txl4", "txl8",
+    "inception", "amoebanet", "wavenet2", "wavenet4",
+];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let session = Session::open(&opts.artifacts, &opts.variant)?;
+    let ids: Vec<&str> = if opts.quick {
+        vec!["rnnlm2", "gnmt2", "txl2", "inception"]
+    } else {
+        TABLE2_IDS.to_vec()
+    };
+
+    // --- joint batch training ---
+    let mut tasks = Vec::new();
+    for id in &ids {
+        tasks.push(session.task(id, opts.seed ^ fxhash(id))?);
+    }
+    let mut store = session.init_params()?;
+    let cfg = opts.train_cfg(opts.batch_steps, 0xBA7C);
+    eprintln!(
+        "[table2] GDP-batch over {} tasks, {} steps ...",
+        tasks.len(),
+        cfg.steps
+    );
+    let batch = train(&session.policy, &mut store, &tasks, &cfg)?;
+    // Persist the batch-trained policy — fig2/fig4 can reuse it manually.
+    store.save(&opts.out_dir.join("ckpt").join("gdp_batch_table2.bin"))?;
+
+    println!("\n=== Table 2: GDP-batch vs GDP-one (speed up of batch) ===");
+    println!("{:<28} {:>10} {:>10} {:>9}", "Model", "GDP-one", "GDP-batch", "speedup");
+    print_rule(62);
+    let mut rows = Vec::new();
+    for id in &ids {
+        let one = gdp_one_cached(&session, opts, id)?;
+        let b = batch.best_for(id).unwrap();
+        let one_t = if one.valid { Some(one.best_time) } else { None };
+        let b_t = if b.best_valid { Some(b.best_time) } else { None };
+        println!(
+            "{:<28} {:>10} {:>10} {:>9}",
+            id,
+            fmt_time(one_t),
+            fmt_time(b_t),
+            fmt_speedup(one_t, b_t)
+        );
+        rows.push(Json::obj(vec![
+            ("workload", Json::str(*id)),
+            ("gdp_one", one_t.map(Json::num).unwrap_or(Json::Null)),
+            ("gdp_batch", b_t.map(Json::num).unwrap_or(Json::Null)),
+        ]));
+    }
+    print_rule(62);
+    println!("paper: batch ~= one (0-15% better on most, slightly worse on AmoebaNet)\n");
+    write_json(
+        &opts.out_dir.join("table2.json"),
+        &Json::obj(vec![("rows", Json::arr(rows))]),
+    )?;
+    Ok(())
+}

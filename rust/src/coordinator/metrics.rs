@@ -1,0 +1,96 @@
+//! Run metrics: JSONL step logs and experiment result files under `runs/`.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::trainer::{StepLog, TrainResult};
+use crate::util::json::Json;
+
+pub struct RunLogger {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl RunLogger {
+    pub fn create(dir: &Path, name: &str) -> Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.jsonl"));
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(Self { path, file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn log_step(&mut self, task: &str, s: &StepLog) -> Result<()> {
+        let v = Json::obj(vec![
+            ("task", Json::str(task)),
+            ("step", Json::num(s.step as f64)),
+            ("mean_reward", Json::num(s.mean_reward)),
+            ("best_time", Json::num(s.best_time)),
+            ("loss", Json::num(s.loss as f64)),
+            ("entropy", Json::num(s.entropy as f64)),
+            ("approx_kl", Json::num(s.approx_kl as f64)),
+        ]);
+        writeln!(self.file, "{}", v.to_string())?;
+        Ok(())
+    }
+
+    pub fn log_result(&mut self, label: &str, r: &TrainResult) -> Result<()> {
+        for t in &r.per_task {
+            let v = Json::obj(vec![
+                ("kind", Json::str("result")),
+                ("label", Json::str(label)),
+                ("task", Json::str(&t.task_id)),
+                ("best_time", Json::num(t.best_time)),
+                ("valid", Json::Bool(t.best_valid)),
+                ("wall_secs", Json::num(r.wall_secs)),
+                ("sim_evals", Json::num(r.sim_evals as f64)),
+                ("xla_secs", Json::num(r.xla_secs)),
+            ]);
+            writeln!(self.file, "{}", v.to_string())?;
+        }
+        Ok(())
+    }
+}
+
+/// Write a pretty JSON results document (experiment harness outputs).
+pub fn write_json(path: &Path, value: &Json) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, value.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let dir = std::env::temp_dir().join("gdp_test_metrics");
+        let mut lg = RunLogger::create(&dir, "t").unwrap();
+        lg.log_step(
+            "w",
+            &StepLog {
+                step: 3,
+                mean_reward: -0.5,
+                best_time: 0.4,
+                loss: 0.1,
+                entropy: 1.9,
+                approx_kl: 0.01,
+            },
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(lg.path()).unwrap();
+        let v = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("step").unwrap().as_usize(), Some(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,70 @@
+//! L3 coordinator: the paper's system contribution — GDP-one / GDP-batch /
+//! fine-tune / zero-shot training orchestration over the AOT policy,
+//! baseline evaluation, metrics, and the experiment harnesses that
+//! regenerate every table and figure of the paper.
+
+pub mod baseline_eval;
+pub mod experiments;
+pub mod metrics;
+pub mod trainer;
+
+pub use trainer::{infer, train, TaskBest, TrainConfig, TrainResult};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::graph::features::FeatDims;
+use crate::policy::PlacementTask;
+use crate::runtime::{Manifest, ParamStore, Policy, XlaRuntime};
+
+/// Everything needed to run GDP end-to-end for one model variant.
+pub struct Session {
+    pub runtime: XlaRuntime,
+    pub policy: Policy,
+    pub artifacts_dir: PathBuf,
+    pub variant: String,
+}
+
+impl Session {
+    /// Compile the variant's artifacts (expects `make artifacts` ran).
+    pub fn open(artifacts_dir: &Path, variant: &str) -> Result<Self> {
+        let runtime = XlaRuntime::cpu()?;
+        let vdir = artifacts_dir.join(variant);
+        let policy = Policy::load(&runtime, &vdir)?;
+        Ok(Self {
+            runtime,
+            policy,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            variant: variant.to_string(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.policy.manifest
+    }
+
+    pub fn feat_dims(&self) -> FeatDims {
+        let d = self.policy.manifest.dims;
+        FeatDims { n: d.n, k: d.k, f: d.f, d: d.d }
+    }
+
+    /// Fresh (python-initialized) parameters.
+    pub fn init_params(&self) -> Result<ParamStore> {
+        ParamStore::load_init(
+            &self.policy.manifest,
+            &self.artifacts_dir.join(&self.variant),
+        )
+    }
+
+    /// Parameters from a checkpoint blob.
+    pub fn load_params(&self, path: &Path) -> Result<ParamStore> {
+        ParamStore::load_blob(&self.policy.manifest, path)
+    }
+
+    /// Build a placement task for a registry workload.
+    pub fn task(&self, workload_id: &str, seed: u64) -> Result<PlacementTask> {
+        PlacementTask::from_workload(workload_id, self.feat_dims(), seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload {workload_id:?}"))
+    }
+}

@@ -1,0 +1,124 @@
+//! Fluent construction helper used by all workload generators.
+//!
+//! Keeps generator code declarative: `b.op("enc/l0/lstm", RnnCell)
+//! .flops(..).bytes(..).layer(0).after(&[prev])`.
+
+use super::{OpGraph, OpKind, OpNode};
+
+pub struct GraphBuilder {
+    graph: OpGraph,
+}
+
+/// Handle to a node being configured.
+pub struct NodeRef<'a> {
+    b: &'a mut GraphBuilder,
+    id: u32,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>, num_devices: usize) -> Self {
+        Self { graph: OpGraph::new(name, num_devices) }
+    }
+
+    /// Add a node; wire inputs afterwards via `.after(..)`.
+    pub fn op(&mut self, name: impl Into<String>, kind: OpKind) -> NodeRef<'_> {
+        let id = self.graph.nodes.len() as u32;
+        self.graph.nodes.push(OpNode::new(name, kind));
+        NodeRef { b: self, id }
+    }
+
+    pub fn edge(&mut self, from: u32, to: u32) {
+        self.graph.edges.push((from, to));
+    }
+
+    pub fn node_mut(&mut self, id: u32) -> &mut OpNode {
+        &mut self.graph.nodes[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.graph.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graph.nodes.is_empty()
+    }
+
+    /// Finish: freeze CSR caches and validate invariants.
+    pub fn build(mut self) -> OpGraph {
+        self.graph
+            .validate()
+            .unwrap_or_else(|e| panic!("invalid graph {}: {e}", self.graph.name));
+        self.graph.freeze();
+        self.graph
+    }
+}
+
+impl<'a> NodeRef<'a> {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    pub fn flops(self, f: f64) -> Self {
+        self.b.graph.nodes[self.id as usize].flops = f;
+        self
+    }
+
+    /// Output tensor bytes (f32 elements * 4 convention lives in callers).
+    pub fn out_bytes(self, bytes: u64) -> Self {
+        self.b.graph.nodes[self.id as usize].output_bytes = bytes;
+        self
+    }
+
+    pub fn params(self, bytes: u64) -> Self {
+        self.b.graph.nodes[self.id as usize].param_bytes = bytes;
+        self
+    }
+
+    pub fn shape(self, s: [u32; 4]) -> Self {
+        let node = &mut self.b.graph.nodes[self.id as usize];
+        node.out_shape = s;
+        if node.output_bytes == 0 {
+            let elems: u64 = s.iter().map(|&d| d.max(1) as u64).product();
+            node.output_bytes = elems * 4;
+        }
+        self
+    }
+
+    pub fn layer(self, l: u32) -> Self {
+        self.b.graph.nodes[self.id as usize].layer = l;
+        self
+    }
+
+    /// Declare data dependencies on earlier nodes.
+    pub fn after(self, inputs: &[u32]) -> Self {
+        for &i in inputs {
+            self.b.graph.edges.push((i, self.id));
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.op("x", OpKind::Input).shape([32, 128, 0, 0]).id();
+        let w = b.op("w", OpKind::Variable).params(128 * 64 * 4).id();
+        let y = b
+            .op("mm", OpKind::MatMul)
+            .flops(2.0 * 32.0 * 128.0 * 64.0)
+            .shape([32, 64, 0, 0])
+            .layer(1)
+            .after(&[x, w])
+            .id();
+        b.op("out", OpKind::Output).after(&[y]);
+        let g = b.build();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.nodes[0].output_bytes, 32 * 128 * 4);
+        assert_eq!(g.producers(2), &[0, 1]);
+        assert_eq!(g.nodes[2].layer, 1);
+    }
+}

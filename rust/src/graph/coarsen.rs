@@ -1,0 +1,401 @@
+//! Graph coarsening: shrink an op graph to at most `target` nodes while
+//! preserving the DAG structure, so arbitrarily large workloads fit the
+//! policy's static AOT shape (N).
+//!
+//! The paper's policy scales to 50k nodes with segment-level recurrence; in
+//! this reproduction the AOT shape is fixed at N=256, so larger graphs are
+//! coarsened first and the coarse placement is expanded back to every
+//! original op (all members of a coarse node share its device — exactly the
+//! effect of TF colocation groups). Three phases, each cycle-safe:
+//!
+//! 1. **Chain contraction** — merge u→v when out_deg(u)==1 and
+//!    in_deg(v)==1 (linear pipelines, the bulk of recurrent graphs).
+//! 2. **Same-level matching** — merge node pairs on the same topological
+//!    level (no path can exist between them, so no cycle can form),
+//!    preferring same-layer, small-flops pairs to keep balance.
+//! 3. **Level-bucket collapse** — guaranteed-progress fallback: partition
+//!    topological levels into `target` contiguous buckets and merge each
+//!    (layer, bucket) group.
+
+use super::{OpGraph, OpKind, OpNode};
+use std::collections::HashMap;
+
+/// A coarsened graph plus the mapping back to original node ids.
+#[derive(Clone, Debug)]
+pub struct Coarsened {
+    pub graph: OpGraph,
+    /// members[c] = original node ids merged into coarse node c.
+    pub members: Vec<Vec<u32>>,
+    pub orig_n: usize,
+}
+
+impl Coarsened {
+    /// Expand a coarse placement (one device per coarse node) to the
+    /// original graph's nodes.
+    pub fn expand(&self, coarse_placement: &[usize]) -> Vec<usize> {
+        assert_eq!(coarse_placement.len(), self.graph.n());
+        let mut full = vec![0usize; self.orig_n];
+        for (c, members) in self.members.iter().enumerate() {
+            for &m in members {
+                full[m as usize] = coarse_placement[c];
+            }
+        }
+        full
+    }
+}
+
+/// Identity coarsening (graph already fits).
+fn identity(g: &OpGraph) -> Coarsened {
+    Coarsened {
+        graph: {
+            let mut cg = g.clone();
+            cg.freeze();
+            cg
+        },
+        members: (0..g.n() as u32).map(|i| vec![i]).collect(),
+        orig_n: g.n(),
+    }
+}
+
+/// Union-find over original node ids.
+struct Uf {
+    parent: Vec<u32>,
+}
+
+impl Uf {
+    fn new(n: usize) -> Self {
+        Self { parent: (0..n as u32).collect() }
+    }
+    fn find(&mut self, x: u32) -> u32 {
+        let mut r = x;
+        while self.parent[r as usize] != r {
+            r = self.parent[r as usize];
+        }
+        let mut c = x;
+        while self.parent[c as usize] != r {
+            let nxt = self.parent[c as usize];
+            self.parent[c as usize] = r;
+            c = nxt;
+        }
+        r
+    }
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[rb as usize] = ra;
+        }
+    }
+}
+
+/// Rebuild a coarse OpGraph from a union-find over `g`.
+fn rebuild(g: &OpGraph, uf: &mut Uf, members_of: &[Vec<u32>]) -> (OpGraph, Vec<Vec<u32>>) {
+    // Map roots -> dense coarse ids, ordered by min original id for
+    // determinism.
+    let mut roots: Vec<u32> = (0..g.n() as u32)
+        .filter(|&i| uf.find(i) == i)
+        .collect();
+    roots.sort_unstable();
+    let mut dense: HashMap<u32, u32> = HashMap::new();
+    for (ci, &r) in roots.iter().enumerate() {
+        dense.insert(r, ci as u32);
+    }
+
+    let mut members: Vec<Vec<u32>> = vec![vec![]; roots.len()];
+    for i in 0..g.n() as u32 {
+        let c = dense[&uf.find(i)];
+        members[c as usize].extend_from_slice(&members_of[i as usize]);
+    }
+
+    let mut cg = OpGraph::new(g.name.clone(), g.num_devices);
+    for (ci, _) in roots.iter().enumerate() {
+        // Aggregate merged node attributes over the CURRENT graph's
+        // constituents (members[] maps to ORIGINAL ids and is only used for
+        // placement expansion). Representative = max-flops node.
+        let mut node = OpNode::new(String::new(), OpKind::Elementwise);
+        let mut best_flops = -1.0f64;
+        let mut layer_min = u32::MAX;
+        for i in 0..g.n() as u32 {
+            if dense[&uf.find(i)] != ci as u32 {
+                continue;
+            }
+            let src = &g.nodes[i as usize];
+            node.flops += src.flops;
+            node.param_bytes += src.param_bytes;
+            node.output_bytes = node.output_bytes.max(src.output_bytes);
+            layer_min = layer_min.min(src.layer);
+            if src.flops > best_flops {
+                best_flops = src.flops;
+                node.kind = src.kind;
+                node.out_shape = src.out_shape;
+                node.name = src.name.clone();
+            }
+        }
+        node.layer = if layer_min == u32::MAX { 0 } else { layer_min };
+        cg.nodes.push(node);
+    }
+
+    // Dedup coarse edges.
+    let mut seen = std::collections::HashSet::new();
+    for &(u, v) in &g.edges {
+        let (cu, cv) = (dense[&uf.find(u)], dense[&uf.find(v)]);
+        if cu != cv && seen.insert((cu, cv)) {
+            cg.edges.push((cu, cv));
+        }
+    }
+    (cg, members)
+}
+
+/// Topological levels (longest path from any source).
+pub fn topo_levels(g: &OpGraph) -> Vec<u32> {
+    let mut level = vec![0u32; g.n()];
+    for &u in g.topo_order() {
+        for &v in g.consumers(u as usize) {
+            level[v as usize] = level[v as usize].max(level[u as usize] + 1);
+        }
+    }
+    level
+}
+
+/// Coarsen `g` to at most `target` nodes. Deterministic.
+pub fn coarsen(g: &OpGraph, target: usize) -> Coarsened {
+    assert!(target >= 2);
+    if g.n() <= target {
+        return identity(g);
+    }
+    let mut cur = g.clone();
+    cur.freeze();
+    let mut members: Vec<Vec<u32>> = (0..g.n() as u32).map(|i| vec![i]).collect();
+
+    // Phase 0: fold dataless source nodes (Variables / Inputs / Consts)
+    // into their first consumer — the effect of TF colocation groups, and
+    // essential for memory fidelity: weights must travel with the compute
+    // that uses them, not merge with each other. Cycle-safe because a
+    // source node has no producers, so no path can lead back into it.
+    {
+        let mut uf = Uf::new(cur.n());
+        let mut merged_any = false;
+        // Merge into the topologically EARLIEST consumer: no other consumer
+        // can have a path back into it, so the merge cannot form a cycle.
+        let mut rank = vec![0u32; cur.n()];
+        for (r, &u) in cur.topo_order().iter().enumerate() {
+            rank[u as usize] = r as u32;
+        }
+        for u in 0..cur.n() {
+            let node = &cur.nodes[u];
+            let is_source_meta = cur.producers(u).is_empty()
+                && matches!(
+                    node.kind,
+                    OpKind::Variable | OpKind::Const | OpKind::Input
+                );
+            if !is_source_meta {
+                continue;
+            }
+            if let Some(&c) = cur
+                .consumers(u)
+                .iter()
+                .min_by_key(|&&c| rank[c as usize])
+            {
+                uf.union(c, u as u32);
+                merged_any = true;
+            }
+        }
+        if merged_any {
+            let (next, next_members) = rebuild(&cur, &mut uf, &members);
+            cur = next;
+            cur.freeze();
+            members = next_members;
+        }
+    }
+    if cur.n() <= target {
+        return Coarsened { graph: cur, members, orig_n: g.n() };
+    }
+
+    // Phase 1: chain contraction rounds.
+    loop {
+        if cur.n() <= target {
+            break;
+        }
+        let mut uf = Uf::new(cur.n());
+        let mut used = vec![false; cur.n()];
+        let mut merged_any = false;
+        // Deterministic order: iterate nodes in topo order.
+        for &u in cur.topo_order() {
+            let cons = cur.consumers(u as usize);
+            if cons.len() != 1 {
+                continue;
+            }
+            let v = cons[0];
+            if cur.producers(v as usize).len() != 1 {
+                continue;
+            }
+            if used[u as usize] || used[v as usize] {
+                continue;
+            }
+            used[u as usize] = true;
+            used[v as usize] = true;
+            uf.union(u, v);
+            merged_any = true;
+        }
+        if !merged_any {
+            break;
+        }
+        let (next, next_members) = rebuild(&cur, &mut uf, &members);
+        cur = next;
+        cur.freeze();
+        members = next_members;
+    }
+
+    // Phase 2: same-level pair matching (cycle-safe).
+    while cur.n() > target {
+        let levels = topo_levels(&cur);
+        // Bucket nodes by (level, layer); merge pairs within buckets.
+        let mut buckets: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+        for i in 0..cur.n() as u32 {
+            buckets
+                .entry((levels[i as usize], cur.nodes[i as usize].layer))
+                .or_default()
+                .push(i);
+        }
+        let mut uf = Uf::new(cur.n());
+        let mut merged_any = false;
+        let mut excess = cur.n() - target;
+        let mut keys: Vec<_> = buckets.keys().cloned().collect();
+        keys.sort_unstable();
+        'outer: for key in keys {
+            let mut ids = buckets.remove(&key).unwrap();
+            // Merge smallest-flops neighbors first to keep balance.
+            ids.sort_by(|&a, &b| {
+                cur.nodes[a as usize]
+                    .flops
+                    .partial_cmp(&cur.nodes[b as usize].flops)
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for pair in ids.chunks(2) {
+                if let [a, b] = pair {
+                    uf.union(*a, *b);
+                    merged_any = true;
+                    excess -= 1;
+                    if excess == 0 {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        if !merged_any {
+            break;
+        }
+        let (next, next_members) = rebuild(&cur, &mut uf, &members);
+        cur = next;
+        cur.freeze();
+        members = next_members;
+    }
+
+    // Phase 3: (layer, level-bucket) collapse; widen buckets until the
+    // target is reached (or a single bucket per layer remains).
+    let mut widen = 1usize;
+    while cur.n() > target {
+        let levels = topo_levels(&cur);
+        let max_level = *levels.iter().max().unwrap() as usize + 1;
+        let nbuckets = (target / widen).max(1).min(max_level);
+        let per = (max_level + nbuckets - 1) / nbuckets;
+        let mut uf = Uf::new(cur.n());
+        let mut rep: HashMap<(u32, u32), u32> = HashMap::new();
+        for i in 0..cur.n() as u32 {
+            // Key by (layer, level bucket): collapsing across layers would
+            // concentrate unrelated memory into single coarse nodes.
+            let bucket = (
+                cur.nodes[i as usize].layer,
+                (levels[i as usize] as usize / per) as u32,
+            );
+            match rep.entry(bucket) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    uf.union(*e.get(), i)
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(i);
+                }
+            }
+        }
+        let prev_n = cur.n();
+        let (next, next_members) = rebuild(&cur, &mut uf, &members);
+        cur = next;
+        cur.freeze();
+        members = next_members;
+        widen *= 2;
+        if cur.n() == prev_n && widen > 64 {
+            break; // one bucket per layer left; cannot shrink further
+        }
+    }
+
+    assert!(cur.n() <= target, "coarsening failed: {} > {target}", cur.n());
+    Coarsened { graph: cur, members, orig_n: g.n() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// layers x steps grid (RNN-like): node (l,t) -> (l,t+1) and (l+1,t).
+    fn grid(layers: usize, steps: usize) -> OpGraph {
+        let mut b = GraphBuilder::new("grid", 2);
+        let mut ids = vec![vec![0u32; steps]; layers];
+        for l in 0..layers {
+            for t in 0..steps {
+                let mut deps = vec![];
+                if t > 0 {
+                    deps.push(ids[l][t - 1]);
+                }
+                if l > 0 {
+                    deps.push(ids[l - 1][t]);
+                }
+                ids[l][t] = b
+                    .op(format!("c{l}_{t}"), OpKind::RnnCell)
+                    .flops(1e6)
+                    .shape([32, 64, 0, 0])
+                    .layer(l as u32)
+                    .after(&deps)
+                    .id();
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn identity_when_small() {
+        let g = grid(2, 4);
+        let c = coarsen(&g, 64);
+        assert_eq!(c.graph.n(), g.n());
+        assert_eq!(c.expand(&vec![1; c.graph.n()]), vec![1; g.n()]);
+    }
+
+    #[test]
+    fn coarsens_to_target_and_stays_dag() {
+        let g = grid(8, 64); // 512 nodes
+        for target in [256, 64, 16] {
+            let c = coarsen(&g, target);
+            assert!(c.graph.n() <= target, "{} > {target}", c.graph.n());
+            assert!(c.graph.n() >= 2);
+            // freeze() would have panicked on a cycle; re-validate anyway.
+            assert!(c.graph.validate().is_ok());
+            // conservation: flops and params preserved
+            assert!((c.graph.total_flops() - g.total_flops()).abs() < 1.0);
+            assert_eq!(c.graph.total_param_bytes(), g.total_param_bytes());
+            // members partition the original node set
+            let mut all: Vec<u32> = c.members.iter().flatten().cloned().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..g.n() as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn expand_assigns_every_original_node() {
+        let g = grid(4, 32);
+        let c = coarsen(&g, 32);
+        let coarse: Vec<usize> = (0..c.graph.n()).map(|i| i % 4).collect();
+        let full = c.expand(&coarse);
+        assert_eq!(full.len(), g.n());
+        assert!(full.iter().all(|&d| d < 4));
+    }
+}

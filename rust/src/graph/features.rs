@@ -1,0 +1,233 @@
+//! Node featurization: op graph -> the policy's static AOT input tensors.
+//!
+//! Mirrors the paper (§3.1): node features are the concatenation of meta
+//! features (operation type one-hot, output shape, degrees, topological and
+//! layer position) and the adjacency information is delivered as
+//! GraphSAGE-style fixed-size sampled neighbor lists (idx + mask), which is
+//! what the Pallas `sage_pool` kernel consumes.
+//!
+//! The layout here is part of the artifact ABI: it must match
+//! `python/compile/config.py` dims (F=48, K, N) — append-only.
+
+use super::{OpGraph, NUM_OP_KINDS};
+use crate::util::Rng;
+
+/// Static shapes of the lowered policy (subset of manifest "dims").
+#[derive(Clone, Copy, Debug)]
+pub struct FeatDims {
+    pub n: usize,
+    pub k: usize,
+    pub f: usize,
+    pub d: usize,
+}
+
+/// Flattened, padded policy inputs for ONE graph (one batch row).
+#[derive(Clone, Debug)]
+pub struct GraphFeatures {
+    /// [N*F] row-major node features.
+    pub feats: Vec<f32>,
+    /// [N*K] neighbor indices (0-padded).
+    pub nbr_idx: Vec<i32>,
+    /// [N*K] 1.0 where the neighbor slot is valid.
+    pub nbr_mask: Vec<f32>,
+    /// [N] 1.0 for real (non-padding) nodes.
+    pub node_mask: Vec<f32>,
+    /// [D] 1.0 for devices this workload may use.
+    pub dev_mask: Vec<f32>,
+    /// Real node count.
+    pub n_real: usize,
+}
+
+/// Feature index layout (documented for the ABI; total must be <= F).
+pub mod layout {
+    use super::NUM_OP_KINDS;
+    pub const KIND_ONEHOT: usize = 0; // ..NUM_OP_KINDS
+    pub const LOG_FLOPS: usize = NUM_OP_KINDS; // 20
+    pub const LOG_OUT_BYTES: usize = NUM_OP_KINDS + 1;
+    pub const LOG_PARAM_BYTES: usize = NUM_OP_KINDS + 2;
+    pub const IN_DEG: usize = NUM_OP_KINDS + 3;
+    pub const OUT_DEG: usize = NUM_OP_KINDS + 4;
+    pub const TOPO_POS: usize = NUM_OP_KINDS + 5;
+    pub const LAYER_POS: usize = NUM_OP_KINDS + 6;
+    pub const SHAPE_LOG: usize = NUM_OP_KINDS + 7; // ..+4
+    pub const RANK_ONEHOT: usize = NUM_OP_KINDS + 11; // ..+6
+    pub const IS_COMPUTE: usize = NUM_OP_KINDS + 17;
+    pub const NUM_DEVICES: usize = NUM_OP_KINDS + 18;
+    pub const GRAPH_FILL: usize = NUM_OP_KINDS + 19;
+    pub const USED: usize = NUM_OP_KINDS + 20; // 40; rest reserved
+}
+
+/// Featurize a (already coarsened) graph into one padded batch row.
+///
+/// `seed` controls neighbor sampling only; with the same seed the output is
+/// bit-stable, so rollout batches are reproducible.
+pub fn featurize(g: &OpGraph, dims: FeatDims, seed: u64) -> GraphFeatures {
+    let n = g.n();
+    assert!(
+        n <= dims.n,
+        "graph {} has {n} nodes > N={}; coarsen first",
+        g.name,
+        dims.n
+    );
+    assert!(g.num_devices <= dims.d);
+    assert!(layout::USED <= dims.f, "feature layout exceeds F");
+
+    let mut feats = vec![0f32; dims.n * dims.f];
+    let mut nbr_idx = vec![0i32; dims.n * dims.k];
+    let mut nbr_mask = vec![0f32; dims.n * dims.k];
+    let mut node_mask = vec![0f32; dims.n];
+    let mut dev_mask = vec![0f32; dims.d];
+
+    for dm in dev_mask.iter_mut().take(g.num_devices) {
+        *dm = 1.0;
+    }
+
+    // topo rank
+    let mut topo_rank = vec![0usize; n];
+    for (r, &u) in g.topo_order().iter().enumerate() {
+        topo_rank[u as usize] = r;
+    }
+    let max_layer = g.max_layer().max(1) as f32;
+    let mut rng = Rng::new(seed ^ 0x5EED_F00D);
+
+    for v in 0..n {
+        let node = &g.nodes[v];
+        let row = &mut feats[v * dims.f..(v + 1) * dims.f];
+        row[layout::KIND_ONEHOT + node.kind.index()] = 1.0;
+        row[layout::LOG_FLOPS] = (node.flops.max(0.0).ln_1p() / 30.0) as f32;
+        row[layout::LOG_OUT_BYTES] = ((node.output_bytes as f64).ln_1p() / 30.0) as f32;
+        row[layout::LOG_PARAM_BYTES] = ((node.param_bytes as f64).ln_1p() / 30.0) as f32;
+        let ind = g.producers(v).len();
+        let outd = g.consumers(v).len();
+        row[layout::IN_DEG] = (ind as f32 / 16.0).min(1.0);
+        row[layout::OUT_DEG] = (outd as f32 / 16.0).min(1.0);
+        row[layout::TOPO_POS] = topo_rank[v] as f32 / n.max(1) as f32;
+        row[layout::LAYER_POS] = node.layer as f32 / max_layer;
+        let mut rank = 0;
+        for (i, &dim) in node.out_shape.iter().enumerate() {
+            row[layout::SHAPE_LOG + i] = ((dim as f64).ln_1p() / 20.0) as f32;
+            if dim > 0 {
+                rank = i + 1;
+            }
+        }
+        row[layout::RANK_ONEHOT + rank.min(5)] = 1.0;
+        row[layout::IS_COMPUTE] = node.kind.is_compute() as u8 as f32;
+        row[layout::NUM_DEVICES] = g.num_devices as f32 / dims.d as f32;
+        row[layout::GRAPH_FILL] = n as f32 / dims.n as f32;
+        node_mask[v] = 1.0;
+
+        // Undirected neighbor union, K sampled without replacement.
+        let mut nbrs: Vec<u32> = g
+            .producers(v)
+            .iter()
+            .chain(g.consumers(v).iter())
+            .cloned()
+            .collect();
+        nbrs.sort_unstable();
+        nbrs.dedup();
+        let slots = &mut nbr_idx[v * dims.k..(v + 1) * dims.k];
+        let masks = &mut nbr_mask[v * dims.k..(v + 1) * dims.k];
+        if nbrs.len() > dims.k {
+            let mut node_rng = rng.fork(v as u64);
+            let picked = node_rng.sample_indices(nbrs.len(), dims.k);
+            for (s, &pi) in picked.iter().enumerate() {
+                slots[s] = nbrs[pi] as i32;
+                masks[s] = 1.0;
+            }
+        } else {
+            for (s, &u) in nbrs.iter().enumerate() {
+                slots[s] = u as i32;
+                masks[s] = 1.0;
+            }
+        }
+    }
+
+    GraphFeatures {
+        feats,
+        nbr_idx,
+        nbr_mask,
+        node_mask,
+        dev_mask,
+        n_real: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, OpKind};
+
+    fn small() -> OpGraph {
+        let mut b = GraphBuilder::new("f", 4);
+        let a = b.op("a", OpKind::Input).shape([8, 16, 0, 0]).id();
+        let c = b
+            .op("c", OpKind::MatMul)
+            .flops(1e6)
+            .shape([8, 32, 0, 0])
+            .layer(1)
+            .after(&[a])
+            .id();
+        b.op("d", OpKind::Output).after(&[c]);
+        b.build()
+    }
+
+    fn dims() -> FeatDims {
+        FeatDims { n: 16, k: 4, f: 48, d: 8 }
+    }
+
+    #[test]
+    fn shapes_and_masks() {
+        let g = small();
+        let f = featurize(&g, dims(), 0);
+        assert_eq!(f.feats.len(), 16 * 48);
+        assert_eq!(f.nbr_idx.len(), 16 * 4);
+        assert_eq!(f.node_mask.iter().sum::<f32>(), 3.0);
+        assert_eq!(f.dev_mask.iter().sum::<f32>(), 4.0);
+        // padded rows are all-zero
+        assert!(f.feats[3 * 48..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn neighbor_lists_undirected() {
+        let g = small();
+        let f = featurize(&g, dims(), 0);
+        // node 1 (MatMul) has neighbors {0, 2}
+        let slots = &f.nbr_idx[4..8];
+        let mask = &f.nbr_mask[4..8];
+        assert_eq!(mask.iter().sum::<f32>(), 2.0);
+        let mut got: Vec<i32> = slots
+            .iter()
+            .zip(mask)
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(&s, _)| s)
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 2]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = small();
+        let a = featurize(&g, dims(), 7);
+        let b = featurize(&g, dims(), 7);
+        assert_eq!(a.feats, b.feats);
+        assert_eq!(a.nbr_idx, b.nbr_idx);
+        let c = featurize(&g, dims(), 8);
+        // features identical (seed only affects sampling; deg<=K here)
+        assert_eq!(a.feats, c.feats);
+    }
+
+    #[test]
+    fn one_hot_kind_set() {
+        let g = small();
+        let f = featurize(&g, dims(), 0);
+        // node 1 kind = MatMul
+        let row = &f.feats[48..96];
+        assert_eq!(row[OpKind::MatMul.index()], 1.0);
+        assert_eq!(
+            row[..NUM_OP_KINDS].iter().sum::<f32>(),
+            1.0,
+            "exactly one kind bit"
+        );
+    }
+}

@@ -1,0 +1,303 @@
+//! Dataflow-graph substrate: the op-level computation graphs the policy
+//! places. Mirrors what GDP sees in TensorFlow graphs — ops with meta
+//! features (type, output shape, adjacency) and data-dependency edges.
+
+pub mod builder;
+pub mod coarsen;
+pub mod features;
+
+pub use builder::GraphBuilder;
+
+
+/// Operation kinds, a compact vocabulary covering the paper's six workload
+/// families (vision / NLP / speech). The one-hot of this enum is the leading
+/// block of the node feature vector (graph::features), so the order is part
+/// of the artifact ABI — append only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum OpKind {
+    Input = 0,
+    Const,
+    Variable,   // trainable parameter (resident bytes)
+    Embedding,
+    MatMul,
+    Conv2D,
+    DepthwiseConv,
+    RnnCell,    // fused LSTM/GRU cell macro-op
+    Attention,  // fused QK^T softmax V macro-op
+    Elementwise,
+    Norm,       // layer/batch norm
+    Softmax,
+    Pool,
+    Concat,
+    Split,
+    Reshape,
+    Reduce,
+    Loss,
+    ApplyGrad,  // optimizer update, colocated with its Variable
+    Output,
+}
+
+pub const NUM_OP_KINDS: usize = 20;
+
+impl OpKind {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Fraction of device peak FLOP/s this op kind typically achieves
+    /// (compute efficiency in the simulator cost model).
+    pub fn efficiency(self) -> f64 {
+        match self {
+            OpKind::MatMul | OpKind::Attention => 0.65,
+            OpKind::Conv2D => 0.55,
+            OpKind::DepthwiseConv => 0.25,
+            OpKind::RnnCell => 0.45,
+            OpKind::Embedding => 0.20,
+            OpKind::Norm | OpKind::Softmax | OpKind::Reduce => 0.10,
+            OpKind::Elementwise | OpKind::Pool => 0.08,
+            OpKind::Loss | OpKind::ApplyGrad => 0.10,
+            OpKind::Concat | OpKind::Split | OpKind::Reshape => 0.05,
+            OpKind::Input | OpKind::Const | OpKind::Variable | OpKind::Output => 0.05,
+        }
+    }
+
+    /// Whether the op performs meaningful compute (vs. pure data movement).
+    pub fn is_compute(self) -> bool {
+        !matches!(
+            self,
+            OpKind::Input | OpKind::Const | OpKind::Variable | OpKind::Output
+                | OpKind::Reshape
+        )
+    }
+}
+
+/// One operation in the dataflow graph.
+#[derive(Clone, Debug)]
+pub struct OpNode {
+    pub name: String,
+    pub kind: OpKind,
+    /// Forward-pass floating point operations.
+    pub flops: f64,
+    /// Bytes of this op's output tensor (what travels along out-edges).
+    pub output_bytes: u64,
+    /// Resident parameter bytes (Variables and fused weights).
+    pub param_bytes: u64,
+    /// Output tensor shape, zero-padded to rank 4.
+    pub out_shape: [u32; 4],
+    /// Model layer index assigned by the generator (drives the human-expert
+    /// pipeline baseline and the layer-position feature).
+    pub layer: u32,
+}
+
+impl OpNode {
+    pub fn new(name: impl Into<String>, kind: OpKind) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+            flops: 0.0,
+            output_bytes: 0,
+            param_bytes: 0,
+            out_shape: [0; 4],
+            layer: 0,
+        }
+    }
+}
+
+/// An op-level dataflow graph with CSR adjacency caches.
+///
+/// Invariants (checked by `validate`):
+/// - edges connect existing nodes, no self loops;
+/// - the graph is a DAG and `topo_order` is a valid topological order.
+#[derive(Clone, Debug)]
+pub struct OpGraph {
+    pub name: String,
+    /// Number of devices this workload targets (Table 1 column "#devices").
+    pub num_devices: usize,
+    pub nodes: Vec<OpNode>,
+    /// (producer, consumer) data-dependency edges.
+    pub edges: Vec<(u32, u32)>,
+    csr: Option<Csr>,
+}
+
+/// CSR adjacency (built lazily, not serialized).
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub out_off: Vec<u32>,
+    pub out_adj: Vec<u32>,
+    pub in_off: Vec<u32>,
+    pub in_adj: Vec<u32>,
+    pub topo: Vec<u32>,
+}
+
+impl OpGraph {
+    pub fn new(name: impl Into<String>, num_devices: usize) -> Self {
+        Self {
+            name: name.into(),
+            num_devices,
+            nodes: vec![],
+            edges: vec![],
+            csr: None,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Build (or rebuild) CSR caches + topological order. Panics on cycles.
+    pub fn freeze(&mut self) {
+        let n = self.n();
+        let mut out_deg = vec![0u32; n];
+        let mut in_deg = vec![0u32; n];
+        for &(u, v) in &self.edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge out of range");
+            assert_ne!(u, v, "self loop at node {u}");
+            out_deg[u as usize] += 1;
+            in_deg[v as usize] += 1;
+        }
+        let mut out_off = vec![0u32; n + 1];
+        let mut in_off = vec![0u32; n + 1];
+        for i in 0..n {
+            out_off[i + 1] = out_off[i] + out_deg[i];
+            in_off[i + 1] = in_off[i] + in_deg[i];
+        }
+        let mut out_adj = vec![0u32; self.edges.len()];
+        let mut in_adj = vec![0u32; self.edges.len()];
+        let mut oc = out_off.clone();
+        let mut ic = in_off.clone();
+        for &(u, v) in &self.edges {
+            out_adj[oc[u as usize] as usize] = v;
+            oc[u as usize] += 1;
+            in_adj[ic[v as usize] as usize] = u;
+            ic[v as usize] += 1;
+        }
+        // Kahn topological sort (stable: lowest id first via simple queue).
+        let mut indeg = in_deg.clone();
+        let mut queue: std::collections::VecDeque<u32> = (0..n as u32)
+            .filter(|&i| indeg[i as usize] == 0)
+            .collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            topo.push(u);
+            let (s, e) = (out_off[u as usize] as usize, out_off[u as usize + 1] as usize);
+            for &v in &out_adj[s..e] {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert_eq!(topo.len(), n, "graph {} has a cycle", self.name);
+        self.csr = Some(Csr { out_off, out_adj, in_off, in_adj, topo });
+    }
+
+    pub fn csr(&self) -> &Csr {
+        self.csr.as_ref().expect("call freeze() first")
+    }
+
+    pub fn consumers(&self, u: usize) -> &[u32] {
+        let c = self.csr();
+        &c.out_adj[c.out_off[u] as usize..c.out_off[u + 1] as usize]
+    }
+
+    pub fn producers(&self, v: usize) -> &[u32] {
+        let c = self.csr();
+        &c.in_adj[c.in_off[v] as usize..c.in_off[v + 1] as usize]
+    }
+
+    pub fn topo_order(&self) -> &[u32] {
+        &self.csr().topo
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|x| x.flops).sum()
+    }
+
+    pub fn total_param_bytes(&self) -> u64 {
+        self.nodes.iter().map(|x| x.param_bytes).sum()
+    }
+
+    pub fn total_output_bytes(&self) -> u64 {
+        self.nodes.iter().map(|x| x.output_bytes).sum()
+    }
+
+    pub fn max_layer(&self) -> u32 {
+        self.nodes.iter().map(|x| x.layer).max().unwrap_or(0)
+    }
+
+    /// Structural sanity checks; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty graph".into());
+        }
+        if self.num_devices == 0 || self.num_devices > 8 {
+            return Err(format!("num_devices={} out of range", self.num_devices));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &(u, v) in &self.edges {
+            if u as usize >= self.n() || v as usize >= self.n() {
+                return Err(format!("edge ({u},{v}) out of range"));
+            }
+            if u == v {
+                return Err(format!("self loop at {u}"));
+            }
+            if !seen.insert((u, v)) {
+                return Err(format!("duplicate edge ({u},{v})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> OpGraph {
+        let mut g = OpGraph::new("diamond", 2);
+        for (name, kind) in [
+            ("in", OpKind::Input),
+            ("a", OpKind::MatMul),
+            ("b", OpKind::Conv2D),
+            ("out", OpKind::Output),
+        ] {
+            g.nodes.push(OpNode::new(name, kind));
+        }
+        g.edges = vec![(0, 1), (0, 2), (1, 3), (2, 3)];
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn csr_and_topo() {
+        let g = diamond();
+        assert_eq!(g.consumers(0), &[1, 2]);
+        assert_eq!(g.producers(3), &[1, 2]);
+        let topo = g.topo_order();
+        assert_eq!(topo[0], 0);
+        assert_eq!(topo[3], 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_panics() {
+        let mut g = OpGraph::new("cyc", 2);
+        g.nodes.push(OpNode::new("a", OpKind::MatMul));
+        g.nodes.push(OpNode::new("b", OpKind::MatMul));
+        g.edges = vec![(0, 1), (1, 0)];
+        g.freeze();
+    }
+
+    #[test]
+    fn validate_catches_dup_edges() {
+        let mut g = diamond();
+        g.edges.push((0, 1));
+        assert!(g.validate().unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn opkind_vocab_size() {
+        assert_eq!(OpKind::Output.index() + 1, NUM_OP_KINDS);
+    }
+}

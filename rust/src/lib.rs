@@ -1,0 +1,21 @@
+//! GDP: Generalized Device Placement for Dataflow Graphs (Zhou et al., 2019)
+//! — a rust + JAX + Pallas reproduction.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L1/L2 (build time, python): Pallas kernels + JAX policy, AOT-lowered to
+//!   HLO text under `artifacts/`.
+//! - L3 (this crate): the coordinator — dataflow-graph substrates, the
+//!   event-driven multi-device simulator that supplies the RL reward, the
+//!   baseline placers (human expert, METIS-style partitioner, HDP proxy),
+//!   the PPO training loop driving the AOT policy via PJRT, and the
+//!   experiment harnesses regenerating every table/figure of the paper.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod graph;
+pub mod placement;
+pub mod policy;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

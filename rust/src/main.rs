@@ -1,0 +1,238 @@
+//! `gdp` — the GDP reproduction CLI (L3 coordinator entry point).
+//!
+//! Subcommands:
+//!   list                         workload registry + baselines overview
+//!   simulate  <workload>         simulate baseline placements
+//!   train     <workload...>      GDP-one (one id) / GDP-batch (many ids)
+//!   infer     <workload>         zero-shot placement from a checkpoint
+//!   experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
+//!
+//! Run `gdp <cmd> --help` for flags. Artifacts must exist (`make
+//! artifacts`) for train/infer/experiment.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use gdp::coordinator::experiments;
+use gdp::coordinator::{self, Session, TrainConfig};
+use gdp::coordinator::baseline_eval::{eval_hdp, eval_human, eval_metis};
+use gdp::sim::{simulate_default, Topology};
+use gdp::util::cli::Args;
+use gdp::workloads;
+
+const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|experiment> [flags]
+  gdp list
+  gdp simulate <workload> [--hdp-steps N]
+  gdp trace <workload> --placement <human|metis|single> [--out trace.json]
+  gdp train <workload> [<workload>...] [--steps N] [--lr X] [--entropy X]
+            [--ppo-epochs N] [--seed N] [--variant full|no_attention|no_superposition]
+            [--artifacts DIR] [--save ckpt.bin] [--load ckpt.bin] [--quiet]
+  gdp infer <workload> --load ckpt.bin [--samples N] [--variant V]
+  gdp experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
+            [--steps N] [--quick] [--out runs/]";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow!(e))?;
+    let cmd = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("missing subcommand"))?;
+    match cmd.as_str() {
+        "list" => cmd_list(&args),
+        "simulate" => cmd_simulate(&args),
+        "trace" => cmd_trace(&args),
+        "train" => cmd_train(&args),
+        "infer" => cmd_infer(&args),
+        "experiment" => cmd_experiment(&args),
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}
+
+fn cmd_list(_args: &Args) -> Result<()> {
+    println!("{:<12} {:<30} {:>8} {:>8} {:>10}", "id", "display", "#dev", "nodes", "GFLOP");
+    for spec in workloads::registry() {
+        let g = (spec.build)();
+        println!(
+            "{:<12} {:<30} {:>8} {:>8} {:>10.1}",
+            spec.id,
+            spec.display,
+            spec.num_devices,
+            g.n(),
+            g.total_flops() / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("simulate needs a workload id"))?;
+    let hdp_steps = args.usize_or("hdp-steps", 150).map_err(|e| anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
+    let g = workloads::by_id(id).ok_or_else(|| anyhow!("unknown workload {id:?}"))?;
+    println!("workload {id}: {} nodes, {} devices", g.n(), g.num_devices);
+
+    let single = simulate_default(&g, &vec![0; g.n()]);
+    let fmt = |o: Option<f64>| o.map_or("OOM".to_string(), |t| format!("{t:.4}s"));
+    println!(
+        "  single-device : {}",
+        fmt(if single.valid { Some(single.step_time) } else { None })
+    );
+    println!("  human expert  : {}", fmt(eval_human(&g).step_time));
+    println!("  metis         : {}", fmt(eval_metis(&g).step_time));
+    let (hdp, tracker) = eval_hdp(&g, hdp_steps, 7);
+    println!(
+        "  hdp (proxy)   : {}  [{} evals, {} improvements]",
+        fmt(hdp.step_time),
+        hdp.search_evals,
+        tracker.improvements.len()
+    );
+    Ok(())
+}
+
+fn train_cfg_from(args: &Args) -> Result<TrainConfig> {
+    Ok(TrainConfig {
+        steps: args.usize_or("steps", 200).map_err(|e| anyhow!(e))?,
+        lr: args.f64_or("lr", 3e-3).map_err(|e| anyhow!(e))? as f32,
+        entropy_coef: args.f64_or("entropy", 0.01).map_err(|e| anyhow!(e))? as f32,
+        ppo_epochs: args.usize_or("ppo-epochs", 2).map_err(|e| anyhow!(e))?,
+        temperature: args.f64_or("temperature", 1.0).map_err(|e| anyhow!(e))? as f32,
+        seed: args.u64_or("seed", 0xD15C0).map_err(|e| anyhow!(e))?,
+        verbose: !args.flag("quiet"),
+        ..TrainConfig::default()
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let ids: Vec<String> = args.positional[1..].to_vec();
+    if ids.is_empty() {
+        bail!("train needs at least one workload id");
+    }
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let save = args.get("save").map(PathBuf::from);
+    let load = args.get("load").map(PathBuf::from);
+    let cfg = train_cfg_from(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let session = Session::open(&artifacts, &variant)?;
+    let mut tasks = Vec::new();
+    for (i, id) in ids.iter().enumerate() {
+        tasks.push(session.task(id, cfg.seed ^ i as u64)?);
+    }
+    let mut store = match &load {
+        Some(p) => {
+            let mut s = session.load_params(p)?;
+            s.reset_optimizer()?;
+            s
+        }
+        None => session.init_params()?,
+    };
+    let mode = if ids.len() == 1 { "GDP-one" } else { "GDP-batch" };
+    eprintln!(
+        "[{mode}] variant={variant} tasks={ids:?} steps={} (B={} rollouts/step)",
+        cfg.steps, session.manifest().dims.b
+    );
+    let result = coordinator::train(&session.policy, &mut store, &tasks, &cfg)?;
+    for t in &result.per_task {
+        println!(
+            "{:<12} best {}  (converged @ {} sim evals)",
+            t.task_id,
+            if t.best_valid { format!("{:.4}s", t.best_time) } else { "OOM".into() },
+            t.tracker.evals_to_within(0.05)
+        );
+    }
+    println!(
+        "wall {:.1}s | xla {:.1}s | {} sim evals",
+        result.wall_secs, result.xla_secs, result.sim_evals
+    );
+    if let Some(p) = save {
+        store.save(&p)?;
+        println!("saved checkpoint to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("infer needs a workload id"))?;
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let load = args.get("load").map(PathBuf::from);
+    let samples = args.usize_or("samples", 8).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_or("seed", 3).map_err(|e| anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let session = Session::open(&artifacts, &variant)?;
+    let store = match &load {
+        Some(p) => session.load_params(p)?,
+        None => session.init_params()?,
+    };
+    let task = session.task(id, seed)?;
+    let best = coordinator::infer(&session.policy, &store, &task, samples, seed)?;
+    println!(
+        "{id}: zero-shot best {}",
+        if best.best_valid { format!("{:.4}s", best.best_time) } else { "OOM".into() }
+    );
+    let hist = best.best_placement.histogram(task.graph.num_devices);
+    println!("  device histogram: {hist:?}");
+    let _ = Topology::p100_pcie(task.graph.num_devices);
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    experiments::run_from_cli(args)
+}
+
+/// Export a chrome://tracing timeline of a baseline placement's simulated
+/// schedule (device rows + link rows).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("trace needs a workload id"))?;
+    let which = args.str_or("placement", "human");
+    let out = PathBuf::from(
+        args.str_or("out", &format!("runs/trace_{id}_{which}.json")),
+    );
+    args.finish().map_err(|e| anyhow!(e))?;
+    let g = workloads::by_id(id).ok_or_else(|| anyhow!("unknown workload {id:?}"))?;
+    let placement = match which.as_str() {
+        "human" => gdp::baselines::human_expert(&g).devices,
+        "metis" => gdp::baselines::metis_place(&g).devices,
+        "single" => vec![0; g.n()],
+        other => bail!("unknown placement {other:?} (human|metis|single)"),
+    };
+    let topo = Topology::p100_pcie(g.num_devices);
+    let sim = gdp::sim::Simulator::new(&g, &topo);
+    let (rep, trace) = sim.simulate_traced(&placement);
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, trace.to_chrome_json())?;
+    println!(
+        "{id}/{which}: step {:.4}s, utilization {:?}",
+        rep.step_time,
+        trace
+            .utilization(g.num_devices)
+            .iter()
+            .map(|u| format!("{:.0}%", u * 100.0))
+            .collect::<Vec<_>>()
+    );
+    println!("chrome trace -> {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Placement type and helpers: a placement assigns every node of an op
+//! graph to a device index.
+
+use crate::graph::OpGraph;
+
+/// Device assignment per node (same indexing as `OpGraph::nodes`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub devices: Vec<usize>,
+}
+
+impl Placement {
+    pub fn new(devices: Vec<usize>) -> Self {
+        Self { devices }
+    }
+
+    /// Everything on device 0.
+    pub fn single(n: usize) -> Self {
+        Self { devices: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Structural validity against a graph (length + device range).
+    pub fn check(&self, g: &OpGraph) -> Result<(), String> {
+        if self.devices.len() != g.n() {
+            return Err(format!(
+                "placement length {} != node count {}",
+                self.devices.len(),
+                g.n()
+            ));
+        }
+        if let Some(&bad) = self.devices.iter().find(|&&d| d >= g.num_devices) {
+            return Err(format!(
+                "device {bad} out of range (num_devices={})",
+                g.num_devices
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of nodes per device.
+    pub fn histogram(&self, num_devices: usize) -> Vec<usize> {
+        let mut h = vec![0usize; num_devices];
+        for &d in &self.devices {
+            if d < num_devices {
+                h[d] += 1;
+            }
+        }
+        h
+    }
+
+    /// Number of cut edges (endpoints on different devices).
+    pub fn cut_edges(&self, g: &OpGraph) -> usize {
+        g.edges
+            .iter()
+            .filter(|&&(u, v)| self.devices[u as usize] != self.devices[v as usize])
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, OpKind};
+
+    fn g3() -> OpGraph {
+        let mut b = GraphBuilder::new("g3", 2);
+        let a = b.op("a", OpKind::Input).out_bytes(8).id();
+        let c = b.op("c", OpKind::MatMul).flops(1.0).out_bytes(8).after(&[a]).id();
+        b.op("d", OpKind::Output).after(&[c]);
+        b.build()
+    }
+
+    #[test]
+    fn check_and_histogram() {
+        let g = g3();
+        let p = Placement::new(vec![0, 1, 1]);
+        assert!(p.check(&g).is_ok());
+        assert_eq!(p.histogram(2), vec![1, 2]);
+        assert_eq!(p.cut_edges(&g), 1);
+        assert!(Placement::new(vec![0, 2, 0]).check(&g).is_err());
+        assert!(Placement::new(vec![0]).check(&g).is_err());
+    }
+}

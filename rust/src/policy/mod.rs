@@ -1,0 +1,9 @@
+//! Policy-side glue between the coordinator and the AOT policy network:
+//! placement tasks (graph + coarsening + features + reward substrate) and
+//! rollout sampling from policy logits.
+
+pub mod rollout;
+pub mod task;
+
+pub use rollout::{greedy_from_logits, sample_from_logits, Sample};
+pub use task::PlacementTask;

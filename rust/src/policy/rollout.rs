@@ -1,0 +1,160 @@
+//! Rollout sampling: turn one batch row of policy logits [N, D] into a
+//! placement sample (actions + log-probs) — temperature softmax for
+//! exploration during PPO, argmax for zero-shot inference. All math stays
+//! allocation-light: D <= 8.
+
+use crate::util::{argmax, Rng};
+
+/// One sampled (or greedy) placement for a batch row.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Device per PADDED node slot [N] (0 for padding; fed to train_step).
+    pub actions: Vec<i32>,
+    /// log pi(action | node) per padded slot [N] (0 for padding).
+    pub logp: Vec<f32>,
+    /// Device per REAL coarse node [n_real] (fed to the simulator).
+    pub placement: Vec<usize>,
+}
+
+fn row_logits(logits: &[f32], node: usize, d_total: usize) -> &[f32] {
+    &logits[node * d_total..(node + 1) * d_total]
+}
+
+/// Temperature-softmax sample over the first `num_devices` logits per node.
+pub fn sample_from_logits(
+    logits: &[f32],
+    n_total: usize,
+    d_total: usize,
+    n_real: usize,
+    num_devices: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Sample {
+    debug_assert_eq!(logits.len(), n_total * d_total);
+    debug_assert!(n_real <= n_total && num_devices <= d_total);
+    let mut actions = vec![0i32; n_total];
+    let mut logp = vec![0f32; n_total];
+    let mut placement = vec![0usize; n_real];
+    let inv_t = 1.0 / temperature.max(1e-6);
+    let mut scaled = [0f32; 8];
+    let mut probs = [0f32; 8];
+    for v in 0..n_real {
+        let row = row_logits(logits, v, d_total);
+        for d in 0..num_devices {
+            scaled[d] = row[d] * inv_t;
+        }
+        crate::util::math::softmax_into(&scaled[..num_devices], &mut probs[..num_devices]);
+        // inverse-CDF sample
+        let r = rng.next_f32();
+        let mut acc = 0f32;
+        let mut pick = num_devices - 1;
+        for d in 0..num_devices {
+            acc += probs[d];
+            if r < acc {
+                pick = d;
+                break;
+            }
+        }
+        // log-prob under the UNSCALED policy (what train_step recomputes).
+        let lp = crate::util::log_softmax(&row[..num_devices]);
+        actions[v] = pick as i32;
+        logp[v] = lp[pick];
+        placement[v] = pick;
+    }
+    Sample { actions, logp, placement }
+}
+
+/// Greedy argmax placement (zero-shot inference).
+pub fn greedy_from_logits(
+    logits: &[f32],
+    n_total: usize,
+    d_total: usize,
+    n_real: usize,
+    num_devices: usize,
+) -> Sample {
+    let mut actions = vec![0i32; n_total];
+    let mut logp = vec![0f32; n_total];
+    let mut placement = vec![0usize; n_real];
+    for v in 0..n_real {
+        let row = row_logits(logits, v, d_total);
+        let pick = argmax(&row[..num_devices]);
+        let lp = crate::util::log_softmax(&row[..num_devices]);
+        actions[v] = pick as i32;
+        logp[v] = lp[pick];
+        placement[v] = pick;
+    }
+    Sample { actions, logp, placement }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn greedy_picks_max() {
+        // 2 nodes, D=4, devices=2: only first 2 logits may be picked.
+        let logits = vec![
+            0.1, 3.0, 99.0, 99.0, // node 0 -> device 1
+            2.0, -1.0, 99.0, 99.0, // node 1 -> device 0
+        ];
+        let s = greedy_from_logits(&logits, 2, 4, 2, 2);
+        assert_eq!(s.placement, vec![1, 0]);
+        assert!(s.logp.iter().all(|&l| l <= 0.0));
+    }
+
+    #[test]
+    fn sampling_respects_device_mask_and_padding() {
+        prop::check(50, 0xA11CE, |g| {
+            let n_total = 16;
+            let d_total = 8;
+            let n_real = g.usize_in(1, n_total + 1);
+            let num_dev = g.usize_in(1, d_total + 1).min(8);
+            let logits = g.vec(n_total * d_total, |g| g.f64_in(-3.0, 3.0) as f32);
+            let mut rng = g.rng.fork(1);
+            let s = sample_from_logits(
+                &logits, n_total, d_total, n_real, num_dev, 1.0, &mut rng,
+            );
+            if s.placement.iter().any(|&p| p >= num_dev) {
+                return Err("sampled inactive device".into());
+            }
+            if s.actions[n_real..].iter().any(|&a| a != 0) {
+                return Err("padding actions not zero".into());
+            }
+            if s.logp[..n_real].iter().any(|&l| !(l <= 0.0) || !l.is_finite()) {
+                return Err("invalid logp".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sampling_distribution_tracks_logits() {
+        // strong logit -> dominant device
+        let mut logits = vec![0f32; 4];
+        logits[2] = 6.0;
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 4];
+        for _ in 0..500 {
+            let s = sample_from_logits(&logits, 1, 4, 1, 4, 1.0, &mut rng);
+            counts[s.placement[0]] += 1;
+        }
+        assert!(counts[2] > 450, "{counts:?}");
+    }
+
+    #[test]
+    fn high_temperature_flattens() {
+        let mut logits = vec![0f32; 4];
+        logits[2] = 6.0;
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            let s = sample_from_logits(&logits, 1, 4, 1, 4, 50.0, &mut rng);
+            counts[s.placement[0]] += 1;
+        }
+        // near-uniform at very high temperature
+        for c in counts {
+            assert!(c > 300, "{counts:?}");
+        }
+    }
+}

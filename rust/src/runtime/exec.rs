@@ -1,0 +1,198 @@
+//! Policy executable bundle: `policy_fwd` (rollout sampling) and
+//! `train_step` (PPO + Adam) compiled from the variant's HLO-text
+//! artifacts, plus the batch marshalling between the coordinator's graph
+//! features and XLA literals.
+//!
+//! Input order is the jax flattening contract (manifest.train_inputs):
+//!   fwd:   params... , feats, nbr_idx, nbr_mask, node_mask, dev_mask
+//!   train: params..., m..., v..., t, lr, entc, <batch...>, actions,
+//!          logp_old, adv
+//! Output order mirrors it: fwd -> (logits,);
+//!   train -> params..., m..., v..., loss, entropy, approx_kl.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::manifest::Manifest;
+use super::params::ParamStore;
+use super::XlaRuntime;
+use crate::graph::features::GraphFeatures;
+
+/// Scalars reported by one PPO update.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    /// wall-clock of the XLA execution (perf accounting)
+    pub exec_secs: f64,
+}
+
+/// One marshalled policy batch: B rows of padded graph features.
+pub struct Batch {
+    pub feats: Literal,
+    pub nbr_idx: Literal,
+    pub nbr_mask: Literal,
+    pub node_mask: Literal,
+    pub dev_mask: Literal,
+    /// Per-row real node count (sampling needs it).
+    pub n_real: Vec<usize>,
+    /// Per-row active device count.
+    pub num_devices: Vec<usize>,
+}
+
+impl Batch {
+    /// Assemble a batch from exactly-B feature rows (cycle rows to fill).
+    pub fn from_rows(manifest: &Manifest, rows: &[&GraphFeatures]) -> Result<Batch> {
+        let d = manifest.dims;
+        if rows.is_empty() {
+            bail!("empty batch");
+        }
+        let b = d.b;
+        let mut feats = Vec::with_capacity(b * d.n * d.f);
+        let mut nbr_idx = Vec::with_capacity(b * d.n * d.k);
+        let mut nbr_mask = Vec::with_capacity(b * d.n * d.k);
+        let mut node_mask = Vec::with_capacity(b * d.n);
+        let mut dev_mask = Vec::with_capacity(b * d.d);
+        let mut n_real = Vec::with_capacity(b);
+        let mut num_devices = Vec::with_capacity(b);
+        for bi in 0..b {
+            let row = rows[bi % rows.len()];
+            if row.feats.len() != d.n * d.f {
+                bail!("feature row has wrong length");
+            }
+            feats.extend_from_slice(&row.feats);
+            nbr_idx.extend_from_slice(&row.nbr_idx);
+            nbr_mask.extend_from_slice(&row.nbr_mask);
+            node_mask.extend_from_slice(&row.node_mask);
+            dev_mask.extend_from_slice(&row.dev_mask);
+            n_real.push(row.n_real);
+            num_devices.push(
+                row.dev_mask.iter().filter(|&&x| x > 0.0).count(),
+            );
+        }
+        let sh = |dims: &[usize]| dims.iter().map(|&x| x as i64).collect::<Vec<_>>();
+        Ok(Batch {
+            feats: Literal::vec1(&feats).reshape(&sh(&[b, d.n, d.f]))?,
+            nbr_idx: Literal::vec1(&nbr_idx).reshape(&sh(&[b, d.n, d.k]))?,
+            nbr_mask: Literal::vec1(&nbr_mask).reshape(&sh(&[b, d.n, d.k]))?,
+            node_mask: Literal::vec1(&node_mask).reshape(&sh(&[b, d.n]))?,
+            dev_mask: Literal::vec1(&dev_mask).reshape(&sh(&[b, d.d]))?,
+            n_real,
+            num_devices,
+        })
+    }
+}
+
+/// Compiled policy for one model variant.
+pub struct Policy {
+    pub manifest: Manifest,
+    fwd: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    /// cumulative XLA execute time (perf accounting)
+    pub exec_secs_total: std::cell::Cell<f64>,
+}
+
+impl Policy {
+    /// Load + compile a variant directory (e.g. `artifacts/full`).
+    pub fn load(rt: &XlaRuntime, variant_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(variant_dir)?;
+        let fwd = rt
+            .compile_file(&variant_dir.join("policy_fwd.hlo.txt"))
+            .context("compiling policy_fwd")?;
+        let train = rt
+            .compile_file(&variant_dir.join("train_step.hlo.txt"))
+            .context("compiling train_step")?;
+        Ok(Self {
+            manifest,
+            fwd,
+            train,
+            exec_secs_total: std::cell::Cell::new(0.0),
+        })
+    }
+
+    fn track(&self, secs: f64) {
+        self.exec_secs_total.set(self.exec_secs_total.get() + secs);
+    }
+
+    /// Policy forward: returns logits, flattened [B * N * D].
+    pub fn forward(&self, store: &ParamStore, batch: &Batch) -> Result<Vec<f32>> {
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(store.values.len() + 5);
+        inputs.extend(store.values.iter());
+        inputs.extend([
+            &batch.feats,
+            &batch.nbr_idx,
+            &batch.nbr_mask,
+            &batch.node_mask,
+            &batch.dev_mask,
+        ]);
+        let t0 = Instant::now();
+        let result = self.fwd.execute::<&Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        self.track(t0.elapsed().as_secs_f64());
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// One PPO update. Mutates the parameter store in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        store: &mut ParamStore,
+        batch: &Batch,
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        lr: f32,
+        entropy_coef: f32,
+    ) -> Result<TrainStats> {
+        let d = self.manifest.dims;
+        if actions.len() != d.b * d.n || logp_old.len() != d.b * d.n {
+            bail!("actions/logp shape mismatch");
+        }
+        if adv.len() != d.b {
+            bail!("advantage shape mismatch");
+        }
+        let sh = |dims: &[usize]| dims.iter().map(|&x| x as i64).collect::<Vec<_>>();
+        let t_lit = Literal::scalar(store.step + 1.0);
+        let lr_lit = Literal::scalar(lr);
+        let ent_lit = Literal::scalar(entropy_coef);
+        let actions_lit = Literal::vec1(actions).reshape(&sh(&[d.b, d.n]))?;
+        let logp_lit = Literal::vec1(logp_old).reshape(&sh(&[d.b, d.n]))?;
+        let adv_lit = Literal::vec1(adv).reshape(&sh(&[d.b]))?;
+
+        let p = store.num_tensors();
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * p + 14);
+        inputs.extend(store.values.iter());
+        inputs.extend(store.m.iter());
+        inputs.extend(store.v.iter());
+        inputs.extend([&t_lit, &lr_lit, &ent_lit]);
+        inputs.extend([
+            &batch.feats,
+            &batch.nbr_idx,
+            &batch.nbr_mask,
+            &batch.node_mask,
+            &batch.dev_mask,
+        ]);
+        inputs.extend([&actions_lit, &logp_lit, &adv_lit]);
+
+        let t0 = Instant::now();
+        let result = self.train.execute::<&Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        self.track(t0.elapsed().as_secs_f64());
+        let mut outs = result.to_tuple()?;
+        if outs.len() != 3 * p + 3 {
+            bail!("train_step returned {} outputs, expected {}", outs.len(), 3 * p + 3);
+        }
+        let kl = outs.pop().unwrap().get_first_element::<f32>()?;
+        let entropy = outs.pop().unwrap().get_first_element::<f32>()?;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()?;
+        let v = outs.split_off(2 * p);
+        let m = outs.split_off(p);
+        store.update(outs, m, v);
+        Ok(TrainStats { loss, entropy, approx_kl: kl, exec_secs: t0.elapsed().as_secs_f64() })
+    }
+}

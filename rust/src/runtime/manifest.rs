@@ -1,0 +1,184 @@
+//! Parse `artifacts/<variant>/manifest.json`: the ABI contract between the
+//! python AOT lowering and this runtime (flattened parameter order, static
+//! dims, variant flags).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Static AOT dims (mirror of python/compile/config.py).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Dims {
+    pub n: usize,
+    pub k: usize,
+    pub f: usize,
+    pub h: usize,
+    pub d: usize,
+    pub b: usize,
+    pub gnn_layers: usize,
+    pub placer_layers: usize,
+    pub heads: usize,
+    pub clip_eps: f64,
+}
+
+/// One flattened parameter tensor (sorted-name order = HLO input order).
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub elements: usize,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variant: String,
+    pub use_attention: bool,
+    pub use_superposition: bool,
+    pub dims: Dims,
+    pub params: Vec<ParamEntry>,
+    pub total_elements: usize,
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing/invalid {key}"))
+}
+
+impl Manifest {
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let root = parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let dims_v = root.get("dims").ok_or_else(|| anyhow!("missing dims"))?;
+        let dims = Dims {
+            n: usize_field(dims_v, "N")?,
+            k: usize_field(dims_v, "K")?,
+            f: usize_field(dims_v, "F")?,
+            h: usize_field(dims_v, "H")?,
+            d: usize_field(dims_v, "D")?,
+            b: usize_field(dims_v, "B")?,
+            gnn_layers: usize_field(dims_v, "gnn_layers")?,
+            placer_layers: usize_field(dims_v, "placer_layers")?,
+            heads: usize_field(dims_v, "heads")?,
+            clip_eps: dims_v
+                .get("clip_eps")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing clip_eps"))?,
+        };
+        let params_v = root
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params array"))?;
+        let mut params = Vec::with_capacity(params_v.len());
+        for p in params_v {
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            params.push(ParamEntry {
+                name: p
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                elements: usize_field(p, "elements")?,
+                offset: usize_field(p, "offset")?,
+                shape,
+            });
+        }
+        // ABI invariants: sorted by name, contiguous offsets.
+        let mut expected_offset = 0usize;
+        for (i, p) in params.iter().enumerate() {
+            if i > 0 && params[i - 1].name >= p.name {
+                bail!("manifest params not sorted at {}", p.name);
+            }
+            if p.offset != expected_offset {
+                bail!("manifest offsets not contiguous at {}", p.name);
+            }
+            let prod: usize = p.shape.iter().product::<usize>().max(1);
+            if prod != p.elements {
+                bail!("manifest element count mismatch at {}", p.name);
+            }
+            expected_offset += p.elements;
+        }
+        let total_elements = usize_field(&root, "total_elements")?;
+        if total_elements != expected_offset {
+            bail!("total_elements {total_elements} != sum {expected_offset}");
+        }
+        Ok(Self {
+            variant: root
+                .get("variant")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            use_attention: root
+                .get("use_attention")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+            use_superposition: root
+                .get("use_superposition")
+                .and_then(Json::as_bool)
+                .unwrap_or(true),
+            dims,
+            params,
+            total_elements,
+        })
+    }
+
+    pub fn load(variant_dir: &Path) -> Result<Self> {
+        let path = variant_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "variant": "full", "use_attention": true, "use_superposition": true,
+      "dims": {"N":256,"K":8,"F":48,"H":64,"D":8,"B":4,
+               "gnn_layers":3,"placer_layers":2,"heads":4,"ffn":128,
+               "clip_eps":0.2,"dh":16},
+      "params": [
+        {"name":"a","shape":[2,3],"elements":6,"offset":0},
+        {"name":"b","shape":[4],"elements":4,"offset":6}
+      ],
+      "total_elements": 10
+    }"#;
+
+    #[test]
+    fn parses_valid() {
+        let m = Manifest::parse_str(DOC).unwrap();
+        assert_eq!(m.dims.n, 256);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].offset, 6);
+        assert_eq!(m.total_elements, 10);
+    }
+
+    #[test]
+    fn rejects_unsorted_or_gapped() {
+        let bad = DOC.replace("\"offset\": 6", "\"offset\": 7")
+            .replace("\"offset\":6", "\"offset\":7");
+        assert!(Manifest::parse_str(&bad).is_err());
+        let swapped = DOC.replace("\"name\":\"a\"", "\"name\":\"z\"");
+        assert!(Manifest::parse_str(&swapped).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = std::path::Path::new("artifacts/full");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.variant, "full");
+            assert!(m.total_elements > 10_000);
+        }
+    }
+}

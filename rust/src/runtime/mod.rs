@@ -1,0 +1,35 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs here — this is the self-contained serving/training
+//! hot path (see /opt/xla-example/load_hlo for the interchange pattern).
+
+pub mod exec;
+pub mod manifest;
+pub mod params;
+
+pub use exec::{Batch, Policy, TrainStats};
+pub use manifest::{Dims, Manifest, ParamEntry};
+pub use params::ParamStore;
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client (compile once, execute many).
+pub struct XlaRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile one HLO-text module.
+    pub fn compile_file(
+        &self,
+        path: &std::path::Path,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}

@@ -1,0 +1,178 @@
+//! Parameter store: the policy's flattened parameters + Adam state as XLA
+//! literals, in the manifest's sorted-name order (the HLO input order).
+//! Checkpoints are the same flat little-endian f32 blob format the python
+//! AOT writes for `params_init.bin`, so init/pretrained/fine-tuned params
+//! are interchangeable.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::manifest::Manifest;
+
+pub struct ParamStore {
+    /// Flattened parameter tensors (sorted-name order).
+    pub values: Vec<Literal>,
+    /// Adam first/second-moment state, same order/shapes.
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    /// 1-based Adam step counter (f32 for bias correction in the HLO).
+    pub step: f32,
+    shapes: Vec<Vec<usize>>,
+}
+
+fn literal_from(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+impl ParamStore {
+    /// Build from a flat f32 vector laid out per the manifest.
+    pub fn from_flat(manifest: &Manifest, flat: &[f32]) -> Result<Self> {
+        if flat.len() != manifest.total_elements {
+            bail!(
+                "param blob has {} elements, manifest expects {}",
+                flat.len(),
+                manifest.total_elements
+            );
+        }
+        let mut values = Vec::with_capacity(manifest.params.len());
+        let mut m = Vec::with_capacity(manifest.params.len());
+        let mut v = Vec::with_capacity(manifest.params.len());
+        let mut shapes = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let slice = &flat[p.offset..p.offset + p.elements];
+            values.push(literal_from(slice, &p.shape)?);
+            let zeros = vec![0f32; p.elements];
+            m.push(literal_from(&zeros, &p.shape)?);
+            v.push(literal_from(&zeros, &p.shape)?);
+            shapes.push(p.shape.clone());
+        }
+        Ok(Self { values, m, v, step: 0.0, shapes })
+    }
+
+    /// Load the python-written init blob (or any checkpoint blob).
+    pub fn load_blob(manifest: &Manifest, path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{}: size not a multiple of 4", path.display());
+        }
+        let flat: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::from_flat(manifest, &flat)
+    }
+
+    /// Load the variant's initial parameters from its artifact dir.
+    pub fn load_init(manifest: &Manifest, variant_dir: &Path) -> Result<Self> {
+        Self::load_blob(manifest, &variant_dir.join("params_init.bin"))
+    }
+
+    /// Flatten current parameter values back to the blob layout.
+    pub fn to_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for lit in &self.values {
+            out.extend(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Save a checkpoint blob (params only; Adam state is reset on load,
+    /// matching the paper's fine-tuning setup).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let flat = self.to_flat()?;
+        let mut bytes = Vec::with_capacity(flat.len() * 4);
+        for x in flat {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Replace params + Adam state from a train-step output (same order).
+    pub fn update(
+        &mut self,
+        values: Vec<Literal>,
+        m: Vec<Literal>,
+        v: Vec<Literal>,
+    ) {
+        debug_assert_eq!(values.len(), self.values.len());
+        self.values = values;
+        self.m = m;
+        self.v = v;
+        self.step += 1.0;
+    }
+
+    /// Reset the optimizer (used when fine-tuning from a pretrained blob).
+    pub fn reset_optimizer(&mut self) -> Result<()> {
+        for (i, shape) in self.shapes.iter().enumerate() {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let zeros = vec![0f32; n];
+            self.m[i] = literal_from(&zeros, shape)?;
+            self.v[i] = literal_from(&zeros, shape)?;
+        }
+        self.step = 0.0;
+        Ok(())
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.values.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::parse_str(
+            r#"{
+          "variant":"t","use_attention":true,"use_superposition":true,
+          "dims":{"N":4,"K":2,"F":4,"H":4,"D":2,"B":2,
+                  "gnn_layers":1,"placer_layers":1,"heads":1,"clip_eps":0.2},
+          "params":[
+            {"name":"a","shape":[2,2],"elements":4,"offset":0},
+            {"name":"b","shape":[3],"elements":3,"offset":4}
+          ],
+          "total_elements":7
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let m = tiny_manifest();
+        let flat: Vec<f32> = (0..7).map(|i| i as f32 * 0.5).collect();
+        let store = ParamStore::from_flat(&m, &flat).unwrap();
+        assert_eq!(store.num_tensors(), 2);
+        assert_eq!(store.to_flat().unwrap(), flat);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = tiny_manifest();
+        let flat: Vec<f32> = (0..7).map(|i| (i as f32).sin()).collect();
+        let store = ParamStore::from_flat(&m, &flat).unwrap();
+        let dir = std::env::temp_dir().join("gdp_test_params");
+        let path = dir.join("ckpt.bin");
+        store.save(&path).unwrap();
+        let back = ParamStore::load_blob(&m, &path).unwrap();
+        assert_eq!(back.to_flat().unwrap(), flat);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let m = tiny_manifest();
+        assert!(ParamStore::from_flat(&m, &[0.0; 6]).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Per-op cost model: roofline of compute vs memory bandwidth plus a fixed
+//! kernel-launch overhead, scaled by an op-kind efficiency factor (dense
+//! matmuls run near peak; elementwise ops are bandwidth-bound).
+
+use crate::graph::OpNode;
+use crate::sim::device::DeviceSpec;
+
+/// Tunable cost-model constants.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Fixed per-kernel launch/dispatch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Multiplier applied to backward-pass compute (dgrad+wgrad ~ 2x fwd).
+    pub backward_factor: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { launch_overhead: 10e-6, backward_factor: 2.0 }
+    }
+}
+
+impl CostModel {
+    /// Forward execution time of `node` on `dev`, seconds.
+    pub fn op_time(&self, node: &OpNode, dev: &DeviceSpec) -> f64 {
+        if !node.kind.is_compute() && node.flops == 0.0 {
+            // Pure metadata ops (Input/Const/Variable/Reshape/Output).
+            return 1e-6;
+        }
+        let eff = node.kind.efficiency();
+        let compute = node.flops / (dev.peak_flops * eff);
+        // Bandwidth term: read inputs + write output; approximate traffic
+        // as 2x the output tensor (inputs are a consumer-side cost).
+        let traffic = 2.0 * node.output_bytes as f64;
+        let memory = traffic / dev.mem_bw;
+        self.launch_overhead + compute.max(memory)
+    }
+
+    /// Backward execution time (reverse pass of training).
+    pub fn op_time_bwd(&self, node: &OpNode, dev: &DeviceSpec) -> f64 {
+        if !node.kind.is_compute() && node.flops == 0.0 {
+            return 1e-6;
+        }
+        let eff = node.kind.efficiency();
+        let compute = self.backward_factor * node.flops / (dev.peak_flops * eff);
+        let traffic = 3.0 * node.output_bytes as f64; // grads in+out+acts
+        let memory = traffic / dev.mem_bw;
+        self.launch_overhead + compute.max(memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, OpNode};
+
+    #[test]
+    fn matmul_compute_bound() {
+        let cm = CostModel::default();
+        let dev = DeviceSpec::p100();
+        let mut n = OpNode::new("mm", OpKind::MatMul);
+        n.flops = 1e12; // 1 TFLOP
+        n.output_bytes = 1 << 20;
+        let t = cm.op_time(&n, &dev);
+        // ~1e12 / (10.6e12*0.65) ~ 0.145 s
+        assert!((t - (1e12 / (10.6e12 * 0.65) + 10e-6)).abs() < 1e-6);
+        assert!(cm.op_time_bwd(&n, &dev) > 1.9 * (t - 10e-6));
+    }
+
+    #[test]
+    fn elementwise_bandwidth_bound() {
+        let cm = CostModel::default();
+        let dev = DeviceSpec::p100();
+        let mut n = OpNode::new("add", OpKind::Elementwise);
+        n.flops = 1e6;
+        n.output_bytes = 512 << 20; // huge tensor
+        let t = cm.op_time(&n, &dev);
+        let bw_term = 2.0 * (512u64 << 20) as f64 / dev.mem_bw;
+        assert!((t - (bw_term + 10e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metadata_ops_cheap() {
+        let cm = CostModel::default();
+        let dev = DeviceSpec::p100();
+        let n = OpNode::new("in", OpKind::Input);
+        assert!(cm.op_time(&n, &dev) < 2e-6);
+    }
+}

@@ -1,0 +1,103 @@
+//! Device and interconnect models.
+//!
+//! Calibrated to the paper's testbed: one host CPU + up to eight Nvidia
+//! P100s on PCIe (§4.1). Only relative compute/transfer/memory ratios
+//! matter for placement quality, so the specs are deliberately simple.
+
+
+/// A single accelerator (or CPU) device.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Peak compute, FLOP/s (f32).
+    pub peak_flops: f64,
+    /// Device memory capacity, bytes.
+    pub mem_bytes: u64,
+    /// Device memory bandwidth, bytes/s (roofline for bandwidth-bound ops).
+    pub mem_bw: f64,
+}
+
+impl DeviceSpec {
+    /// Nvidia P100 (16 GB, ~10.6 TFLOP/s fp32, ~720 GB/s HBM2).
+    pub fn p100() -> Self {
+        Self {
+            name: "p100".into(),
+            peak_flops: 10.6e12,
+            mem_bytes: 16 << 30,
+            mem_bw: 720e9,
+        }
+    }
+}
+
+/// A set of devices plus the pairwise interconnect.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub devices: Vec<DeviceSpec>,
+    /// Row-major [d*d] link bandwidth, bytes/s (diagonal unused).
+    pub link_bw: Vec<f64>,
+    /// Row-major [d*d] link latency, seconds.
+    pub link_lat: Vec<f64>,
+}
+
+impl Topology {
+    /// `d` P100s behind a PCIe-like switch: ~12 GB/s effective per direction,
+    /// 15 us latency (the paper's single-machine multi-GPU setting).
+    pub fn p100_pcie(d: usize) -> Self {
+        assert!((1..=8).contains(&d));
+        let mut link_bw = vec![12e9; d * d];
+        let mut link_lat = vec![15e-6; d * d];
+        for i in 0..d {
+            link_bw[i * d + i] = f64::INFINITY;
+            link_lat[i * d + i] = 0.0;
+        }
+        Self {
+            devices: (0..d)
+                .map(|i| {
+                    let mut s = DeviceSpec::p100();
+                    s.name = format!("p100:{i}");
+                    s
+                })
+                .collect(),
+            link_bw,
+            link_lat,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.devices.len()
+    }
+
+    #[inline]
+    pub fn bw(&self, a: usize, b: usize) -> f64 {
+        self.link_bw[a * self.d() + b]
+    }
+
+    #[inline]
+    pub fn lat(&self, a: usize, b: usize) -> f64 {
+        self.link_lat[a * self.d() + b]
+    }
+
+    /// Transfer duration for `bytes` over the a->b link (0 if same device).
+    #[inline]
+    pub fn transfer_time(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        if a == b {
+            0.0
+        } else {
+            self.lat(a, b) + bytes as f64 / self.bw(a, b)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p100_cluster() {
+        let t = Topology::p100_pcie(4);
+        assert_eq!(t.d(), 4);
+        assert_eq!(t.transfer_time(1, 1, 1 << 20), 0.0);
+        let tt = t.transfer_time(0, 1, 12_000_000);
+        assert!((tt - (15e-6 + 1e-3)).abs() < 1e-9, "{tt}");
+    }
+}

@@ -1,0 +1,505 @@
+//! Event-driven multi-device execution simulator.
+//!
+//! Given an op graph and a placement, computes the training step time the
+//! paper uses as the RL reward signal: a forward pass plus a backward pass
+//! over the reversed graph, with per-device compute queues, per-link
+//! serialized transfers (deduplicated per destination device), full
+//! compute/communication overlap, and a training-mode memory model
+//! (parameters + all activations resident until the backward pass).
+//!
+//! The scheduler is a ready-list event simulation: a device picks the
+//! lowest-topological-rank ready op whenever it goes idle; transfers queue
+//! FIFO per directed link. Deterministic for a given (graph, placement).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::OpGraph;
+use crate::sim::cost::CostModel;
+use crate::sim::device::Topology;
+use crate::sim::trace::{OpSpan, Trace, TransferSpan};
+
+/// Result of simulating one training step.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Placement satisfies memory limits on every device.
+    pub valid: bool,
+    /// Devices whose memory limit is exceeded.
+    pub oom_devices: Vec<usize>,
+    /// End-to-end step time, seconds (fwd + bwd makespans).
+    pub step_time: f64,
+    pub fwd_time: f64,
+    pub bwd_time: f64,
+    /// Peak bytes per device under the training memory model.
+    pub peak_mem: Vec<u64>,
+    /// Total cross-device traffic, bytes (fwd + bwd, deduplicated).
+    pub comm_bytes: u64,
+}
+
+/// f64 with a total order for the event heap.
+#[derive(Clone, Copy, PartialEq)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// Op finished on its device.
+    OpDone(u32),
+    /// One input of the node became available on its device.
+    Arrive(u32),
+}
+
+/// Direction of a simulated pass.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Pass {
+    Forward,
+    Backward,
+}
+
+pub struct Simulator<'a> {
+    pub graph: &'a OpGraph,
+    pub topo: &'a Topology,
+    pub cost: CostModel,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(graph: &'a OpGraph, topo: &'a Topology) -> Self {
+        Self { graph, topo, cost: CostModel::default() }
+    }
+
+    /// Simulate one training step under `placement` (device id per node).
+    pub fn simulate(&self, placement: &[usize]) -> SimReport {
+        self.simulate_impl(placement, None).0
+    }
+
+    /// Simulate and capture the full execution trace (op spans + transfers).
+    pub fn simulate_traced(&self, placement: &[usize]) -> (SimReport, Trace) {
+        let mut trace = Trace::default();
+        let rep = self.simulate_impl(placement, Some(&mut trace)).0;
+        (rep, trace)
+    }
+
+    fn simulate_impl(
+        &self,
+        placement: &[usize],
+        mut trace: Option<&mut Trace>,
+    ) -> (SimReport,) {
+        let g = self.graph;
+        let d = self.topo.d();
+        assert_eq!(placement.len(), g.n(), "placement length mismatch");
+
+        // Reject out-of-range device ids up front (policy masking should
+        // prevent these; baselines must not produce them).
+        if placement.iter().any(|&p| p >= d) {
+            return (SimReport {
+                valid: false,
+                oom_devices: vec![],
+                step_time: f64::INFINITY,
+                fwd_time: f64::INFINITY,
+                bwd_time: f64::INFINITY,
+                peak_mem: vec![0; d],
+                comm_bytes: 0,
+            },);
+        }
+
+        // ---- memory model (training: params + activations + recv copies) --
+        // Parameters cost 4x their size under training: weights + gradients
+        // + two Adam slots. Activations stay resident through the backward
+        // pass, so every op's output counts toward its device's peak.
+        const PARAM_MEM_FACTOR: u64 = 4;
+        let mut peak_mem = vec![0u64; d];
+        for (v, node) in g.nodes.iter().enumerate() {
+            peak_mem[placement[v]] +=
+                PARAM_MEM_FACTOR * node.param_bytes + node.output_bytes;
+        }
+        // One received copy per (producer, destination device).
+        let mut seen = std::collections::HashSet::new();
+        let mut comm_bytes = 0u64;
+        for &(u, v) in &g.edges {
+            let (a, b) = (placement[u as usize], placement[v as usize]);
+            if a != b && seen.insert((u, b)) {
+                let bytes = g.nodes[u as usize].output_bytes;
+                peak_mem[b] += bytes;
+                comm_bytes += bytes;
+            }
+        }
+        // Backward traffic mirrors forward traffic (gradients of the same
+        // tensors flowing the other way).
+        comm_bytes *= 2;
+
+        let oom_devices: Vec<usize> = (0..d)
+            .filter(|&i| peak_mem[i] > self.topo.devices[i].mem_bytes)
+            .collect();
+        let valid = oom_devices.is_empty();
+
+        // ---- timing: forward + backward passes ----
+        let fwd_time = self.run_pass(placement, Pass::Forward, trace.as_deref_mut(), 0.0);
+        // The backward trace is offset so both passes share one timeline.
+        let bwd_time =
+            self.run_pass(placement, Pass::Backward, trace.as_deref_mut(), fwd_time);
+
+        (SimReport {
+            valid,
+            oom_devices,
+            step_time: fwd_time + bwd_time,
+            fwd_time,
+            bwd_time,
+            peak_mem,
+            comm_bytes,
+        },)
+    }
+
+    /// Event-driven makespan of one pass. When `trace` is set, op spans and
+    /// transfers are recorded with times offset by `t_offset`.
+    fn run_pass(
+        &self,
+        placement: &[usize],
+        pass: Pass,
+        mut trace: Option<&mut Trace>,
+        t_offset: f64,
+    ) -> f64 {
+        let g = self.graph;
+        let n = g.n();
+        let d = self.topo.d();
+
+        // Dependency counts + priority ranks for the chosen direction.
+        let mut in_remaining = vec![0u32; n];
+        let mut prio = vec![0u32; n];
+        match pass {
+            Pass::Forward => {
+                for (r, &u) in g.topo_order().iter().enumerate() {
+                    prio[u as usize] = r as u32;
+                }
+                for v in 0..n {
+                    in_remaining[v] = g.producers(v).len() as u32;
+                }
+            }
+            Pass::Backward => {
+                for (r, &u) in g.topo_order().iter().enumerate() {
+                    prio[u as usize] = (n - 1 - r) as u32;
+                }
+                for v in 0..n {
+                    in_remaining[v] = g.consumers(v).len() as u32;
+                }
+            }
+        }
+
+        let op_time: Vec<f64> = (0..n)
+            .map(|v| {
+                let dev = &self.topo.devices[placement[v]];
+                match pass {
+                    Pass::Forward => self.cost.op_time(&g.nodes[v], dev),
+                    Pass::Backward => self.cost.op_time_bwd(&g.nodes[v], dev),
+                }
+            })
+            .collect();
+
+        // Per-device ready queues ordered by priority (min first).
+        let mut ready: Vec<BinaryHeap<Reverse<(u32, u32)>>> =
+            (0..d).map(|_| BinaryHeap::new()).collect();
+        let mut dev_busy_until = vec![0f64; d];
+        let mut link_busy_until = vec![0f64; d * d];
+        // Arrival dedupe: (producer, dst device) -> arrival time, as a flat
+        // array (NaN = not sent). Profiling showed the HashMap version cost
+        // ~15% of simulate() on 500-node graphs (EXPERIMENTS.md §Perf).
+        let mut sent = vec![f64::NAN; n * d];
+
+        let mut events: BinaryHeap<Reverse<(T, u64, Ev)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push = |events: &mut BinaryHeap<Reverse<(T, u64, Ev)>>,
+                        seq: &mut u64,
+                        t: f64,
+                        e: Ev| {
+            *seq += 1;
+            events.push(Reverse((T(t), *seq, e)));
+        };
+
+        let mut makespan = 0f64;
+        let mut started = vec![false; n];
+        let mut done_count = 0usize;
+
+        // Seed: ops with no deps are ready at t=0.
+        for v in 0..n {
+            if in_remaining[v] == 0 {
+                ready[placement[v]].push(Reverse((prio[v], v as u32)));
+            }
+        }
+
+        // Start whatever can start on idle devices at time t. Returns the
+        // (node, start, finish) of the op it launched, if any.
+        fn try_start(
+            dev: usize,
+            t: f64,
+            ready: &mut [BinaryHeap<Reverse<(u32, u32)>>],
+            dev_busy_until: &mut [f64],
+            started: &mut [bool],
+            op_time: &[f64],
+            events: &mut BinaryHeap<Reverse<(T, u64, Ev)>>,
+            seq: &mut u64,
+        ) -> Option<(u32, f64, f64)> {
+            if dev_busy_until[dev] > t {
+                return None;
+            }
+            if let Some(Reverse((_, u))) = ready[dev].pop() {
+                debug_assert!(!started[u as usize]);
+                started[u as usize] = true;
+                let finish = t + op_time[u as usize];
+                dev_busy_until[dev] = finish;
+                *seq += 1;
+                events.push(Reverse((T(finish), *seq, Ev::OpDone(u))));
+                return Some((u, t, finish));
+            }
+            None
+        }
+
+        let record_op = |trace: &mut Option<&mut Trace>,
+                             launched: Option<(u32, f64, f64)>| {
+            if let (Some(tr), Some((u, s, e))) = (trace.as_deref_mut(), launched) {
+                tr.ops.push(OpSpan {
+                    node: u,
+                    name: g.nodes[u as usize].name.clone(),
+                    device: placement[u as usize],
+                    start: t_offset + s,
+                    end: t_offset + e,
+                    backward: pass == Pass::Backward,
+                });
+            }
+        };
+
+        for dev in 0..d {
+            let launched = try_start(
+                dev, 0.0, &mut ready, &mut dev_busy_until, &mut started,
+                &op_time, &mut events, &mut seq,
+            );
+            record_op(&mut trace, launched);
+        }
+
+        while let Some(Reverse((T(t), _, ev))) = events.pop() {
+            match ev {
+                Ev::OpDone(u) => {
+                    makespan = makespan.max(t);
+                    done_count += 1;
+                    let a = placement[u as usize];
+                    // Deliver the output (fwd) / input-grads (bwd).
+                    let consumers: &[u32] = match pass {
+                        Pass::Forward => g.consumers(u as usize),
+                        Pass::Backward => g.producers(u as usize),
+                    };
+                    for &v in consumers {
+                        let b = placement[v as usize];
+                        let arrive_t = if a == b {
+                            t
+                        } else {
+                            // Transferred tensor: fwd moves u's output; bwd
+                            // moves the gradient of the edge tensor, which
+                            // for reversed edge (u->v) is sized by the
+                            // forward tensor on that edge.
+                            let bytes = match pass {
+                                Pass::Forward => g.nodes[u as usize].output_bytes,
+                                Pass::Backward => g.nodes[v as usize].output_bytes,
+                            };
+                            let slot = u as usize * d + b;
+                            if sent[slot].is_nan() {
+                                let l = a * d + b;
+                                let start = link_busy_until[l].max(t);
+                                let arr =
+                                    start + self.topo.transfer_time(a, b, bytes);
+                                link_busy_until[l] = arr;
+                                if let Some(tr) = trace.as_deref_mut() {
+                                    tr.transfers.push(TransferSpan {
+                                        producer: u,
+                                        src: a,
+                                        dst: b,
+                                        bytes,
+                                        start: t_offset + start,
+                                        end: t_offset + arr,
+                                        backward: pass == Pass::Backward,
+                                    });
+                                }
+                                sent[slot] = arr;
+                            }
+                            sent[slot]
+                        };
+                        push(&mut events, &mut seq, arrive_t, Ev::Arrive(v));
+                    }
+                    // Device freed: start the next ready op.
+                    let launched = try_start(
+                        a, t, &mut ready, &mut dev_busy_until, &mut started,
+                        &op_time, &mut events, &mut seq,
+                    );
+                    record_op(&mut trace, launched);
+                }
+                Ev::Arrive(v) => {
+                    in_remaining[v as usize] -= 1;
+                    if in_remaining[v as usize] == 0 {
+                        let b = placement[v as usize];
+                        ready[b].push(Reverse((prio[v as usize], v)));
+                        let launched = try_start(
+                            b, t, &mut ready, &mut dev_busy_until, &mut started,
+                            &op_time, &mut events, &mut seq,
+                        );
+                        record_op(&mut trace, launched);
+                    }
+                }
+            }
+        }
+
+        debug_assert_eq!(done_count, n, "not all ops executed ({done_count}/{n})");
+        makespan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, OpKind};
+
+    /// chain of `n` equal matmuls
+    fn chain(n: usize, flops: f64, bytes: u64) -> OpGraph {
+        let mut b = GraphBuilder::new("chain", 2);
+        let mut prev: Option<u32> = None;
+        for i in 0..n {
+            let deps: Vec<u32> = prev.into_iter().collect();
+            let id = b
+                .op(format!("m{i}"), OpKind::MatMul)
+                .flops(flops)
+                .out_bytes(bytes)
+                .layer(i as u32)
+                .after(&deps)
+                .id();
+            prev = Some(id);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn chain_on_one_device_is_sum() {
+        let g = chain(10, 1e9, 1 << 20);
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let r = sim.simulate(&vec![0; 10]);
+        assert!(r.valid);
+        let per_op = 1e9 / (10.6e12 * 0.65) + 10e-6;
+        assert!((r.fwd_time - 10.0 * per_op).abs() < 1e-9, "{}", r.fwd_time);
+        assert!(r.bwd_time > r.fwd_time, "bwd should be ~2x fwd");
+        assert_eq!(r.comm_bytes, 0);
+    }
+
+    #[test]
+    fn chain_split_pays_transfer() {
+        let g = chain(2, 1e9, 100 << 20);
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let same = sim.simulate(&vec![0, 0]);
+        let split = sim.simulate(&vec![0, 1]);
+        assert!(split.fwd_time > same.fwd_time);
+        assert_eq!(split.comm_bytes, 2 * (100u64 << 20));
+        let xfer = topo.transfer_time(0, 1, 100 << 20);
+        assert!((split.fwd_time - (same.fwd_time + xfer)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_branches_overlap() {
+        // in -> (a | b) -> out; a,b heavy. On 2 devices they overlap.
+        let mut b = GraphBuilder::new("par", 2);
+        let i = b.op("in", OpKind::Input).out_bytes(1024).id();
+        let x = b
+            .op("a", OpKind::MatMul)
+            .flops(1e10)
+            .out_bytes(1024)
+            .after(&[i])
+            .id();
+        let y = b
+            .op("b", OpKind::MatMul)
+            .flops(1e10)
+            .out_bytes(1024)
+            .after(&[i])
+            .id();
+        b.op("out", OpKind::Output).after(&[x, y]);
+        let g = b.build();
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let serial = sim.simulate(&vec![0, 0, 0, 0]);
+        let parallel = sim.simulate(&vec![0, 0, 1, 0]);
+        assert!(
+            parallel.fwd_time < 0.7 * serial.fwd_time,
+            "parallel {} vs serial {}",
+            parallel.fwd_time,
+            serial.fwd_time
+        );
+    }
+
+    #[test]
+    fn oom_detection() {
+        let g = chain(4, 1e9, 1 << 20);
+        let mut topo = Topology::p100_pcie(2);
+        // Shrink device 0 below the 4 activations + copies footprint.
+        topo.devices[0].mem_bytes = 2 << 20;
+        let sim = Simulator::new(&g, &topo);
+        let r = sim.simulate(&vec![0; 4]);
+        assert!(!r.valid);
+        assert_eq!(r.oom_devices, vec![0]);
+        // Step time is still computed (search can use it), memory flagged.
+        assert!(r.step_time.is_finite());
+        let r2 = sim.simulate(&vec![1; 4]);
+        assert!(r2.valid);
+    }
+
+    #[test]
+    fn out_of_range_device_invalid() {
+        let g = chain(2, 1e9, 1024);
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let r = sim.simulate(&vec![0, 5]);
+        assert!(!r.valid);
+        assert!(r.step_time.is_infinite());
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = chain(20, 1e9, 1 << 22);
+        let topo = Topology::p100_pcie(4);
+        let sim = Simulator::new(&g, &topo);
+        let p: Vec<usize> = (0..20).map(|i| i % 4).collect();
+        let a = sim.simulate(&p);
+        let b = sim.simulate(&p);
+        assert_eq!(a.step_time, b.step_time);
+        assert_eq!(a.peak_mem, b.peak_mem);
+    }
+
+    #[test]
+    fn transfer_dedup_per_destination() {
+        // one producer, two consumers on the same remote device: one copy.
+        let mut b = GraphBuilder::new("dd", 2);
+        let p = b.op("p", OpKind::MatMul).flops(1e8).out_bytes(64 << 20).id();
+        let c1 = b
+            .op("c1", OpKind::MatMul)
+            .flops(1e8)
+            .out_bytes(1024)
+            .after(&[p])
+            .id();
+        let c2 = b
+            .op("c2", OpKind::MatMul)
+            .flops(1e8)
+            .out_bytes(1024)
+            .after(&[p])
+            .id();
+        b.op("o", OpKind::Output).after(&[c1, c2]);
+        let g = b.build();
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let r = sim.simulate(&vec![0, 1, 1, 1]);
+        // fwd: one 64MB copy; total doubles it for bwd
+        assert_eq!(r.comm_bytes, 2 * (64u64 << 20));
+    }
+}

@@ -1,0 +1,60 @@
+//! The execution-cost substrate: device/topology models, per-op cost model
+//! and the event-driven multi-device simulator that supplies the RL reward
+//! (DESIGN.md §2 — substitution for the paper's real multi-GPU testbed).
+
+pub mod cost;
+pub mod device;
+pub mod engine;
+pub mod trace;
+
+pub use cost::CostModel;
+pub use device::{DeviceSpec, Topology};
+pub use engine::{SimReport, Simulator};
+pub use trace::Trace;
+
+use crate::graph::OpGraph;
+
+/// Convenience: simulate a placement on the workload's default topology.
+pub fn simulate_default(graph: &OpGraph, placement: &[usize]) -> SimReport {
+    let topo = Topology::p100_pcie(graph.num_devices);
+    Simulator::new(graph, &topo).simulate(placement)
+}
+
+/// The paper's reward (§4.1): negative square root of the run time, with a
+/// large negative reward for invalid placements (OOM etc.).
+pub const INVALID_REWARD: f64 = -10.0;
+
+pub fn reward(report: &SimReport) -> f64 {
+    if !report.valid || !report.step_time.is_finite() {
+        INVALID_REWARD
+    } else {
+        -report.step_time.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, OpKind};
+
+    #[test]
+    fn reward_shape() {
+        let mut b = GraphBuilder::new("r", 2);
+        let a = b.op("a", OpKind::MatMul).flops(1e9).out_bytes(1024).id();
+        b.op("b", OpKind::MatMul).flops(1e9).out_bytes(1024).after(&[a]);
+        let g = b.build();
+        let rep = simulate_default(&g, &[0, 0]);
+        let r = reward(&rep);
+        assert!(r < 0.0 && r > -1.0, "{r}");
+        let invalid = SimReport {
+            valid: false,
+            oom_devices: vec![0],
+            step_time: 1.0,
+            fwd_time: 0.5,
+            bwd_time: 0.5,
+            peak_mem: vec![],
+            comm_bytes: 0,
+        };
+        assert_eq!(reward(&invalid), INVALID_REWARD);
+    }
+}

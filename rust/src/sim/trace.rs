@@ -1,0 +1,136 @@
+//! Execution-trace capture + chrome://tracing export.
+//!
+//! `Simulator::simulate_traced` records every op execution interval and
+//! every link transfer of the simulated schedule; `Trace::to_chrome_json`
+//! renders them in the Chrome trace-event format (load via chrome://tracing
+//! or Perfetto) with one row per device and per link — the visual the
+//! paper's placement diagrams correspond to.
+
+use crate::util::json::Json;
+
+/// One op execution on a device.
+#[derive(Clone, Debug)]
+pub struct OpSpan {
+    pub node: u32,
+    pub name: String,
+    pub device: usize,
+    pub start: f64,
+    pub end: f64,
+    /// forward or backward pass
+    pub backward: bool,
+}
+
+/// One tensor transfer over a directed link.
+#[derive(Clone, Debug)]
+pub struct TransferSpan {
+    pub producer: u32,
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    pub start: f64,
+    pub end: f64,
+    pub backward: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub ops: Vec<OpSpan>,
+    pub transfers: Vec<TransferSpan>,
+}
+
+impl Trace {
+    /// Device utilization: busy time / makespan, per device.
+    pub fn utilization(&self, num_devices: usize) -> Vec<f64> {
+        let makespan = self
+            .ops
+            .iter()
+            .map(|o| o.end)
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        let mut busy = vec![0f64; num_devices];
+        for o in &self.ops {
+            busy[o.device] += o.end - o.start;
+        }
+        busy.iter().map(|b| b / makespan).collect()
+    }
+
+    /// Chrome trace-event JSON ("X" complete events, us timestamps).
+    pub fn to_chrome_json(&self) -> String {
+        let mut events = Vec::with_capacity(self.ops.len() + self.transfers.len());
+        for o in &self.ops {
+            events.push(Json::obj(vec![
+                ("name", Json::str(&o.name)),
+                ("cat", Json::str(if o.backward { "bwd" } else { "fwd" })),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(o.start * 1e6)),
+                ("dur", Json::num((o.end - o.start) * 1e6)),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(o.device as f64)),
+            ]));
+        }
+        for t in &self.transfers {
+            events.push(Json::obj(vec![
+                ("name", Json::str(format!("xfer n{} {}B", t.producer, t.bytes))),
+                ("cat", Json::str("transfer")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(t.start * 1e6)),
+                ("dur", Json::num((t.end - t.start) * 1e6)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num((t.src * 16 + t.dst) as f64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sim::{Simulator, Topology};
+    use crate::workloads;
+
+    #[test]
+    fn trace_covers_all_ops_twice() {
+        let g = workloads::by_id("inception").unwrap();
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let placement: Vec<usize> = (0..g.n()).map(|i| i % 2).collect();
+        let (rep, trace) = sim.simulate_traced(&placement);
+        // fwd + bwd spans for every node
+        assert_eq!(trace.ops.len(), 2 * g.n());
+        // spans are well-formed and within the makespan
+        for o in &trace.ops {
+            assert!(o.end >= o.start);
+            assert!(o.end <= rep.step_time + 1e-9);
+        }
+        assert!(!trace.transfers.is_empty());
+        let util = trace.utilization(2);
+        assert!(util.iter().all(|&u| u > 0.0 && u <= 1.0), "{util:?}");
+    }
+
+    #[test]
+    fn traced_report_matches_untraced() {
+        let g = workloads::by_id("txl2").unwrap();
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let placement: Vec<usize> = (0..g.n()).map(|i| (i / 7) % 2).collect();
+        let plain = sim.simulate(&placement);
+        let (traced, _) = sim.simulate_traced(&placement);
+        assert_eq!(plain.step_time, traced.step_time);
+        assert_eq!(plain.comm_bytes, traced.comm_bytes);
+    }
+
+    #[test]
+    fn chrome_json_parses() {
+        let g = workloads::by_id("amoebanet").unwrap();
+        let topo = Topology::p100_pcie(4);
+        let sim = Simulator::new(&g, &topo);
+        let (_, trace) = sim.simulate_traced(&vec![0; g.n()]);
+        let text = trace.to_chrome_json();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("traceEvents").unwrap().as_arr().unwrap().len() >= 2 * g.n());
+    }
+}

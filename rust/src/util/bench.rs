@@ -1,0 +1,77 @@
+//! Tiny benchmarking harness (criterion is unavailable offline): warmup +
+//! timed repetitions with median/mean/min reporting, used by the
+//! `harness = false` benches in `rust/benches/`.
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` (called once per iteration). Chooses iteration count so total
+/// time is roughly `budget_secs`.
+pub fn bench(name: &str, budget_secs: f64, mut f: impl FnMut()) -> BenchStats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_secs / once) as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let stats = BenchStats {
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        median_ns: samples[iters / 2],
+        min_ns: samples[0],
+    };
+    println!(
+        "{name:<44} {:>10}/iter (median {:>10}, min {:>10}, {} iters, {:>12.1}/s)",
+        fmt_ns(stats.mean_ns),
+        fmt_ns(stats.median_ns),
+        fmt_ns(stats.min_ns),
+        stats.iters,
+        stats.per_sec(),
+    );
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let s = bench("noop", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+    }
+}

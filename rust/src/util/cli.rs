@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Flags that never take a value (`--quick target` must not eat `target`).
+const BOOL_FLAGS: &[&str] = &["quick", "quiet", "verbose", "help"];
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err("bare -- not supported".into());
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&rest) {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Error on unrecognized flags (call after all get/flag reads).
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args("train --steps 50 --lr=0.001 --quick rnnlm2");
+        assert_eq!(a.positional, vec!["train", "rnnlm2"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = args("--known 1 --mystery 2");
+        let _ = a.get("known");
+        assert!(a.finish().unwrap_err().contains("mystery"));
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = args("--steps abc");
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Tiny numeric helpers used on the coordinator hot path (per-node device
+//! sampling over D<=8 logits), kept allocation-free where it matters.
+
+/// Numerically-stable softmax. Returns probabilities summing to 1.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; logits.len()];
+    softmax_into(logits, &mut out);
+    out
+}
+
+/// Softmax into a caller-provided buffer (hot path: no allocation).
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), out.len());
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for (o, &l) in out.iter_mut().zip(logits) {
+        let e = (l - m).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Numerically-stable log-softmax.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Geometric mean of strictly-positive values (used for the paper's GEOMEAN
+/// speed-up rows).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0, -1e30]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(p[3], 0.0);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let logits = [0.3f32, -1.2, 2.5];
+        let p = softmax(&logits);
+        let lp = log_softmax(&logits);
+        for (a, b) in p.iter().zip(&lp) {
+            assert!((a.ln() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn argmax_first_tie() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic RNG, math helpers, run metrics.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use math::{argmax, log_softmax, softmax};
+pub use rng::Rng;
+pub use stats::Ema;

@@ -1,0 +1,80 @@
+//! Minimal property-based testing driver (proptest is unavailable offline).
+//!
+//! `check(cases, seed, f)` runs `f` against `cases` independently-seeded
+//! RNGs; on failure it reports the failing case index and seed so the case
+//! replays deterministically. Generators live on `Gen`.
+
+use crate::util::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Random vec with per-element generator.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// A random DAG placement over `n` nodes and `d` devices.
+    pub fn placement(&mut self, n: usize, d: usize) -> Vec<usize> {
+        self.vec(n, |g| g.usize_in(0, d))
+    }
+}
+
+/// Run `cases` property checks. `f` returns Err(msg) on violation.
+#[track_caller]
+pub fn check(cases: usize, seed: u64, mut f: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(case_seed) };
+        if let Err(msg) = f(&mut g) {
+            panic!("property failed (case {case}, seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check(50, 1, |g| {
+            let v = g.vec(10, |g| g.f64_in(0.0, 1.0));
+            if v.iter().all(|x| (0.0..1.0).contains(x)) {
+                Ok(())
+            } else {
+                Err("range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(10, 2, |g| {
+            if g.usize_in(0, 5) < 4 {
+                Ok(())
+            } else {
+                Err("hit 4".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,111 @@
+//! Running statistics: the EMA reward baseline from the paper (§4.1 uses the
+//! average of all previous trial rewards as the bias term) and simple
+//! convergence detection used by the search-speed measurements in Table 1.
+
+/// Exponential moving average with warm start (first observation seeds it).
+/// With `alpha` close to 0 this approximates the paper's all-history average
+/// while adapting as the policy improves.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Tracks the best (lowest) objective seen and the number of candidate
+/// evaluations needed to get within `tol` of the final best — the
+/// hardware-neutral "search time" proxy reported next to wall-clock in the
+/// Table-1 harness.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTracker {
+    /// (evaluation index, best-so-far) recorded whenever the best improves.
+    pub improvements: Vec<(usize, f64)>,
+    pub evals: usize,
+    pub best: f64,
+}
+
+impl ConvergenceTracker {
+    pub fn new() -> Self {
+        Self { improvements: vec![], evals: 0, best: f64::INFINITY }
+    }
+
+    pub fn observe(&mut self, objective: f64) {
+        self.evals += 1;
+        if objective < self.best {
+            self.best = objective;
+            self.improvements.push((self.evals, objective));
+        }
+    }
+
+    /// First evaluation index at which best-so-far reached `threshold`
+    /// (absolute objective), or None if it never did. This is the
+    /// cross-method comparable search-cost metric: fix a quality target,
+    /// count evaluations each method needs to reach it.
+    pub fn evals_to_reach(&self, threshold: f64) -> Option<usize> {
+        self.improvements
+            .iter()
+            .find(|&&(_, val)| val <= threshold)
+            .map(|&(at, _)| at)
+    }
+
+    /// Number of evaluations after which best-so-far was within
+    /// `(1 + tol) * final_best`.
+    pub fn evals_to_within(&self, tol: f64) -> usize {
+        if !self.best.is_finite() {
+            return self.evals;
+        }
+        let threshold = self.best * (1.0 + tol);
+        for &(at, val) in &self.improvements {
+            if val <= threshold {
+                return at;
+            }
+        }
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_warm_start_and_decay() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        assert_eq!(e.update(0.0), 5.0);
+        assert_eq!(e.get(), 5.0);
+    }
+
+    #[test]
+    fn convergence_tracker() {
+        let mut c = ConvergenceTracker::new();
+        for &x in &[10.0, 8.0, 9.0, 5.0, 5.1, 5.05] {
+            c.observe(x);
+        }
+        assert_eq!(c.best, 5.0);
+        assert_eq!(c.evals, 6);
+        // within 100% of best (<=10.0) from the first eval
+        assert_eq!(c.evals_to_within(1.0), 1);
+        // within 0% only once the 5.0 appears (4th eval)
+        assert_eq!(c.evals_to_within(0.0), 4);
+    }
+}

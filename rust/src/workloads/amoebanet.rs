@@ -1,0 +1,172 @@
+//! AmoebaNet-style evolved cell architecture: a stack of cells where each
+//! cell combines 5 pairwise operations over the two previous cells'
+//! outputs and concatenates the unused intermediates. The dense cross-cell
+//! skip connections (every cell reads cell-1 AND cell-2) are what makes
+//! its placement harder than plain chains (Table 1: 26.1% over HP).
+
+use crate::graph::{GraphBuilder, OpGraph, OpKind};
+use crate::workloads::f32b;
+
+const BATCH: u64 = 128;
+
+fn sep_conv_flops(hw: u64, c: u64, k: u64) -> f64 {
+    // depthwise k*k + pointwise 1x1
+    (2 * BATCH * hw * hw * c * k * k + 2 * BATCH * hw * hw * c * c) as f64
+}
+
+pub fn build(num_devices: usize) -> OpGraph {
+    let mut gb = GraphBuilder::new("amoebanet", num_devices);
+    let input = gb
+        .op("input", OpKind::Input)
+        .shape([BATCH as u32, 56, 56, 64])
+        .layer(0)
+        .id();
+
+    // stem conv
+    let stem_w = gb
+        .op("stem/w", OpKind::Variable)
+        .params(f32b(3 * 64 * 9))
+        .layer(0)
+        .id();
+    let stem = gb
+        .op("stem/conv", OpKind::Conv2D)
+        .flops(2.0 * (BATCH * 56 * 56 * 64 * 3 * 9) as f64)
+        .shape([BATCH as u32, 56, 56, 64])
+        .layer(0)
+        .after(&[input, stem_w])
+        .id();
+
+    // (cells, hw, channels) per stage; reduction cells between stages.
+    let stages: [(usize, u64, u64); 3] = [(5, 56, 64), (5, 28, 128), (4, 14, 256)];
+    let mut prev2 = stem;
+    let mut prev1 = stem;
+    let mut layer = 1u32;
+    for (si, &(cells, hw, c)) in stages.iter().enumerate() {
+        for ci in 0..cells {
+            let tag = format!("s{si}c{ci}");
+            // 5 pairwise ops; inputs alternate between prev1/prev2/earlier
+            // intermediates (deterministic pattern standing in for the
+            // evolved genotype).
+            let mut intermediates = vec![prev2, prev1];
+            for oi in 0..5 {
+                let a = intermediates[oi % intermediates.len()];
+                let b = intermediates[(oi + 1) % intermediates.len()];
+                let (kind, flops, kdesc) = match oi % 3 {
+                    0 => (OpKind::Conv2D, sep_conv_flops(hw, c, 3), "sep3"),
+                    1 => (OpKind::Conv2D, sep_conv_flops(hw, c, 5), "sep5"),
+                    _ => (
+                        OpKind::Pool,
+                        (BATCH * hw * hw * c * 9) as f64,
+                        "avgpool",
+                    ),
+                };
+                let mut deps = vec![a];
+                if b != a {
+                    deps.push(b);
+                }
+                let mut op = gb
+                    .op(format!("{tag}/op{oi}_{kdesc}"), kind)
+                    .flops(flops)
+                    .shape([BATCH as u32, hw as u32, hw as u32, c as u32])
+                    .layer(layer);
+                if kind == OpKind::Conv2D {
+                    op = op.params(f32b(c * c + c * 25));
+                }
+                let id = op.after(&deps).id();
+                intermediates.push(id);
+            }
+            let out = gb
+                .op(format!("{tag}/concat"), OpKind::Concat)
+                .flops((BATCH * hw * hw * c) as f64)
+                .shape([BATCH as u32, hw as u32, hw as u32, c as u32])
+                .layer(layer)
+                .after(&intermediates[2..].to_vec())
+                .id();
+            prev2 = prev1;
+            prev1 = out;
+            layer += 1;
+        }
+        // reduction cell: stride-2 conv to next stage
+        if si + 1 < stages.len() {
+            let (_, nhw, nc) = stages[si + 1];
+            let w = gb
+                .op(format!("red{si}/w"), OpKind::Variable)
+                .params(f32b(c * nc * 9))
+                .layer(layer)
+                .id();
+            let red = gb
+                .op(format!("red{si}/conv"), OpKind::Conv2D)
+                .flops(2.0 * (BATCH * nhw * nhw * nc * c * 9) as f64)
+                .shape([BATCH as u32, nhw as u32, nhw as u32, nc as u32])
+                .layer(layer)
+                .after(&[prev1, prev2])
+                .id();
+            let _ = w;
+            gb.edge(w, red);
+            prev2 = red;
+            prev1 = red;
+            layer += 1;
+        }
+    }
+
+    let pool = gb
+        .op("head/pool", OpKind::Pool)
+        .flops((BATCH * 14 * 14 * 256) as f64)
+        .shape([BATCH as u32, 256, 0, 0])
+        .layer(layer)
+        .after(&[prev1])
+        .id();
+    let fc_w = gb
+        .op("head/fc_w", OpKind::Variable)
+        .params(f32b(256 * 1000))
+        .layer(layer)
+        .id();
+    let fc = gb
+        .op("head/fc", OpKind::MatMul)
+        .flops(2.0 * (BATCH * 256 * 1000) as f64)
+        .shape([BATCH as u32, 1000, 0, 0])
+        .layer(layer)
+        .after(&[pool, fc_w])
+        .id();
+    let loss = gb
+        .op("loss", OpKind::Loss)
+        .flops((BATCH * 1000) as f64)
+        .shape([1, 0, 0, 0])
+        .layer(layer)
+        .after(&[fc])
+        .id();
+    gb.op("train_out", OpKind::Output).layer(layer).after(&[loss]);
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_cell_skips_exist() {
+        let g = build(4);
+        assert!(g.validate().is_ok());
+        // s0c2 ops must read from both s0c1 and s0c0 concats.
+        let id_of = |name: &str| {
+            g.nodes.iter().position(|n| n.name == name).unwrap()
+        };
+        let c0 = id_of("s0c0/concat") as u32;
+        let c1 = id_of("s0c1/concat") as u32;
+        let consumers_c0: Vec<_> = g.consumers(c0 as usize).to_vec();
+        let consumers_c1: Vec<_> = g.consumers(c1 as usize).to_vec();
+        assert!(!consumers_c0.is_empty() && !consumers_c1.is_empty());
+        // some consumer of c0 lives in cell 2 (skip over one cell)
+        assert!(consumers_c0
+            .iter()
+            .any(|&v| g.nodes[v as usize].name.starts_with("s0c2")));
+        assert!(!consumers_c1.is_empty());
+    }
+
+    #[test]
+    fn scale() {
+        let g = build(4);
+        assert!(g.n() > 90 && g.n() < 256, "n={}", g.n());
+        assert!(g.total_flops() > 5e10);
+    }
+}

@@ -1,0 +1,208 @@
+//! Inception-v3-style multi-branch CNN: conv stem, then three stages of
+//! inception blocks (4 parallel branches concatenated), then the head.
+//! The branch parallelism is what a good placement exploits across two
+//! devices; the paper reports only small gains here (Table 1: 3.2%),
+//! because the graph is comparatively easy to schedule.
+
+use crate::graph::{GraphBuilder, OpKind, OpGraph};
+use crate::workloads::f32b;
+
+const BATCH: u64 = 64;
+
+/// 2*B*H*W*Cout*Cin*k*k conv FLOPs.
+fn conv_flops(hw: u64, cin: u64, cout: u64, k: u64) -> f64 {
+    2.0 * (BATCH * hw * hw * cout * cin * k * k) as f64
+}
+
+fn act_shape(hw: u64, c: u64) -> [u32; 4] {
+    [BATCH as u32, hw as u32, hw as u32, c as u32]
+}
+
+struct Stage {
+    hw: u64,
+    cin: u64,
+    branch_c: [u64; 4],
+    blocks: usize,
+}
+
+pub fn build(num_devices: usize) -> OpGraph {
+    let mut gb = GraphBuilder::new("inception", num_devices);
+    let input = gb
+        .op("input", OpKind::Input)
+        .shape(act_shape(299, 3))
+        .layer(0)
+        .id();
+
+    // ---- stem ----
+    let mut layer = 1u32;
+    let mut x = input;
+    let stem = [
+        (149u64, 3u64, 32u64, 3u64),
+        (147, 32, 32, 3),
+        (147, 32, 64, 3),
+        (73, 64, 80, 1),
+        (71, 80, 192, 3),
+    ];
+    for (i, &(hw, cin, cout, k)) in stem.iter().enumerate() {
+        let w = gb
+            .op(format!("stem{i}/w"), OpKind::Variable)
+            .params(f32b(cin * cout * k * k))
+            .layer(layer)
+            .id();
+        x = gb
+            .op(format!("stem{i}/conv"), OpKind::Conv2D)
+            .flops(conv_flops(hw, cin, cout, k))
+            .shape(act_shape(hw, cout))
+            .layer(layer)
+            .after(&[x, w])
+            .id();
+        layer += 1;
+    }
+    x = gb
+        .op("stem/pool", OpKind::Pool)
+        .flops((BATCH * 35 * 35 * 192 * 9) as f64)
+        .shape(act_shape(35, 192))
+        .layer(layer)
+        .after(&[x])
+        .id();
+    layer += 1;
+
+    // ---- inception stages (A: 35x35, B: 17x17, C: 8x8) ----
+    let stages = [
+        Stage { hw: 35, cin: 256, branch_c: [64, 64, 96, 64], blocks: 4 },
+        Stage { hw: 17, cin: 768, branch_c: [192, 160, 160, 192], blocks: 4 },
+        Stage { hw: 8, cin: 1280, branch_c: [320, 384, 384, 192], blocks: 3 },
+    ];
+    let mut cin = 192u64;
+    for (si, st) in stages.iter().enumerate() {
+        for bi in 0..st.blocks {
+            let tag = format!("s{si}b{bi}");
+            let mut branch_outs = Vec::with_capacity(4);
+            // branch 0: 1x1
+            // branch 1: 1x1 -> 5x5
+            // branch 2: 1x1 -> 3x3 -> 3x3
+            // branch 3: pool -> 1x1
+            for (br, &bc) in st.branch_c.iter().enumerate() {
+                let convs: &[(u64, u64)] = match br {
+                    0 => &[(1, 1)],
+                    1 => &[(1, 1), (5, 5)],
+                    2 => &[(1, 1), (3, 3), (3, 3)],
+                    _ => &[(1, 1)],
+                };
+                let mut b_in = if br == 3 {
+                    gb.op(format!("{tag}/br3/pool"), OpKind::Pool)
+                        .flops((BATCH * st.hw * st.hw * cin * 9) as f64)
+                        .shape(act_shape(st.hw, cin))
+                        .layer(layer)
+                        .after(&[x])
+                        .id()
+                } else {
+                    x
+                };
+                let mut c_prev = cin;
+                for (ci, &(k, _)) in convs.iter().enumerate() {
+                    let w = gb
+                        .op(format!("{tag}/br{br}/w{ci}"), OpKind::Variable)
+                        .params(f32b(c_prev * bc * k * k))
+                        .layer(layer)
+                        .id();
+                    b_in = gb
+                        .op(format!("{tag}/br{br}/conv{ci}"), OpKind::Conv2D)
+                        .flops(conv_flops(st.hw, c_prev, bc, k))
+                        .shape(act_shape(st.hw, bc))
+                        .layer(layer)
+                        .after(&[b_in, w])
+                        .id();
+                    c_prev = bc;
+                }
+                branch_outs.push(b_in);
+            }
+            let cout: u64 = st.branch_c.iter().sum();
+            x = gb
+                .op(format!("{tag}/concat"), OpKind::Concat)
+                .flops((BATCH * st.hw * st.hw * cout) as f64)
+                .shape(act_shape(st.hw, cout))
+                .layer(layer)
+                .after(&branch_outs)
+                .id();
+            cin = cout;
+            layer += 1;
+        }
+        // reduction between stages
+        if si < stages.len() - 1 {
+            let next_hw = stages[si + 1].hw;
+            let next_c = stages[si + 1].cin;
+            let w = gb
+                .op(format!("red{si}/w"), OpKind::Variable)
+                .params(f32b(cin * next_c * 9))
+                .layer(layer)
+                .id();
+            x = gb
+                .op(format!("red{si}/conv"), OpKind::Conv2D)
+                .flops(conv_flops(next_hw, cin, next_c, 3))
+                .shape(act_shape(next_hw, next_c))
+                .layer(layer)
+                .after(&[x, w])
+                .id();
+            cin = next_c;
+            layer += 1;
+        }
+    }
+
+    // ---- head ----
+    let pool = gb
+        .op("head/pool", OpKind::Pool)
+        .flops((BATCH * 8 * 8 * cin) as f64)
+        .shape([BATCH as u32, cin as u32, 0, 0])
+        .layer(layer)
+        .after(&[x])
+        .id();
+    let fc_w = gb
+        .op("head/fc_w", OpKind::Variable)
+        .params(f32b(cin * 1000))
+        .layer(layer)
+        .id();
+    let fc = gb
+        .op("head/fc", OpKind::MatMul)
+        .flops(2.0 * (BATCH * cin * 1000) as f64)
+        .shape([BATCH as u32, 1000, 0, 0])
+        .layer(layer)
+        .after(&[pool, fc_w])
+        .id();
+    let loss = gb
+        .op("loss", OpKind::Loss)
+        .flops((BATCH * 1000) as f64)
+        .shape([1, 0, 0, 0])
+        .layer(layer)
+        .after(&[fc])
+        .id();
+    gb.op("train_out", OpKind::Output).layer(layer).after(&[loss]);
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branches_are_parallel() {
+        let g = build(2);
+        assert!(g.validate().is_ok());
+        // block s0b0: concat has 4 producers (one per branch)
+        let concat = g
+            .nodes
+            .iter()
+            .position(|n| n.name == "s0b0/concat")
+            .unwrap();
+        assert_eq!(g.producers(concat).len(), 4);
+    }
+
+    #[test]
+    fn realistic_scale() {
+        let g = build(2);
+        assert!(g.n() > 100 && g.n() < 256, "n={}", g.n());
+        // Inception-v3 is ~5.7 GFLOP/image fwd; batch 64 -> ~3.6e11.
+        let fw = g.total_flops();
+        assert!(fw > 5e10 && fw < 5e12, "flops={fw:e}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Workload generators: synthetic op-level dataflow graphs reproducing the
+//! structural signatures of the paper's six model families (Table 1), plus
+//! the registry of the 13 named configurations used across the experiment
+//! harnesses (12 in Table 1 + 8-layer RNNLM from Appendix Table 3).
+//!
+//! These stand in for the paper's TensorFlow graphs (DESIGN.md §2): the
+//! policy only consumes (features, adjacency), so what matters is that the
+//! generators reproduce the placement-relevant structure — long recurrent
+//! grids, multi-branch convolutional cells, dilated stacks, attention
+//! blocks — with realistic FLOP/byte/parameter magnitudes.
+
+pub mod amoebanet;
+pub mod gnmt;
+pub mod inception;
+pub mod rnnlm;
+pub mod transformer_xl;
+pub mod wavenet;
+
+use crate::graph::OpGraph;
+
+/// Bytes of `elems` f32 elements.
+pub(crate) fn f32b(elems: u64) -> u64 {
+    elems * 4
+}
+
+/// A named workload configuration.
+#[derive(Clone)]
+pub struct WorkloadSpec {
+    /// Stable id used on the CLI and in EXPERIMENTS.md.
+    pub id: &'static str,
+    /// Paper's display name (Table 1 row).
+    pub display: &'static str,
+    pub num_devices: usize,
+    pub build: fn() -> OpGraph,
+}
+
+/// All named workloads. Order matches Table 1, with `rnnlm8` appended
+/// (it only appears in the Appendix-Table-3 batch-composition study).
+pub fn registry() -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec { id: "rnnlm2", display: "2-layer RNNLM (2)", num_devices: 2, build: || rnnlm::build(2, 2) },
+        WorkloadSpec { id: "rnnlm4", display: "4-layer RNNLM (4)", num_devices: 4, build: || rnnlm::build(4, 4) },
+        WorkloadSpec { id: "gnmt2", display: "2-layer GNMT (2)", num_devices: 2, build: || gnmt::build(2, 2) },
+        WorkloadSpec { id: "gnmt4", display: "4-layer GNMT (4)", num_devices: 4, build: || gnmt::build(4, 4) },
+        WorkloadSpec { id: "gnmt8", display: "8-layer GNMT (8)", num_devices: 8, build: || gnmt::build(8, 8) },
+        WorkloadSpec { id: "txl2", display: "2-layer Transformer-XL (2)", num_devices: 2, build: || transformer_xl::build(2, 2) },
+        WorkloadSpec { id: "txl4", display: "4-layer Transformer-XL (4)", num_devices: 4, build: || transformer_xl::build(4, 4) },
+        WorkloadSpec { id: "txl8", display: "8-layer Transformer-XL (8)", num_devices: 8, build: || transformer_xl::build(8, 8) },
+        WorkloadSpec { id: "inception", display: "Inception (2)", num_devices: 2, build: || inception::build(2) },
+        WorkloadSpec { id: "amoebanet", display: "AmoebaNet (4)", num_devices: 4, build: || amoebanet::build(4) },
+        WorkloadSpec { id: "wavenet2", display: "2-stack 18-layer WaveNet (2)", num_devices: 2, build: || wavenet::build(2, 18, 2) },
+        WorkloadSpec { id: "wavenet4", display: "4-stack 36-layer WaveNet (4)", num_devices: 4, build: || wavenet::build(4, 36, 4) },
+        WorkloadSpec { id: "rnnlm8", display: "8-layer RNNLM (8)", num_devices: 8, build: || rnnlm::build(8, 8) },
+    ]
+}
+
+/// The 12 Table-1 workloads (registry order, without `rnnlm8`).
+pub fn table1_ids() -> Vec<&'static str> {
+    registry().iter().map(|w| w.id).filter(|&id| id != "rnnlm8").collect()
+}
+
+pub fn by_id(id: &str) -> Option<OpGraph> {
+    registry().iter().find(|w| w.id == id).map(|w| (w.build)())
+}
+
+pub fn spec_by_id(id: &str) -> Option<WorkloadSpec> {
+    registry().into_iter().find(|w| w.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_default, Topology};
+
+    #[test]
+    fn registry_complete_and_buildable() {
+        let reg = registry();
+        assert_eq!(reg.len(), 13);
+        assert_eq!(table1_ids().len(), 12);
+        for spec in reg {
+            let g = (spec.build)();
+            assert_eq!(g.num_devices, spec.num_devices, "{}", spec.id);
+            assert!(g.validate().is_ok(), "{}: {:?}", spec.id, g.validate());
+            assert!(g.n() >= 50, "{} too small: {}", spec.id, g.n());
+            assert!(g.total_flops() > 1e10, "{} no compute", spec.id);
+        }
+    }
+
+    #[test]
+    fn single_device_step_times_in_paper_regime() {
+        // Sanity: everything-on-one-device step times land within an order
+        // of magnitude of the paper's 0.2-1.0 s rows (or OOM for the big
+        // ones, which is exactly the Table-1 METIS behaviour).
+        for id in ["rnnlm2", "txl2", "inception", "wavenet2"] {
+            let g = by_id(id).unwrap();
+            let r = simulate_default(&g, &vec![0; g.n()]);
+            assert!(
+                r.step_time > 0.01 && r.step_time < 10.0,
+                "{id}: step={}",
+                r.step_time
+            );
+        }
+    }
+
+    #[test]
+    fn big_models_oom_on_one_device() {
+        // The 8-layer models must not fit on a single P100 under training
+        // memory (the reason the paper's METIS column is mostly OOM).
+        for id in ["rnnlm8", "gnmt8"] {
+            let g = by_id(id).unwrap();
+            let topo = Topology::p100_pcie(g.num_devices);
+            let r = crate::sim::Simulator::new(&g, &topo).simulate(&vec![0; g.n()]);
+            assert!(!r.valid, "{id} unexpectedly fits on one device");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! RNN language model (unrolled multi-layer LSTM LM).
+//!
+//! Structure: embedding -> L layers of LSTM cells unrolled over T steps
+//! (grid with recurrent and depth edges) -> per-step softmax projection ->
+//! loss. This is the hardest family for placement in the paper: long
+//! dependency chains with large per-layer weights, so good placements
+//! pipeline layers across devices.
+
+use crate::graph::{GraphBuilder, OpGraph, OpKind};
+use crate::workloads::f32b;
+
+pub struct Config {
+    pub layers: usize,
+    pub steps: usize,
+    pub batch: u64,
+    pub hidden: u64,
+    pub vocab: u64,
+}
+
+impl Config {
+    pub fn with_layers(layers: usize) -> Self {
+        Self { layers, steps: 32, batch: 64, hidden: 4096, vocab: 16384 }
+    }
+}
+
+pub fn build(layers: usize, num_devices: usize) -> OpGraph {
+    build_cfg(&Config::with_layers(layers), num_devices)
+}
+
+pub fn build_cfg(cfg: &Config, num_devices: usize) -> OpGraph {
+    let (l_n, t_n, b, h, v) =
+        (cfg.layers, cfg.steps, cfg.batch, cfg.hidden, cfg.vocab);
+    let mut gb = GraphBuilder::new(format!("rnnlm{}", l_n), num_devices);
+
+    let input = gb.op("tokens", OpKind::Input).shape([b as u32, t_n as u32, 0, 0]).id();
+    let emb_w = gb
+        .op("embedding/w", OpKind::Variable)
+        .params(f32b(v * h))
+        .layer(0)
+        .id();
+    // LSTM weights: one Variable per layer (4 gates x [2H -> H]).
+    let cell_w: Vec<u32> = (0..l_n)
+        .map(|l| {
+            gb.op(format!("lstm{l}/w"), OpKind::Variable)
+                .params(f32b(8 * h * h))
+                .layer(l as u32 + 1)
+                .id()
+        })
+        .collect();
+    let proj_w = gb
+        .op("softmax/w", OpKind::Variable)
+        .params(f32b(h * v))
+        .layer(l_n as u32 + 1)
+        .id();
+
+    // Unrolled grid.
+    let mut prev_step: Vec<Option<u32>> = vec![None; l_n];
+    let mut proj_outs = Vec::with_capacity(t_n);
+    for t in 0..t_n {
+        let emb = gb
+            .op(format!("embed/t{t}"), OpKind::Embedding)
+            .flops(2.0 * (b * h) as f64)
+            .shape([b as u32, h as u32, 0, 0])
+            .layer(0)
+            .after(&[input, emb_w])
+            .id();
+        let mut below = emb;
+        for l in 0..l_n {
+            let mut deps = vec![below, cell_w[l]];
+            if let Some(p) = prev_step[l] {
+                deps.push(p);
+            }
+            let cell = gb
+                .op(format!("lstm{l}/t{t}"), OpKind::RnnCell)
+                .flops(16.0 * (b * h * h) as f64)
+                .shape([b as u32, h as u32, 0, 0])
+                .layer(l as u32 + 1)
+                .after(&deps)
+                .id();
+            prev_step[l] = Some(cell);
+            below = cell;
+        }
+        let proj = gb
+            .op(format!("proj/t{t}"), OpKind::MatMul)
+            .flops(2.0 * (b * h * v) as f64)
+            .shape([b as u32, v as u32, 0, 0])
+            .layer(l_n as u32 + 1)
+            .after(&[below, proj_w])
+            .id();
+        proj_outs.push(proj);
+    }
+    let loss = gb
+        .op("loss", OpKind::Loss)
+        .flops((b * v * t_n as u64) as f64)
+        .shape([1, 0, 0, 0])
+        .layer(l_n as u32 + 1)
+        .after(&proj_outs)
+        .id();
+    gb.op("train_out", OpKind::Output).layer(l_n as u32 + 1).after(&[loss]);
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_structure() {
+        let g = build(2, 2);
+        // 2 vars + emb table + proj w + input + per-t (1 emb + 2 cells + 1
+        // proj) + loss + out
+        assert_eq!(g.n(), 5 + 32 * 4 + 2);
+        assert!(g.validate().is_ok());
+        // Recurrent edge exists: lstm0/t0 -> lstm0/t1
+        let id_of = |name: &str| {
+            g.nodes.iter().position(|n| n.name == name).unwrap() as u32
+        };
+        let c0 = id_of("lstm0/t0");
+        let c1 = id_of("lstm0/t1");
+        assert!(g.edges.contains(&(c0, c1)));
+    }
+
+    #[test]
+    fn deeper_is_heavier() {
+        let g2 = build(2, 2);
+        let g8 = build(8, 8);
+        assert!(g8.total_flops() > 3.0 * g2.total_flops());
+        assert!(g8.total_param_bytes() > 2 * g2.total_param_bytes());
+    }
+
+    #[test]
+    fn layer_labels_monotone_through_depth() {
+        let g = build(4, 4);
+        for n in &g.nodes {
+            assert!(n.layer <= 5);
+        }
+        assert_eq!(g.max_layer(), 5);
+    }
+}

@@ -1,0 +1,211 @@
+//! Transformer-XL: L decoder layers processed over S segments with
+//! segment-level recurrence — layer l at segment s attends over its own
+//! input *and* the cached layer-l hidden state of segment s-1. Those memory
+//! edges are exactly what makes TXL placement non-trivial (they serialize
+//! across segments but parallelize across layers).
+
+use crate::graph::{GraphBuilder, OpGraph, OpKind};
+use crate::workloads::f32b;
+
+pub struct Config {
+    pub layers: usize,
+    pub segments: usize,
+    pub batch: u64,
+    pub seq: u64,
+    pub d_model: u64,
+    pub d_ffn: u64,
+    pub vocab: u64,
+}
+
+impl Config {
+    pub fn with_layers(layers: usize) -> Self {
+        Self {
+            layers,
+            segments: 4,
+            batch: 16,
+            seq: 128,
+            d_model: 1024,
+            d_ffn: 4096,
+            vocab: 16384,
+        }
+    }
+}
+
+pub fn build(layers: usize, num_devices: usize) -> OpGraph {
+    build_cfg(&Config::with_layers(layers), num_devices)
+}
+
+pub fn build_cfg(cfg: &Config, num_devices: usize) -> OpGraph {
+    let l_n = cfg.layers;
+    let (b, t, d, f, v) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ffn, cfg.vocab);
+    let tokens = b * t;
+    let mut gb = GraphBuilder::new(format!("txl{l_n}"), num_devices);
+
+    let input = gb
+        .op("tokens", OpKind::Input)
+        .shape([b as u32, (t * cfg.segments as u64) as u32, 0, 0])
+        .id();
+    let emb_w =
+        gb.op("embed/w", OpKind::Variable).params(f32b(v * d)).layer(0).id();
+    // Per-layer fused weights (qkv + proj + 2 ffn mats).
+    let layer_w: Vec<u32> = (0..l_n)
+        .map(|l| {
+            gb.op(format!("l{l}/w"), OpKind::Variable)
+                .params(f32b(4 * d * d + 2 * d * f))
+                .layer(l as u32 + 1)
+                .id()
+        })
+        .collect();
+    let head_w = gb
+        .op("head/w", OpKind::Variable)
+        .params(f32b(d * v))
+        .layer(l_n as u32 + 1)
+        .id();
+
+    // mem[l] = layer-l output of the previous segment (segment recurrence).
+    let mut mem: Vec<Option<u32>> = vec![None; l_n];
+    let mut losses = Vec::with_capacity(cfg.segments);
+    for s in 0..cfg.segments {
+        let emb = gb
+            .op(format!("s{s}/embed"), OpKind::Embedding)
+            .flops(2.0 * (tokens * d) as f64)
+            .shape([b as u32, t as u32, d as u32, 0])
+            .layer(0)
+            .after(&[input, emb_w])
+            .id();
+        let mut x = emb;
+        for l in 0..l_n {
+            let lw = layer_w[l];
+            let lay = l as u32 + 1;
+            let ln1 = gb
+                .op(format!("s{s}/l{l}/ln1"), OpKind::Norm)
+                .flops((tokens * d * 8) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&[x])
+                .id();
+            let qkv = gb
+                .op(format!("s{s}/l{l}/qkv"), OpKind::MatMul)
+                .flops(2.0 * (tokens * d * 3 * d) as f64)
+                .shape([b as u32, t as u32, (3 * d) as u32, 0])
+                .layer(lay)
+                .after(&[ln1, lw])
+                .id();
+            // Attention over current segment + cached previous segment.
+            let mut att_deps = vec![qkv];
+            if let Some(m) = mem[l] {
+                att_deps.push(m);
+            }
+            let att_span = if mem[l].is_some() { 2 * t } else { t };
+            let att = gb
+                .op(format!("s{s}/l{l}/attn"), OpKind::Attention)
+                .flops(4.0 * (b * t * att_span * d) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&att_deps)
+                .id();
+            let proj = gb
+                .op(format!("s{s}/l{l}/proj"), OpKind::MatMul)
+                .flops(2.0 * (tokens * d * d) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&[att, lw])
+                .id();
+            let add1 = gb
+                .op(format!("s{s}/l{l}/add1"), OpKind::Elementwise)
+                .flops((tokens * d) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&[x, proj])
+                .id();
+            let ln2 = gb
+                .op(format!("s{s}/l{l}/ln2"), OpKind::Norm)
+                .flops((tokens * d * 8) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&[add1])
+                .id();
+            let ffn1 = gb
+                .op(format!("s{s}/l{l}/ffn1"), OpKind::MatMul)
+                .flops(2.0 * (tokens * d * f) as f64)
+                .shape([b as u32, t as u32, f as u32, 0])
+                .layer(lay)
+                .after(&[ln2, lw])
+                .id();
+            let ffn2 = gb
+                .op(format!("s{s}/l{l}/ffn2"), OpKind::MatMul)
+                .flops(2.0 * (tokens * f * d) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&[ffn1, lw])
+                .id();
+            let add2 = gb
+                .op(format!("s{s}/l{l}/add2"), OpKind::Elementwise)
+                .flops((tokens * d) as f64)
+                .shape([b as u32, t as u32, d as u32, 0])
+                .layer(lay)
+                .after(&[add1, ffn2])
+                .id();
+            mem[l] = Some(add2); // cached for segment s+1 (stop-gradient)
+            x = add2;
+        }
+        let logits = gb
+            .op(format!("s{s}/head"), OpKind::MatMul)
+            .flops(2.0 * (tokens * d * v) as f64)
+            .shape([b as u32, t as u32, v as u32, 0])
+            .layer(l_n as u32 + 1)
+            .after(&[x, head_w])
+            .id();
+        let loss = gb
+            .op(format!("s{s}/loss"), OpKind::Loss)
+            .flops((tokens * v) as f64)
+            .shape([1, 0, 0, 0])
+            .layer(l_n as u32 + 1)
+            .after(&[logits])
+            .id();
+        losses.push(loss);
+    }
+    let total = gb
+        .op("loss_sum", OpKind::Reduce)
+        .flops(cfg.segments as f64)
+        .shape([1, 0, 0, 0])
+        .layer(l_n as u32 + 1)
+        .after(&losses)
+        .id();
+    gb.op("train_out", OpKind::Output)
+        .layer(l_n as u32 + 1)
+        .after(&[total]);
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_recurrence_edges_exist() {
+        let g = build(2, 2);
+        assert!(g.validate().is_ok());
+        let id_of = |name: &str| {
+            g.nodes.iter().position(|n| n.name == name).unwrap() as u32
+        };
+        // s0/l0/add2 feeds s1/l0/attn (the cached memory edge)
+        let m = id_of("s0/l0/add2");
+        let a = id_of("s1/l0/attn");
+        assert!(g.edges.contains(&(m, a)));
+    }
+
+    #[test]
+    fn attention_flops_grow_with_memory() {
+        let g = build(2, 2);
+        let first = g.nodes.iter().find(|n| n.name == "s0/l0/attn").unwrap();
+        let later = g.nodes.iter().find(|n| n.name == "s1/l0/attn").unwrap();
+        assert!(later.flops > 1.5 * first.flops);
+    }
+
+    #[test]
+    fn sizes() {
+        assert!(build(8, 8).n() > 256); // exercises coarsening
+        assert!(build(2, 2).n() < 256);
+    }
+}

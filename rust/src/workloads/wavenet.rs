@@ -1,0 +1,184 @@
+//! WaveNet: stacks of dilated causal convolutions with gated activations,
+//! residual 1x1 convs and a global skip-sum. Each stack restarts the
+//! dilation cycle; the skip connections from EVERY layer to the output
+//! head create the all-to-one traffic pattern the paper's 50%-over-human
+//! WaveNet row exploits.
+
+use crate::graph::{GraphBuilder, OpGraph, OpKind};
+use crate::workloads::f32b;
+
+pub struct Config {
+    pub stacks: usize,
+    pub total_layers: usize,
+    pub batch: u64,
+    pub channels: u64,
+    pub skip_channels: u64,
+    pub time: u64,
+}
+
+impl Config {
+    pub fn new(stacks: usize, total_layers: usize) -> Self {
+        Self {
+            stacks,
+            total_layers,
+            batch: 32,
+            channels: 128,
+            skip_channels: 256,
+            time: 4096,
+        }
+    }
+}
+
+pub fn build(stacks: usize, total_layers: usize, num_devices: usize) -> OpGraph {
+    build_cfg(&Config::new(stacks, total_layers), num_devices)
+}
+
+pub fn build_cfg(cfg: &Config, num_devices: usize) -> OpGraph {
+    let (b, c, sc, t) = (cfg.batch, cfg.channels, cfg.skip_channels, cfg.time);
+    let per_stack = cfg.total_layers / cfg.stacks;
+    let mut gb = GraphBuilder::new(
+        format!("wavenet{}x{}", cfg.stacks, cfg.total_layers),
+        num_devices,
+    );
+
+    let input = gb
+        .op("audio", OpKind::Input)
+        .shape([b as u32, t as u32, 1, 0])
+        .layer(0)
+        .id();
+    let in_w = gb
+        .op("causal/w", OpKind::Variable)
+        .params(f32b(2 * c))
+        .layer(0)
+        .id();
+    let mut x = gb
+        .op("causal/conv", OpKind::Conv2D)
+        .flops(2.0 * (b * t * c * 2) as f64)
+        .shape([b as u32, t as u32, c as u32, 0])
+        .layer(0)
+        .after(&[input, in_w])
+        .id();
+
+    let mut skips = Vec::with_capacity(cfg.total_layers);
+    let mut layer_idx = 1u32;
+    for s in 0..cfg.stacks {
+        for l in 0..per_stack {
+            let tag = format!("st{s}l{l}");
+            let dilation = 1u64 << (l % 10);
+            let w = gb
+                .op(format!("{tag}/w"), OpKind::Variable)
+                .params(f32b(2 * 2 * c * c + c * c + c * sc))
+                .layer(layer_idx)
+                .id();
+            // Fused gated dilated conv (filter ⊙ gate), kernel 2.
+            let gated = gb
+                .op(format!("{tag}/gated_d{dilation}"), OpKind::Conv2D)
+                .flops(2.0 * (b * t * c * c * 2 * 2) as f64)
+                .shape([b as u32, t as u32, c as u32, 0])
+                .layer(layer_idx)
+                .after(&[x, w])
+                .id();
+            // 1x1 residual conv + add
+            let res = gb
+                .op(format!("{tag}/res1x1"), OpKind::Conv2D)
+                .flops(2.0 * (b * t * c * c) as f64)
+                .shape([b as u32, t as u32, c as u32, 0])
+                .layer(layer_idx)
+                .after(&[gated, w])
+                .id();
+            let add = gb
+                .op(format!("{tag}/add"), OpKind::Elementwise)
+                .flops((b * t * c) as f64)
+                .shape([b as u32, t as u32, c as u32, 0])
+                .layer(layer_idx)
+                .after(&[x, res])
+                .id();
+            // 1x1 skip conv feeding the head
+            let skip = gb
+                .op(format!("{tag}/skip1x1"), OpKind::Conv2D)
+                .flops(2.0 * (b * t * c * sc) as f64)
+                .shape([b as u32, t as u32, sc as u32, 0])
+                .layer(layer_idx)
+                .after(&[gated, w])
+                .id();
+            skips.push(skip);
+            x = add;
+            layer_idx += 1;
+        }
+    }
+
+    // Head: sum skips -> relu -> 1x1 -> 1x1 -> loss
+    let skip_sum = gb
+        .op("head/skip_sum", OpKind::Reduce)
+        .flops((b * t * sc * skips.len() as u64) as f64)
+        .shape([b as u32, t as u32, sc as u32, 0])
+        .layer(layer_idx)
+        .after(&skips)
+        .id();
+    let h1_w = gb
+        .op("head/w1", OpKind::Variable)
+        .params(f32b(sc * sc))
+        .layer(layer_idx)
+        .id();
+    let h1 = gb
+        .op("head/conv1", OpKind::Conv2D)
+        .flops(2.0 * (b * t * sc * sc) as f64)
+        .shape([b as u32, t as u32, sc as u32, 0])
+        .layer(layer_idx)
+        .after(&[skip_sum, h1_w])
+        .id();
+    let h2_w = gb
+        .op("head/w2", OpKind::Variable)
+        .params(f32b(sc * 256))
+        .layer(layer_idx)
+        .id();
+    let h2 = gb
+        .op("head/conv2", OpKind::Conv2D)
+        .flops(2.0 * (b * t * sc * 256) as f64)
+        .shape([b as u32, t as u32, 256, 0])
+        .layer(layer_idx)
+        .after(&[h1, h2_w])
+        .id();
+    let loss = gb
+        .op("loss", OpKind::Loss)
+        .flops((b * t * 256) as f64)
+        .shape([1, 0, 0, 0])
+        .layer(layer_idx)
+        .after(&[h2])
+        .id();
+    gb.op("train_out", OpKind::Output).layer(layer_idx).after(&[loss]);
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_connections_fan_into_head() {
+        let g = build(2, 18, 2);
+        assert!(g.validate().is_ok());
+        let sum = g
+            .nodes
+            .iter()
+            .position(|n| n.name == "head/skip_sum")
+            .unwrap();
+        assert_eq!(g.producers(sum).len(), 18);
+    }
+
+    #[test]
+    fn stacks_scale() {
+        let g2 = build(2, 18, 2);
+        let g4 = build(4, 36, 4);
+        assert!(g4.n() as f64 > 1.8 * g2.n() as f64);
+        assert!(g4.total_flops() > 1.8 * g2.total_flops());
+    }
+
+    #[test]
+    fn dilation_cycles_per_stack() {
+        let g = build(2, 18, 2);
+        // layer 0 of each stack has dilation 1
+        assert!(g.nodes.iter().any(|n| n.name == "st0l0/gated_d1"));
+        assert!(g.nodes.iter().any(|n| n.name == "st1l0/gated_d1"));
+    }
+}

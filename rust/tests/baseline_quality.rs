@@ -1,0 +1,137 @@
+//! Cross-method baseline quality checks: the Table-1 comparison only means
+//! something if each baseline behaves like its paper counterpart.
+
+use gdp::baselines::hdp::{HdpConfig, HdpSearch};
+use gdp::baselines::metis::cut_weight;
+use gdp::baselines::{human_expert, metis_place, random_place};
+use gdp::sim::{simulate_default, Simulator, Topology};
+use gdp::util::Rng;
+use gdp::workloads;
+
+#[test]
+fn human_expert_valid_on_every_workload() {
+    // The paper's HP column never OOMs (experts respect memory).
+    for spec in workloads::registry() {
+        let g = (spec.build)();
+        let p = human_expert(&g);
+        p.check(&g).unwrap();
+        let rep = simulate_default(&g, &p.devices);
+        assert!(rep.valid, "{}: human placement OOMs {:?}", spec.id, rep.oom_devices);
+    }
+}
+
+#[test]
+fn metis_minimizes_cut_but_ignores_memory() {
+    let mut ooms = 0;
+    for spec in workloads::registry() {
+        let g = (spec.build)();
+        let p = metis_place(&g);
+        p.check(&g).unwrap();
+        // cut must be far below random
+        let mut rng = Rng::new(3);
+        let rand_cut: f64 = (0..5)
+            .map(|_| cut_weight(&g, &random_place(&g, &mut rng).devices))
+            .sum::<f64>()
+            / 5.0;
+        let metis_cut = cut_weight(&g, &p.devices);
+        assert!(
+            metis_cut < rand_cut,
+            "{}: metis cut {metis_cut} !< random {rand_cut}",
+            spec.id
+        );
+        let rep = simulate_default(&g, &p.devices);
+        if !rep.valid {
+            ooms += 1;
+        }
+    }
+    let _ = ooms; // may be zero in this cost model (see below)
+
+    // The Table-1 signature, adapted: the paper's METIS column is OOM or
+    // clearly worse than the expert on the memory-tight 8-layer models. In
+    // our simulator METIS placements stay feasible (balanced node count
+    // spreads parameters enough) but are badly slower than the expert —
+    // same ordering, deviation recorded in EXPERIMENTS.md.
+    for id in ["gnmt8", "rnnlm8"] {
+        let g = workloads::by_id(id).unwrap();
+        let metis = simulate_default(&g, &metis_place(&g).devices);
+        let human = simulate_default(&g, &human_expert(&g).devices);
+        assert!(human.valid, "{id}: expert must fit");
+        if metis.valid {
+            assert!(
+                metis.step_time > human.step_time * 1.15,
+                "{id}: METIS ({}) not clearly worse than expert ({})",
+                metis.step_time,
+                human.step_time
+            );
+        }
+    }
+}
+
+#[test]
+fn hdp_improves_monotonically_with_budget() {
+    let g = workloads::by_id("gnmt2").unwrap();
+    let run = |steps| {
+        let cfg = HdpConfig { steps, seed: 11, ..Default::default() };
+        HdpSearch::new(&g, cfg).run().best_time
+    };
+    let short = run(20);
+    let long = run(200);
+    assert!(long <= short, "more HDP budget made things worse: {long} > {short}");
+}
+
+#[test]
+fn hdp_search_beats_pure_random_at_equal_evals() {
+    let g = workloads::by_id("txl4").unwrap();
+    let cfg = HdpConfig { steps: 100, samples_per_step: 4, seed: 5, ..Default::default() };
+    let hdp = HdpSearch::new(&g, cfg).run();
+    // same number of simulator evaluations spent at random
+    let topo = Topology::p100_pcie(g.num_devices);
+    let sim = Simulator::new(&g, &topo);
+    let mut rng = Rng::new(5);
+    let mut rand_best = f64::INFINITY;
+    for _ in 0..hdp.evals {
+        let p = random_place(&g, &mut rng);
+        let rep = sim.simulate(&p.devices);
+        if rep.valid {
+            rand_best = rand_best.min(rep.step_time);
+        }
+    }
+    assert!(
+        hdp.best_time <= rand_best * 1.02,
+        "hdp {} vs random {}",
+        hdp.best_time,
+        rand_best
+    );
+}
+
+#[test]
+fn expert_pipelining_beats_random_on_recurrent_models() {
+    // Plain recurrent stacks: layer-pipelining is the expert's strength.
+    // (GNMT is excluded: its decoder-to-encoder attention edges defeat
+    // naive pipelining — which is exactly why learned placement wins big
+    // on GNMT in the paper.)
+    for id in ["rnnlm4", "rnnlm8"] {
+        let g = workloads::by_id(id).unwrap();
+        let hp = simulate_default(&g, &human_expert(&g).devices);
+        let mut rng = Rng::new(13);
+        let mut rand_mean = 0.0;
+        let mut valid = 0;
+        for _ in 0..10 {
+            let rep = simulate_default(&g, &random_place(&g, &mut rng).devices);
+            if rep.valid {
+                rand_mean += rep.step_time;
+                valid += 1;
+            }
+        }
+        if valid == 0 {
+            continue; // random placements all OOM -> expert trivially wins
+        }
+        rand_mean /= valid as f64;
+        assert!(
+            hp.step_time < rand_mean,
+            "{id}: expert {} !< random mean {}",
+            hp.step_time,
+            rand_mean
+        );
+    }
+}
