@@ -1,30 +1,46 @@
 //! Bench: baseline placers — METIS partition latency (one-shot), human
 //! heuristic, and HDP-proxy search rate. These are the comparison columns
 //! of Table 1; their costs contextualize the "search speed up" numbers.
+//! HDP is measured serial vs pooled (EvalPool evaluates each step's sample
+//! batch in parallel; trajectories are identical by construction).
 
 use gdp::baselines::hdp::{HdpConfig, HdpSearch};
 use gdp::baselines::{human_expert, metis_place};
-use gdp::util::bench::bench;
+use gdp::util::bench::{bench, budget_secs, BenchRecorder};
 use gdp::workloads;
 
 fn main() {
+    let budget = budget_secs(0.5);
+    let mut rec = BenchRecorder::new("baselines");
+
     println!("== one-shot baselines ==");
     for id in ["rnnlm2", "gnmt8", "inception", "wavenet4"] {
         let g = workloads::by_id(id).unwrap();
-        bench(&format!("human_expert {id}"), 0.3, || {
+        let s = bench(&format!("human_expert {id}"), budget * 0.6, || {
             std::hint::black_box(human_expert(&g));
         });
-        bench(&format!("metis_place {id} ({} nodes)", g.n()), 0.5, || {
+        rec.add(format!("human/{id}"), s);
+        let s = bench(&format!("metis_place {id} ({} nodes)", g.n()), budget, || {
             std::hint::black_box(metis_place(&g));
         });
+        rec.add(format!("metis/{id}"), s);
     }
 
     println!("\n== HDP-proxy search (policy-gradient over groups) ==");
     for id in ["rnnlm2", "txl4"] {
         let g = workloads::by_id(id).unwrap();
-        bench(&format!("hdp 10 steps (40 evals) {id}"), 1.0, || {
-            let cfg = HdpConfig { steps: 10, ..Default::default() };
-            std::hint::black_box(HdpSearch::new(&g, cfg).run());
-        });
+        for (label, threads) in [("serial", 1usize), ("pooled", 0)] {
+            let s = bench(
+                &format!("hdp 10 steps (40 evals, {label}) {id}"),
+                budget * 2.0,
+                || {
+                    let cfg = HdpConfig { steps: 10, threads, ..Default::default() };
+                    std::hint::black_box(HdpSearch::new(&g, cfg).run());
+                },
+            );
+            rec.add(format!("hdp_{label}/{id}"), s);
+        }
     }
+
+    rec.write("BENCH_BASELINES.json").expect("write BENCH_BASELINES.json");
 }

@@ -54,10 +54,19 @@ fn main() {
     });
 
     println!("\n== end-to-end PPO step (fwd + 4 sims + 2 updates) ==");
-    bench("gdp-one 4-step training segment", 10.0, || {
-        let mut s = session.init_params().unwrap();
-        let t = session.task("rnnlm2", 0).unwrap();
-        let cfg = TrainConfig { steps: 4, verbose: false, ..Default::default() };
-        std::hint::black_box(train(&session.policy, &mut s, &[t], &cfg).unwrap());
-    });
+    // Serial vs pooled reward evaluation: identical trajectories (the RNG
+    // stream never crosses threads), the delta is pure eval throughput.
+    for (label, eval_threads) in [("serial rewards", 1usize), ("pooled rewards", 0)] {
+        bench(&format!("gdp-one 4-step training segment ({label})"), 10.0, || {
+            let mut s = session.init_params().unwrap();
+            let t = session.task("rnnlm2", 0).unwrap();
+            let cfg = TrainConfig {
+                steps: 4,
+                verbose: false,
+                eval_threads,
+                ..Default::default()
+            };
+            std::hint::black_box(train(&session.policy, &mut s, &[t], &cfg).unwrap());
+        });
+    }
 }

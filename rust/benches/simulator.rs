@@ -2,17 +2,35 @@
 //! cost (GDP rollouts, HDP samples, random search all pay one simulate()
 //! per candidate). Target (DESIGN.md §8): >= 10k evals/s on ~256-node
 //! graphs.
+//!
+//! Three measurements per workload:
+//!   - `simulate_fresh`: the one-shot API (throwaway workspace per call),
+//!   - `simulate_into`: reused `SimWorkspace` (the zero-allocation path),
+//!   - `pool_tN`: `EvalPool` batch throughput at N threads.
+//! Results also land in `BENCH_SIM.json` (util::bench::BenchRecorder) so
+//! CI uploads a machine-readable perf trajectory across PRs. Pass
+//! `--smoke` (or set GDP_BENCH_BUDGET) for a seconds-long CI run.
 
 use gdp::baselines::random_place;
-use gdp::sim::{Simulator, Topology};
-use gdp::util::bench::bench;
+use gdp::graph::coarsen::coarsen;
+use gdp::sim::{EvalPool, SimWorkspace, Simulator, Topology};
+use gdp::util::bench::{bench, budget_secs, BenchRecorder};
 use gdp::util::Rng;
 use gdp::workloads;
 
 fn main() {
-    println!("== simulator throughput (one full fwd+bwd step simulation) ==");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = budget_secs(if smoke { 0.05 } else { 0.5 });
+    let mut rec = BenchRecorder::new("simulator");
     let mut rng = Rng::new(42);
-    for id in ["rnnlm2", "gnmt8", "txl8", "inception", "amoebanet", "wavenet4"] {
+
+    println!("== simulator throughput (one full fwd+bwd step simulation) ==");
+    let ids: &[&str] = if smoke {
+        &["rnnlm2", "inception"]
+    } else {
+        &["rnnlm2", "gnmt8", "txl8", "inception", "amoebanet", "wavenet4"]
+    };
+    for &id in ids {
         let g = workloads::by_id(id).unwrap();
         let topo = Topology::p100_pcie(g.num_devices);
         let sim = Simulator::new(&g, &topo);
@@ -20,27 +38,93 @@ fn main() {
             .map(|_| random_place(&g, &mut rng).devices)
             .collect();
         let mut i = 0;
-        bench(
+        let fresh = bench(
             &format!("simulate {id} ({} nodes, {} dev)", g.n(), g.num_devices),
-            0.5,
+            budget,
             || {
                 let p = &placements[i % placements.len()];
                 i += 1;
                 std::hint::black_box(sim.simulate(p));
             },
         );
+        rec.add(format!("simulate_fresh/{id}"), fresh);
+        let mut ws = SimWorkspace::new();
+        let mut j = 0;
+        let reused = bench(
+            &format!("simulate_into {id} (reused workspace)"),
+            budget,
+            || {
+                let p = &placements[j % placements.len()];
+                j += 1;
+                std::hint::black_box(sim.simulate_into(&mut ws, p));
+            },
+        );
+        rec.add(format!("simulate_into/{id}"), reused);
+        println!(
+            "    workspace reuse speedup: {:.2}x",
+            fresh.mean_ns / reused.mean_ns
+        );
     }
 
-    println!("\n== graph preparation (amortized once per task) ==");
-    for id in ["gnmt8", "txl8"] {
-        let g = workloads::by_id(id).unwrap();
-        bench(&format!("coarsen {id} to 256"), 0.5, || {
-            std::hint::black_box(gdp::graph::coarsen::coarsen(&g, 256));
-        });
-        let c = gdp::graph::coarsen::coarsen(&g, 256);
-        let dims = gdp::graph::features::FeatDims { n: 256, k: 8, f: 48, d: 8 };
-        bench(&format!("featurize {id}"), 0.5, || {
-            std::hint::black_box(gdp::graph::features::featurize(&c.graph, dims, 0));
-        });
+    // ---- EvalPool scaling on a ~256-node coarse graph (the acceptance
+    // surface: candidate evaluation during coarse-placement search) ----
+    println!("\n== EvalPool scaling (coarse gnmt8, batches of 256) ==");
+    let g_full = workloads::by_id("gnmt8").unwrap();
+    let coarse = coarsen(&g_full, 256);
+    let cg = &coarse.graph;
+    let topo = Topology::p100_pcie(cg.num_devices);
+    let sim = Simulator::new(cg, &topo);
+    let batch: Vec<Vec<usize>> = (0..256)
+        .map(|_| random_place(cg, &mut rng).devices)
+        .collect();
+    let mut base_mean = 0.0;
+    for threads in [1usize, 2, 4] {
+        let pool = EvalPool::new(threads);
+        let s = bench(
+            &format!("pool evaluate x{} (t={threads})", batch.len()),
+            budget.max(0.2),
+            || {
+                std::hint::black_box(pool.evaluate(&sim, &batch));
+            },
+        );
+        let evals_per_sec = batch.len() as f64 * 1e9 / s.mean_ns;
+        if threads == 1 {
+            base_mean = s.mean_ns;
+            println!("    {evals_per_sec:>12.0} evals/s");
+        } else {
+            println!(
+                "    {evals_per_sec:>12.0} evals/s ({:.2}x vs 1 thread)",
+                base_mean / s.mean_ns
+            );
+        }
+        rec.add(format!("pool_t{threads}/gnmt8_coarse256"), s);
     }
+
+    if !smoke {
+        println!("\n== graph preparation (amortized once per task) ==");
+        for id in ["gnmt8", "txl8"] {
+            let g = workloads::by_id(id).unwrap();
+            let s = bench(&format!("coarsen {id} to 256"), budget, || {
+                std::hint::black_box(gdp::graph::coarsen::coarsen(&g, 256));
+            });
+            rec.add(format!("coarsen/{id}"), s);
+            let c = gdp::graph::coarsen::coarsen(&g, 256);
+            let dims = gdp::graph::features::FeatDims { n: 256, k: 8, f: 48, d: 8 };
+            let s = bench(&format!("featurize {id}"), budget, || {
+                std::hint::black_box(gdp::graph::features::featurize(&c.graph, dims, 0));
+            });
+            rec.add(format!("featurize/{id}"), s);
+            let topo = Topology::p100_pcie(g.num_devices);
+            let s = bench(&format!("SimPlan::build {id}"), budget, || {
+                std::hint::black_box(gdp::sim::SimPlan::build(
+                    &g,
+                    &topo,
+                    &gdp::sim::CostModel::default(),
+                ));
+            });
+            rec.add(format!("plan_build/{id}"), s);
+        }
+    }
+
+    rec.write("BENCH_SIM.json").expect("write BENCH_SIM.json");
 }

@@ -10,7 +10,7 @@
 
 use crate::graph::OpGraph;
 use crate::placement::Placement;
-use crate::sim::{reward, Simulator, Topology};
+use crate::sim::{reward, EvalPool, Simulator, Topology};
 use crate::util::stats::ConvergenceTracker;
 use crate::util::{softmax, Ema, Rng};
 
@@ -24,6 +24,10 @@ pub struct HdpConfig {
     pub samples_per_step: usize,
     pub steps: usize,
     pub seed: u64,
+    /// Threads for evaluating each step's sample batch (0 = auto). The
+    /// search trajectory is identical for any value: sampling stays
+    /// sequential, rewards are consumed in sample order.
+    pub threads: usize,
 }
 
 impl Default for HdpConfig {
@@ -38,6 +42,7 @@ impl Default for HdpConfig {
             samples_per_step: 4,
             steps: 400,
             seed: 0x4844_5000,
+            threads: 0,
         }
     }
 }
@@ -91,6 +96,7 @@ impl<'a> HdpSearch<'a> {
     pub fn run(&self) -> HdpResult {
         let d = self.g.num_devices;
         let sim = Simulator::new(self.g, &self.topo);
+        let pool = EvalPool::new(self.cfg.threads);
         let mut rng = Rng::new(self.cfg.seed);
         // Tabular policy: logits[group][device].
         let mut logits = vec![vec![0f32; d]; self.n_groups];
@@ -103,6 +109,11 @@ impl<'a> HdpSearch<'a> {
 
         for _step in 0..self.cfg.steps {
             let mut grads = vec![vec![0f64; d]; self.n_groups];
+            // Sample the whole batch sequentially (RNG stream unchanged),
+            // then evaluate every candidate in parallel.
+            let mut batch_assign = Vec::with_capacity(self.cfg.samples_per_step);
+            let mut batch_probs = Vec::with_capacity(self.cfg.samples_per_step);
+            let mut batch_placements = Vec::with_capacity(self.cfg.samples_per_step);
             for _s in 0..self.cfg.samples_per_step {
                 // sample group assignment
                 let mut gassign = vec![0usize; self.n_groups];
@@ -115,14 +126,24 @@ impl<'a> HdpSearch<'a> {
                 }
                 let placement: Vec<usize> =
                     self.group_of.iter().map(|&gi| gassign[gi]).collect();
-                let rep = sim.simulate(&placement);
+                batch_assign.push(gassign);
+                batch_probs.push(probs_cache);
+                batch_placements.push(placement);
+            }
+            // (reward, valid, step_time) per sample — no report clones.
+            let outcomes: Vec<(f64, bool, f64)> = pool.map(&batch_placements, |ws, p| {
+                let rep = sim.simulate_into(ws, p);
+                (reward(rep), rep.valid, rep.step_time)
+            });
+            for s in 0..self.cfg.samples_per_step {
+                let (r, valid, step_time) = outcomes[s];
+                let gassign = &batch_assign[s];
                 evals += 1;
-                let r = reward(&rep);
-                let objective = if rep.valid { rep.step_time } else { f64::INFINITY };
+                let objective = if valid { step_time } else { f64::INFINITY };
                 if objective < best_time {
                     best_time = objective;
-                    best_placement = placement;
-                    best_valid = rep.valid;
+                    best_placement = batch_placements[s].clone();
+                    best_valid = valid;
                 }
                 if objective.is_finite() {
                     tracker.observe(objective);
@@ -134,7 +155,7 @@ impl<'a> HdpSearch<'a> {
                 baseline.update(r);
                 // REINFORCE: d/dlogits log pi(a) = onehot(a) - p
                 for gi in 0..self.n_groups {
-                    let p = &probs_cache[gi];
+                    let p = &batch_probs[s][gi];
                     for di in 0..d {
                         let ind = (gassign[gi] == di) as u8 as f64;
                         grads[gi][di] += adv * (ind - p[di] as f64);

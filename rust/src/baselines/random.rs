@@ -2,7 +2,7 @@
 
 use crate::graph::OpGraph;
 use crate::placement::Placement;
-use crate::sim::{Simulator, Topology};
+use crate::sim::{EvalPool, Simulator, Topology};
 use crate::util::Rng;
 
 /// Uniform random device per node.
@@ -11,18 +11,33 @@ pub fn random_place(g: &OpGraph, rng: &mut Rng) -> Placement {
 }
 
 /// Best of `n` random placements by simulated step time (invalid skipped).
+/// Candidates are drawn sequentially (same RNG stream as ever) and
+/// evaluated in parallel batches; the first strictly-better candidate in
+/// draw order wins, so the result is independent of thread count.
 pub fn random_search(g: &OpGraph, n: usize, seed: u64) -> (Placement, f64) {
     let topo = Topology::p100_pcie(g.num_devices);
     let sim = Simulator::new(g, &topo);
+    let pool = EvalPool::new(0);
     let mut rng = Rng::new(seed);
     let mut best = Placement::single(g.n());
     let mut best_t = f64::INFINITY;
-    for _ in 0..n {
-        let p = random_place(g, &mut rng);
-        let r = sim.simulate(&p.devices);
-        if r.valid && r.step_time < best_t {
-            best_t = r.step_time;
-            best = p;
+    // Batches bound memory on large budgets while amortizing thread spawn.
+    let batch = (pool.threads() * 8).max(8);
+    let mut remaining = n;
+    while remaining > 0 {
+        let k = batch.min(remaining);
+        remaining -= k;
+        let candidates: Vec<Placement> =
+            (0..k).map(|_| random_place(g, &mut rng)).collect();
+        let reports = pool.map(&candidates, |ws, p| {
+            let rep = sim.simulate_into(ws, &p.devices);
+            (rep.valid, rep.step_time)
+        });
+        for (p, (valid, t)) in candidates.into_iter().zip(reports) {
+            if valid && t < best_t {
+                best_t = t;
+                best = p;
+            }
         }
     }
     (best, best_t)

@@ -4,7 +4,7 @@
 use crate::baselines::hdp::{HdpConfig, HdpSearch};
 use crate::baselines::{human_expert, metis_place};
 use crate::graph::OpGraph;
-use crate::sim::{SimReport, Simulator, Topology};
+use crate::sim::{SimReport, SimWorkspace, Simulator, Topology};
 
 /// Result of one baseline on one workload.
 #[derive(Clone, Debug)]
@@ -36,6 +36,23 @@ pub fn eval_metis(g: &OpGraph) -> BaselineResult {
     let p = metis_place(g);
     let rep = Simulator::new(g, &topo).simulate(&p.devices);
     BaselineResult { name: "metis", step_time: time_of(&rep), search_evals: 0 }
+}
+
+/// Both one-shot heuristics on one shared simulator: the cost tables are
+/// built once and both placements run through one reused workspace (two
+/// evals don't warrant thread fan-out).
+pub fn eval_heuristics(g: &OpGraph) -> Vec<BaselineResult> {
+    let topo = Topology::p100_pcie(g.num_devices);
+    let sim = Simulator::new(g, &topo);
+    let mut ws = SimWorkspace::new();
+    [("human", human_expert(g)), ("metis", metis_place(g))]
+        .into_iter()
+        .map(|(name, p)| BaselineResult {
+            name,
+            step_time: time_of(sim.simulate_into(&mut ws, &p.devices)),
+            search_evals: 0,
+        })
+        .collect()
 }
 
 /// HDP search with a given step budget (it needs many more evals than GDP
@@ -72,5 +89,16 @@ mod tests {
             // METIS may OOM (that is the point); but it must return.
             let _ = m;
         }
+    }
+
+    #[test]
+    fn pooled_heuristics_match_individual_evals() {
+        let g = workloads::by_id("rnnlm2").unwrap();
+        let both = eval_heuristics(&g);
+        assert_eq!(both.len(), 2);
+        assert_eq!(both[0].name, "human");
+        assert_eq!(both[0].step_time, eval_human(&g).step_time);
+        assert_eq!(both[1].name, "metis");
+        assert_eq!(both[1].step_time, eval_metis(&g).step_time);
     }
 }

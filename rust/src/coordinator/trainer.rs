@@ -17,9 +17,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::placement::Placement;
-use crate::policy::{greedy_from_logits, sample_from_logits, PlacementTask};
+use crate::policy::{greedy_from_logits, sample_from_logits, PlacementTask, Sample};
 use crate::runtime::{Batch, ParamStore, Policy};
-use crate::sim::INVALID_REWARD;
+use crate::sim::{reward, EvalPool, INVALID_REWARD};
 use crate::util::stats::ConvergenceTracker;
 use crate::util::{Ema, Rng};
 
@@ -35,6 +35,10 @@ pub struct TrainConfig {
     pub baseline_alpha: f64,
     pub log_every: usize,
     pub verbose: bool,
+    /// Worker threads for batch reward evaluation (0 = one per core).
+    /// Results are identical for any value — sampling stays sequential
+    /// and rewards are consumed in row order.
+    pub eval_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -49,6 +53,7 @@ impl Default for TrainConfig {
             baseline_alpha: 0.15,
             log_every: 20,
             verbose: false,
+            eval_threads: 0,
         }
     }
 }
@@ -118,6 +123,7 @@ pub fn train(
         .collect();
     let mut history = Vec::with_capacity(cfg.steps);
     let mut sim_evals = 0usize;
+    let pool = EvalPool::new(cfg.eval_threads);
 
     // Cache marshalled batches per unique row assignment (GDP-one: 1 entry;
     // GDP-batch with T tasks: gcd-cycle of assignments).
@@ -145,24 +151,44 @@ pub fn train(
         let mut logp_old = Vec::with_capacity(dims.b * dims.n);
         let mut adv = Vec::with_capacity(dims.b);
         let mut mean_reward = 0.0;
-        for (bi, &ti) in row_tasks.iter().enumerate() {
+        // Sample all rows first (sequential: the RNG stream is part of the
+        // reproducibility contract), then evaluate rewards in parallel.
+        let samples: Vec<Sample> = row_tasks
+            .iter()
+            .enumerate()
+            .map(|(bi, &ti)| {
+                let task = &tasks[ti];
+                sample_from_logits(
+                    &logits[bi * stride..(bi + 1) * stride],
+                    dims.n,
+                    dims.d,
+                    task.n_coarse(),
+                    task.graph.num_devices,
+                    temp,
+                    &mut rng,
+                )
+            })
+            .collect();
+        let rows: Vec<(usize, &[usize])> = row_tasks
+            .iter()
+            .zip(&samples)
+            .map(|(&ti, s)| (ti, s.placement.as_slice()))
+            .collect();
+        // (reward, valid, step_time) per row — no per-candidate report clone.
+        let outcomes: Vec<(f64, bool, f64)> = pool.map(&rows, |ws, &(ti, p)| {
+            let rep = tasks[ti].evaluate_ref(ws, p);
+            (reward(rep), rep.valid, rep.step_time)
+        });
+        for ((&ti, sample), &(r, valid, step_time)) in
+            row_tasks.iter().zip(&samples).zip(&outcomes)
+        {
             let task = &tasks[ti];
-            let sample = sample_from_logits(
-                &logits[bi * stride..(bi + 1) * stride],
-                dims.n,
-                dims.d,
-                task.n_coarse(),
-                task.graph.num_devices,
-                temp,
-                &mut rng,
-            );
-            let (r, rep) = task.reward(&sample.placement);
             sim_evals += 1;
             mean_reward += r;
-            let objective = if rep.valid { rep.step_time } else { f64::INFINITY };
+            let objective = if valid { step_time } else { f64::INFINITY };
             if objective < bests[ti].best_time {
                 bests[ti].best_time = objective;
-                bests[ti].best_valid = rep.valid;
+                bests[ti].best_valid = valid;
                 bests[ti].best_placement = task.expand(&sample.placement);
             }
             bests[ti]
@@ -244,21 +270,10 @@ pub fn infer(
     let mut best_time = f64::INFINITY;
     let mut best_valid = false;
     let mut best_placement = Placement::single(task.graph.n());
-    let consider = |placement: &[usize],
-                        best_time: &mut f64,
-                        best_valid: &mut bool,
-                        best_placement: &mut Placement,
-                        tracker: &mut ConvergenceTracker| {
-        let rep = task.evaluate(placement);
-        let objective = if rep.valid { rep.step_time } else { f64::INFINITY };
-        tracker.observe(if objective.is_finite() { objective } else { 1e9 });
-        if objective < *best_time {
-            *best_time = objective;
-            *best_valid = rep.valid;
-            *best_placement = task.expand(placement);
-        }
-    };
 
+    // Greedy first, then the stochastic draws (RNG order preserved);
+    // evaluate the whole candidate set in parallel and pick the winner in
+    // candidate order, so the result is identical to the serial loop.
     let greedy = greedy_from_logits(
         &logits[..stride],
         dims.n,
@@ -266,8 +281,8 @@ pub fn infer(
         task.n_coarse(),
         task.graph.num_devices,
     );
-    consider(&greedy.placement, &mut best_time, &mut best_valid,
-             &mut best_placement, &mut tracker);
+    let mut candidates: Vec<Vec<usize>> = Vec::with_capacity(1 + extra_samples);
+    candidates.push(greedy.placement);
     for _ in 0..extra_samples {
         let s = sample_from_logits(
             &logits[..stride],
@@ -278,8 +293,24 @@ pub fn infer(
             1.0,
             &mut rng,
         );
-        consider(&s.placement, &mut best_time, &mut best_valid,
-                 &mut best_placement, &mut tracker);
+        candidates.push(s.placement);
+    }
+    // Auto-width is safe here: workspaces size lazily and `map` spawns at
+    // most `candidates.len()` workers, so a small sample budget costs a
+    // handful of short-lived threads against full-graph simulations.
+    let pool = EvalPool::new(0);
+    let outcomes: Vec<(bool, f64)> = pool.map(&candidates, |ws, p| {
+        let rep = task.evaluate_ref(ws, p.as_slice());
+        (rep.valid, rep.step_time)
+    });
+    for (placement, &(valid, step_time)) in candidates.iter().zip(&outcomes) {
+        let objective = if valid { step_time } else { f64::INFINITY };
+        tracker.observe(if objective.is_finite() { objective } else { 1e9 });
+        if objective < best_time {
+            best_time = objective;
+            best_valid = valid;
+            best_placement = task.expand(placement);
+        }
     }
 
     Ok(TaskBest {

@@ -33,14 +33,23 @@ impl Coarsened {
     /// Expand a coarse placement (one device per coarse node) to the
     /// original graph's nodes.
     pub fn expand(&self, coarse_placement: &[usize]) -> Vec<usize> {
+        let mut full = Vec::new();
+        self.expand_into(coarse_placement, &mut full);
+        full
+    }
+
+    /// `expand` into a caller-owned buffer: the evaluation hot path reuses
+    /// one original-graph-sized buffer per workspace instead of allocating
+    /// a fresh Vec (50k+ entries for gnmt8) per candidate.
+    pub fn expand_into(&self, coarse_placement: &[usize], out: &mut Vec<usize>) {
         assert_eq!(coarse_placement.len(), self.graph.n());
-        let mut full = vec![0usize; self.orig_n];
+        out.clear();
+        out.resize(self.orig_n, 0);
         for (c, members) in self.members.iter().enumerate() {
             for &m in members {
-                full[m as usize] = coarse_placement[c];
+                out[m as usize] = coarse_placement[c];
             }
         }
-        full
     }
 }
 

@@ -16,7 +16,7 @@ use anyhow::{anyhow, bail, Result};
 
 use gdp::coordinator::experiments;
 use gdp::coordinator::{self, Session, TrainConfig};
-use gdp::coordinator::baseline_eval::{eval_hdp, eval_human, eval_metis};
+use gdp::coordinator::baseline_eval::{eval_hdp, eval_heuristics};
 use gdp::sim::{simulate_default, Topology};
 use gdp::util::cli::Args;
 use gdp::workloads;
@@ -90,8 +90,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "  single-device : {}",
         fmt(if single.valid { Some(single.step_time) } else { None })
     );
-    println!("  human expert  : {}", fmt(eval_human(&g).step_time));
-    println!("  metis         : {}", fmt(eval_metis(&g).step_time));
+    for b in eval_heuristics(&g) {
+        println!("  {:<14}: {}", b.name, fmt(b.step_time));
+    }
     let (hdp, tracker) = eval_hdp(&g, hdp_steps, 7);
     println!(
         "  hdp (proxy)   : {}  [{} evals, {} improvements]",

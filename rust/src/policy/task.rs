@@ -2,12 +2,22 @@
 //! to the AOT node budget, featurized, and bound to its device topology.
 //! `evaluate` expands a coarse placement to the ORIGINAL graph and runs the
 //! full-fidelity simulator (the reward substrate).
+//!
+//! The task caches the placement-independent simulator plan (per-(node,
+//! device) cost tables, topo ranks) and a reusable workspace, so repeated
+//! candidate evaluations rebuild nothing. `evaluate_in` takes a
+//! caller-owned workspace for `EvalPool` workers evaluating candidates of
+//! the same task concurrently.
+
+use std::sync::Mutex;
 
 use crate::graph::coarsen::{coarsen, Coarsened};
 use crate::graph::features::{featurize, FeatDims, GraphFeatures};
 use crate::graph::OpGraph;
 use crate::placement::Placement;
-use crate::sim::{reward, SimReport, Simulator, Topology};
+use crate::sim::{
+    reward, CostModel, SimPlan, SimReport, SimWorkspace, Simulator, Topology,
+};
 
 pub struct PlacementTask {
     pub id: String,
@@ -17,6 +27,12 @@ pub struct PlacementTask {
     pub coarse: Coarsened,
     pub feats: GraphFeatures,
     pub topo: Topology,
+    cost: CostModel,
+    /// Placement-independent cost state, built once per task.
+    plan: SimPlan,
+    /// Workspace for the serial `evaluate` path (pool workers bring their
+    /// own via `evaluate_in`).
+    ws: Mutex<SimWorkspace>,
 }
 
 impl PlacementTask {
@@ -24,7 +40,18 @@ impl PlacementTask {
         let coarse = coarsen(&graph, dims.n);
         let feats = featurize(&coarse.graph, dims, seed);
         let topo = Topology::p100_pcie(graph.num_devices);
-        Self { id: id.into(), graph, coarse, feats, topo }
+        let cost = CostModel::default();
+        let plan = SimPlan::build(&graph, &topo, &cost);
+        Self {
+            id: id.into(),
+            graph,
+            coarse,
+            feats,
+            topo,
+            cost,
+            plan,
+            ws: Mutex::new(SimWorkspace::new()),
+        }
     }
 
     /// Build a task for a registry workload id.
@@ -37,10 +64,43 @@ impl PlacementTask {
         self.coarse.graph.n()
     }
 
+    /// A simulator view over the task's cached plan (no table rebuild).
+    pub fn simulator(&self) -> Simulator<'_> {
+        Simulator::from_plan(&self.graph, &self.topo, self.cost, &self.plan)
+    }
+
     /// Simulate a coarse placement at full graph fidelity.
     pub fn evaluate(&self, coarse_placement: &[usize]) -> SimReport {
-        let full = self.coarse.expand(coarse_placement);
-        Simulator::new(&self.graph, &self.topo).simulate(&full)
+        let mut ws = self.ws.lock().unwrap();
+        self.evaluate_in(&mut ws, coarse_placement)
+    }
+
+    /// `evaluate` with a caller-owned workspace (EvalPool workers),
+    /// returning an owned report (clones the workspace-resident one).
+    pub fn evaluate_in(
+        &self,
+        ws: &mut SimWorkspace,
+        coarse_placement: &[usize],
+    ) -> SimReport {
+        self.evaluate_ref(ws, coarse_placement).clone()
+    }
+
+    /// The allocation-free evaluation path: expansion goes through the
+    /// workspace's cached buffer and the returned report borrows the
+    /// workspace (valid until its next use). Hot loops that only read a
+    /// few report fields should use this to avoid per-candidate clones.
+    pub fn evaluate_ref<'w>(
+        &self,
+        ws: &'w mut SimWorkspace,
+        coarse_placement: &[usize],
+    ) -> &'w SimReport {
+        // Temporarily take the expansion buffer so the workspace can be
+        // borrowed mutably by the simulator while we read the buffer.
+        let mut full = std::mem::take(&mut ws.expand_buf);
+        self.coarse.expand_into(coarse_placement, &mut full);
+        self.simulator().simulate_into(ws, &full);
+        ws.expand_buf = full;
+        &ws.report
     }
 
     /// Reward for a coarse placement (paper §4.1: -sqrt(time), -10 invalid).
@@ -84,5 +144,21 @@ mod tests {
         let a = t.evaluate(&p);
         let b = Simulator::new(&t.graph, &t.topo).simulate(&p);
         assert_eq!(a.step_time, b.step_time);
+    }
+
+    #[test]
+    fn cached_and_fresh_workspace_agree() {
+        let t = PlacementTask::from_workload("rnnlm2", dims(), 0).unwrap();
+        let p: Vec<usize> = (0..t.n_coarse()).map(|i| i % 2).collect();
+        let a = t.evaluate(&p);
+        let b = t.evaluate(&p); // cached workspace, second use
+        let mut ws = SimWorkspace::new();
+        let c = t.evaluate_in(&mut ws, &p);
+        let d = t.evaluate_in(&mut ws, &p);
+        for r in [&b, &c, &d] {
+            assert_eq!(a.step_time.to_bits(), r.step_time.to_bits());
+            assert_eq!(a.peak_mem, r.peak_mem);
+            assert_eq!(a.comm_bytes, r.comm_bytes);
+        }
     }
 }

@@ -14,7 +14,8 @@ use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use xla::Literal;
+
+use super::xla::{self, Literal};
 
 use super::manifest::Manifest;
 use super::params::ParamStore;

@@ -2,10 +2,15 @@
 //! `python/compile/aot.py` and executes them on the CPU PJRT client.
 //! Python never runs here — this is the self-contained serving/training
 //! hot path (see /opt/xla-example/load_hlo for the interchange pattern).
+//!
+//! The `xla` module below is a pure-Rust interchange stub standing in for
+//! the real PJRT bindings, which the offline build sandbox cannot fetch
+//! (Cargo.toml documents the swap). Marshalling works; execution errors.
 
 pub mod exec;
 pub mod manifest;
 pub mod params;
+pub mod xla;
 
 pub use exec::{Batch, Policy, TrainStats};
 pub use manifest::{Dims, Manifest, ParamEntry};

@@ -7,7 +7,8 @@
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
-use xla::Literal;
+
+use super::xla::Literal;
 
 use super::manifest::Manifest;
 

@@ -1,0 +1,197 @@
+//! Pure-Rust stand-in for the PJRT `xla` crate (unavailable in the offline
+//! build sandbox — see Cargo.toml).
+//!
+//! The surface mirrors the subset of xla-rs this repo uses. Literal
+//! marshalling is fully functional (flat f32/i32 buffers + dims), so the
+//! ParamStore checkpoint round-trips and Batch assembly work and are
+//! tested; compiling or executing an HLO module returns a descriptive
+//! error, which `Session::open` surfaces before any experiment runs. The
+//! runtime tests and benches already gate on `artifacts/` existing, so
+//! they skip cleanly under the stub.
+
+use std::path::Path;
+
+/// Stub-layer error; converts into `anyhow::Error` at the call sites.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_BACKEND: &str =
+    "PJRT backend unavailable in this build (offline stub); \
+     link the real `xla` crate to execute AOT artifacts";
+
+/// Element storage for stub literals.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types a stub literal can hold.
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn store(data: &[Self]) -> Data;
+    #[doc(hidden)]
+    fn load(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn store(data: &[Self]) -> Data {
+        Data::F32(data.to_vec())
+    }
+    fn load(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn store(data: &[Self]) -> Data {
+        Data::I32(data.to_vec())
+    }
+    fn load(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+        }
+    }
+}
+
+/// Host-side tensor: flat buffer + dims. Marshalling-complete.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::store(data), dims: vec![data.len() as i64] }
+    }
+
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { data: T::store(&[x]), dims: vec![] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.element_count() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(self)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::load(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Tuples only come out of executed programs, which the stub cannot run.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(NO_BACKEND.into()))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<Self> {
+        if path.exists() {
+            Ok(Self)
+        } else {
+            Err(Error(format!("{}: no such HLO text file", path.display())))
+        }
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(NO_BACKEND.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_marshalling_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.reshape(&[7]).is_err());
+        let i = Literal::vec1(&[1i32, 2]);
+        assert!(i.to_vec::<f32>().is_err());
+        assert_eq!(Literal::scalar(3.5f32).element_count(), 1);
+    }
+
+    #[test]
+    fn backend_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}

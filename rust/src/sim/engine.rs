@@ -10,14 +10,23 @@
 //! The scheduler is a ready-list event simulation: a device picks the
 //! lowest-topological-rank ready op whenever it goes idle; transfers queue
 //! FIFO per directed link. Deterministic for a given (graph, placement).
+//!
+//! Structured for candidate-evaluation throughput (EXPERIMENTS.md §Perf):
+//! everything placement-independent — topo ranks for both passes, per-pass
+//! in-degrees, per-(node, device) fwd/bwd op-time tables — is computed once
+//! per (graph, topology) in a [`SimPlan`], and `simulate_into` runs the
+//! event loop against a reusable [`SimWorkspace`] with zero heap
+//! allocation per call. `simulate()` keeps the old one-shot API (it builds
+//! a throwaway workspace) and is bit-identical to the workspace path.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::borrow::Cow;
 
 use crate::graph::OpGraph;
 use crate::sim::cost::CostModel;
 use crate::sim::device::Topology;
+use crate::sim::heap::DaryHeap;
 use crate::sim::trace::{OpSpan, Trace, TransferSpan};
+use crate::sim::workspace::{EvKind, Event, SimWorkspace};
 
 /// Result of simulating one training step.
 #[derive(Clone, Debug)]
@@ -36,29 +45,6 @@ pub struct SimReport {
     pub comm_bytes: u64,
 }
 
-/// f64 with a total order for the event heap.
-#[derive(Clone, Copy, PartialEq)]
-struct T(f64);
-impl Eq for T {}
-impl PartialOrd for T {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for T {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
-    }
-}
-
-#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum Ev {
-    /// Op finished on its device.
-    OpDone(u32),
-    /// One input of the node became available on its device.
-    Arrive(u32),
-}
-
 /// Direction of a simulated pass.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum Pass {
@@ -66,50 +52,146 @@ enum Pass {
     Backward,
 }
 
+/// Placement-independent tables for one (graph, topology, cost model):
+/// topological priorities and in-degrees for both passes, plus the full
+/// per-(node, device) op-time matrices. Built once, shared by every
+/// candidate evaluation (`PlacementTask` caches one per task; `EvalPool`
+/// workers borrow it concurrently).
+#[derive(Clone, Debug)]
+pub struct SimPlan {
+    n: usize,
+    d: usize,
+    prio_fwd: Vec<u32>,
+    prio_bwd: Vec<u32>,
+    indeg_fwd: Vec<u32>,
+    indeg_bwd: Vec<u32>,
+    /// Forward op time for node v on device k at `v * d + k`.
+    time_fwd: Vec<f64>,
+    /// Backward op time, same layout.
+    time_bwd: Vec<f64>,
+}
+
+impl SimPlan {
+    pub fn build(graph: &OpGraph, topo: &Topology, cost: &CostModel) -> Self {
+        let n = graph.n();
+        let d = topo.d();
+        let mut prio_fwd = vec![0u32; n];
+        let mut prio_bwd = vec![0u32; n];
+        for (r, &u) in graph.topo_order().iter().enumerate() {
+            prio_fwd[u as usize] = r as u32;
+            prio_bwd[u as usize] = (n - 1 - r) as u32;
+        }
+        let mut indeg_fwd = vec![0u32; n];
+        let mut indeg_bwd = vec![0u32; n];
+        for v in 0..n {
+            indeg_fwd[v] = graph.producers(v).len() as u32;
+            indeg_bwd[v] = graph.consumers(v).len() as u32;
+        }
+        let mut time_fwd = vec![0f64; n * d];
+        let mut time_bwd = vec![0f64; n * d];
+        for v in 0..n {
+            let node = &graph.nodes[v];
+            for k in 0..d {
+                let dev = &topo.devices[k];
+                time_fwd[v * d + k] = cost.op_time(node, dev);
+                time_bwd[v * d + k] = cost.op_time_bwd(node, dev);
+            }
+        }
+        Self { n, d, prio_fwd, prio_bwd, indeg_fwd, indeg_bwd, time_fwd, time_bwd }
+    }
+}
+
 pub struct Simulator<'a> {
     pub graph: &'a OpGraph,
     pub topo: &'a Topology,
-    pub cost: CostModel,
+    cost: CostModel,
+    plan: Cow<'a, SimPlan>,
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(graph: &'a OpGraph, topo: &'a Topology) -> Self {
-        Self { graph, topo, cost: CostModel::default() }
+        Self::with_cost(graph, topo, CostModel::default())
+    }
+
+    pub fn with_cost(graph: &'a OpGraph, topo: &'a Topology, cost: CostModel) -> Self {
+        let plan = SimPlan::build(graph, topo, &cost);
+        Self { graph, topo, cost, plan: Cow::Owned(plan) }
+    }
+
+    /// Borrow a pre-built plan (e.g. cached in a `PlacementTask`) instead
+    /// of rebuilding the cost tables. The plan must have been built for
+    /// this same (graph, topology, cost model).
+    pub fn from_plan(
+        graph: &'a OpGraph,
+        topo: &'a Topology,
+        cost: CostModel,
+        plan: &'a SimPlan,
+    ) -> Self {
+        debug_assert_eq!(plan.n, graph.n(), "plan built for a different graph");
+        debug_assert_eq!(plan.d, topo.d(), "plan built for a different topology");
+        Self { graph, topo, cost, plan: Cow::Borrowed(plan) }
+    }
+
+    pub fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    pub fn plan(&self) -> &SimPlan {
+        &self.plan
     }
 
     /// Simulate one training step under `placement` (device id per node).
+    /// One-shot convenience: allocates a throwaway workspace. Hot paths
+    /// should hold a `SimWorkspace` and call `simulate_into`.
     pub fn simulate(&self, placement: &[usize]) -> SimReport {
-        self.simulate_impl(placement, None).0
+        let mut ws = SimWorkspace::new();
+        self.simulate_into(&mut ws, placement).clone()
+    }
+
+    /// Simulate into a reusable workspace: zero heap allocation once the
+    /// workspace has seen this (n, d) shape. Returns a borrow of the
+    /// workspace-resident report (clone it to keep it past the next call).
+    pub fn simulate_into<'w>(
+        &self,
+        ws: &'w mut SimWorkspace,
+        placement: &[usize],
+    ) -> &'w SimReport {
+        self.simulate_impl(ws, placement, None)
     }
 
     /// Simulate and capture the full execution trace (op spans + transfers).
     pub fn simulate_traced(&self, placement: &[usize]) -> (SimReport, Trace) {
+        let mut ws = SimWorkspace::new();
         let mut trace = Trace::default();
-        let rep = self.simulate_impl(placement, Some(&mut trace)).0;
+        let rep = self.simulate_impl(&mut ws, placement, Some(&mut trace)).clone();
         (rep, trace)
     }
 
-    fn simulate_impl(
+    fn simulate_impl<'w>(
         &self,
+        ws: &'w mut SimWorkspace,
         placement: &[usize],
         mut trace: Option<&mut Trace>,
-    ) -> (SimReport,) {
+    ) -> &'w SimReport {
         let g = self.graph;
+        let n = g.n();
         let d = self.topo.d();
-        assert_eq!(placement.len(), g.n(), "placement length mismatch");
+        assert_eq!(placement.len(), n, "placement length mismatch");
+        ws.ensure(n, d);
 
         // Reject out-of-range device ids up front (policy masking should
         // prevent these; baselines must not produce them).
         if placement.iter().any(|&p| p >= d) {
-            return (SimReport {
-                valid: false,
-                oom_devices: vec![],
-                step_time: f64::INFINITY,
-                fwd_time: f64::INFINITY,
-                bwd_time: f64::INFINITY,
-                peak_mem: vec![0; d],
-                comm_bytes: 0,
-            },);
+            let rep = &mut ws.report;
+            rep.valid = false;
+            rep.oom_devices.clear();
+            rep.step_time = f64::INFINITY;
+            rep.fwd_time = f64::INFINITY;
+            rep.bwd_time = f64::INFINITY;
+            rep.peak_mem.clear();
+            rep.peak_mem.resize(d, 0);
+            rep.comm_bytes = 0;
+            return &ws.report;
         }
 
         // ---- memory model (training: params + activations + recv copies) --
@@ -117,52 +199,61 @@ impl<'a> Simulator<'a> {
         // + two Adam slots. Activations stay resident through the backward
         // pass, so every op's output counts toward its device's peak.
         const PARAM_MEM_FACTOR: u64 = 4;
-        let mut peak_mem = vec![0u64; d];
+        ws.report.peak_mem.clear();
+        ws.report.peak_mem.resize(d, 0);
         for (v, node) in g.nodes.iter().enumerate() {
-            peak_mem[placement[v]] +=
+            ws.report.peak_mem[placement[v]] +=
                 PARAM_MEM_FACTOR * node.param_bytes + node.output_bytes;
         }
-        // One received copy per (producer, destination device).
-        let mut seen = std::collections::HashSet::new();
+        // One received copy per (producer, destination device) — the same
+        // epoch-marked flat slots the transfer dedup uses, replacing the
+        // old per-call HashSet<(u32, usize)>.
+        let epoch = ws.bump_epoch();
         let mut comm_bytes = 0u64;
         for &(u, v) in &g.edges {
             let (a, b) = (placement[u as usize], placement[v as usize]);
-            if a != b && seen.insert((u, b)) {
-                let bytes = g.nodes[u as usize].output_bytes;
-                peak_mem[b] += bytes;
-                comm_bytes += bytes;
+            if a != b {
+                let slot = u as usize * d + b;
+                if ws.slot_epoch[slot] != epoch {
+                    ws.slot_epoch[slot] = epoch;
+                    let bytes = g.nodes[u as usize].output_bytes;
+                    ws.report.peak_mem[b] += bytes;
+                    comm_bytes += bytes;
+                }
             }
         }
         // Backward traffic mirrors forward traffic (gradients of the same
         // tensors flowing the other way).
         comm_bytes *= 2;
 
-        let oom_devices: Vec<usize> = (0..d)
-            .filter(|&i| peak_mem[i] > self.topo.devices[i].mem_bytes)
-            .collect();
-        let valid = oom_devices.is_empty();
+        ws.report.oom_devices.clear();
+        for i in 0..d {
+            if ws.report.peak_mem[i] > self.topo.devices[i].mem_bytes {
+                ws.report.oom_devices.push(i);
+            }
+        }
+        let valid = ws.report.oom_devices.is_empty();
 
         // ---- timing: forward + backward passes ----
-        let fwd_time = self.run_pass(placement, Pass::Forward, trace.as_deref_mut(), 0.0);
+        let fwd_time = self.run_pass(ws, placement, Pass::Forward, trace.as_deref_mut(), 0.0);
         // The backward trace is offset so both passes share one timeline.
         let bwd_time =
-            self.run_pass(placement, Pass::Backward, trace.as_deref_mut(), fwd_time);
+            self.run_pass(ws, placement, Pass::Backward, trace.as_deref_mut(), fwd_time);
 
-        (SimReport {
-            valid,
-            oom_devices,
-            step_time: fwd_time + bwd_time,
-            fwd_time,
-            bwd_time,
-            peak_mem,
-            comm_bytes,
-        },)
+        let rep = &mut ws.report;
+        rep.valid = valid;
+        rep.step_time = fwd_time + bwd_time;
+        rep.fwd_time = fwd_time;
+        rep.bwd_time = bwd_time;
+        rep.comm_bytes = comm_bytes;
+        &ws.report
     }
 
     /// Event-driven makespan of one pass. When `trace` is set, op spans and
     /// transfers are recorded with times offset by `t_offset`.
     fn run_pass(
         &self,
+        ws: &mut SimWorkspace,
         placement: &[usize],
         pass: Pass,
         mut trace: Option<&mut Trace>,
@@ -171,122 +262,55 @@ impl<'a> Simulator<'a> {
         let g = self.graph;
         let n = g.n();
         let d = self.topo.d();
-
-        // Dependency counts + priority ranks for the chosen direction.
-        let mut in_remaining = vec![0u32; n];
-        let mut prio = vec![0u32; n];
-        match pass {
-            Pass::Forward => {
-                for (r, &u) in g.topo_order().iter().enumerate() {
-                    prio[u as usize] = r as u32;
-                }
-                for v in 0..n {
-                    in_remaining[v] = g.producers(v).len() as u32;
-                }
-            }
-            Pass::Backward => {
-                for (r, &u) in g.topo_order().iter().enumerate() {
-                    prio[u as usize] = (n - 1 - r) as u32;
-                }
-                for v in 0..n {
-                    in_remaining[v] = g.consumers(v).len() as u32;
-                }
-            }
-        }
-
-        let op_time: Vec<f64> = (0..n)
-            .map(|v| {
-                let dev = &self.topo.devices[placement[v]];
-                match pass {
-                    Pass::Forward => self.cost.op_time(&g.nodes[v], dev),
-                    Pass::Backward => self.cost.op_time_bwd(&g.nodes[v], dev),
-                }
-            })
-            .collect();
-
-        // Per-device ready queues ordered by priority (min first).
-        let mut ready: Vec<BinaryHeap<Reverse<(u32, u32)>>> =
-            (0..d).map(|_| BinaryHeap::new()).collect();
-        let mut dev_busy_until = vec![0f64; d];
-        let mut link_busy_until = vec![0f64; d * d];
-        // Arrival dedupe: (producer, dst device) -> arrival time, as a flat
-        // array (NaN = not sent). Profiling showed the HashMap version cost
-        // ~15% of simulate() on 500-node graphs (EXPERIMENTS.md §Perf).
-        let mut sent = vec![f64::NAN; n * d];
-
-        let mut events: BinaryHeap<Reverse<(T, u64, Ev)>> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let push = |events: &mut BinaryHeap<Reverse<(T, u64, Ev)>>,
-                        seq: &mut u64,
-                        t: f64,
-                        e: Ev| {
-            *seq += 1;
-            events.push(Reverse((T(t), *seq, e)));
+        let plan = self.plan.as_ref();
+        let (prio, indeg, times): (&[u32], &[u32], &[f64]) = match pass {
+            Pass::Forward => (&plan.prio_fwd, &plan.indeg_fwd, &plan.time_fwd),
+            Pass::Backward => (&plan.prio_bwd, &plan.indeg_bwd, &plan.time_bwd),
         };
 
+        let epoch = ws.bump_epoch();
+        let SimWorkspace {
+            slot_epoch,
+            slot_time,
+            started_epoch,
+            in_remaining,
+            dev_busy,
+            link_busy,
+            ready,
+            events,
+            ..
+        } = ws;
+        in_remaining.copy_from_slice(indeg);
+        dev_busy.iter_mut().for_each(|x| *x = 0.0);
+        link_busy.iter_mut().for_each(|x| *x = 0.0);
+        for h in ready.iter_mut() {
+            h.clear();
+        }
+        events.clear();
+
+        let mut seq = 0u32;
         let mut makespan = 0f64;
-        let mut started = vec![false; n];
         let mut done_count = 0usize;
 
         // Seed: ops with no deps are ready at t=0.
         for v in 0..n {
             if in_remaining[v] == 0 {
-                ready[placement[v]].push(Reverse((prio[v], v as u32)));
+                ready[placement[v]].push(ready_key(prio[v], v as u32));
             }
         }
-
-        // Start whatever can start on idle devices at time t. Returns the
-        // (node, start, finish) of the op it launched, if any.
-        fn try_start(
-            dev: usize,
-            t: f64,
-            ready: &mut [BinaryHeap<Reverse<(u32, u32)>>],
-            dev_busy_until: &mut [f64],
-            started: &mut [bool],
-            op_time: &[f64],
-            events: &mut BinaryHeap<Reverse<(T, u64, Ev)>>,
-            seq: &mut u64,
-        ) -> Option<(u32, f64, f64)> {
-            if dev_busy_until[dev] > t {
-                return None;
-            }
-            if let Some(Reverse((_, u))) = ready[dev].pop() {
-                debug_assert!(!started[u as usize]);
-                started[u as usize] = true;
-                let finish = t + op_time[u as usize];
-                dev_busy_until[dev] = finish;
-                *seq += 1;
-                events.push(Reverse((T(finish), *seq, Ev::OpDone(u))));
-                return Some((u, t, finish));
-            }
-            None
-        }
-
-        let record_op = |trace: &mut Option<&mut Trace>,
-                             launched: Option<(u32, f64, f64)>| {
-            if let (Some(tr), Some((u, s, e))) = (trace.as_deref_mut(), launched) {
-                tr.ops.push(OpSpan {
-                    node: u,
-                    name: g.nodes[u as usize].name.clone(),
-                    device: placement[u as usize],
-                    start: t_offset + s,
-                    end: t_offset + e,
-                    backward: pass == Pass::Backward,
-                });
-            }
-        };
-
         for dev in 0..d {
             let launched = try_start(
-                dev, 0.0, &mut ready, &mut dev_busy_until, &mut started,
-                &op_time, &mut events, &mut seq,
+                dev, 0.0, d, times, placement, ready, dev_busy, started_epoch,
+                epoch, events, &mut seq,
             );
-            record_op(&mut trace, launched);
+            record_op(&mut trace, g, placement, pass, t_offset, launched);
         }
 
-        while let Some(Reverse((T(t), _, ev))) = events.pop() {
-            match ev {
-                Ev::OpDone(u) => {
+        while let Some(ev) = events.pop() {
+            let t = ev.t;
+            match ev.kind {
+                EvKind::OpDone => {
+                    let u = ev.node;
                     makespan = makespan.max(t);
                     done_count += 1;
                     let a = placement[u as usize];
@@ -309,12 +333,12 @@ impl<'a> Simulator<'a> {
                                 Pass::Backward => g.nodes[v as usize].output_bytes,
                             };
                             let slot = u as usize * d + b;
-                            if sent[slot].is_nan() {
+                            if slot_epoch[slot] != epoch {
                                 let l = a * d + b;
-                                let start = link_busy_until[l].max(t);
+                                let start = link_busy[l].max(t);
                                 let arr =
                                     start + self.topo.transfer_time(a, b, bytes);
-                                link_busy_until[l] = arr;
+                                link_busy[l] = arr;
                                 if let Some(tr) = trace.as_deref_mut() {
                                     tr.transfers.push(TransferSpan {
                                         producer: u,
@@ -326,29 +350,37 @@ impl<'a> Simulator<'a> {
                                         backward: pass == Pass::Backward,
                                     });
                                 }
-                                sent[slot] = arr;
+                                slot_epoch[slot] = epoch;
+                                slot_time[slot] = arr;
                             }
-                            sent[slot]
+                            slot_time[slot]
                         };
-                        push(&mut events, &mut seq, arrive_t, Ev::Arrive(v));
+                        seq += 1;
+                        events.push(Event {
+                            t: arrive_t,
+                            seq,
+                            node: v,
+                            kind: EvKind::Arrive,
+                        });
                     }
                     // Device freed: start the next ready op.
                     let launched = try_start(
-                        a, t, &mut ready, &mut dev_busy_until, &mut started,
-                        &op_time, &mut events, &mut seq,
+                        a, t, d, times, placement, ready, dev_busy,
+                        started_epoch, epoch, events, &mut seq,
                     );
-                    record_op(&mut trace, launched);
+                    record_op(&mut trace, g, placement, pass, t_offset, launched);
                 }
-                Ev::Arrive(v) => {
+                EvKind::Arrive => {
+                    let v = ev.node;
                     in_remaining[v as usize] -= 1;
                     if in_remaining[v as usize] == 0 {
                         let b = placement[v as usize];
-                        ready[b].push(Reverse((prio[v as usize], v)));
+                        ready[b].push(ready_key(prio[v as usize], v));
                         let launched = try_start(
-                            b, t, &mut ready, &mut dev_busy_until, &mut started,
-                            &op_time, &mut events, &mut seq,
+                            b, t, d, times, placement, ready, dev_busy,
+                            started_epoch, epoch, events, &mut seq,
                         );
-                        record_op(&mut trace, launched);
+                        record_op(&mut trace, g, placement, pass, t_offset, launched);
                     }
                 }
             }
@@ -356,6 +388,67 @@ impl<'a> Simulator<'a> {
 
         debug_assert_eq!(done_count, n, "not all ops executed ({done_count}/{n})");
         makespan
+    }
+}
+
+/// Pack a ready-queue entry: priority in the high bits, node id in the low
+/// bits, so a single integer compare orders by (priority, node) — the same
+/// order the old `BinaryHeap<Reverse<(u32, u32)>>` produced.
+#[inline]
+fn ready_key(prio: u32, node: u32) -> u64 {
+    ((prio as u64) << 32) | node as u64
+}
+
+/// Start the lowest-priority ready op on `dev` if it is idle at time `t`.
+/// Returns the (node, start, finish) of the op it launched, if any.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn try_start(
+    dev: usize,
+    t: f64,
+    d: usize,
+    times: &[f64],
+    placement: &[usize],
+    ready: &mut [DaryHeap<u64>],
+    dev_busy: &mut [f64],
+    started_epoch: &mut [u32],
+    epoch: u32,
+    events: &mut DaryHeap<Event>,
+    seq: &mut u32,
+) -> Option<(u32, f64, f64)> {
+    if dev_busy[dev] > t {
+        return None;
+    }
+    if let Some(key) = ready[dev].pop() {
+        let u = (key & 0xFFFF_FFFF) as u32;
+        debug_assert_ne!(started_epoch[u as usize], epoch, "node {u} started twice");
+        started_epoch[u as usize] = epoch;
+        let finish = t + times[u as usize * d + placement[u as usize]];
+        dev_busy[dev] = finish;
+        *seq += 1;
+        events.push(Event { t: finish, seq: *seq, node: u, kind: EvKind::OpDone });
+        return Some((u, t, finish));
+    }
+    None
+}
+
+fn record_op(
+    trace: &mut Option<&mut Trace>,
+    g: &OpGraph,
+    placement: &[usize],
+    pass: Pass,
+    t_offset: f64,
+    launched: Option<(u32, f64, f64)>,
+) {
+    if let (Some(tr), Some((u, s, e))) = (trace.as_deref_mut(), launched) {
+        tr.ops.push(OpSpan {
+            node: u,
+            name: g.nodes[u as usize].name.clone(),
+            device: placement[u as usize],
+            start: t_offset + s,
+            end: t_offset + e,
+            backward: pass == Pass::Backward,
+        });
     }
 }
 
@@ -501,5 +594,64 @@ mod tests {
         let r = sim.simulate(&vec![0, 1, 1, 1]);
         // fwd: one 64MB copy; total doubles it for bwd
         assert_eq!(r.comm_bytes, 2 * (64u64 << 20));
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        // The same workspace must produce identical reports across repeated
+        // and interleaved shapes (epoch reset correctness).
+        let g1 = chain(20, 1e9, 1 << 22);
+        let g2 = chain(7, 2e9, 1 << 18);
+        let topo4 = Topology::p100_pcie(4);
+        let topo2 = Topology::p100_pcie(2);
+        let s1 = Simulator::new(&g1, &topo4);
+        let s2 = Simulator::new(&g2, &topo2);
+        let p1: Vec<usize> = (0..20).map(|i| i % 4).collect();
+        let p2: Vec<usize> = (0..7).map(|i| i % 2).collect();
+        let base1 = s1.simulate(&p1);
+        let base2 = s2.simulate(&p2);
+        let mut ws = SimWorkspace::new();
+        for _ in 0..3 {
+            let r1 = s1.simulate_into(&mut ws, &p1).clone();
+            assert_eq!(r1.step_time.to_bits(), base1.step_time.to_bits());
+            assert_eq!(r1.peak_mem, base1.peak_mem);
+            assert_eq!(r1.comm_bytes, base1.comm_bytes);
+            let r2 = s2.simulate_into(&mut ws, &p2).clone();
+            assert_eq!(r2.step_time.to_bits(), base2.step_time.to_bits());
+            assert_eq!(r2.peak_mem, base2.peak_mem);
+        }
+    }
+
+    #[test]
+    fn from_plan_matches_owned_plan() {
+        let g = chain(12, 1e9, 1 << 20);
+        let topo = Topology::p100_pcie(2);
+        let cost = CostModel::default();
+        let plan = SimPlan::build(&g, &topo, &cost);
+        let owned = Simulator::new(&g, &topo);
+        let borrowed = Simulator::from_plan(&g, &topo, cost, &plan);
+        let p: Vec<usize> = (0..12).map(|i| i % 2).collect();
+        let a = owned.simulate(&p);
+        let b = borrowed.simulate(&p);
+        assert_eq!(a.step_time.to_bits(), b.step_time.to_bits());
+        assert_eq!(a.fwd_time.to_bits(), b.fwd_time.to_bits());
+        assert_eq!(a.comm_bytes, b.comm_bytes);
+    }
+
+    #[test]
+    fn invalid_then_valid_reuses_workspace() {
+        let g = chain(4, 1e9, 1024);
+        let topo = Topology::p100_pcie(2);
+        let sim = Simulator::new(&g, &topo);
+        let mut ws = SimWorkspace::new();
+        let bad = sim.simulate_into(&mut ws, &[0, 5, 0, 0]).clone();
+        assert!(!bad.valid);
+        assert!(bad.step_time.is_infinite());
+        let good = sim.simulate_into(&mut ws, &[0, 1, 0, 1]).clone();
+        assert!(good.step_time.is_finite());
+        assert_eq!(
+            good.step_time.to_bits(),
+            sim.simulate(&[0, 1, 0, 1]).step_time.to_bits()
+        );
     }
 }

@@ -5,12 +5,17 @@
 pub mod cost;
 pub mod device;
 pub mod engine;
+pub mod heap;
+pub mod pool;
 pub mod trace;
+pub mod workspace;
 
 pub use cost::CostModel;
 pub use device::{DeviceSpec, Topology};
-pub use engine::{SimReport, Simulator};
+pub use engine::{SimPlan, SimReport, Simulator};
+pub use pool::EvalPool;
 pub use trace::Trace;
+pub use workspace::SimWorkspace;
 
 use crate::graph::OpGraph;
 

@@ -1,0 +1,177 @@
+//! Parallel candidate evaluation: fan a batch of placements out across OS
+//! threads (std scoped threads — no external deps), one reusable
+//! `SimWorkspace` per worker, with results returned in input order so
+//! every caller stays bit-deterministic regardless of thread count. The
+//! per-worker workspaces live in the pool, so a long-lived pool (one per
+//! training run / search) amortizes workspace warm-up across every batch.
+//!
+//! This parallelizes the *evaluation* side of search only; sampling stays
+//! sequential on the caller so RNG streams are unchanged. PPO rollout
+//! rewards, zero-shot extra samples, HDP's per-step sample batch and
+//! random search all funnel through here (EXPERIMENTS.md §Perf).
+
+use std::sync::Mutex;
+use std::thread;
+
+use crate::sim::engine::{SimReport, Simulator};
+use crate::sim::workspace::SimWorkspace;
+
+pub struct EvalPool {
+    threads: usize,
+    /// One workspace per worker slot, reused across `map` calls.
+    workspaces: Vec<Mutex<SimWorkspace>>,
+}
+
+impl EvalPool {
+    /// `threads == 0` means auto (one per available core).
+    pub fn new(threads: usize) -> Self {
+        let t = if threads == 0 {
+            thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let t = t.max(1);
+        Self {
+            threads: t,
+            workspaces: (0..t).map(|_| Mutex::new(SimWorkspace::new())).collect(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item, each worker borrowing one of the pool's
+    /// cached `SimWorkspace`s. `results[i]` always corresponds to
+    /// `items[i]`; with one thread (or fewer than two items) everything
+    /// runs inline on the caller.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&mut SimWorkspace, &T) -> R + Sync,
+    {
+        if self.threads == 1 || items.len() < 2 {
+            let mut ws = self.workspaces[0].lock().unwrap();
+            return items.iter().map(|it| f(&mut ws, it)).collect();
+        }
+        let workers = self.threads.min(items.len());
+        let chunk = (items.len() + workers - 1) / workers;
+        let mut results: Vec<Option<R>> = Vec::with_capacity(items.len());
+        results.resize_with(items.len(), || None);
+        let fref = &f;
+        thread::scope(|s| {
+            for (wi, (in_chunk, out_chunk)) in items
+                .chunks(chunk)
+                .zip(results.chunks_mut(chunk))
+                .enumerate()
+            {
+                let slot = &self.workspaces[wi];
+                s.spawn(move || {
+                    let mut ws = slot.lock().unwrap();
+                    for (it, out) in in_chunk.iter().zip(out_chunk.iter_mut()) {
+                        *out = Some(fref(&mut ws, it));
+                    }
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("eval worker filled every slot"))
+            .collect()
+    }
+
+    /// Evaluate a batch of placements on one simulator. Deterministic:
+    /// `reports[i]` is exactly `sim.simulate(&placements[i])`.
+    pub fn evaluate<P>(&self, sim: &Simulator, placements: &[P]) -> Vec<SimReport>
+    where
+        P: AsRef<[usize]> + Sync,
+    {
+        self.map(placements, |ws, p| sim.simulate_into(ws, p.as_ref()).clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, OpKind};
+    use crate::graph::OpGraph;
+    use crate::sim::Topology;
+    use crate::util::Rng;
+
+    fn diamond_chain(n: usize) -> OpGraph {
+        let mut b = GraphBuilder::new("dc", 4);
+        let mut prev = b.op("in", OpKind::Input).out_bytes(1 << 20).id();
+        for i in 0..n {
+            let x = b
+                .op(format!("a{i}"), OpKind::MatMul)
+                .flops(1e9)
+                .out_bytes(1 << 20)
+                .after(&[prev])
+                .id();
+            let y = b
+                .op(format!("b{i}"), OpKind::Conv2D)
+                .flops(5e8)
+                .out_bytes(1 << 19)
+                .after(&[prev])
+                .id();
+            prev = b
+                .op(format!("j{i}"), OpKind::Concat)
+                .out_bytes(1 << 20)
+                .after(&[x, y])
+                .id();
+        }
+        b.op("out", OpKind::Output).after(&[prev]);
+        b.build()
+    }
+
+    #[test]
+    fn pool_matches_serial_in_order() {
+        let g = diamond_chain(24);
+        let topo = Topology::p100_pcie(4);
+        let sim = Simulator::new(&g, &topo);
+        let mut rng = Rng::new(17);
+        let placements: Vec<Vec<usize>> = (0..13)
+            .map(|_| (0..g.n()).map(|_| rng.below(4)).collect())
+            .collect();
+        let serial: Vec<SimReport> =
+            placements.iter().map(|p| sim.simulate(p)).collect();
+        for threads in [1, 2, 4, 7] {
+            let pool = EvalPool::new(threads);
+            let out = pool.evaluate(&sim, &placements);
+            assert_eq!(out.len(), serial.len());
+            for (a, b) in out.iter().zip(&serial) {
+                assert_eq!(a.step_time.to_bits(), b.step_time.to_bits(), "t={threads}");
+                assert_eq!(a.fwd_time.to_bits(), b.fwd_time.to_bits());
+                assert_eq!(a.bwd_time.to_bits(), b.bwd_time.to_bits());
+                assert_eq!(a.peak_mem, b.peak_mem);
+                assert_eq!(a.comm_bytes, b.comm_bytes);
+                assert_eq!(a.valid, b.valid);
+                assert_eq!(a.oom_devices, b.oom_devices);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_threads_and_tiny_batches() {
+        let g = diamond_chain(3);
+        let topo = Topology::p100_pcie(4);
+        let sim = Simulator::new(&g, &topo);
+        let pool = EvalPool::new(0);
+        assert!(pool.threads() >= 1);
+        // single-item batch takes the inline path
+        let one = pool.evaluate(&sim, &[vec![0; g.n()]]);
+        assert_eq!(one.len(), 1);
+        assert!(one[0].valid);
+        let none: Vec<SimReport> = pool.evaluate(&sim, &[] as &[Vec<usize>]);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn map_generic_payload() {
+        let pool = EvalPool::new(3);
+        let items: Vec<usize> = (0..10).collect();
+        let out = pool.map(&items, |_ws, &x| x * 2);
+        assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,141 @@
+//! Reusable simulator scratch state. One `SimWorkspace` + one
+//! `Simulator::simulate_into` call = one candidate evaluation with zero
+//! heap allocation: flat arrays are invalidated by bumping a generation
+//! counter (`epoch`) instead of being rebuilt, heaps retain their backing
+//! storage across `clear()`, and the output `SimReport`'s vectors are
+//! reused in place. Each `EvalPool` worker owns one workspace; sizing is
+//! lazy, so a single workspace can serve graphs of different shapes
+//! (re-allocating only when (n, d) changes).
+
+use crate::sim::engine::SimReport;
+use crate::sim::heap::{DaryHeap, HeapItem};
+
+/// Simulator event: an op finishing on its device, or one input of a node
+/// arriving at the node's device. Ordered by (time, sequence) — `seq` is
+/// unique per pass, so the order is total and deterministic.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Event {
+    pub t: f64,
+    pub seq: u32,
+    pub node: u32,
+    pub kind: EvKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum EvKind {
+    OpDone,
+    Arrive,
+}
+
+impl HeapItem for Event {
+    #[inline]
+    fn key_lt(&self, other: &Self) -> bool {
+        // Times are always finite (sums of non-negative finite costs), so
+        // `<` agrees with the old BinaryHeap's total_cmp ordering here.
+        self.t < other.t || (self.t == other.t && self.seq < other.seq)
+    }
+}
+
+pub struct SimWorkspace {
+    /// Current (n, d) sizing; `ensure` re-allocates only on change.
+    n: usize,
+    d: usize,
+    /// Generation counter for the flat slot arrays. A slot is "set" iff
+    /// `slot_epoch[slot] == current epoch`; bumping the epoch invalidates
+    /// every slot in O(1).
+    epoch: u32,
+    /// Per-(node, device) mark: transfer already scheduled / received copy
+    /// already counted. Replaces both the old per-pass `vec![NAN; n*d]`
+    /// rebuild and the memory model's `HashSet<(u32, usize)>`.
+    pub(crate) slot_epoch: Vec<u32>,
+    /// Arrival time for marked transfer slots.
+    pub(crate) slot_time: Vec<f64>,
+    /// Epoch mark that a node already started (debug-assert guard).
+    pub(crate) started_epoch: Vec<u32>,
+    /// Remaining unmet dependencies per node (reset by memcpy from the
+    /// plan's precomputed in-degrees).
+    pub(crate) in_remaining: Vec<u32>,
+    pub(crate) dev_busy: Vec<f64>,
+    pub(crate) link_busy: Vec<f64>,
+    /// Per-device ready queues of packed (topo-priority, node) keys.
+    pub(crate) ready: Vec<DaryHeap<u64>>,
+    pub(crate) events: DaryHeap<Event>,
+    /// Output report; its vectors are reused across calls.
+    pub(crate) report: SimReport,
+    /// Coarse-to-full placement expansion scratch (policy::PlacementTask):
+    /// avoids a fresh original-graph-sized Vec per candidate.
+    pub expand_buf: Vec<usize>,
+}
+
+impl Default for SimWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimWorkspace {
+    pub fn new() -> Self {
+        Self {
+            n: usize::MAX,
+            d: usize::MAX,
+            epoch: 0,
+            slot_epoch: Vec::new(),
+            slot_time: Vec::new(),
+            started_epoch: Vec::new(),
+            in_remaining: Vec::new(),
+            dev_busy: Vec::new(),
+            link_busy: Vec::new(),
+            ready: Vec::new(),
+            events: DaryHeap::new(),
+            report: SimReport {
+                valid: false,
+                oom_devices: Vec::new(),
+                step_time: 0.0,
+                fwd_time: 0.0,
+                bwd_time: 0.0,
+                peak_mem: Vec::new(),
+                comm_bytes: 0,
+            },
+            expand_buf: Vec::new(),
+        }
+    }
+
+    /// Size the scratch arrays for an (n nodes, d devices) problem.
+    /// No-op (and no allocation) when the shape is unchanged.
+    pub(crate) fn ensure(&mut self, n: usize, d: usize) {
+        if self.n == n && self.d == d {
+            return;
+        }
+        self.n = n;
+        self.d = d;
+        self.epoch = 0;
+        self.slot_epoch.clear();
+        self.slot_epoch.resize(n * d, 0);
+        self.slot_time.clear();
+        self.slot_time.resize(n * d, 0.0);
+        self.started_epoch.clear();
+        self.started_epoch.resize(n, 0);
+        self.in_remaining.clear();
+        self.in_remaining.resize(n, 0);
+        self.dev_busy.clear();
+        self.dev_busy.resize(d, 0.0);
+        self.link_busy.clear();
+        self.link_busy.resize(d * d, 0.0);
+        self.ready.truncate(d);
+        while self.ready.len() < d {
+            self.ready.push(DaryHeap::new());
+        }
+    }
+
+    /// Invalidate all slot marks; returns the new epoch to mark with.
+    pub(crate) fn bump_epoch(&mut self) -> u32 {
+        if self.epoch == u32::MAX {
+            // Wraparound (once per ~1.4B simulate calls): hard-reset marks.
+            self.slot_epoch.iter_mut().for_each(|x| *x = 0);
+            self.started_epoch.iter_mut().for_each(|x| *x = 0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+        self.epoch
+    }
+}

@@ -1,8 +1,12 @@
 //! Tiny benchmarking harness (criterion is unavailable offline): warmup +
 //! timed repetitions with median/mean/min reporting, used by the
-//! `harness = false` benches in `rust/benches/`.
+//! `harness = false` benches in `rust/benches/`. `BenchRecorder` collects
+//! named results into a JSON artifact (e.g. `BENCH_SIM.json`) so CI can
+//! track the perf trajectory across PRs (EXPERIMENTS.md §Perf).
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Clone, Copy, Debug)]
 pub struct BenchStats {
@@ -62,6 +66,67 @@ pub fn bench(name: &str, budget_secs: f64, mut f: impl FnMut()) -> BenchStats {
     stats
 }
 
+impl BenchStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("per_sec", Json::num(self.per_sec())),
+        ])
+    }
+}
+
+/// Collects named bench results and writes them as one JSON document —
+/// the machine-readable side of the console report, uploaded by CI as the
+/// perf-trajectory artifact.
+pub struct BenchRecorder {
+    suite: String,
+    entries: Vec<(String, BenchStats)>,
+}
+
+impl BenchRecorder {
+    pub fn new(suite: impl Into<String>) -> Self {
+        Self { suite: suite.into(), entries: Vec::new() }
+    }
+
+    pub fn add(&mut self, key: impl Into<String>, stats: BenchStats) {
+        self.entries.push((key.into(), stats));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(self.suite.clone())),
+            (
+                "results",
+                Json::Obj(
+                    self.entries
+                        .iter()
+                        .map(|(k, s)| (k.clone(), s.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the JSON artifact; prints the destination for CI logs.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        println!("bench results -> {path}");
+        Ok(())
+    }
+}
+
+/// Shared bench-budget scaling: CI smoke runs set `GDP_BENCH_BUDGET` to a
+/// small value so every bench finishes in seconds.
+pub fn budget_secs(default: f64) -> f64 {
+    std::env::var("GDP_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(default)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +138,17 @@ mod tests {
         });
         assert!(s.iters >= 3);
         assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn recorder_emits_parseable_json() {
+        let mut rec = BenchRecorder::new("unit");
+        rec.add("a", BenchStats { iters: 3, mean_ns: 10.0, median_ns: 9.0, min_ns: 8.0 });
+        let text = rec.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("suite").unwrap().as_str(), Some("unit"));
+        let a = back.get("results").unwrap().get("a").unwrap();
+        assert_eq!(a.get("iters").unwrap().as_usize(), Some(3));
+        assert_eq!(a.get("mean_ns").unwrap().as_f64(), Some(10.0));
     }
 }

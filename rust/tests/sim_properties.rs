@@ -5,7 +5,7 @@
 use gdp::graph::coarsen::{coarsen, topo_levels};
 use gdp::graph::features::{featurize, FeatDims};
 use gdp::placement::Placement;
-use gdp::sim::{Simulator, Topology};
+use gdp::sim::{EvalPool, SimReport, SimWorkspace, Simulator, Topology};
 use gdp::util::prop;
 use gdp::workloads;
 
@@ -58,6 +58,69 @@ fn simulator_invariants_on_random_placements() {
             Ok(())
         });
     }
+}
+
+/// Bit-exact equality of every SimReport field (f64s compared by bits).
+fn assert_reports_identical(a: &SimReport, b: &SimReport, ctx: &str) {
+    assert_eq!(a.valid, b.valid, "{ctx}: valid");
+    assert_eq!(a.oom_devices, b.oom_devices, "{ctx}: oom_devices");
+    assert_eq!(a.step_time.to_bits(), b.step_time.to_bits(), "{ctx}: step_time");
+    assert_eq!(a.fwd_time.to_bits(), b.fwd_time.to_bits(), "{ctx}: fwd_time");
+    assert_eq!(a.bwd_time.to_bits(), b.bwd_time.to_bits(), "{ctx}: bwd_time");
+    assert_eq!(a.peak_mem, b.peak_mem, "{ctx}: peak_mem");
+    assert_eq!(a.comm_bytes, b.comm_bytes, "{ctx}: comm_bytes");
+}
+
+#[test]
+fn workspace_reuse_and_pool_match_single_shot() {
+    // The zero-allocation path (simulate_into on a long-lived workspace,
+    // twice in a row) and the parallel EvalPool path must return reports
+    // bit-identical to the one-shot simulate() on every workload, for
+    // randomized placements including invalid (OOM-inducing) ones.
+    for spec in workloads::registry() {
+        let g = (spec.build)();
+        let topo = Topology::p100_pcie(g.num_devices);
+        let sim = Simulator::new(&g, &topo);
+        let mut ws = SimWorkspace::new();
+        let mut batch: Vec<Vec<usize>> = Vec::new();
+        let mut serial: Vec<SimReport> = Vec::new();
+        prop::check(3, 0x5EED ^ spec.id.len() as u64, |gen| {
+            let p = gen.placement(g.n(), g.num_devices);
+            let baseline = sim.simulate(&p);
+            let first = sim.simulate_into(&mut ws, &p).clone();
+            let second = sim.simulate_into(&mut ws, &p).clone();
+            assert_reports_identical(&baseline, &first, spec.id);
+            assert_reports_identical(&baseline, &second, spec.id);
+            batch.push(p);
+            serial.push(baseline);
+            Ok(())
+        });
+        // Same placements through the pool at several widths.
+        for threads in [2usize, 4] {
+            let pooled = EvalPool::new(threads).evaluate(&sim, &batch);
+            for (a, b) in serial.iter().zip(&pooled) {
+                assert_reports_identical(a, b, &format!("{} pool t={threads}", spec.id));
+            }
+        }
+    }
+}
+
+#[test]
+fn workspace_survives_out_of_range_candidates() {
+    // An invalid (out-of-range device) candidate must not poison the
+    // workspace for subsequent evaluations.
+    let g = workloads::by_id("inception").unwrap();
+    let topo = Topology::p100_pcie(g.num_devices);
+    let sim = Simulator::new(&g, &topo);
+    let mut ws = SimWorkspace::new();
+    let mut bad = vec![0usize; g.n()];
+    bad[g.n() / 2] = 99;
+    let rep_bad = sim.simulate_into(&mut ws, &bad).clone();
+    assert!(!rep_bad.valid);
+    assert!(rep_bad.step_time.is_infinite());
+    let good: Vec<usize> = (0..g.n()).map(|i| i % g.num_devices).collect();
+    let after = sim.simulate_into(&mut ws, &good).clone();
+    assert_reports_identical(&sim.simulate(&good), &after, "post-invalid reuse");
 }
 
 /// Longest path of minimum op times (ignores communication): a lower bound
