@@ -13,11 +13,6 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(100);
     let artifacts = std::path::Path::new("artifacts");
-    anyhow::ensure!(
-        artifacts.join("full/manifest.json").exists()
-            && artifacts.join("no_attention/manifest.json").exists(),
-        "run `make artifacts` first (needs full + no_attention variants)"
-    );
 
     let mut results = Vec::new();
     for variant in ["full", "no_attention"] {
@@ -26,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         let task = session.task(&workload, 0)?;
         let mut store = session.init_params()?;
         let cfg = TrainConfig { steps, verbose: false, ..Default::default() };
-        let res = train(&session.policy, &mut store, &[task], &cfg)?;
+        let res = train(&*session.policy, &mut store, &[task], &cfg)?;
         let best = res.per_task[0].best_time;
         println!("  best placement: {best:.4}s ({} sim evals)", res.sim_evals);
         results.push((variant, best));

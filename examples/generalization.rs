@@ -11,11 +11,6 @@ use gdp::workloads;
 fn main() -> anyhow::Result<()> {
     let target = std::env::args().nth(1).unwrap_or_else(|| "wavenet2".into());
     let artifacts = std::path::Path::new("artifacts");
-    anyhow::ensure!(
-        artifacts.join("full/manifest.json").exists(),
-        "run `make artifacts` first"
-    );
-
     let session = Session::open(artifacts, "full")?;
 
     // Pretrain on four other families (target held out).
@@ -30,18 +25,18 @@ fn main() -> anyhow::Result<()> {
     }
     let mut store = session.init_params()?;
     let cfg = TrainConfig { steps: 120, verbose: true, log_every: 30, ..Default::default() };
-    train(&session.policy, &mut store, &tasks, &cfg)?;
+    train(&*session.policy, &mut store, &tasks, &cfg)?;
 
     // Zero-shot on the held-out target.
     let task = session.task(&target, 0)?;
-    let zs = infer(&session.policy, &store, &task, 8, 11)?;
+    let zs = infer(&*session.policy, &store, &task, 8, 11)?;
     println!("\nzero-shot on {target}: {:.4}s", zs.best_time);
 
     // Fine-tune < 50 steps (paper: takes under a minute).
     store.reset_optimizer()?;
     let ft_cfg = TrainConfig { steps: 30, lr: 3e-4, verbose: false, ..Default::default() };
     let ft_task = session.task(&target, 0)?;
-    let ft = train(&session.policy, &mut store, &[ft_task], &ft_cfg)?;
+    let ft = train(&*session.policy, &mut store, &[ft_task], &ft_cfg)?;
     let ft_best = ft.per_task[0].best_time.min(zs.best_time);
     println!("after 30-step fine-tune: {ft_best:.4}s");
 

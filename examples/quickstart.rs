@@ -1,6 +1,6 @@
 //! Quickstart: build a custom dataflow graph with the public API, compare
-//! baseline placements in the simulator, and (if `make artifacts` has run)
-//! place it with the GDP policy zero-shot.
+//! baseline placements in the simulator, and place it with the GDP policy
+//! zero-shot (native backend — works on a fresh checkout, no artifacts).
 //!
 //!     cargo run --release --example quickstart
 
@@ -70,25 +70,21 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 3. GDP zero-shot placement (skipped when artifacts are absent).
+    // 3. GDP zero-shot placement (native backend: no artifacts needed).
     let artifacts = std::path::Path::new("artifacts");
-    if artifacts.join("full/manifest.json").exists() {
-        let session = Session::open(artifacts, "full")?;
-        let task = gdp::policy::PlacementTask::new(
-            "quickstart",
-            graph,
-            session.feat_dims(),
-            0,
-        );
-        let store = session.init_params()?;
-        let best = infer(&session.policy, &store, &task, 16, 7)?;
-        println!(
-            "  {:<24} step {:>8.4}s  (policy zero-shot, untrained params)",
-            "gdp zero-shot", best.best_time
-        );
-        println!("\nTrain a policy with: gdp train <workload> --save ckpt.bin");
-    } else {
-        println!("\n(artifacts missing — run `make artifacts` to try the policy)");
-    }
+    let session = Session::open(artifacts, "full")?;
+    let task = gdp::policy::PlacementTask::new(
+        "quickstart",
+        graph,
+        session.feat_dims(),
+        0,
+    );
+    let store = session.init_params()?;
+    let best = infer(&*session.policy, &store, &task, 16, 7)?;
+    println!(
+        "  {:<24} step {:>8.4}s  (policy zero-shot, untrained params)",
+        "gdp zero-shot", best.best_time
+    );
+    println!("\nTrain a policy with: gdp train <workload> --save ckpt.bin");
     Ok(())
 }

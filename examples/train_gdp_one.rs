@@ -1,11 +1,10 @@
 //! End-to-end driver (DESIGN.md: the repo's full-system validation run):
 //! train the GDP policy with PPO on a real workload from the paper's
-//! Table 1, through all three layers —
-//!   L1 Pallas kernels + L2 JAX policy (AOT HLO via `make artifacts`)
-//!   -> L3 rust coordinator: PJRT execution, rollout sampling, event-driven
-//!      multi-device simulation for the reward, PPO updates —
-//! logging the reward curve and reporting the paper's headline comparison
-//! (GDP vs human expert / METIS / HDP) for that workload.
+//! Table 1 — policy execution through the native engine (or PJRT when
+//! artifacts exist), rollout sampling, event-driven multi-device
+//! simulation for the reward, PPO updates — logging the reward curve and
+//! reporting the paper's headline comparison (GDP vs human expert /
+//! METIS / HDP) for that workload.
 //!
 //!     cargo run --release --example train_gdp_one [workload] [steps]
 
@@ -20,11 +19,6 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
 
     let artifacts = std::path::Path::new("artifacts");
-    anyhow::ensure!(
-        artifacts.join("full/manifest.json").exists(),
-        "run `make artifacts` first"
-    );
-
     println!("=== GDP-one end-to-end: {workload}, {steps} PPO steps ===");
     let session = Session::open(artifacts, "full")?;
     let task = session.task(&workload, 0)?;
@@ -37,7 +31,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut store = session.init_params()?;
     let cfg = TrainConfig { steps, verbose: true, ..Default::default() };
-    let result = train(&session.policy, &mut store, &[task], &cfg)?;
+    let result = train(&*session.policy, &mut store, &[task], &cfg)?;
     let best = &result.per_task[0];
 
     // Log the training curve.

@@ -1,72 +1,126 @@
-//! Bench: the GDP policy hot path through PJRT — policy_fwd latency,
-//! train_step latency, rollout sampling, and the end-to-end PPO step.
-//! These produce the search-time (wall-clock) side of Table 1.
+//! Bench: the GDP policy hot path through the NATIVE engine —
+//! `policy_fwd` latency, `train_step` (PPO + Adam) latency, rollout
+//! sampling, and the end-to-end PPO step — across model variants and a
+//! reduced-dims configuration. No artifacts required: manifests and init
+//! params are constructed in Rust.
 //!
-//! Requires `make artifacts`; exits cleanly if they are missing.
+//! Results land in `BENCH_POLICY.json` (util::bench::BenchRecorder), the
+//! policy-side perf trajectory CI uploads next to `BENCH_SIM.json`.
+//! Pass `--smoke` (or set GDP_BENCH_BUDGET) for a seconds-long CI run.
 
 use gdp::coordinator::{train, Session, TrainConfig};
-use gdp::policy::sample_from_logits;
-use gdp::runtime::Batch;
-use gdp::util::bench::bench;
+use gdp::graph::features::FeatDims;
+use gdp::policy::{sample_from_logits, PlacementTask};
+use gdp::runtime::native::init_param_store;
+use gdp::runtime::{Batch, Dims, Manifest, NativePolicy, PolicyBackend};
+use gdp::util::bench::{bench, budget_secs, BenchRecorder};
 use gdp::util::Rng;
 
 fn main() {
-    let artifacts = std::path::Path::new("artifacts");
-    if !artifacts.join("full/manifest.json").exists() {
-        eprintln!("skipping policy benches: run `make artifacts` first");
-        return;
-    }
-    let session = Session::open(artifacts, "full").expect("open session");
-    let dims = session.manifest().dims;
-    let task = session.task("rnnlm2", 0).unwrap();
-    let mut store = session.init_params().unwrap();
-    let batch = Batch::from_rows(session.manifest(), &[&task.feats]).unwrap();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget = budget_secs(if smoke { 0.05 } else { 2.0 });
+    let mut rec = BenchRecorder::new("policy");
 
-    println!("== policy network (B={} N={} H={}) ==", dims.b, dims.n, dims.h);
-    bench("policy_fwd", 3.0, || {
-        std::hint::black_box(session.policy.forward(&store, &batch).unwrap());
-    });
+    // (record key, model variant, dims): production dims for each model
+    // variant plus a half-width/half-nodes configuration.
+    let mut half = Dims::default_aot();
+    half.n = 128;
+    half.h = 32;
+    half.ffn = 64;
+    let cases: Vec<(&str, &str, Dims)> = if smoke {
+        vec![("full", "full", Dims::default_aot())]
+    } else {
+        vec![
+            ("full", "full", Dims::default_aot()),
+            ("no_attention", "no_attention", Dims::default_aot()),
+            ("no_superposition", "no_superposition", Dims::default_aot()),
+            ("full_n128_h32", "full", half),
+        ]
+    };
 
-    let logits = session.policy.forward(&store, &batch).unwrap();
-    let mut rng = Rng::new(1);
-    bench("rollout sampling (1 row)", 0.5, || {
-        std::hint::black_box(sample_from_logits(
-            &logits[..dims.n * dims.d],
-            dims.n,
-            dims.d,
-            task.n_coarse(),
-            task.graph.num_devices,
-            1.0,
-            &mut rng,
-        ));
-    });
+    for (key, variant, dims) in &cases {
+        let manifest = Manifest::synthesize_variant(*dims, variant).expect("manifest");
+        let policy = NativePolicy::new(manifest).expect("native policy");
+        let mut store = init_param_store(&policy.manifest, 0).expect("init params");
+        let fd = FeatDims { n: dims.n, k: dims.k, f: dims.f, d: dims.d };
+        let task = PlacementTask::from_workload("rnnlm2", fd, 0).expect("task");
+        let batch = Batch::from_rows(&policy.manifest, &[&task.feats]).expect("batch");
 
-    let actions = vec![0i32; dims.b * dims.n];
-    let logp = vec![-0.7f32; dims.b * dims.n];
-    let adv = vec![0.0f32; dims.b];
-    bench("train_step (PPO+Adam)", 5.0, || {
-        std::hint::black_box(
-            session
-                .policy
-                .train_step(&mut store, &batch, &actions, &logp, &adv, 1e-8, 0.0)
-                .unwrap(),
+        println!(
+            "== policy network [{key}] (B={} N={} H={} layers {}+{}) ==",
+            dims.b, dims.n, dims.h, dims.gnn_layers, dims.placer_layers
         );
-    });
-
-    println!("\n== end-to-end PPO step (fwd + 4 sims + 2 updates) ==");
-    // Serial vs pooled reward evaluation: identical trajectories (the RNG
-    // stream never crosses threads), the delta is pure eval throughput.
-    for (label, eval_threads) in [("serial rewards", 1usize), ("pooled rewards", 0)] {
-        bench(&format!("gdp-one 4-step training segment ({label})"), 10.0, || {
-            let mut s = session.init_params().unwrap();
-            let t = session.task("rnnlm2", 0).unwrap();
-            let cfg = TrainConfig {
-                steps: 4,
-                verbose: false,
-                eval_threads,
-                ..Default::default()
-            };
-            std::hint::black_box(train(&session.policy, &mut s, &[t], &cfg).unwrap());
+        let fwd = bench(&format!("policy_fwd [{key}]"), budget, || {
+            std::hint::black_box(policy.forward(&store, &batch).unwrap());
         });
+        rec.add(format!("policy_fwd/{key}"), fwd);
+
+        let actions = vec![0i32; dims.b * dims.n];
+        let logp = vec![-0.7f32; dims.b * dims.n];
+        let adv = vec![0.0f32; dims.b];
+        let ts = bench(&format!("train_step (PPO+Adam) [{key}]"), budget, || {
+            std::hint::black_box(
+                policy
+                    .train_step(&mut store, &batch, &actions, &logp, &adv, 1e-8, 0.0)
+                    .unwrap(),
+            );
+        });
+        rec.add(format!("train_step/{key}"), ts);
     }
+
+    // rollout sampling over the full-dims logits
+    {
+        let dims = Dims::default_aot();
+        let manifest = Manifest::synthesize_variant(dims, "full").unwrap();
+        let policy = NativePolicy::new(manifest).unwrap();
+        let store = init_param_store(&policy.manifest, 0).unwrap();
+        let fd = FeatDims { n: dims.n, k: dims.k, f: dims.f, d: dims.d };
+        let task = PlacementTask::from_workload("rnnlm2", fd, 0).unwrap();
+        let batch = Batch::from_rows(&policy.manifest, &[&task.feats]).unwrap();
+        let logits = policy.forward(&store, &batch).unwrap();
+        let mut rng = Rng::new(1);
+        let s = bench("rollout sampling (1 row)", budget.min(0.5), || {
+            std::hint::black_box(sample_from_logits(
+                &logits[..dims.n * dims.d],
+                dims.n,
+                dims.d,
+                task.n_coarse(),
+                task.graph.num_devices,
+                1.0,
+                &mut rng,
+            ));
+        });
+        rec.add("rollout_sample_row", s);
+    }
+
+    // end-to-end PPO segment (fwd + B sims + ppo_epochs updates per step)
+    println!("\n== end-to-end PPO step (native backend) ==");
+    let session = Session::open(std::path::Path::new("artifacts"), "full")
+        .expect("native session");
+    for (label, eval_threads) in [("serial rewards", 1usize), ("pooled rewards", 0)] {
+        let e2e = bench(
+            &format!("gdp-one 4-step training segment ({label})"),
+            budget,
+            || {
+                let mut s = session.init_params().unwrap();
+                let t = session.task("rnnlm2", 0).unwrap();
+                let cfg = TrainConfig {
+                    steps: 4,
+                    verbose: false,
+                    eval_threads,
+                    ..Default::default()
+                };
+                std::hint::black_box(train(&*session.policy, &mut s, &[t], &cfg).unwrap());
+            },
+        );
+        rec.add(
+            format!(
+                "train_segment_4step/{}",
+                if eval_threads == 1 { "serial" } else { "pooled" }
+            ),
+            e2e,
+        );
+    }
+
+    rec.write("BENCH_POLICY.json").expect("write bench json");
 }

@@ -46,7 +46,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     for target in &targets {
         let one = gdp_one_cached(&session, opts, target)?;
         // fine-tune a fresh copy of the pretrained params
-        let manifest = &session.policy.manifest;
+        let manifest = session.manifest();
         let mut store = crate::runtime::ParamStore::from_flat(manifest, &pre_flat)?;
         store.reset_optimizer()?;
         let ft_cfg = crate::coordinator::TrainConfig {

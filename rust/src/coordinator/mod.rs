@@ -16,50 +16,86 @@ use anyhow::Result;
 
 use crate::graph::features::FeatDims;
 use crate::policy::PlacementTask;
-use crate::runtime::{Manifest, ParamStore, Policy, XlaRuntime};
+use crate::runtime::{
+    native, BackendKind, Dims, Manifest, NativePolicy, ParamStore, Policy,
+    PolicyBackend, XlaRuntime,
+};
 
 /// Everything needed to run GDP end-to-end for one model variant.
+///
+/// The policy engine sits behind [`PolicyBackend`]: `Native` (default)
+/// needs no artifacts — the manifest and init params are constructed in
+/// Rust when `artifacts/<variant>/` is absent — while `Pjrt` compiles the
+/// AOT HLO-text artifacts (and is the only backend for the `segmented`
+/// variant).
 pub struct Session {
-    pub runtime: XlaRuntime,
-    pub policy: Policy,
+    pub policy: Box<dyn PolicyBackend>,
     pub artifacts_dir: PathBuf,
     pub variant: String,
+    pub backend: BackendKind,
 }
 
 impl Session {
-    /// Compile the variant's artifacts (expects `make artifacts` ran).
+    /// Open with the default backend (native, unless `GDP_BACKEND=pjrt`).
     pub fn open(artifacts_dir: &Path, variant: &str) -> Result<Self> {
-        let runtime = XlaRuntime::cpu()?;
+        Self::open_with(artifacts_dir, variant, BackendKind::from_env())
+    }
+
+    /// Open with an explicit backend choice.
+    pub fn open_with(
+        artifacts_dir: &Path,
+        variant: &str,
+        backend: BackendKind,
+    ) -> Result<Self> {
         let vdir = artifacts_dir.join(variant);
-        let policy = Policy::load(&runtime, &vdir)?;
+        let policy: Box<dyn PolicyBackend> = match backend {
+            BackendKind::Pjrt => {
+                let runtime = XlaRuntime::cpu()?;
+                Box::new(Policy::load(&runtime, &vdir)?)
+            }
+            BackendKind::Native => {
+                // Prefer the python-written manifest when artifacts exist
+                // (ABI-faithful); otherwise synthesize it in Rust.
+                let manifest = if vdir.join("manifest.json").exists() {
+                    Manifest::load(&vdir)?
+                } else {
+                    Manifest::synthesize_variant(Dims::default_aot(), variant)?
+                };
+                Box::new(NativePolicy::new(manifest)?)
+            }
+        };
         Ok(Self {
-            runtime,
             policy,
             artifacts_dir: artifacts_dir.to_path_buf(),
             variant: variant.to_string(),
+            backend,
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.policy.manifest
+        self.policy.manifest()
     }
 
     pub fn feat_dims(&self) -> FeatDims {
-        let d = self.policy.manifest.dims;
+        let d = self.manifest().dims;
         FeatDims { n: d.n, k: d.k, f: d.f, d: d.d }
     }
 
-    /// Fresh (python-initialized) parameters.
+    /// Fresh parameters: the python-written init blob when artifacts
+    /// exist (bit-faithful to the AOT lowering), otherwise the Rust
+    /// initializer mirroring `model.py::init_params`.
     pub fn init_params(&self) -> Result<ParamStore> {
-        ParamStore::load_init(
-            &self.policy.manifest,
-            &self.artifacts_dir.join(&self.variant),
-        )
+        let vdir = self.artifacts_dir.join(&self.variant);
+        if vdir.join("params_init.bin").exists() {
+            ParamStore::load_init(self.manifest(), &vdir)
+        } else {
+            native::init_param_store(self.manifest(), 0)
+        }
     }
 
     /// Parameters from a checkpoint blob.
     pub fn load_params(&self, path: &Path) -> Result<ParamStore> {
-        ParamStore::load_blob(&self.policy.manifest, path)
+        ParamStore::load_blob(self.manifest(), path)
     }
 
     /// Build a placement task for a registry workload.

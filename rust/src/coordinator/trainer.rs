@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::placement::Placement;
 use crate::policy::{greedy_from_logits, sample_from_logits, PlacementTask, Sample};
-use crate::runtime::{Batch, ParamStore, Policy};
+use crate::runtime::{Batch, ParamStore, PolicyBackend};
 use crate::sim::{reward, EvalPool, INVALID_REWARD};
 use crate::util::stats::ConvergenceTracker;
 use crate::util::{Ema, Rng};
@@ -98,15 +98,15 @@ impl TrainResult {
 /// Run PPO over `tasks`. With one task this is GDP-one; with many it is
 /// GDP-batch (shared parameters + superposition in the model variant).
 pub fn train(
-    policy: &Policy,
+    policy: &dyn PolicyBackend,
     store: &mut ParamStore,
     tasks: &[PlacementTask],
     cfg: &TrainConfig,
 ) -> Result<TrainResult> {
     assert!(!tasks.is_empty());
-    let dims = policy.manifest.dims;
+    let dims = policy.manifest().dims;
     let t_start = Instant::now();
-    let xla_start = policy.exec_secs_total.get();
+    let xla_start = policy.exec_secs_total();
     let mut rng = Rng::new(cfg.seed);
 
     let mut baselines: Vec<Ema> =
@@ -137,7 +137,7 @@ pub fn train(
             let rows: Vec<&crate::graph::features::GraphFeatures> =
                 row_tasks.iter().map(|&ti| &tasks[ti].feats).collect();
             batch_cache
-                .insert(row_tasks.clone(), Batch::from_rows(&policy.manifest, &rows)?);
+                .insert(row_tasks.clone(), Batch::from_rows(policy.manifest(), &rows)?);
         }
         let batch = &batch_cache[&row_tasks];
 
@@ -151,14 +151,21 @@ pub fn train(
         let mut logp_old = Vec::with_capacity(dims.b * dims.n);
         let mut adv = Vec::with_capacity(dims.b);
         let mut mean_reward = 0.0;
-        // Sample all rows first (sequential: the RNG stream is part of the
-        // reproducibility contract), then evaluate rewards in parallel.
-        let samples: Vec<Sample> = row_tasks
+        // Sample all real rows first (sequential: the RNG stream is part of
+        // the reproducibility contract), then evaluate rewards in parallel.
+        // Filler rows (batch.real == false) are never sampled or simulated
+        // and carry zero actions/advantage into train_step, which excludes
+        // them from the loss statistics. (row_tasks currently always fills
+        // all B rows, so this path guards future under-filled batches.)
+        let samples: Vec<Option<Sample>> = row_tasks
             .iter()
             .enumerate()
             .map(|(bi, &ti)| {
+                if !batch.real[bi] {
+                    return None;
+                }
                 let task = &tasks[ti];
-                sample_from_logits(
+                Some(sample_from_logits(
                     &logits[bi * stride..(bi + 1) * stride],
                     dims.n,
                     dims.d,
@@ -166,22 +173,31 @@ pub fn train(
                     task.graph.num_devices,
                     temp,
                     &mut rng,
-                )
+                ))
             })
             .collect();
         let rows: Vec<(usize, &[usize])> = row_tasks
             .iter()
             .zip(&samples)
-            .map(|(&ti, s)| (ti, s.placement.as_slice()))
+            .filter_map(|(&ti, s)| s.as_ref().map(|s| (ti, s.placement.as_slice())))
             .collect();
-        // (reward, valid, step_time) per row — no per-candidate report clone.
+        // (reward, valid, step_time) per real row — no per-candidate clone.
         let outcomes: Vec<(f64, bool, f64)> = pool.map(&rows, |ws, &(ti, p)| {
             let rep = tasks[ti].evaluate_ref(ws, p);
             (reward(rep), rep.valid, rep.step_time)
         });
-        for ((&ti, sample), &(r, valid, step_time)) in
-            row_tasks.iter().zip(&samples).zip(&outcomes)
-        {
+        let mut oi = 0usize;
+        let mut real_rows = 0usize;
+        for (&ti, sample) in row_tasks.iter().zip(&samples) {
+            let Some(sample) = sample else {
+                actions.extend(std::iter::repeat(0).take(dims.n));
+                logp_old.extend(std::iter::repeat(0f32).take(dims.n));
+                adv.push(0.0);
+                continue;
+            };
+            let (r, valid, step_time) = outcomes[oi];
+            oi += 1;
+            real_rows += 1;
             let task = &tasks[ti];
             sim_evals += 1;
             mean_reward += r;
@@ -203,7 +219,7 @@ pub fn train(
             logp_old.extend_from_slice(&sample.logp);
             let _ = INVALID_REWARD; // (reward() applied it already)
         }
-        mean_reward /= dims.b as f64;
+        mean_reward /= real_rows.max(1) as f64;
 
         // --- PPO updates ---
         let mut last = None;
@@ -246,7 +262,7 @@ pub fn train(
         history,
         wall_secs: t_start.elapsed().as_secs_f64(),
         sim_evals,
-        xla_secs: policy.exec_secs_total.get() - xla_start,
+        xla_secs: policy.exec_secs_total() - xla_start,
     })
 }
 
@@ -254,14 +270,14 @@ pub fn train(
 /// draws, best simulated result wins (the paper's GDP-generalization-
 /// zeroshot evaluates the pretrained policy without updates).
 pub fn infer(
-    policy: &Policy,
+    policy: &dyn PolicyBackend,
     store: &ParamStore,
     task: &PlacementTask,
     extra_samples: usize,
     seed: u64,
 ) -> Result<TaskBest> {
-    let dims = policy.manifest.dims;
-    let batch = Batch::from_rows(&policy.manifest, &[&task.feats])?;
+    let dims = policy.manifest().dims;
+    let batch = Batch::from_rows(policy.manifest(), &[&task.feats])?;
     let logits = policy.forward(store, &batch)?;
     let stride = dims.n * dims.d;
     let mut rng = Rng::new(seed);

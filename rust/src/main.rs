@@ -7,8 +7,10 @@
 //!   infer     <workload>         zero-shot placement from a checkpoint
 //!   experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
 //!
-//! Run `gdp <cmd> --help` for flags. Artifacts must exist (`make
-//! artifacts`) for train/infer/experiment.
+//! Run `gdp <cmd> --help` for flags. train/infer/experiment run on the
+//! native policy backend out of the box; `--backend pjrt` (or
+//! `GDP_BACKEND=pjrt`) selects the AOT/PJRT path, which needs `make
+//! artifacts`.
 
 use std::path::PathBuf;
 
@@ -17,6 +19,7 @@ use anyhow::{anyhow, bail, Result};
 use gdp::coordinator::experiments;
 use gdp::coordinator::{self, Session, TrainConfig};
 use gdp::coordinator::baseline_eval::{eval_hdp, eval_heuristics};
+use gdp::runtime::PolicyBackend;
 use gdp::sim::{simulate_default, Topology};
 use gdp::util::cli::Args;
 use gdp::workloads;
@@ -25,10 +28,13 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|experiment> [fl
   gdp list
   gdp simulate <workload> [--hdp-steps N]
   gdp trace <workload> --placement <human|metis|single> [--out trace.json]
-  gdp train <workload> [<workload>...] [--steps N] [--lr X] [--entropy X]
-            [--ppo-epochs N] [--seed N] [--variant full|no_attention|no_superposition]
-            [--artifacts DIR] [--save ckpt.bin] [--load ckpt.bin] [--quiet]
+  gdp train <workload> [<workload>...] [--graph ID[,ID...]] [--steps N]
+            [--lr X] [--entropy X] [--ppo-epochs N] [--seed N]
+            [--variant full|no_attention|no_superposition]
+            [--backend native|pjrt] [--artifacts DIR]
+            [--save ckpt.bin] [--load ckpt.bin] [--quiet]
   gdp infer <workload> --load ckpt.bin [--samples N] [--variant V]
+            [--backend native|pjrt]
   gdp experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
             [--steps N] [--quick] [--out runs/]";
 
@@ -116,8 +122,21 @@ fn train_cfg_from(args: &Args) -> Result<TrainConfig> {
     })
 }
 
+fn backend_from(args: &Args) -> Result<gdp::runtime::BackendKind> {
+    match args.get("backend") {
+        None => Ok(gdp::runtime::BackendKind::from_env()),
+        Some(s) => gdp::runtime::BackendKind::parse(s)
+            .ok_or_else(|| anyhow!("--backend expects native|pjrt, got {s:?}")),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let ids: Vec<String> = args.positional[1..].to_vec();
+    // Workload ids come positionally or via (repeatable, comma-separable)
+    // `--graph`.
+    let mut ids: Vec<String> = args.positional[1..].to_vec();
+    if let Some(g) = args.get("graph") {
+        ids.extend(g.split(',').map(str::to_string));
+    }
     if ids.is_empty() {
         bail!("train needs at least one workload id");
     }
@@ -125,10 +144,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let save = args.get("save").map(PathBuf::from);
     let load = args.get("load").map(PathBuf::from);
+    let backend = backend_from(args)?;
     let cfg = train_cfg_from(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
-    let session = Session::open(&artifacts, &variant)?;
+    let session = Session::open_with(&artifacts, &variant, backend)?;
     let mut tasks = Vec::new();
     for (i, id) in ids.iter().enumerate() {
         tasks.push(session.task(id, cfg.seed ^ i as u64)?);
@@ -143,8 +163,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let mode = if ids.len() == 1 { "GDP-one" } else { "GDP-batch" };
     eprintln!(
-        "[{mode}] variant={variant} tasks={ids:?} steps={} (B={} rollouts/step)",
-        cfg.steps, session.manifest().dims.b
+        "[{mode}] variant={variant} backend={} tasks={ids:?} steps={} \
+         (B={} rollouts/step)",
+        session.policy.backend_name(),
+        cfg.steps,
+        session.manifest().dims.b
     );
     let result = coordinator::train(&session.policy, &mut store, &tasks, &cfg)?;
     for t in &result.per_task {
@@ -176,9 +199,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let load = args.get("load").map(PathBuf::from);
     let samples = args.usize_or("samples", 8).map_err(|e| anyhow!(e))?;
     let seed = args.u64_or("seed", 3).map_err(|e| anyhow!(e))?;
+    let backend = backend_from(args)?;
     args.finish().map_err(|e| anyhow!(e))?;
 
-    let session = Session::open(&artifacts, &variant)?;
+    let session = Session::open_with(&artifacts, &variant, backend)?;
     let store = match &load {
         Some(p) => session.load_params(p)?,
         None => session.init_params()?,

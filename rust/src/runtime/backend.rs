@@ -1,0 +1,80 @@
+//! `PolicyBackend`: the execution-engine seam between the coordinator and
+//! whatever actually runs `policy_fwd` / `train_step`.
+//!
+//! Two implementations exist:
+//! - [`crate::runtime::native::NativePolicy`] — the default. A from-scratch
+//!   pure-Rust engine for the exact policy in `python/compile/model.py`
+//!   (forward + analytic backward + PPO/Adam), batch-parallel across rows,
+//!   zero allocation per step after construction. Needs no artifacts: the
+//!   manifest and init params are constructible in Rust.
+//! - [`crate::runtime::Policy`] — the PJRT path executing the AOT HLO-text
+//!   artifacts from `python/compile/aot.py` (errors under the offline
+//!   stub, see `runtime/xla.rs`). The only backend for the `segmented`
+//!   variant, whose segment-level recurrence the native engine does not
+//!   implement.
+//!
+//! Both consume the same sorted-key `ParamStore`/`Manifest` ABI and the
+//! same `Batch` literals, so checkpoints and batches are interchangeable.
+
+use anyhow::Result;
+
+use super::exec::{Batch, TrainStats};
+use super::manifest::Manifest;
+use super::params::ParamStore;
+
+/// Which engine executes the policy (CLI `--backend`, `GDP_BACKEND` env).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "native" => Some(Self::Native),
+            "pjrt" | "xla" => Some(Self::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Default backend: native, unless `GDP_BACKEND` overrides it.
+    pub fn from_env() -> Self {
+        std::env::var("GDP_BACKEND")
+            .ok()
+            .and_then(|s| Self::parse(&s))
+            .unwrap_or(Self::Native)
+    }
+}
+
+/// A compiled/ready policy engine for one model variant.
+///
+/// `train_step` semantics (both impls): recompute the forward, PPO clipped
+/// surrogate with entropy bonus over node-masked slots, analytic gradients,
+/// global-norm clip at 1.0, one Adam update applied to `store` in place,
+/// `store.step` advanced by one.
+pub trait PolicyBackend {
+    fn manifest(&self) -> &Manifest;
+
+    /// Engine name for logs ("native" / "pjrt").
+    fn backend_name(&self) -> &'static str;
+
+    /// Policy forward: logits flattened `[B * N * D]`.
+    fn forward(&self, store: &ParamStore, batch: &Batch) -> Result<Vec<f32>>;
+
+    /// One PPO update (mutates `store` in place).
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        store: &mut ParamStore,
+        batch: &Batch,
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        lr: f32,
+        entropy_coef: f32,
+    ) -> Result<TrainStats>;
+
+    /// Cumulative policy-execution wall seconds (perf accounting).
+    fn exec_secs_total(&self) -> f64;
+}

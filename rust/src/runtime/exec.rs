@@ -43,6 +43,11 @@ pub struct Batch {
     pub n_real: Vec<usize>,
     /// Per-row active device count.
     pub num_devices: Vec<usize>,
+    /// Per-row `true` when the row came from the caller; `false` for the
+    /// cycled filler rows that pad the batch to B. The trainer skips
+    /// filler rows for reward evaluation, and the native backend excludes
+    /// them from the PPO loss statistics.
+    pub real: Vec<bool>,
 }
 
 impl Batch {
@@ -60,7 +65,9 @@ impl Batch {
         let mut dev_mask = Vec::with_capacity(b * d.d);
         let mut n_real = Vec::with_capacity(b);
         let mut num_devices = Vec::with_capacity(b);
+        let mut real = Vec::with_capacity(b);
         for bi in 0..b {
+            real.push(bi < rows.len());
             let row = rows[bi % rows.len()];
             if row.feats.len() != d.n * d.f {
                 bail!("feature row has wrong length");
@@ -84,6 +91,7 @@ impl Batch {
             dev_mask: Literal::vec1(&dev_mask).reshape(&sh(&[b, d.d]))?,
             n_real,
             num_devices,
+            real,
         })
     }
 }
@@ -195,5 +203,40 @@ impl Policy {
         let m = outs.split_off(p);
         store.update(outs, m, v);
         Ok(TrainStats { loss, entropy, approx_kl: kl, exec_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+impl super::backend::PolicyBackend for Policy {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn forward(&self, store: &ParamStore, batch: &Batch) -> Result<Vec<f32>> {
+        Policy::forward(self, store, batch)
+    }
+
+    /// Note: the lowered HLO predates the `Batch::real` flag, so the PJRT
+    /// path cannot exclude filler rows from the loss statistics (the
+    /// trainer only builds full-B batches today; the native backend is
+    /// the one that honors `real` for under-filled batches).
+    fn train_step(
+        &self,
+        store: &mut ParamStore,
+        batch: &Batch,
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        lr: f32,
+        entropy_coef: f32,
+    ) -> Result<TrainStats> {
+        Policy::train_step(self, store, batch, actions, logp_old, adv, lr, entropy_coef)
+    }
+
+    fn exec_secs_total(&self) -> f64 {
+        self.exec_secs_total.get()
     }
 }

@@ -20,7 +20,33 @@ pub struct Dims {
     pub gnn_layers: usize,
     pub placer_layers: usize,
     pub heads: usize,
+    pub ffn: usize,
     pub clip_eps: f64,
+}
+
+impl Dims {
+    /// Per-head width (python `Dims.dh`).
+    pub fn dh(&self) -> usize {
+        debug_assert_eq!(self.h % self.heads.max(1), 0);
+        self.h / self.heads.max(1)
+    }
+
+    /// The production AOT dims from python/compile/config.py defaults.
+    pub fn default_aot() -> Self {
+        Self {
+            n: 256,
+            k: 8,
+            f: 48,
+            h: 64,
+            d: 8,
+            b: 4,
+            gnn_layers: 3,
+            placer_layers: 2,
+            heads: 4,
+            ffn: 128,
+            clip_eps: 0.2,
+        }
+    }
 }
 
 /// One flattened parameter tensor (sorted-name order = HLO input order).
@@ -62,6 +88,12 @@ impl Manifest {
             gnn_layers: usize_field(dims_v, "gnn_layers")?,
             placer_layers: usize_field(dims_v, "placer_layers")?,
             heads: usize_field(dims_v, "heads")?,
+            // Older manifests predate the explicit ffn entry; the python
+            // default is 2*H, which is also the fallback here.
+            ffn: dims_v
+                .get("ffn")
+                .and_then(Json::as_usize)
+                .unwrap_or(2 * usize_field(dims_v, "H")?),
             clip_eps: dims_v
                 .get("clip_eps")
                 .and_then(Json::as_f64)
@@ -136,6 +168,108 @@ impl Manifest {
             .with_context(|| format!("reading {}", path.display()))?;
         Self::parse_str(&text)
     }
+
+    /// Build a manifest in Rust, without python artifacts: the exact
+    /// sorted-key parameter layout `model.py::init_params` would emit for
+    /// these dims + variant flags. This is the native backend's half of the
+    /// ABI contract — `python/tests/test_aot.py` pins the python half.
+    pub fn synthesize(
+        dims: Dims,
+        variant: &str,
+        use_attention: bool,
+        use_superposition: bool,
+    ) -> Result<Self> {
+        let mut named = param_shapes(&dims, use_attention, use_superposition);
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut params = Vec::with_capacity(named.len());
+        let mut offset = 0usize;
+        for (name, shape) in named {
+            let elements = shape.iter().product::<usize>().max(1);
+            params.push(ParamEntry { name, elements, offset, shape });
+            offset += elements;
+        }
+        Ok(Self {
+            variant: variant.to_string(),
+            use_attention,
+            use_superposition,
+            dims,
+            params,
+            total_elements: offset,
+        })
+    }
+
+    /// `synthesize` with flags looked up by variant name (config.py
+    /// VARIANTS). The `segmented` variant is PJRT-only: its segment-level
+    /// recurrence is not implemented by the native engine.
+    pub fn synthesize_variant(dims: Dims, variant: &str) -> Result<Self> {
+        let (att, sp) = match variant {
+            "full" => (true, true),
+            "no_attention" => (false, true),
+            "no_superposition" => (true, false),
+            other => bail!(
+                "cannot synthesize manifest for variant {other:?} \
+                 (known: full, no_attention, no_superposition)"
+            ),
+        };
+        Self::synthesize(dims, variant, att, sp)
+    }
+}
+
+/// Unsorted (name, shape) list mirroring `model.py::init_params` insertion
+/// order; `synthesize` sorts it into the ABI order.
+fn param_shapes(
+    dims: &Dims,
+    use_attention: bool,
+    use_superposition: bool,
+) -> Vec<(String, Vec<usize>)> {
+    let (h, f, d, ffn) = (dims.h, dims.f, dims.d, dims.ffn);
+    let mut p: Vec<(String, Vec<usize>)> = Vec::new();
+    let dense = |p: &mut Vec<(String, Vec<usize>)>,
+                 name: &str,
+                 fan_in: usize,
+                 fan_out: usize,
+                 bias: bool| {
+        p.push((format!("{name}_w"), vec![fan_in, fan_out]));
+        if bias {
+            p.push((format!("{name}_b"), vec![fan_out]));
+        }
+    };
+    let layernorm = |p: &mut Vec<(String, Vec<usize>)>, name: &str| {
+        p.push((format!("{name}_s"), vec![h]));
+        p.push((format!("{name}_b"), vec![h]));
+    };
+    dense(&mut p, "embed", f, h, true);
+    for l in 0..dims.gnn_layers {
+        dense(&mut p, &format!("gnn{l}_agg"), h, h, true);
+        dense(&mut p, &format!("gnn{l}_comb"), 2 * h, h, true);
+    }
+    for l in 0..dims.placer_layers {
+        layernorm(&mut p, &format!("pl{l}_ln1"));
+        if use_attention {
+            dense(&mut p, &format!("pl{l}_wq"), h, h, false);
+            dense(&mut p, &format!("pl{l}_wk"), h, h, false);
+            dense(&mut p, &format!("pl{l}_wv"), h, h, false);
+            dense(&mut p, &format!("pl{l}_wo"), h, h, true);
+        } else {
+            dense(&mut p, &format!("pl{l}_mix"), h, h, true);
+        }
+        layernorm(&mut p, &format!("pl{l}_ln2"));
+        dense(&mut p, &format!("pl{l}_ffn1"), h, ffn, true);
+        dense(&mut p, &format!("pl{l}_ffn2"), ffn, h, true);
+        if use_superposition {
+            p.push((format!("pl{l}_cond1_w"), vec![h, h]));
+            p.push((format!("pl{l}_cond1_b"), vec![h]));
+            p.push((format!("pl{l}_cond2_w"), vec![h, h]));
+            p.push((format!("pl{l}_cond2_b"), vec![h]));
+        }
+    }
+    layernorm(&mut p, "head_ln");
+    dense(&mut p, "head", h, d, true);
+    if use_superposition {
+        p.push(("head_cond_w".to_string(), vec![h, h]));
+        p.push(("head_cond_b".to_string(), vec![h]));
+    }
+    p
 }
 
 #[cfg(test)]
@@ -170,6 +304,55 @@ mod tests {
         assert!(Manifest::parse_str(&bad).is_err());
         let swapped = DOC.replace("\"name\":\"a\"", "\"name\":\"z\"");
         assert!(Manifest::parse_str(&swapped).is_err());
+    }
+
+    #[test]
+    fn synthesized_manifest_passes_abi_invariants() {
+        let dims = Dims::default_aot();
+        for variant in ["full", "no_attention", "no_superposition"] {
+            let m = Manifest::synthesize_variant(dims, variant).unwrap();
+            // Round-trip through the strict parser's invariants: re-serialize
+            // the sorted/contiguous layout by hand and re-check order.
+            for w in m.params.windows(2) {
+                assert!(w[0].name < w[1].name, "{variant}: unsorted");
+                assert_eq!(w[0].offset + w[0].elements, w[1].offset);
+            }
+            assert_eq!(
+                m.total_elements,
+                m.params.iter().map(|p| p.elements).sum::<usize>()
+            );
+            assert_eq!(m.variant, variant);
+        }
+        // superposition adds the cond tensors, attention swaps mix for qkvo
+        let full = Manifest::synthesize_variant(dims, "full").unwrap();
+        let nosp = Manifest::synthesize_variant(dims, "no_superposition").unwrap();
+        assert!(full.params.len() > nosp.params.len());
+        assert!(Manifest::synthesize_variant(dims, "segmented").is_err());
+    }
+
+    #[test]
+    fn synthesized_matches_python_artifacts_if_present() {
+        // When `make artifacts` has run, the Rust-synthesized layout must be
+        // byte-for-byte the ABI the python AOT wrote.
+        let dir = std::path::Path::new("artifacts/full");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let theirs = Manifest::load(dir).unwrap();
+        let ours = Manifest::synthesize(
+            theirs.dims,
+            &theirs.variant,
+            theirs.use_attention,
+            theirs.use_superposition,
+        )
+        .unwrap();
+        assert_eq!(ours.total_elements, theirs.total_elements);
+        assert_eq!(ours.params.len(), theirs.params.len());
+        for (a, b) in ours.params.iter().zip(&theirs.params) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.offset, b.offset);
+        }
     }
 
     #[test]

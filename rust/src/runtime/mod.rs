@@ -1,19 +1,30 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! Python never runs here — this is the self-contained serving/training
-//! hot path (see /opt/xla-example/load_hlo for the interchange pattern).
+//! Policy execution runtime, behind the [`PolicyBackend`] trait.
 //!
-//! The `xla` module below is a pure-Rust interchange stub standing in for
-//! the real PJRT bindings, which the offline build sandbox cannot fetch
-//! (Cargo.toml documents the swap). Marshalling works; execution errors.
+//! - `native/` — the default engine: a pure-Rust implementation of the
+//!   exact `python/compile/model.py` policy (forward + analytic backward
+//!   + PPO/Adam), batch-parallel, zero allocation per step, no artifacts
+//!   required (manifest + init params are constructible in Rust).
+//! - `exec`/`xla` — the PJRT path: loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU
+//!   PJRT client. The `xla` module is a pure-Rust interchange stub
+//!   standing in for the real PJRT bindings, which the offline build
+//!   sandbox cannot fetch (Cargo.toml documents the swap); marshalling
+//!   works, execution errors.
+//!
+//! Both backends share the sorted-key `ParamStore`/`Manifest` ABI and the
+//! `Batch` literal marshalling, so checkpoints are interchangeable.
 
+pub mod backend;
 pub mod exec;
 pub mod manifest;
+pub mod native;
 pub mod params;
 pub mod xla;
 
+pub use backend::{BackendKind, PolicyBackend};
 pub use exec::{Batch, Policy, TrainStats};
 pub use manifest::{Dims, Manifest, ParamEntry};
+pub use native::NativePolicy;
 pub use params::ParamStore;
 
 use anyhow::Result;

@@ -1,0 +1,457 @@
+//! Native backward pass for one batch row: PPO clipped-surrogate loss
+//! (entropy bonus, node/filler masking) and analytic gradients for every
+//! layer of the policy, written into the row's flat `grad` buffer in
+//! manifest (sorted-key) layout. Runs after `forward_row` populated the
+//! activation caches; zero allocation — every scratch buffer lives in
+//! `RowWs`.
+//!
+//! Convention mirrored from `model.py::make_ppo_loss`/`train_step`:
+//!   loss = pg_loss - entc * entropy, summed over node-masked slots and
+//!   normalized by the global valid-node count; `jnp.where` masks pass
+//!   gradient only to the taken branch, so masked devices and padded
+//!   nodes contribute exactly zero.
+
+use super::linalg::{axpy, colsum_acc, dot, matmul_nt, matmul_tn_acc};
+use super::workspace::RowWs;
+use super::{Ctx, RowIn};
+
+/// `gs[j] += sum_v dy[v,j] * xhat[v,j]` — layernorm scale gradient.
+fn ln_grad_scale(gs: &mut [f32], dy: &[f32], xhat: &[f32], n: usize, h: usize) {
+    for v in 0..n {
+        for j in 0..h {
+            gs[j] += dy[v * h + j] * xhat[v * h + j];
+        }
+    }
+}
+
+/// Layernorm input gradient: `dx = rstd * (dy*s - mean(dy*s) - xhat * mean(dy*s*xhat))`.
+fn ln_backward_dx(
+    dx: &mut [f32],
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    s: &[f32],
+    n: usize,
+    h: usize,
+) {
+    let inv_h = 1.0 / h as f32;
+    for v in 0..n {
+        let (dyr, xhr) = (&dy[v * h..(v + 1) * h], &xhat[v * h..(v + 1) * h]);
+        let mut m1 = 0f32;
+        let mut m2 = 0f32;
+        for j in 0..h {
+            let dxh = dyr[j] * s[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+        }
+        m1 *= inv_h;
+        m2 *= inv_h;
+        let r = rstd[v];
+        for j in 0..h {
+            dx[v * h + j] = r * (dyr[j] * s[j] - m1 - xhr[j] * m2);
+        }
+    }
+}
+
+/// PPO loss partials + dlogits for one row, then full backward.
+///
+/// `inv_nvalid` is 1 / (global valid-node count across real rows);
+/// `real` is 1.0 for caller rows, 0.0 for cycled filler rows (excluded
+/// from both the loss statistics and the gradient).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn loss_backward_row(
+    cx: &Ctx,
+    rin: &RowIn,
+    ws: &mut RowWs,
+    actions: &[i32],
+    logp_old: &[f32],
+    adv: f32,
+    entc: f32,
+    inv_nvalid: f32,
+    real: f32,
+) {
+    let d = cx.d;
+    let (n, h, dd) = (d.n, d.h, d.d);
+    let clip = d.clip_eps as f32;
+    ws.grad.fill(0.0);
+    ws.dg.fill(0.0);
+    ws.pg_sum = 0.0;
+    ws.ent_sum = 0.0;
+    ws.kl_sum = 0.0;
+
+    // --- loss + dlogits ---
+    for v in 0..n {
+        let rm = rin.node_mask[v] * real;
+        let row = &ws.logits[v * dd..(v + 1) * dd];
+        let dlr = &mut ws.dlogits[v * dd..(v + 1) * dd];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row.iter().map(|&z| (z - mx).exp()).sum::<f32>().ln() + mx;
+        for j in 0..dd {
+            dlr[j] = row[j] - lse; // stash log-probs in the grad row
+        }
+        let a_idx = (actions[v].max(0) as usize).min(dd - 1);
+        let lp_a = dlr[a_idx];
+        let mut ent_v = 0f32;
+        for &lp in dlr.iter() {
+            ent_v -= lp.exp() * lp;
+        }
+        let ratio = (lp_a - logp_old[v]).exp();
+        let clipped = ratio.clamp(1.0 - clip, 1.0 + clip);
+        let (s1, s2) = (ratio * adv, clipped * adv);
+        let sur = s1.min(s2);
+        ws.pg_sum += (sur * rm) as f64;
+        ws.ent_sum += (ent_v * rm) as f64;
+        ws.kl_sum += ((logp_old[v] - lp_a) * rm) as f64;
+        let w = rm * inv_nvalid;
+        // d(loss)/d(logp_a): the min picks the unclipped branch (ties
+        // included, where both branches have the same derivative).
+        let gl = if s1 <= s2 { -adv * ratio * w } else { 0.0 };
+        for j in 0..dd {
+            if rin.dev_mask[j] > 0.0 {
+                let lp = dlr[j];
+                let p = lp.exp();
+                let delta = (j == a_idx) as u8 as f32;
+                dlr[j] = gl * (delta - p) + entc * w * p * (lp + ent_v);
+            } else {
+                dlr[j] = 0.0; // jnp.where passes no gradient to NEG_INF arm
+            }
+        }
+    }
+
+    let ids = cx.ids;
+    // --- head: logits = xcond @ head_w + head_b ---
+    matmul_nt(&mut ws.da, &ws.dlogits, cx.p(ids.head_w), n, dd, h, false);
+    {
+        let (o, l_) = cx.off(ids.head_w);
+        matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.xcond, &ws.dlogits, n, h, dd);
+        let (o, l_) = cx.off(ids.head_b);
+        colsum_acc(&mut ws.grad[o..o + l_], &ws.dlogits, dd);
+    }
+    // head cond + head ln -> dx (grad wrt x[placer_layers])
+    if cx.sp {
+        cond_backward_inline(
+            cx, ws, CondSite::Head, ids.head_ln_s, ids.head_ln_b, n, h,
+        );
+    }
+    {
+        let (o, l_) = cx.off(ids.head_ln_s);
+        ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da, &ws.xhat_h, n, h);
+        let (o, l_) = cx.off(ids.head_ln_b);
+        colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+    }
+    ln_backward_dx(&mut ws.dx, &ws.da, &ws.xhat_h, &ws.rstd_h, cx.p(ids.head_ln_s), n, h);
+
+    // --- placer layers, reverse ---
+    let scale = 1.0 / (d.dh() as f32).sqrt();
+    for l in (0..d.placer_layers).rev() {
+        let pi = &ids.pl[l];
+        let ffn = d.ffn;
+        // x[l+1] = xmid + ffn_out * mask  =>  d ffn_out = dx * mask
+        for v in 0..n {
+            let mask = rin.node_mask[v];
+            for j in 0..h {
+                ws.da[v * h + j] = ws.dx[v * h + j] * mask;
+            }
+        }
+        // ffn2
+        matmul_nt(&mut ws.df1, &ws.da, cx.p(pi.ffn2_w), n, h, ffn, false);
+        {
+            let (o, l_) = cx.off(pi.ffn2_w);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.f1[l], &ws.da, n, ffn, h);
+            let (o, l_) = cx.off(pi.ffn2_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+        }
+        // relu
+        for (g, &a) in ws.df1.iter_mut().zip(&ws.f1[l]) {
+            if a <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        // ffn1: da <- dy2
+        matmul_nt(&mut ws.da, &ws.df1, cx.p(pi.ffn1_w), n, ffn, h, false);
+        {
+            let (o, l_) = cx.off(pi.ffn1_w);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y2[l], &ws.df1, n, h, ffn);
+            let (o, l_) = cx.off(pi.ffn1_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.df1, ffn);
+        }
+        // cond2 + ln2; dx += ln2 input grad (residual already in dx)
+        if cx.sp {
+            cond_backward_inline(cx, ws, CondSite::Pl2(l), pi.ln2_s, pi.ln2_b, n, h);
+        }
+        {
+            let (o, l_) = cx.off(pi.ln2_s);
+            ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da, &ws.xhat2[l], n, h);
+            let (o, l_) = cx.off(pi.ln2_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+        }
+        ln_backward_dx(&mut ws.db2, &ws.da, &ws.xhat2[l], &ws.rstd2[l], cx.p(pi.ln2_s), n, h);
+        for (x, &y) in ws.dx.iter_mut().zip(&ws.db2) {
+            *x += y; // dx now = d xmid
+        }
+        // xmid = x[l] + att * mask  =>  d att = dx * mask
+        for v in 0..n {
+            let mask = rin.node_mask[v];
+            for j in 0..h {
+                ws.da[v * h + j] = ws.dx[v * h + j] * mask;
+            }
+        }
+        if cx.att {
+            // wo: att = ocat @ wo_w + wo_b
+            matmul_nt(&mut ws.db2, &ws.da, cx.p(pi.wo_w), n, h, h, false); // db2 = d ocat
+            {
+                let (o, l_) = cx.off(pi.wo_w);
+                matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.ocat[l], &ws.da, n, h, h);
+                let (o, l_) = cx.off(pi.wo_b);
+                colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+            }
+            let dh = d.dh();
+            ws.dq.fill(0.0);
+            ws.dk.fill(0.0);
+            ws.dv.fill(0.0);
+            for hh in 0..d.heads {
+                let off = hh * dh;
+                // dP[i,j] = dot(d ocat_h[i], v_h[j])
+                for i in 0..n {
+                    let drow = &ws.db2[i * h + off..i * h + off + dh];
+                    for j in 0..n {
+                        ws.dp[i * n + j] =
+                            dot(drow, &ws.v[l][j * h + off..j * h + off + dh]);
+                    }
+                }
+                // dv_h[j] += sum_i P[i,j] * d ocat_h[i]
+                let p = &ws.attp[l][hh * n * n..(hh + 1) * n * n];
+                for i in 0..n {
+                    let drow = &ws.db2[i * h + off..i * h + off + dh];
+                    for j in 0..n {
+                        let c = p[i * n + j];
+                        if c != 0.0 {
+                            for t in 0..dh {
+                                ws.dv[j * h + off + t] += c * drow[t];
+                            }
+                        }
+                    }
+                }
+                // dS = P .* (dP - rowsum(dP .* P)), in place in dp
+                for i in 0..n {
+                    let prow = &p[i * n..(i + 1) * n];
+                    let dprow = &mut ws.dp[i * n..(i + 1) * n];
+                    let s = dot(dprow, prow);
+                    for j in 0..n {
+                        dprow[j] = prow[j] * (dprow[j] - s);
+                    }
+                }
+                // dq_h = scale * dS K_h ; dk_h = scale * dS^T Q_h
+                for i in 0..n {
+                    for j in 0..n {
+                        let c = ws.dp[i * n + j] * scale;
+                        if c != 0.0 {
+                            for t in 0..dh {
+                                ws.dq[i * h + off + t] += c * ws.k[l][j * h + off + t];
+                                ws.dk[j * h + off + t] += c * ws.q[l][i * h + off + t];
+                            }
+                        }
+                    }
+                }
+            }
+            // back through the q/k/v projections: da <- dy1
+            matmul_nt(&mut ws.da, &ws.dq, cx.p(pi.wq), n, h, h, false);
+            matmul_nt(&mut ws.da, &ws.dk, cx.p(pi.wk), n, h, h, true);
+            matmul_nt(&mut ws.da, &ws.dv, cx.p(pi.wv), n, h, h, true);
+            for (id, dz) in [(pi.wq, &ws.dq), (pi.wk, &ws.dk), (pi.wv, &ws.dv)] {
+                let (o, l_) = cx.off(id);
+                matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l], dz, n, h, h);
+            }
+        } else {
+            // mix: att = relu(y1 @ mix_w + mix_b)
+            for (g, &a) in ws.da.iter_mut().zip(&ws.att[l]) {
+                if a <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+            matmul_nt(&mut ws.db2, &ws.da, cx.p(pi.mix_w), n, h, h, false);
+            {
+                let (o, l_) = cx.off(pi.mix_w);
+                matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l], &ws.da, n, h, h);
+                let (o, l_) = cx.off(pi.mix_b);
+                colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+            }
+            ws.da.copy_from_slice(&ws.db2); // da = dy1
+        }
+        // cond1 + ln1; dx += ln1 input grad
+        if cx.sp {
+            cond_backward_inline(cx, ws, CondSite::Pl1(l), pi.ln1_s, pi.ln1_b, n, h);
+        }
+        {
+            let (o, l_) = cx.off(pi.ln1_s);
+            ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da, &ws.xhat1[l], n, h);
+            let (o, l_) = cx.off(pi.ln1_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+        }
+        ln_backward_dx(&mut ws.db2, &ws.da, &ws.xhat1[l], &ws.rstd1[l], cx.p(pi.ln1_s), n, h);
+        for (x, &y) in ws.dx.iter_mut().zip(&ws.db2) {
+            *x += y; // dx now = grad wrt x[l]
+        }
+    }
+
+    // --- pooled-embedding path: g = sum(h*mask)/denom fed every cond ---
+    let denom = rin.node_mask.iter().sum::<f32>().max(1.0);
+    for v in 0..n {
+        let c = rin.node_mask[v] / denom;
+        if c != 0.0 {
+            axpy(&mut ws.dx[v * h..(v + 1) * h], c, &ws.dg);
+        }
+    }
+
+    // --- GNN layers, reverse ---
+    for l in (0..d.gnn_layers).rev() {
+        let gi = &ids.gnn[l];
+        // da = dh ⊙ relu'(h_out) (h_out is post-relu post-mask)
+        {
+            let h_out = &ws.gnn_h[l];
+            for i in 0..n * h {
+                ws.da[i] = if h_out[i] > 0.0 { ws.dx[i] } else { 0.0 };
+            }
+        }
+        let comb_w = cx.p(gi.comb_w);
+        matmul_nt(&mut ws.db2, &ws.da, &comb_w[..h * h], n, h, h, false);
+        matmul_nt(&mut ws.dhn, &ws.da, &comb_w[h * h..], n, h, h, false);
+        {
+            let h_in: &[f32] = if l == 0 { &ws.h0 } else { &ws.gnn_h[l - 1] };
+            let (o, _) = cx.off(gi.comb_w);
+            matmul_tn_acc(&mut ws.grad[o..o + h * h], h_in, &ws.da, n, h, h);
+        }
+        {
+            let (o, _) = cx.off(gi.comb_w);
+            matmul_tn_acc(
+                &mut ws.grad[o + h * h..o + 2 * h * h],
+                &ws.gnn_hn[l],
+                &ws.da,
+                n,
+                h,
+                h,
+            );
+            let (o, l_) = cx.off(gi.comb_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+        }
+        // sage max-pool: route d hn to the arg-max source node
+        ws.dt.fill(0.0);
+        {
+            let src = &ws.gnn_src[l];
+            for v in 0..n {
+                for j in 0..h {
+                    let u = src[v * h + j];
+                    if u != u32::MAX {
+                        ws.dt[u as usize * h + j] += ws.dhn[v * h + j];
+                    }
+                }
+            }
+        }
+        // sigmoid'
+        {
+            let t = &ws.gnn_t[l];
+            for i in 0..n * h {
+                ws.dt[i] *= t[i] * (1.0 - t[i]);
+            }
+        }
+        matmul_nt(&mut ws.db2, &ws.dt, cx.p(gi.agg_w), n, h, h, true);
+        {
+            let h_in: &[f32] = if l == 0 { &ws.h0 } else { &ws.gnn_h[l - 1] };
+            let (o, l_) = cx.off(gi.agg_w);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], h_in, &ws.dt, n, h, h);
+            let (o, l_) = cx.off(gi.agg_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.dt, h);
+        }
+        ws.dx.copy_from_slice(&ws.db2);
+    }
+
+    // --- embed ---
+    {
+        let h0 = &ws.h0;
+        for i in 0..n * h {
+            ws.da[i] = if h0[i] > 0.0 { ws.dx[i] } else { 0.0 };
+        }
+    }
+    let (o, l_) = cx.off(ids.embed_w);
+    matmul_tn_acc(&mut ws.grad[o..o + l_], rin.feats, &ws.da, n, d.f, h);
+    let (o, l_) = cx.off(ids.embed_b);
+    colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
+}
+
+/// Which conditioning site is being backpropagated (selects the cached
+/// xhat/cs buffers and the cond parameter ids).
+enum CondSite {
+    Head,
+    Pl1(usize),
+    Pl2(usize),
+}
+
+/// Backward through `y = (xhat*s + b) * cs`, `cs = 2*sigmoid(g@W + b)`:
+/// consumes `ws.da` as dy (rescaling it in place to d(affine)), and
+/// accumulates cond-param grads plus `ws.dg`.
+fn cond_backward_inline(
+    cx: &Ctx,
+    ws: &mut RowWs,
+    site: CondSite,
+    ln_s: usize,
+    ln_b: usize,
+    n: usize,
+    h: usize,
+) {
+    let (cond_w, cond_b) = match site {
+        CondSite::Head => (cx.ids.head_cond_w, cx.ids.head_cond_b),
+        CondSite::Pl1(l) => (cx.ids.pl[l].cond1_w, cx.ids.pl[l].cond1_b),
+        CondSite::Pl2(l) => (cx.ids.pl[l].cond2_w, cx.ids.pl[l].cond2_b),
+    };
+    // dcs[j] = sum_v dy[v,j] * (xhat*s + b)[v,j]
+    ws.dvec.fill(0.0);
+    {
+        let xhat: &[f32] = match site {
+            CondSite::Head => &ws.xhat_h,
+            CondSite::Pl1(l) => &ws.xhat1[l],
+            CondSite::Pl2(l) => &ws.xhat2[l],
+        };
+        let (s, b) = (cx.p(ln_s), cx.p(ln_b));
+        for v in 0..n {
+            for j in 0..h {
+                let ya = xhat[v * h + j] * s[j] + b[j];
+                ws.dvec[j] += ws.da[v * h + j] * ya;
+            }
+        }
+    }
+    // dy -> d(affine) = dy * cs
+    {
+        let cs: &[f32] = match site {
+            CondSite::Head => &ws.cs_h,
+            CondSite::Pl1(l) => &ws.cs1[l],
+            CondSite::Pl2(l) => &ws.cs2[l],
+        };
+        for v in 0..n {
+            for j in 0..h {
+                ws.da[v * h + j] *= cs[j];
+            }
+        }
+        // du = dcs * d(2*sigmoid)/du = dcs * cs * (1 - cs/2)
+        for j in 0..h {
+            ws.dvec[j] *= cs[j] * (1.0 - 0.5 * cs[j]);
+        }
+    }
+    // u = g @ W + b
+    {
+        let (o, _) = cx.off(cond_w);
+        for i in 0..h {
+            let gv = ws.g[i];
+            if gv != 0.0 {
+                axpy(&mut ws.grad[o + i * h..o + (i + 1) * h], gv, &ws.dvec);
+            }
+        }
+        let (o, l_) = cx.off(cond_b);
+        for j in 0..l_ {
+            ws.grad[o + j] += ws.dvec[j];
+        }
+    }
+    let w = cx.p(cond_w);
+    for i in 0..h {
+        ws.dg[i] += dot(&w[i * h..(i + 1) * h], &ws.dvec);
+    }
+}

@@ -1,0 +1,311 @@
+//! Native forward pass for one batch row: GraphSAGE embedding (Eq. 2-3),
+//! transformer placer with masked MHA + superposition conditioning
+//! (Eq. 4), head, device-masked logits. Mirrors
+//! `python/compile/model.py::{graph_embed, placer}` (segments == 1) op
+//! for op; every intermediate the backward pass needs lands in `RowWs`.
+
+use super::linalg::{dot, matmul_nn, sigmoid};
+use super::workspace::RowWs;
+use super::{Ctx, RowIn, EPS_LN, NEG_INF};
+
+/// Per-row layernorm: caches normalized `xhat` and `rstd`.
+fn layer_norm(x: &[f32], xhat: &mut [f32], rstd: &mut [f32], n: usize, h: usize) {
+    for v in 0..n {
+        let row = &x[v * h..(v + 1) * h];
+        let mu = row.iter().sum::<f32>() / h as f32;
+        let var = row.iter().map(|&z| (z - mu) * (z - mu)).sum::<f32>() / h as f32;
+        let r = 1.0 / (var + EPS_LN).sqrt();
+        rstd[v] = r;
+        for (o, &z) in xhat[v * h..(v + 1) * h].iter_mut().zip(row) {
+            *o = (z - mu) * r;
+        }
+    }
+}
+
+/// Superposition gate (Eq. 4): `cs = 2 * sigmoid(g @ W + b)`, `[H]`.
+fn cond_scale(cs: &mut [f32], g: &[f32], w: &[f32], b: &[f32], h: usize) {
+    cs.copy_from_slice(b);
+    for (i, &gv) in g.iter().enumerate() {
+        if gv != 0.0 {
+            for (o, &wv) in cs.iter_mut().zip(&w[i * h..(i + 1) * h]) {
+                *o += gv * wv;
+            }
+        }
+    }
+    for o in cs.iter_mut() {
+        *o = 2.0 * sigmoid(*o);
+    }
+}
+
+/// `out[v,j] = (xhat[v,j]*s[j] + b[j]) * cs[j]` (cs = None: no gate).
+fn affine_cond(
+    out: &mut [f32],
+    xhat: &[f32],
+    s: &[f32],
+    b: &[f32],
+    cs: Option<&[f32]>,
+    n: usize,
+    h: usize,
+) {
+    for v in 0..n {
+        let xr = &xhat[v * h..(v + 1) * h];
+        let or = &mut out[v * h..(v + 1) * h];
+        match cs {
+            Some(c) => {
+                for j in 0..h {
+                    or[j] = (xr[j] * s[j] + b[j]) * c[j];
+                }
+            }
+            None => {
+                for j in 0..h {
+                    or[j] = xr[j] * s[j] + b[j];
+                }
+            }
+        }
+    }
+}
+
+pub(super) fn forward_row(cx: &Ctx, rin: &RowIn, ws: &mut RowWs) {
+    let d = cx.d;
+    let (n, h, f, dd, ffn) = (d.n, d.h, d.f, d.d, d.ffn);
+    let ids = cx.ids;
+
+    // --- embed: h0 = relu(feats @ W + b) * node_mask ---
+    matmul_nn(&mut ws.h0, rin.feats, cx.p(ids.embed_w), n, f, h, false);
+    let eb = cx.p(ids.embed_b);
+    for v in 0..n {
+        let mask = rin.node_mask[v];
+        for (z, &b) in ws.h0[v * h..(v + 1) * h].iter_mut().zip(eb) {
+            *z = (*z + b).max(0.0) * mask;
+        }
+    }
+
+    // --- GNN layers (Eq. 2-3) ---
+    for l in 0..d.gnn_layers {
+        let gi = &ids.gnn[l];
+        // split so layer l-1's output (read) and layer l's output (write)
+        // can be borrowed simultaneously
+        let (prev, rest) = ws.gnn_h.split_at_mut(l);
+        let cur: &[f32] = if l == 0 { &ws.h0 } else { &prev[l - 1] };
+        let out = &mut rest[0];
+        // t = sigmoid(cur @ agg_w + agg_b)
+        matmul_nn(&mut ws.gnn_t[l], cur, cx.p(gi.agg_w), n, h, h, false);
+        let ab = cx.p(gi.agg_b);
+        for v in 0..n {
+            for (z, &b) in ws.gnn_t[l][v * h..(v + 1) * h].iter_mut().zip(ab) {
+                *z = sigmoid(*z + b);
+            }
+        }
+        // hn[v] = max over valid neighbors u of t[u] (0 when none)
+        let t = &ws.gnn_t[l];
+        let hn = &mut ws.gnn_hn[l];
+        let src = &mut ws.gnn_src[l];
+        for v in 0..n {
+            let hn_row = &mut hn[v * h..(v + 1) * h];
+            let src_row = &mut src[v * h..(v + 1) * h];
+            let mut first = true;
+            for s in 0..d.k {
+                if rin.nbr_mask[v * d.k + s] <= 0.0 {
+                    continue;
+                }
+                let u = rin.nbr_idx[v * d.k + s] as usize;
+                let t_row = &t[u * h..(u + 1) * h];
+                if first {
+                    hn_row.copy_from_slice(t_row);
+                    src_row.fill(u as u32);
+                    first = false;
+                } else {
+                    for j in 0..h {
+                        if t_row[j] > hn_row[j] {
+                            hn_row[j] = t_row[j];
+                            src_row[j] = u as u32;
+                        }
+                    }
+                }
+            }
+            if first {
+                hn_row.fill(0.0);
+                src_row.fill(u32::MAX);
+            }
+        }
+        // h' = relu(concat(cur, hn) @ comb_w + comb_b) * node_mask
+        let comb_w = cx.p(gi.comb_w);
+        matmul_nn(out, cur, &comb_w[..h * h], n, h, h, false);
+        matmul_nn(out, &ws.gnn_hn[l], &comb_w[h * h..], n, h, h, true);
+        let cb = cx.p(gi.comb_b);
+        for v in 0..n {
+            let mask = rin.node_mask[v];
+            for (z, &b) in out[v * h..(v + 1) * h].iter_mut().zip(cb) {
+                *z = (*z + b).max(0.0) * mask;
+            }
+        }
+    }
+    let hfin: &[f32] = if d.gnn_layers == 0 { &ws.h0 } else { &ws.gnn_h[d.gnn_layers - 1] };
+
+    // --- pooled graph embedding g (superposition conditioner input) ---
+    let denom = rin.node_mask.iter().sum::<f32>().max(1.0);
+    ws.g.fill(0.0);
+    for v in 0..n {
+        let mask = rin.node_mask[v];
+        if mask != 0.0 {
+            for (o, &z) in ws.g.iter_mut().zip(&hfin[v * h..(v + 1) * h]) {
+                *o += z * mask;
+            }
+        }
+    }
+    for o in ws.g.iter_mut() {
+        *o /= denom;
+    }
+
+    // --- placer layers ---
+    ws.x[0].copy_from_slice(hfin);
+    let scale = 1.0 / (d.dh() as f32).sqrt();
+    for l in 0..d.placer_layers {
+        let pi = &ids.pl[l];
+        // ln1 (+ cond1)
+        {
+            let (x_in, xhat, rstd) = (&ws.x[l], &mut ws.xhat1[l], &mut ws.rstd1[l]);
+            layer_norm(x_in, xhat, rstd, n, h);
+        }
+        if cx.sp {
+            let (g, cs) = (&ws.g, &mut ws.cs1[l]);
+            cond_scale(cs, g, cx.p(pi.cond1_w), cx.p(pi.cond1_b), h);
+        }
+        {
+            let cs = if cx.sp { Some(ws.cs1[l].as_slice()) } else { None };
+            let (xhat, y1) = (&ws.xhat1[l], &mut ws.y1[l]);
+            affine_cond(y1, xhat, cx.p(pi.ln1_s), cx.p(pi.ln1_b), cs, n, h);
+        }
+        // attention (or token-local mixing) sub-layer
+        if cx.att {
+            let dh = d.dh();
+            matmul_nn(&mut ws.q[l], &ws.y1[l], cx.p(pi.wq), n, h, h, false);
+            matmul_nn(&mut ws.k[l], &ws.y1[l], cx.p(pi.wk), n, h, h, false);
+            matmul_nn(&mut ws.v[l], &ws.y1[l], cx.p(pi.wv), n, h, h, false);
+            for hh in 0..d.heads {
+                let off = hh * dh;
+                let (q, k, v) = (&ws.q[l], &ws.k[l], &ws.v[l]);
+                let p = &mut ws.attp[l][hh * n * n..(hh + 1) * n * n];
+                for i in 0..n {
+                    let qrow = &q[i * h + off..i * h + off + dh];
+                    let prow = &mut p[i * n..(i + 1) * n];
+                    let mut mx = f32::NEG_INFINITY;
+                    for j in 0..n {
+                        let s = if rin.node_mask[j] > 0.0 {
+                            dot(qrow, &k[j * h + off..j * h + off + dh]) * scale
+                        } else {
+                            NEG_INF
+                        };
+                        prow[j] = s;
+                        if s > mx {
+                            mx = s;
+                        }
+                    }
+                    let mut sum = 0f32;
+                    for pj in prow.iter_mut() {
+                        *pj = (*pj - mx).exp();
+                        sum += *pj;
+                    }
+                    let inv = 1.0 / sum;
+                    for pj in prow.iter_mut() {
+                        *pj *= inv;
+                    }
+                    // o_h[i] = sum_j P[i,j] v_h[j]
+                    let orow = &mut ws.ocat[l][i * h + off..i * h + off + dh];
+                    orow.fill(0.0);
+                    for j in 0..n {
+                        let c = prow[j];
+                        if c != 0.0 {
+                            for (o, &vv) in
+                                orow.iter_mut().zip(&v[j * h + off..j * h + off + dh])
+                            {
+                                *o += c * vv;
+                            }
+                        }
+                    }
+                }
+            }
+            matmul_nn(&mut ws.att[l], &ws.ocat[l], cx.p(pi.wo_w), n, h, h, false);
+            let wob = cx.p(pi.wo_b);
+            for v in 0..n {
+                for (z, &b) in ws.att[l][v * h..(v + 1) * h].iter_mut().zip(wob) {
+                    *z += b;
+                }
+            }
+        } else {
+            matmul_nn(&mut ws.att[l], &ws.y1[l], cx.p(pi.mix_w), n, h, h, false);
+            let mb = cx.p(pi.mix_b);
+            for v in 0..n {
+                for (z, &b) in ws.att[l][v * h..(v + 1) * h].iter_mut().zip(mb) {
+                    *z = (*z + b).max(0.0);
+                }
+            }
+        }
+        // residual 1
+        {
+            let (x_in, att, xmid) = (&ws.x[l], &ws.att[l], &mut ws.xmid[l]);
+            for v in 0..n {
+                let mask = rin.node_mask[v];
+                for j in 0..h {
+                    xmid[v * h + j] = x_in[v * h + j] + att[v * h + j] * mask;
+                }
+            }
+        }
+        // ln2 (+ cond2) + FFN
+        {
+            let (xmid, xhat, rstd) = (&ws.xmid[l], &mut ws.xhat2[l], &mut ws.rstd2[l]);
+            layer_norm(xmid, xhat, rstd, n, h);
+        }
+        if cx.sp {
+            let (g, cs) = (&ws.g, &mut ws.cs2[l]);
+            cond_scale(cs, g, cx.p(pi.cond2_w), cx.p(pi.cond2_b), h);
+        }
+        {
+            let cs = if cx.sp { Some(ws.cs2[l].as_slice()) } else { None };
+            let (xhat, y2) = (&ws.xhat2[l], &mut ws.y2[l]);
+            affine_cond(y2, xhat, cx.p(pi.ln2_s), cx.p(pi.ln2_b), cs, n, h);
+        }
+        matmul_nn(&mut ws.f1[l], &ws.y2[l], cx.p(pi.ffn1_w), n, h, ffn, false);
+        let f1b = cx.p(pi.ffn1_b);
+        for v in 0..n {
+            for (z, &b) in ws.f1[l][v * ffn..(v + 1) * ffn].iter_mut().zip(f1b) {
+                *z = (*z + b).max(0.0);
+            }
+        }
+        // ffn2 into scratch, then residual 2
+        matmul_nn(&mut ws.da, &ws.f1[l], cx.p(pi.ffn2_w), n, ffn, h, false);
+        let f2b = cx.p(pi.ffn2_b);
+        let (xmid, da, x_next) = (&ws.xmid[l], &ws.da, &mut ws.x[l + 1]);
+        for v in 0..n {
+            let mask = rin.node_mask[v];
+            for j in 0..h {
+                x_next[v * h + j] = xmid[v * h + j] + (da[v * h + j] + f2b[j]) * mask;
+            }
+        }
+    }
+
+    // --- head ---
+    let pl = d.placer_layers;
+    {
+        let (x_fin, xhat, rstd) = (&ws.x[pl], &mut ws.xhat_h, &mut ws.rstd_h);
+        layer_norm(x_fin, xhat, rstd, n, h);
+    }
+    if cx.sp {
+        let (hc_w, hc_b) = (ids.head_cond_w, ids.head_cond_b);
+        let (g, cs) = (&ws.g, &mut ws.cs_h);
+        cond_scale(cs, g, cx.p(hc_w), cx.p(hc_b), h);
+    }
+    {
+        let cs = if cx.sp { Some(ws.cs_h.as_slice()) } else { None };
+        let (xhat, xcond) = (&ws.xhat_h, &mut ws.xcond);
+        affine_cond(xcond, xhat, cx.p(ids.head_ln_s), cx.p(ids.head_ln_b), cs, n, h);
+    }
+    matmul_nn(&mut ws.logits, &ws.xcond, cx.p(ids.head_w), n, h, dd, false);
+    let hb = cx.p(ids.head_b);
+    for v in 0..n {
+        let row = &mut ws.logits[v * dd..(v + 1) * dd];
+        for j in 0..dd {
+            row[j] = if rin.dev_mask[j] > 0.0 { row[j] + hb[j] } else { NEG_INF };
+        }
+    }
+}

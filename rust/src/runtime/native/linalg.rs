@@ -1,0 +1,179 @@
+//! Blocked f32 matmul kernels and small vector helpers for the native
+//! policy engine. Row-major throughout. The panel blocking keeps one
+//! `NB`-wide stripe of the output and of `b` resident in L1 while the
+//! i–k–j inner loops stream `a` once; all inner loops are contiguous
+//! slice zips so the compiler auto-vectorizes them.
+
+/// Output-column panel width (f32s): 64 columns = one 256-byte stripe per
+/// accumulator row, comfortably inside L1 alongside the `b` panel.
+const NB: usize = 64;
+
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o += a * xv;
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (`+=` when `acc`).
+pub fn matmul_nn(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, acc: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + NB).min(n);
+        for i in 0..m {
+            let orow = &mut out[i * n + jb..i * n + je];
+            if !acc {
+                orow.fill(0.0);
+            }
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                // Zero-skip: padded node rows are exactly zero, and
+                // 0 * x contributes nothing (operands are finite).
+                if av != 0.0 {
+                    axpy(orow, av, &b[kk * n + jb..kk * n + je]);
+                }
+            }
+        }
+        jb = je;
+    }
+}
+
+/// `out[m,n] = a[m,k] @ b[n,k]^T` (`+=` when `acc`); both operands are
+/// walked along contiguous rows (dot products).
+pub fn matmul_nt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, acc: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let d = dot(arow, &b[j * k..(j + 1) * k]);
+            *o = if acc { *o + d } else { d };
+        }
+    }
+}
+
+/// `out[k,n] += a[m,k]^T @ b[m,n]` — the weight-gradient contraction.
+pub fn matmul_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let brow = &b[i * n..(i + 1) * n];
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                axpy(&mut out[kk * n..(kk + 1) * n], av, brow);
+            }
+        }
+    }
+}
+
+/// `out[j] += sum_i a[i,j]` — bias gradients.
+pub fn colsum_acc(out: &mut [f32], a: &[f32], n: usize) {
+    debug_assert_eq!(a.len() % n, 0);
+    for row in a.chunks_exact(n) {
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn fill(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..len).map(|_| (rng.next_f32() - 0.5) * 2.0).collect()
+    }
+
+    #[test]
+    fn nn_matches_naive_across_panel_boundaries() {
+        for (m, k, n) in [(3, 5, 7), (8, 16, 64), (5, 9, 130), (1, 1, 1)] {
+            let a = fill(m * k, 1);
+            let b = fill(k * n, 2);
+            let mut out = vec![0f32; m * n];
+            matmul_nn(&mut out, &a, &b, m, k, n, false);
+            let want = naive_nn(&a, &b, m, k, n);
+            for (x, y) in out.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_tn_consistent_with_nn() {
+        let (m, k, n) = (6, 10, 9);
+        let a = fill(m * k, 3);
+        let b = fill(k * n, 4);
+        // b^T stored as [n, k]
+        let mut bt = vec![0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let want = naive_nn(&a, &b, m, k, n);
+        let mut out = vec![0f32; m * n];
+        matmul_nt(&mut out, &a, &bt, m, k, n, false);
+        for (x, y) in out.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // a^T @ c via tn equals naive on transposed a
+        let c = fill(m * n, 5);
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let want2 = naive_nn(&at, &c, k, m, n);
+        let mut out2 = vec![0f32; k * n];
+        matmul_tn_acc(&mut out2, &a, &c, m, k, n);
+        for (x, y) in out2.iter().zip(&want2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn colsum_and_axpy() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = [1.0f32, 1.0];
+        colsum_acc(&mut out, &a, 2);
+        assert_eq!(out, [5.0, 7.0]);
+        let mut o = [1.0f32, 2.0];
+        axpy(&mut o, 2.0, &[10.0, 20.0]);
+        assert_eq!(o, [21.0, 42.0]);
+    }
+}

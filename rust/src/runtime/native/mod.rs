@@ -1,0 +1,532 @@
+//! Native policy engine: a from-scratch, pure-Rust execution engine for
+//! the exact policy defined in `python/compile/model.py` — forward
+//! (GraphSAGE GNN -> transformer placer with masked MHA + superposition
+//! conditioning -> device-masked logits) and training (PPO clipped
+//! objective, analytic backward for every layer, global-norm grad clip,
+//! Adam) — consuming the same sorted-key `ParamStore`/`Manifest` ABI and
+//! `Batch` literals as the PJRT path.
+//!
+//! Built for throughput in the PR-2 `SimPlan`/`SimWorkspace` style:
+//! - one preallocated [`PolicyWorkspace`] of flat row-major f32 buffers,
+//!   zero heap allocation per step after construction;
+//! - blocked matmul kernels ([`linalg`]);
+//! - scoped-thread parallelism across the B batch rows for both forward
+//!   and backward (per-row gradients reduced in fixed order, so results
+//!   are bit-identical for any thread count).
+
+pub mod init;
+pub mod linalg;
+mod bwd;
+mod fwd;
+mod workspace;
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::PolicyBackend;
+use super::exec::{Batch, TrainStats};
+use super::manifest::{Dims, Manifest};
+use super::params::ParamStore;
+pub use init::{init_flat, init_param_store};
+use workspace::{PolicyWorkspace, RowWs};
+
+const NEG_INF: f32 = -1e30;
+const EPS_LN: f32 = 1e-6;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+const GRAD_CLIP: f64 = 1.0;
+
+/// Parameter-tensor indices (into `ParamStore.values`) for one GNN layer.
+struct GnnIds {
+    agg_w: usize,
+    agg_b: usize,
+    comb_w: usize,
+    comb_b: usize,
+}
+
+/// Parameter-tensor indices for one placer layer. Attention and mix ids
+/// are mutually exclusive (variant flag); unused ones hold `usize::MAX`
+/// and are never read.
+struct PlIds {
+    ln1_s: usize,
+    ln1_b: usize,
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo_w: usize,
+    wo_b: usize,
+    mix_w: usize,
+    mix_b: usize,
+    ln2_s: usize,
+    ln2_b: usize,
+    ffn1_w: usize,
+    ffn1_b: usize,
+    ffn2_w: usize,
+    ffn2_b: usize,
+    cond1_w: usize,
+    cond1_b: usize,
+    cond2_w: usize,
+    cond2_b: usize,
+}
+
+struct Ids {
+    embed_w: usize,
+    embed_b: usize,
+    gnn: Vec<GnnIds>,
+    pl: Vec<PlIds>,
+    head_ln_s: usize,
+    head_ln_b: usize,
+    head_w: usize,
+    head_b: usize,
+    head_cond_w: usize,
+    head_cond_b: usize,
+}
+
+/// Everything a row worker needs, shareable across scoped threads.
+struct Ctx<'a> {
+    d: Dims,
+    att: bool,
+    sp: bool,
+    ids: &'a Ids,
+    offs: &'a [(usize, usize)],
+    store: &'a ParamStore,
+}
+
+impl<'a> Ctx<'a> {
+    /// Parameter tensor by id (dtype validated before the fan-out).
+    #[inline]
+    fn p(&self, id: usize) -> &'a [f32] {
+        self.store.values[id].f32_slice().expect("validated f32 param")
+    }
+
+    /// (offset, elements) of a tensor in the flat gradient buffer.
+    #[inline]
+    fn off(&self, id: usize) -> (usize, usize) {
+        self.offs[id]
+    }
+}
+
+/// One batch row's input slices.
+struct RowIn<'a> {
+    feats: &'a [f32],
+    nbr_idx: &'a [i32],
+    nbr_mask: &'a [f32],
+    node_mask: &'a [f32],
+    dev_mask: &'a [f32],
+}
+
+struct BatchView<'a> {
+    feats: &'a [f32],
+    nbr_idx: &'a [i32],
+    nbr_mask: &'a [f32],
+    node_mask: &'a [f32],
+    dev_mask: &'a [f32],
+}
+
+impl<'a> BatchView<'a> {
+    fn row(&self, d: Dims, bi: usize) -> RowIn<'a> {
+        RowIn {
+            feats: &self.feats[bi * d.n * d.f..(bi + 1) * d.n * d.f],
+            nbr_idx: &self.nbr_idx[bi * d.n * d.k..(bi + 1) * d.n * d.k],
+            nbr_mask: &self.nbr_mask[bi * d.n * d.k..(bi + 1) * d.n * d.k],
+            node_mask: &self.node_mask[bi * d.n..(bi + 1) * d.n],
+            dev_mask: &self.dev_mask[bi * d.d..(bi + 1) * d.d],
+        }
+    }
+}
+
+/// Run `f` once per row, fanning rows out over scoped threads when the
+/// per-row work is big enough to amortize a spawn. Rows are independent
+/// and each owns its buffers, so results are identical either way.
+fn for_each_row<F>(rows: &mut [RowWs], parallel: bool, f: F)
+where
+    F: Fn(usize, &mut RowWs) + Sync,
+{
+    if !parallel || rows.len() < 2 {
+        for (i, r) in rows.iter_mut().enumerate() {
+            f(i, r);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut iter = rows.iter_mut().enumerate();
+        let first = iter.next();
+        for (i, r) in iter {
+            let fr = &f;
+            s.spawn(move || fr(i, r));
+        }
+        if let Some((i, r)) = first {
+            f(i, r); // row 0 runs on the caller thread
+        }
+    });
+}
+
+/// The native `PolicyBackend`: see module docs.
+pub struct NativePolicy {
+    pub manifest: Manifest,
+    ids: Ids,
+    /// (offset, elements) per tensor, manifest order (flat grad layout).
+    offs: Vec<(usize, usize)>,
+    ws: Mutex<PolicyWorkspace>,
+    exec_secs: Cell<f64>,
+}
+
+impl NativePolicy {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        if manifest.variant == "segmented" {
+            bail!(
+                "the segmented variant's segment-level recurrence is not \
+                 implemented natively; use the pjrt backend with artifacts"
+            );
+        }
+        let d = manifest.dims;
+        if d.heads == 0 || d.h % d.heads != 0 {
+            bail!("H={} not divisible by heads={}", d.h, d.heads);
+        }
+        if d.d == 0 || d.n == 0 || d.b == 0 {
+            bail!("degenerate dims {:?}", d);
+        }
+        // ABI check: the manifest must be exactly the layout
+        // model.py::init_params emits for these dims + flags.
+        let expect = Manifest::synthesize(
+            d,
+            &manifest.variant,
+            manifest.use_attention,
+            manifest.use_superposition,
+        )?;
+        if expect.params.len() != manifest.params.len() {
+            bail!(
+                "manifest has {} params, native engine expects {} — ABI drift",
+                manifest.params.len(),
+                expect.params.len()
+            );
+        }
+        for (a, b) in expect.params.iter().zip(&manifest.params) {
+            if a.name != b.name || a.shape != b.shape || a.offset != b.offset {
+                bail!(
+                    "manifest param {:?} (shape {:?}, offset {}) != expected \
+                     {:?} (shape {:?}, offset {}) — ABI drift",
+                    b.name, b.shape, b.offset, a.name, a.shape, a.offset
+                );
+            }
+        }
+        let map: HashMap<&str, usize> = manifest
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.as_str(), i))
+            .collect();
+        let id = |name: String| -> Result<usize> {
+            map.get(name.as_str())
+                .copied()
+                .ok_or_else(|| anyhow!("manifest missing param {name}"))
+        };
+        let opt = |present: bool, name: String| -> Result<usize> {
+            if present { id(name) } else { Ok(usize::MAX) }
+        };
+        let att = manifest.use_attention;
+        let sp = manifest.use_superposition;
+        let mut gnn = Vec::with_capacity(d.gnn_layers);
+        for l in 0..d.gnn_layers {
+            gnn.push(GnnIds {
+                agg_w: id(format!("gnn{l}_agg_w"))?,
+                agg_b: id(format!("gnn{l}_agg_b"))?,
+                comb_w: id(format!("gnn{l}_comb_w"))?,
+                comb_b: id(format!("gnn{l}_comb_b"))?,
+            });
+        }
+        let mut pl = Vec::with_capacity(d.placer_layers);
+        for l in 0..d.placer_layers {
+            pl.push(PlIds {
+                ln1_s: id(format!("pl{l}_ln1_s"))?,
+                ln1_b: id(format!("pl{l}_ln1_b"))?,
+                wq: opt(att, format!("pl{l}_wq_w"))?,
+                wk: opt(att, format!("pl{l}_wk_w"))?,
+                wv: opt(att, format!("pl{l}_wv_w"))?,
+                wo_w: opt(att, format!("pl{l}_wo_w"))?,
+                wo_b: opt(att, format!("pl{l}_wo_b"))?,
+                mix_w: opt(!att, format!("pl{l}_mix_w"))?,
+                mix_b: opt(!att, format!("pl{l}_mix_b"))?,
+                ln2_s: id(format!("pl{l}_ln2_s"))?,
+                ln2_b: id(format!("pl{l}_ln2_b"))?,
+                ffn1_w: id(format!("pl{l}_ffn1_w"))?,
+                ffn1_b: id(format!("pl{l}_ffn1_b"))?,
+                ffn2_w: id(format!("pl{l}_ffn2_w"))?,
+                ffn2_b: id(format!("pl{l}_ffn2_b"))?,
+                cond1_w: opt(sp, format!("pl{l}_cond1_w"))?,
+                cond1_b: opt(sp, format!("pl{l}_cond1_b"))?,
+                cond2_w: opt(sp, format!("pl{l}_cond2_w"))?,
+                cond2_b: opt(sp, format!("pl{l}_cond2_b"))?,
+            });
+        }
+        let ids = Ids {
+            embed_w: id("embed_w".into())?,
+            embed_b: id("embed_b".into())?,
+            gnn,
+            pl,
+            head_ln_s: id("head_ln_s".into())?,
+            head_ln_b: id("head_ln_b".into())?,
+            head_w: id("head_w".into())?,
+            head_b: id("head_b".into())?,
+            head_cond_w: opt(sp, "head_cond_w".into())?,
+            head_cond_b: opt(sp, "head_cond_b".into())?,
+        };
+        let offs = manifest.params.iter().map(|p| (p.offset, p.elements)).collect();
+        let ws = Mutex::new(PolicyWorkspace::new(&manifest));
+        Ok(Self { manifest, ids, offs, ws, exec_secs: Cell::new(0.0) })
+    }
+
+    /// Native engine for a Rust-synthesized manifest (no artifacts).
+    pub fn for_variant(dims: Dims, variant: &str) -> Result<Self> {
+        Self::new(Manifest::synthesize_variant(dims, variant)?)
+    }
+
+    fn validate_store(&self, store: &ParamStore) -> Result<()> {
+        if store.num_tensors() != self.manifest.params.len() {
+            bail!(
+                "param store has {} tensors, manifest {}",
+                store.num_tensors(),
+                self.manifest.params.len()
+            );
+        }
+        for (i, p) in self.manifest.params.iter().enumerate() {
+            let v = store.values[i]
+                .f32_slice()
+                .map_err(|e| anyhow!("param {}: {e}", p.name))?;
+            if v.len() != p.elements {
+                bail!("param {} has {} elements, manifest {}", p.name, v.len(), p.elements);
+            }
+        }
+        Ok(())
+    }
+
+    fn batch_view<'a>(&self, batch: &'a Batch) -> Result<BatchView<'a>> {
+        let d = self.manifest.dims;
+        let bv = BatchView {
+            feats: batch.feats.f32_slice()?,
+            nbr_idx: batch.nbr_idx.i32_slice()?,
+            nbr_mask: batch.nbr_mask.f32_slice()?,
+            node_mask: batch.node_mask.f32_slice()?,
+            dev_mask: batch.dev_mask.f32_slice()?,
+        };
+        if bv.feats.len() != d.b * d.n * d.f
+            || bv.nbr_idx.len() != d.b * d.n * d.k
+            || bv.nbr_mask.len() != d.b * d.n * d.k
+            || bv.node_mask.len() != d.b * d.n
+            || bv.dev_mask.len() != d.b * d.d
+            || batch.real.len() != d.b
+        {
+            bail!("batch shapes do not match manifest dims");
+        }
+        // neighbor indices must stay inside the node axis
+        if bv.nbr_idx.iter().any(|&i| i < 0 || i as usize >= d.n) {
+            bail!("neighbor index out of range");
+        }
+        Ok(bv)
+    }
+
+    fn parallel_rows(&self) -> bool {
+        let d = self.manifest.dims;
+        // Tiny problems (gradcheck dims) run inline; production dims fan out.
+        d.b > 1 && d.n * d.h >= 2048
+    }
+
+    /// Forward + loss + backward for every row; per-row grads reduced into
+    /// `ws.grad_total` (manifest layout) in fixed row order. Returns
+    /// (loss, entropy, approx_kl) — all pre-clip, as `model.py` defines
+    /// them.
+    #[allow(clippy::too_many_arguments)]
+    fn compute_loss_and_grad(
+        &self,
+        store: &ParamStore,
+        batch: &Batch,
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        entropy_coef: f32,
+        ws: &mut PolicyWorkspace,
+    ) -> Result<(f64, f64, f64)> {
+        let d = self.manifest.dims;
+        if actions.len() != d.b * d.n || logp_old.len() != d.b * d.n {
+            bail!("actions/logp shape mismatch");
+        }
+        if adv.len() != d.b {
+            bail!("advantage shape mismatch");
+        }
+        self.validate_store(store)?;
+        let bv = self.batch_view(batch)?;
+        let mut nvalid = 0f32;
+        for bi in 0..d.b {
+            if batch.real[bi] {
+                nvalid += bv.row(d, bi).node_mask.iter().sum::<f32>();
+            }
+        }
+        let inv_nvalid = 1.0 / nvalid.max(1.0);
+        {
+            let cx = Ctx {
+                d,
+                att: self.manifest.use_attention,
+                sp: self.manifest.use_superposition,
+                ids: &self.ids,
+                offs: &self.offs,
+                store,
+            };
+            let real = &batch.real;
+            for_each_row(&mut ws.rows, self.parallel_rows(), |bi, row| {
+                let rin = bv.row(d, bi);
+                fwd::forward_row(&cx, &rin, row);
+                bwd::loss_backward_row(
+                    &cx,
+                    &rin,
+                    row,
+                    &actions[bi * d.n..(bi + 1) * d.n],
+                    &logp_old[bi * d.n..(bi + 1) * d.n],
+                    adv[bi],
+                    entropy_coef,
+                    inv_nvalid,
+                    if real[bi] { 1.0 } else { 0.0 },
+                );
+            });
+        }
+        let PolicyWorkspace { rows, grad_total } = ws;
+        grad_total.fill(0.0);
+        let (mut pg, mut ent, mut kl) = (0f64, 0f64, 0f64);
+        for row in rows.iter() {
+            for (gt, &g) in grad_total.iter_mut().zip(&row.grad) {
+                *gt += g;
+            }
+            pg += row.pg_sum;
+            ent += row.ent_sum;
+            kl += row.kl_sum;
+        }
+        let invn = inv_nvalid as f64;
+        let pg_loss = -pg * invn;
+        let entropy = ent * invn;
+        let loss = pg_loss - entropy_coef as f64 * entropy;
+        Ok((loss, entropy, kl * invn))
+    }
+
+    /// Loss + flat parameter gradients (manifest layout), pre-clip:
+    /// the finite-difference gradcheck surface.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_and_grad(
+        &self,
+        store: &ParamStore,
+        batch: &Batch,
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        entropy_coef: f32,
+    ) -> Result<(f64, Vec<f32>)> {
+        let mut ws = self.ws.lock().unwrap();
+        let (loss, _, _) = self.compute_loss_and_grad(
+            store, batch, actions, logp_old, adv, entropy_coef, &mut ws,
+        )?;
+        Ok((loss, ws.grad_total.clone()))
+    }
+
+    /// (pointer, capacity) hash over every workspace buffer; equality
+    /// across steps proves zero per-step (re)allocation.
+    pub fn workspace_fingerprint(&self) -> u64 {
+        self.ws.lock().unwrap().fingerprint()
+    }
+}
+
+impl PolicyBackend for NativePolicy {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn forward(&self, store: &ParamStore, batch: &Batch) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        self.validate_store(store)?;
+        let bv = self.batch_view(batch)?;
+        let d = self.manifest.dims;
+        let mut ws = self.ws.lock().unwrap();
+        {
+            let cx = Ctx {
+                d,
+                att: self.manifest.use_attention,
+                sp: self.manifest.use_superposition,
+                ids: &self.ids,
+                offs: &self.offs,
+                store,
+            };
+            for_each_row(&mut ws.rows, self.parallel_rows(), |bi, row| {
+                fwd::forward_row(&cx, &bv.row(d, bi), row);
+            });
+        }
+        let stride = d.n * d.d;
+        let mut out = vec![0f32; d.b * stride];
+        for (bi, row) in ws.rows.iter().enumerate() {
+            out[bi * stride..(bi + 1) * stride].copy_from_slice(&row.logits);
+        }
+        self.exec_secs.set(self.exec_secs.get() + t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        store: &mut ParamStore,
+        batch: &Batch,
+        actions: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        lr: f32,
+        entropy_coef: f32,
+    ) -> Result<TrainStats> {
+        let t0 = Instant::now();
+        let mut ws = self.ws.lock().unwrap();
+        let (loss, entropy, kl) = self.compute_loss_and_grad(
+            store, batch, actions, logp_old, adv, entropy_coef, &mut ws,
+        )?;
+        // global-norm clip (f64 accumulation for a stable norm)
+        let gn = (ws
+            .grad_total
+            .iter()
+            .map(|&g| g as f64 * g as f64)
+            .sum::<f64>()
+            + 1e-12)
+            .sqrt();
+        let scale = (GRAD_CLIP / gn).min(1.0) as f32;
+        // Adam, in place (t is the 1-based step for bias correction)
+        let t = store.step + 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        for (i, &(off, len)) in self.offs.iter().enumerate() {
+            let g = &ws.grad_total[off..off + len];
+            let val = store.values[i].f32_slice_mut()?;
+            let m = store.m[i].f32_slice_mut()?;
+            let v = store.v[i].f32_slice_mut()?;
+            for j in 0..len {
+                let gj = g[j] * scale;
+                m[j] = ADAM_B1 * m[j] + (1.0 - ADAM_B1) * gj;
+                v[j] = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * gj * gj;
+                let update = (m[j] / bc1) / ((v[j] / bc2).sqrt() + ADAM_EPS);
+                val[j] -= lr * update;
+            }
+        }
+        store.step += 1.0;
+        let secs = t0.elapsed().as_secs_f64();
+        self.exec_secs.set(self.exec_secs.get() + secs);
+        Ok(TrainStats {
+            loss: loss as f32,
+            entropy: entropy as f32,
+            approx_kl: kl as f32,
+            exec_secs: secs,
+        })
+    }
+
+    fn exec_secs_total(&self) -> f64 {
+        self.exec_secs.get()
+    }
+}

@@ -1,0 +1,211 @@
+//! Preallocated scratch for the native policy engine, in the PR-2
+//! `SimWorkspace` style: every buffer the forward/backward passes touch is
+//! sized once at construction from the manifest dims, so `policy_fwd` and
+//! `train_step` perform zero heap allocation per step. One `RowWs` per
+//! batch row makes the row fan-out embarrassingly parallel; the
+//! `fingerprint` hashes every buffer's (pointer, capacity) pair so tests
+//! can assert the workspace is genuinely reused (any reallocation moves a
+//! pointer or grows a capacity).
+
+use crate::runtime::manifest::Manifest;
+
+/// Per-batch-row activations (forward caches) + gradients (backward).
+pub struct RowWs {
+    // --- GNN caches ---
+    /// embed output, post-relu post-mask `[N,H]`
+    pub h0: Vec<f32>,
+    /// per layer: sigmoid(h @ agg) `[N,H]`
+    pub gnn_t: Vec<Vec<f32>>,
+    /// per layer: max-pooled neighbor features `[N,H]`
+    pub gnn_hn: Vec<Vec<f32>>,
+    /// per layer: arg-max source node per (v, h), `u32::MAX` = no neighbor
+    pub gnn_src: Vec<Vec<u32>>,
+    /// per layer: combine output, post-relu post-mask `[N,H]`
+    pub gnn_h: Vec<Vec<f32>>,
+    /// pooled graph embedding `[H]`
+    pub g: Vec<f32>,
+
+    // --- placer caches (one entry per layer unless noted) ---
+    /// residual stream inputs; `placer_layers + 1` entries of `[N,H]`
+    pub x: Vec<Vec<f32>>,
+    pub xhat1: Vec<Vec<f32>>,
+    pub rstd1: Vec<Vec<f32>>,
+    /// post-ln1-affine, post-cond1 (the q/k/v | mix input) `[N,H]`
+    pub y1: Vec<Vec<f32>>,
+    /// superposition scales, `[H]` each
+    pub cs1: Vec<Vec<f32>>,
+    pub cs2: Vec<Vec<f32>>,
+    pub q: Vec<Vec<f32>>,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// attention probabilities `[heads, N, N]` flattened
+    pub attp: Vec<Vec<f32>>,
+    /// concatenated per-head attention outputs `[N,H]`
+    pub ocat: Vec<Vec<f32>>,
+    /// attention/mix sub-layer output `[N,H]`
+    pub att: Vec<Vec<f32>>,
+    pub xmid: Vec<Vec<f32>>,
+    pub xhat2: Vec<Vec<f32>>,
+    pub rstd2: Vec<Vec<f32>>,
+    /// post-ln2-affine, post-cond2 (the ffn input) `[N,H]`
+    pub y2: Vec<Vec<f32>>,
+    /// post-relu ffn hidden `[N,ffn]`
+    pub f1: Vec<Vec<f32>>,
+
+    // --- head caches ---
+    pub xhat_h: Vec<f32>,
+    pub rstd_h: Vec<f32>,
+    pub cs_h: Vec<f32>,
+    /// post-head-ln, post-cond (the head matmul input) `[N,H]`
+    pub xcond: Vec<f32>,
+    /// device-masked logits `[N,D]`
+    pub logits: Vec<f32>,
+
+    // --- backward scratch ---
+    pub dlogits: Vec<f32>,
+    pub dx: Vec<f32>,
+    pub da: Vec<f32>,
+    pub db2: Vec<f32>,
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+    pub dp: Vec<f32>,
+    pub df1: Vec<f32>,
+    pub dhn: Vec<f32>,
+    pub dt: Vec<f32>,
+    pub dvec: Vec<f32>,
+    pub dg: Vec<f32>,
+    /// flat parameter gradients, manifest layout `[total_elements]`
+    pub grad: Vec<f32>,
+
+    // --- per-row loss partial sums (f64 for stable reduction) ---
+    pub pg_sum: f64,
+    pub ent_sum: f64,
+    pub kl_sum: f64,
+}
+
+fn zeros(len: usize) -> Vec<f32> {
+    vec![0f32; len]
+}
+
+fn per_layer(count: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..count).map(|_| zeros(len)).collect()
+}
+
+impl RowWs {
+    pub fn new(m: &Manifest) -> Self {
+        let d = m.dims;
+        let (n, h, ffn, dd) = (d.n, d.h, d.ffn, d.d);
+        let gl = d.gnn_layers;
+        let pl = d.placer_layers;
+        let att = m.use_attention;
+        let sp = m.use_superposition;
+        Self {
+            h0: zeros(n * h),
+            gnn_t: per_layer(gl, n * h),
+            gnn_hn: per_layer(gl, n * h),
+            gnn_src: (0..gl).map(|_| vec![u32::MAX; n * h]).collect(),
+            gnn_h: per_layer(gl, n * h),
+            g: zeros(h),
+            x: per_layer(pl + 1, n * h),
+            xhat1: per_layer(pl, n * h),
+            rstd1: per_layer(pl, n),
+            y1: per_layer(pl, n * h),
+            cs1: per_layer(if sp { pl } else { 0 }, h),
+            cs2: per_layer(if sp { pl } else { 0 }, h),
+            q: per_layer(if att { pl } else { 0 }, n * h),
+            k: per_layer(if att { pl } else { 0 }, n * h),
+            v: per_layer(if att { pl } else { 0 }, n * h),
+            attp: per_layer(if att { pl } else { 0 }, d.heads * n * n),
+            ocat: per_layer(if att { pl } else { 0 }, n * h),
+            att: per_layer(pl, n * h),
+            xmid: per_layer(pl, n * h),
+            xhat2: per_layer(pl, n * h),
+            rstd2: per_layer(pl, n),
+            y2: per_layer(pl, n * h),
+            f1: per_layer(pl, n * ffn),
+            xhat_h: zeros(n * h),
+            rstd_h: zeros(n),
+            cs_h: zeros(h),
+            xcond: zeros(n * h),
+            logits: zeros(n * dd),
+            dlogits: zeros(n * dd),
+            dx: zeros(n * h),
+            da: zeros(n * h),
+            db2: zeros(n * h),
+            dq: zeros(if att { n * h } else { 0 }),
+            dk: zeros(if att { n * h } else { 0 }),
+            dv: zeros(if att { n * h } else { 0 }),
+            dp: zeros(if att { n * n } else { 0 }),
+            df1: zeros(n * ffn),
+            dhn: zeros(n * h),
+            dt: zeros(n * h),
+            dvec: zeros(h),
+            dg: zeros(h),
+            grad: zeros(m.total_elements),
+            pg_sum: 0.0,
+            ent_sum: 0.0,
+            kl_sum: 0.0,
+        }
+    }
+
+    fn fingerprint_into(&self, h: &mut u64) {
+        fn f32s(h: &mut u64, v: &Vec<f32>) {
+            mix(h, v.as_ptr() as u64);
+            mix(h, v.capacity() as u64);
+        }
+        fn u32s(h: &mut u64, v: &Vec<u32>) {
+            mix(h, v.as_ptr() as u64);
+            mix(h, v.capacity() as u64);
+        }
+        fn mix(h: &mut u64, x: u64) {
+            *h = (*h ^ x).wrapping_mul(0x100000001B3);
+        }
+        for v in [&self.h0, &self.g, &self.xhat_h, &self.rstd_h, &self.cs_h,
+                  &self.xcond, &self.logits, &self.dlogits, &self.dx, &self.da,
+                  &self.db2, &self.dq, &self.dk, &self.dv, &self.dp, &self.df1,
+                  &self.dhn, &self.dt, &self.dvec, &self.dg, &self.grad] {
+            f32s(h, v);
+        }
+        for group in [&self.gnn_t, &self.gnn_hn, &self.gnn_h, &self.x,
+                      &self.xhat1, &self.rstd1, &self.y1, &self.cs1, &self.cs2,
+                      &self.q, &self.k, &self.v, &self.attp, &self.ocat,
+                      &self.att, &self.xmid, &self.xhat2, &self.rstd2,
+                      &self.y2, &self.f1] {
+            for v in group.iter() {
+                f32s(h, v);
+            }
+        }
+        for v in &self.gnn_src {
+            u32s(h, v);
+        }
+    }
+}
+
+/// All rows plus the cross-row gradient reduction buffer.
+pub struct PolicyWorkspace {
+    pub rows: Vec<RowWs>,
+    /// `sum_rows(grad)`, manifest layout `[total_elements]`
+    pub grad_total: Vec<f32>,
+}
+
+impl PolicyWorkspace {
+    pub fn new(m: &Manifest) -> Self {
+        Self {
+            rows: (0..m.dims.b).map(|_| RowWs::new(m)).collect(),
+            grad_total: zeros(m.total_elements),
+        }
+    }
+
+    /// Hash of every buffer's (pointer, capacity): stable across steps iff
+    /// no buffer was ever reallocated or grown.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for row in &self.rows {
+            row.fingerprint_into(&mut h);
+        }
+        h = (h ^ self.grad_total.as_ptr() as u64).wrapping_mul(0x100000001B3);
+        h = (h ^ self.grad_total.capacity() as u64).wrapping_mul(0x100000001B3);
+        h
+    }
+}

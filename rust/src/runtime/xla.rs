@@ -5,9 +5,10 @@
 //! marshalling is fully functional (flat f32/i32 buffers + dims), so the
 //! ParamStore checkpoint round-trips and Batch assembly work and are
 //! tested; compiling or executing an HLO module returns a descriptive
-//! error, which `Session::open` surfaces before any experiment runs. The
-//! runtime tests and benches already gate on `artifacts/` existing, so
-//! they skip cleanly under the stub.
+//! error, which `Session::open_with(.., BackendKind::Pjrt)` surfaces
+//! before any experiment runs. The default native backend
+//! (`runtime/native/`) executes the policy without this stub, so the
+//! runtime tests and benches run fully on a fresh checkout.
 
 use std::path::Path;
 
@@ -105,6 +106,30 @@ impl Literal {
 
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
         T::load(self)
+    }
+
+    /// Borrow the backing f32 buffer (native engine hot path: no copy).
+    pub fn f32_slice(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+
+    /// Mutably borrow the backing f32 buffer (in-place param/Adam updates).
+    pub fn f32_slice_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => Err(Error("literal holds i32, asked for f32".into())),
+        }
+    }
+
+    /// Borrow the backing i32 buffer.
+    pub fn i32_slice(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => Err(Error("literal holds f32, asked for i32".into())),
+        }
     }
 
     pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
