@@ -88,6 +88,10 @@ def lower_variant(dims: Dims, variant: Variant, out_dir: pathlib.Path,
         "variant": variant.name,
         "use_attention": variant.use_attention,
         "use_superposition": variant.use_superposition,
+        # Attention windows in the placer (1 = full attention). Serialized
+        # explicitly so the rust side never has to guess from the variant
+        # name: its parser prefers this key over the config.py fallback.
+        "segments": variant.segments,
         "dims": dims.to_json(),
         "seed": seed,
         "params": _param_entries(params),

@@ -64,7 +64,9 @@ def test_production_artifacts_consistent():
         has_cond = any("cond" in p["name"] for p in man["params"])
         assert has_cond == man["use_superposition"], variant
         if variant == "segmented":
-            assert man["dims"].get("segments", man.get("segments", 2)) or True
+            # older artifacts predate the explicit key (config.py fallback
+            # is 2 windows); regenerated ones must carry it
+            assert man.get("segments", 2) > 1, variant
 
 
 def test_tiny_lowered_fwd_executes_in_jax(tmp_path):

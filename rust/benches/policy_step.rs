@@ -1,8 +1,11 @@
 //! Bench: the GDP policy hot path through the NATIVE engine —
 //! `policy_fwd` latency, `train_step` (PPO + Adam) latency, rollout
-//! sampling, and the end-to-end PPO step — across model variants and a
-//! reduced-dims configuration. No artifacts required: manifests and init
-//! params are constructed in Rust.
+//! sampling, and the end-to-end PPO step — across model variants
+//! (the segmented recurrent placer included), a reduced-dims
+//! configuration, and a node-count scaling sweep pitting full
+//! attention's O(N²) scores against the segmented placer's O(N·W)
+//! windows. No artifacts required: manifests and init params are
+//! constructed in Rust.
 //!
 //! Results land in `BENCH_POLICY.json` (util::bench::BenchRecorder), the
 //! policy-side perf trajectory CI uploads next to `BENCH_SIM.json`.
@@ -28,12 +31,16 @@ fn main() {
     half.h = 32;
     half.ffn = 64;
     let cases: Vec<(&str, &str, Dims)> = if smoke {
-        vec![("full", "full", Dims::default_aot())]
+        vec![
+            ("full", "full", Dims::default_aot()),
+            ("segmented", "segmented", Dims::default_aot()),
+        ]
     } else {
         vec![
             ("full", "full", Dims::default_aot()),
             ("no_attention", "no_attention", Dims::default_aot()),
             ("no_superposition", "no_superposition", Dims::default_aot()),
+            ("segmented", "segmented", Dims::default_aot()),
             ("full_n128_h32", "full", half),
         ]
     };
@@ -66,6 +73,61 @@ fn main() {
             );
         });
         rec.add(format!("train_step/{key}"), ts);
+    }
+
+    // --- node-count scaling sweep: full attention's O(N²) score buffers
+    // vs the segmented placer's O(N·W) windows (W <= 128) at matched
+    // dims. Segmented alone continues past N=1024, where the quadratic
+    // buffers stop being reasonable — the regime the paper's 50k-node
+    // hold-outs (8-layer GNMT/RNNLM) live in. Each case also records the
+    // preallocated workspace footprint and the per-row attention-buffer
+    // element count in the JSON metrics.
+    println!("\n== node-count scaling: full vs segmented ==");
+    let both: &[usize] = if smoke { &[256] } else { &[128, 256, 512, 1024] };
+    let seg_only: &[usize] = if smoke { &[] } else { &[2048, 4096] };
+    let scale_cases = both
+        .iter()
+        .map(|&n| (n, true))
+        .chain(seg_only.iter().map(|&n| (n, false)));
+    for (n, with_full) in scale_cases {
+        let variants: &[&str] = if with_full { &["full", "segmented"] } else { &["segmented"] };
+        for variant in variants {
+            let mut d = Dims::default_aot();
+            d.n = n;
+            if *variant == "segmented" {
+                d.segments = (n / 128).max(2); // fixed W=128 window once N >= 256
+            }
+            let manifest = Manifest::synthesize_variant(d, variant).expect("manifest");
+            let policy = NativePolicy::new(manifest).expect("native policy");
+            let mut store = init_param_store(&policy.manifest, 0).expect("init params");
+            let fd = FeatDims { n, k: d.k, f: d.f, d: d.d };
+            let task = PlacementTask::from_workload("rnnlm2", fd, 0).expect("task");
+            let batch = Batch::from_rows(&policy.manifest, &[&task.feats]).expect("batch");
+            let key = format!("{variant}_n{n}");
+            let fwd = bench(&format!("policy_fwd [{key}]"), budget, || {
+                std::hint::black_box(policy.forward(&store, &batch).unwrap());
+            });
+            rec.add(format!("scale/policy_fwd/{key}"), fwd);
+            let actions = vec![0i32; d.b * d.n];
+            let logp = vec![-0.7f32; d.b * d.n];
+            let adv = vec![0.0f32; d.b];
+            let ts = bench(&format!("train_step [{key}]"), budget, || {
+                std::hint::black_box(
+                    policy
+                        .train_step(&mut store, &batch, &actions, &logp, &adv, 1e-8, 0.0)
+                        .unwrap(),
+                );
+            });
+            rec.add(format!("scale/train_step/{key}"), ts);
+            rec.metric(
+                format!("scale/workspace_bytes/{key}"),
+                policy.workspace_bytes() as f64,
+            );
+            rec.metric(
+                format!("scale/attention_elems_per_row/{key}"),
+                policy.attention_elems_per_row() as f64,
+            );
+        }
     }
 
     // rollout sampling over the full-dims logits

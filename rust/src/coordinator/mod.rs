@@ -25,9 +25,8 @@ use crate::runtime::{
 ///
 /// The policy engine sits behind [`PolicyBackend`]: `Native` (default)
 /// needs no artifacts — the manifest and init params are constructed in
-/// Rust when `artifacts/<variant>/` is absent — while `Pjrt` compiles the
-/// AOT HLO-text artifacts (and is the only backend for the `segmented`
-/// variant).
+/// Rust when `artifacts/<variant>/` is absent — and covers every variant
+/// including `segmented`; `Pjrt` compiles the AOT HLO-text artifacts.
 pub struct Session {
     pub policy: Box<dyn PolicyBackend>,
     pub artifacts_dir: PathBuf,

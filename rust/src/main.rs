@@ -8,9 +8,9 @@
 //!   experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
 //!
 //! Run `gdp <cmd> --help` for flags. train/infer/experiment run on the
-//! native policy backend out of the box; `--backend pjrt` (or
-//! `GDP_BACKEND=pjrt`) selects the AOT/PJRT path, which needs `make
-//! artifacts`.
+//! native policy backend out of the box — every variant, including the
+//! `segmented` recurrent placer; `--backend pjrt` (or `GDP_BACKEND=pjrt`)
+//! selects the AOT/PJRT path, which needs `make artifacts`.
 
 use std::path::PathBuf;
 
@@ -30,7 +30,7 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|experiment> [fl
   gdp trace <workload> --placement <human|metis|single> [--out trace.json]
   gdp train <workload> [<workload>...] [--graph ID[,ID...]] [--steps N]
             [--lr X] [--entropy X] [--ppo-epochs N] [--seed N]
-            [--variant full|no_attention|no_superposition]
+            [--variant full|no_attention|no_superposition|segmented]
             [--backend native|pjrt] [--artifacts DIR]
             [--save ckpt.bin] [--load ckpt.bin] [--quiet]
   gdp infer <workload> --load ckpt.bin [--samples N] [--variant V]

@@ -6,12 +6,12 @@
 //!   pure-Rust engine for the exact policy in `python/compile/model.py`
 //!   (forward + analytic backward + PPO/Adam), batch-parallel across rows,
 //!   zero allocation per step after construction. Needs no artifacts: the
-//!   manifest and init params are constructible in Rust.
+//!   manifest and init params are constructible in Rust. Covers all four
+//!   variants, including the `segmented` placer's segment-level
+//!   recurrence (O(N·W) windowed attention).
 //! - [`crate::runtime::Policy`] — the PJRT path executing the AOT HLO-text
 //!   artifacts from `python/compile/aot.py` (errors under the offline
-//!   stub, see `runtime/xla.rs`). The only backend for the `segmented`
-//!   variant, whose segment-level recurrence the native engine does not
-//!   implement.
+//!   stub, see `runtime/xla.rs`).
 //!
 //! Both consume the same sorted-key `ParamStore`/`Manifest` ABI and the
 //! same `Batch` literals, so checkpoints and batches are interchangeable.

@@ -21,6 +21,12 @@ pub struct Dims {
     pub placer_layers: usize,
     pub heads: usize,
     pub ffn: usize,
+    /// Attention windows in the placer (python `Variant.segments`):
+    /// 1 = full all-to-all attention; S > 1 = the paper's §3.2
+    /// segment-level recurrence, each window of `N / S` nodes attending
+    /// over itself plus the previous window's cached (stop-gradient)
+    /// hidden state.
+    pub segments: usize,
     pub clip_eps: f64,
 }
 
@@ -29,6 +35,19 @@ impl Dims {
     pub fn dh(&self) -> usize {
         debug_assert_eq!(self.h % self.heads.max(1), 0);
         self.h / self.heads.max(1)
+    }
+
+    /// Nodes per attention window (W = N / segments).
+    pub fn seg_len(&self) -> usize {
+        self.n / self.segments.max(1)
+    }
+
+    /// Keys/values one query window attends over: its own W rows plus,
+    /// when segmented, the previous window's W memory rows. This is the
+    /// width of the attention score buffers — O(N·W) total for the
+    /// segmented placer vs O(N²) for full attention.
+    pub fn kv_len(&self) -> usize {
+        if self.segments > 1 { 2 * self.seg_len() } else { self.n }
     }
 
     /// The production AOT dims from python/compile/config.py defaults.
@@ -44,6 +63,7 @@ impl Dims {
             placer_layers: 2,
             heads: 4,
             ffn: 128,
+            segments: 1,
             clip_eps: 0.2,
         }
     }
@@ -77,6 +97,11 @@ fn usize_field(v: &Json, key: &str) -> Result<usize> {
 impl Manifest {
     pub fn parse_str(text: &str) -> Result<Self> {
         let root = parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let variant = root
+            .get("variant")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
         let dims_v = root.get("dims").ok_or_else(|| anyhow!("missing dims"))?;
         let dims = Dims {
             n: usize_field(dims_v, "N")?,
@@ -94,6 +119,16 @@ impl Manifest {
                 .get("ffn")
                 .and_then(Json::as_usize)
                 .unwrap_or(2 * usize_field(dims_v, "H")?),
+            // `segments` lives on the python Variant, not Dims, so older
+            // manifests carry it at the top level or not at all; the
+            // fallback is config.py's VARIANTS entry (segmented = 2
+            // windows, every other variant = 1).
+            segments: root
+                .get("segments")
+                .and_then(Json::as_usize)
+                .or_else(|| dims_v.get("segments").and_then(Json::as_usize))
+                .unwrap_or(if variant == "segmented" { 2 } else { 1 })
+                .max(1),
             clip_eps: dims_v
                 .get("clip_eps")
                 .and_then(Json::as_f64)
@@ -143,11 +178,7 @@ impl Manifest {
             bail!("total_elements {total_elements} != sum {expected_offset}");
         }
         Ok(Self {
-            variant: root
-                .get("variant")
-                .and_then(Json::as_str)
-                .unwrap_or("unknown")
-                .to_string(),
+            variant,
             use_attention: root
                 .get("use_attention")
                 .and_then(Json::as_bool)
@@ -199,17 +230,28 @@ impl Manifest {
     }
 
     /// `synthesize` with flags looked up by variant name (config.py
-    /// VARIANTS). The `segmented` variant is PJRT-only: its segment-level
-    /// recurrence is not implemented by the native engine.
-    pub fn synthesize_variant(dims: Dims, variant: &str) -> Result<Self> {
+    /// VARIANTS). For `segmented`, `dims.segments` is honored when it is
+    /// already > 1 and otherwise falls back to config.py's 2 windows;
+    /// every other variant runs single-window (segments = 1).
+    pub fn synthesize_variant(mut dims: Dims, variant: &str) -> Result<Self> {
         let (att, sp) = match variant {
             "full" => (true, true),
             "no_attention" => (false, true),
             "no_superposition" => (true, false),
+            "segmented" => (true, true),
             other => bail!(
                 "cannot synthesize manifest for variant {other:?} \
-                 (known: full, no_attention, no_superposition)"
+                 (known: full, no_attention, no_superposition, segmented)"
             ),
+        };
+        dims.segments = if variant == "segmented" {
+            let s = dims.segments.max(2);
+            if dims.n % s != 0 {
+                bail!("N={} not divisible by segments={s}", dims.n);
+            }
+            s
+        } else {
+            1
         };
         Self::synthesize(dims, variant, att, sp)
     }
@@ -295,6 +337,30 @@ mod tests {
         assert_eq!(m.params.len(), 2);
         assert_eq!(m.params[1].offset, 6);
         assert_eq!(m.total_elements, 10);
+        // no segments key anywhere + variant != segmented -> single window
+        assert_eq!(m.dims.segments, 1);
+        assert_eq!(m.dims.seg_len(), 256);
+        assert_eq!(m.dims.kv_len(), 256);
+    }
+
+    #[test]
+    fn segments_fallbacks_follow_variant_and_keys() {
+        // python manifests predate the segments key: the segmented
+        // variant name implies config.py's 2 windows.
+        let seg = DOC.replace("\"variant\": \"full\"", "\"variant\": \"segmented\"");
+        let m = Manifest::parse_str(&seg).unwrap();
+        assert_eq!(m.dims.segments, 2);
+        assert_eq!(m.dims.seg_len(), 128);
+        assert_eq!(m.dims.kv_len(), 256, "window + previous-window memory");
+        // an explicit top-level key wins over the variant fallback
+        let explicit = seg.replace(
+            "\"variant\": \"segmented\",",
+            "\"variant\": \"segmented\", \"segments\": 4,",
+        );
+        let m = Manifest::parse_str(&explicit).unwrap();
+        assert_eq!(m.dims.segments, 4);
+        assert_eq!(m.dims.seg_len(), 64);
+        assert_eq!(m.dims.kv_len(), 128);
     }
 
     #[test]
@@ -309,7 +375,7 @@ mod tests {
     #[test]
     fn synthesized_manifest_passes_abi_invariants() {
         let dims = Dims::default_aot();
-        for variant in ["full", "no_attention", "no_superposition"] {
+        for variant in ["full", "no_attention", "no_superposition", "segmented"] {
             let m = Manifest::synthesize_variant(dims, variant).unwrap();
             // Round-trip through the strict parser's invariants: re-serialize
             // the sorted/contiguous layout by hand and re-check order.
@@ -327,7 +393,22 @@ mod tests {
         let full = Manifest::synthesize_variant(dims, "full").unwrap();
         let nosp = Manifest::synthesize_variant(dims, "no_superposition").unwrap();
         assert!(full.params.len() > nosp.params.len());
-        assert!(Manifest::synthesize_variant(dims, "segmented").is_err());
+        // segmented shares full's parameter set (the recurrence reuses the
+        // per-layer attention weights) but runs multi-window
+        let seg = Manifest::synthesize_variant(dims, "segmented").unwrap();
+        assert_eq!(seg.dims.segments, 2, "config.py VARIANTS fallback");
+        assert_eq!(
+            seg.params.iter().map(|p| &p.name).collect::<Vec<_>>(),
+            full.params.iter().map(|p| &p.name).collect::<Vec<_>>()
+        );
+        // a caller-chosen window count is honored; indivisible N is not
+        let mut d4 = dims;
+        d4.segments = 4;
+        assert_eq!(Manifest::synthesize_variant(d4, "segmented").unwrap().dims.segments, 4);
+        assert_eq!(Manifest::synthesize_variant(d4, "full").unwrap().dims.segments, 1);
+        let mut bad = dims;
+        bad.n = 250;
+        assert!(Manifest::synthesize_variant(bad, "segmented").is_err());
     }
 
     #[test]

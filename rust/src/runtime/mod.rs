@@ -2,7 +2,8 @@
 //!
 //! - `native/` — the default engine: a pure-Rust implementation of the
 //!   exact `python/compile/model.py` policy (forward + analytic backward
-//!   + PPO/Adam), batch-parallel, zero allocation per step, no artifacts
+//!   + PPO/Adam, every variant including the `segmented` recurrent
+//!   placer), batch-parallel, zero allocation per step, no artifacts
 //!   required (manifest + init params are constructible in Rust).
 //! - `exec`/`xla` — the PJRT path: loads the AOT HLO-text artifacts
 //!   produced by `python/compile/aot.py` and executes them on the CPU

@@ -10,8 +10,20 @@
 //!   normalized by the global valid-node count; `jnp.where` masks pass
 //!   gradient only to the taken branch, so masked devices and padded
 //!   nodes contribute exactly zero.
+//!
+//! Segment-level recurrence (paper §3.2): the attention memory is
+//! stop-gradded (`jax.lax.stop_gradient(mem)` in
+//! `model.py::placer_segmented`), so no activation gradient crosses a
+//! window boundary and windows backpropagate independently — but the
+//! memory rows still participate in the `wk`/`wv` weight contractions,
+//! because stop_gradient freezes the activation, not the weights that
+//! multiply it. Each window's backward therefore mirrors the full-path
+//! backward on its own rows, with dK/dV accumulated over the whole kv
+//! range and only the current-window slice flowing back into `y1`.
 
-use super::linalg::{axpy, colsum_acc, dot, matmul_nt, matmul_tn_acc};
+use super::linalg::{
+    axpy, colsum_acc, dot, gemm_nn, gemm_nt, gemm_tn_acc, matmul_nt, matmul_tn_acc,
+};
 use super::workspace::RowWs;
 use super::{Ctx, RowIn};
 
@@ -50,6 +62,221 @@ fn ln_backward_dx(
         for j in 0..h {
             dx[v * h + j] = r * (dyr[j] * s[j] - m1 - xhr[j] * m2);
         }
+    }
+}
+
+/// Backward through one window's masked MHA. On entry `ws.db2` holds
+/// d(ocat) on the window rows; on exit `ws.dq` (window rows) and
+/// `ws.dk`/`ws.dv` (kv rows) hold the projection gradients. All
+/// contractions are panel-blocked strided GEMMs over the per-head
+/// `[rows, dh]` panels: dP = dO·Vᵀ, softmax backward (pre-scaled),
+/// dQ += dS·K, dK += dSᵀ·Q, dV += Pᵀ·dO.
+fn attention_backward_window(cx: &Ctx, ws: &mut RowWs, l: usize, s: usize, qs: usize, qe: usize) {
+    let d = cx.d;
+    let (n, h, heads) = (d.n, d.h, d.heads);
+    let dh = d.dh();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (ks, ke) = ws.seg.kv_range(s);
+    let (m, kvn, kv_len) = (qe - qs, ke - ks, ws.seg.kv_len);
+    ws.dq[qs * h..qe * h].fill(0.0);
+    ws.dk[ks * h..ke * h].fill(0.0);
+    ws.dv[ks * h..ke * h].fill(0.0);
+    for hh in 0..heads {
+        let off = hh * dh;
+        let slab = hh * n * kv_len;
+        let pr = slab + qs * kv_len..slab + qe * kv_len;
+        // dP[i,j] = dot(d ocat_h[i], v_h[j])
+        gemm_nt(
+            &mut ws.seg.dp, kv_len,
+            &ws.db2[qs * h + off..qe * h], h,
+            &ws.v[l][ks * h + off..ke * h], h,
+            m, dh, kvn, false,
+        );
+        // dv_h[j] += sum_i P[i,j] * d ocat_h[i]
+        {
+            let p = &ws.seg.attp[l][pr.clone()];
+            gemm_tn_acc(
+                &mut ws.dv[ks * h + off..ke * h], h,
+                p, kv_len,
+                &ws.db2[qs * h + off..qe * h], h,
+                m, kvn, dh,
+            );
+        }
+        // dS = P .* (dP - rowsum(dP .* P)), pre-scaled, in place in dp
+        {
+            let p = &ws.seg.attp[l][pr];
+            for i in 0..m {
+                let prow = &p[i * kv_len..i * kv_len + kvn];
+                let dprow = &mut ws.seg.dp[i * kv_len..i * kv_len + kvn];
+                let sum = dot(dprow, prow);
+                for j in 0..kvn {
+                    dprow[j] = prow[j] * (dprow[j] - sum) * scale;
+                }
+            }
+        }
+        // dq_h = dS K_h ; dk_h = dS^T Q_h
+        gemm_nn(
+            &mut ws.dq[qs * h + off..qe * h], h,
+            &ws.seg.dp, kv_len,
+            &ws.k[l][ks * h + off..ke * h], h,
+            m, kvn, dh, true,
+        );
+        gemm_tn_acc(
+            &mut ws.dk[ks * h + off..ke * h], h,
+            &ws.seg.dp, kv_len,
+            &ws.q[l][qs * h + off..qe * h], h,
+            m, kvn, dh,
+        );
+    }
+}
+
+/// Backward through one placer layer on window rows `[qs, qe)`, the
+/// reverse of `fwd::placer_layer_window`: consumes d(x[l+1]) in `ws.dx`
+/// (window rows) and leaves d(x[l]) there, accumulating every parameter
+/// gradient along the way.
+fn placer_layer_backward_window(
+    cx: &Ctx,
+    rin: &RowIn,
+    ws: &mut RowWs,
+    l: usize,
+    s: usize,
+    qs: usize,
+    qe: usize,
+) {
+    let d = cx.d;
+    let (h, ffn) = (d.h, d.ffn);
+    let m = qe - qs;
+    let rh = qs * h..qe * h;
+    let rf = qs * ffn..qe * ffn;
+    let pi = &cx.ids.pl[l];
+    // x[l+1] = xmid + ffn_out * mask  =>  d ffn_out = dx * mask
+    for v in qs..qe {
+        let mask = rin.node_mask[v];
+        for j in 0..h {
+            ws.da[v * h + j] = ws.dx[v * h + j] * mask;
+        }
+    }
+    // ffn2
+    matmul_nt(&mut ws.df1[rf.clone()], &ws.da[rh.clone()], cx.p(pi.ffn2_w), m, h, ffn, false);
+    {
+        let (o, l_) = cx.off(pi.ffn2_w);
+        matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.f1[l][rf.clone()], &ws.da[rh.clone()], m, ffn, h);
+        let (o, l_) = cx.off(pi.ffn2_b);
+        colsum_acc(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], h);
+    }
+    // relu
+    for (g, &a) in ws.df1[rf.clone()].iter_mut().zip(&ws.f1[l][rf.clone()]) {
+        if a <= 0.0 {
+            *g = 0.0;
+        }
+    }
+    // ffn1: da <- dy2
+    matmul_nt(&mut ws.da[rh.clone()], &ws.df1[rf.clone()], cx.p(pi.ffn1_w), m, ffn, h, false);
+    {
+        let (o, l_) = cx.off(pi.ffn1_w);
+        matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y2[l][rh.clone()], &ws.df1[rf.clone()], m, h, ffn);
+        let (o, l_) = cx.off(pi.ffn1_b);
+        colsum_acc(&mut ws.grad[o..o + l_], &ws.df1[rf], ffn);
+    }
+    // cond2 + ln2; dx += ln2 input grad (residual already in dx)
+    if cx.sp {
+        cond_backward_inline(cx, ws, CondSite::Pl2(l), pi.ln2_s, pi.ln2_b, qs, qe);
+    }
+    {
+        let (o, l_) = cx.off(pi.ln2_s);
+        ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], &ws.xhat2[l][rh.clone()], m, h);
+        let (o, l_) = cx.off(pi.ln2_b);
+        colsum_acc(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], h);
+    }
+    ln_backward_dx(
+        &mut ws.db2[rh.clone()],
+        &ws.da[rh.clone()],
+        &ws.xhat2[l][rh.clone()],
+        &ws.rstd2[l][qs..qe],
+        cx.p(pi.ln2_s),
+        m,
+        h,
+    );
+    for (x, &y) in ws.dx[rh.clone()].iter_mut().zip(&ws.db2[rh.clone()]) {
+        *x += y; // dx now = d xmid
+    }
+    // xmid = x[l] + att * mask  =>  d att = dx * mask
+    for v in qs..qe {
+        let mask = rin.node_mask[v];
+        for j in 0..h {
+            ws.da[v * h + j] = ws.dx[v * h + j] * mask;
+        }
+    }
+    if cx.att {
+        // wo: att = ocat @ wo_w + wo_b
+        matmul_nt(&mut ws.db2[rh.clone()], &ws.da[rh.clone()], cx.p(pi.wo_w), m, h, h, false); // db2 = d ocat
+        {
+            let (o, l_) = cx.off(pi.wo_w);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.ocat[l][rh.clone()], &ws.da[rh.clone()], m, h, h);
+            let (o, l_) = cx.off(pi.wo_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], h);
+        }
+        attention_backward_window(cx, ws, l, s, qs, qe);
+        // back through the q/k/v projections: da <- dy1. Only the window's
+        // own rows flow to y1 — the memory rows' activation gradient is
+        // stopped at the window boundary (sg(mem)).
+        matmul_nt(&mut ws.da[rh.clone()], &ws.dq[rh.clone()], cx.p(pi.wq), m, h, h, false);
+        matmul_nt(&mut ws.da[rh.clone()], &ws.dk[rh.clone()], cx.p(pi.wk), m, h, h, true);
+        matmul_nt(&mut ws.da[rh.clone()], &ws.dv[rh.clone()], cx.p(pi.wv), m, h, h, true);
+        // weight grads contract over every kv row, memory included:
+        // stop_gradient freezes the activation, not the weights.
+        let (ks, ke) = ws.seg.kv_range(s);
+        let rkv = ks * h..ke * h;
+        let kvn = ke - ks;
+        {
+            let (o, l_) = cx.off(pi.wq);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l][rh.clone()], &ws.dq[rh.clone()], m, h, h);
+        }
+        {
+            let (o, l_) = cx.off(pi.wk);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l][rkv.clone()], &ws.dk[rkv.clone()], kvn, h, h);
+        }
+        {
+            let (o, l_) = cx.off(pi.wv);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l][rkv.clone()], &ws.dv[rkv], kvn, h, h);
+        }
+    } else {
+        // mix: att = relu(y1 @ mix_w + mix_b)
+        for (g, &a) in ws.da[rh.clone()].iter_mut().zip(&ws.att[l][rh.clone()]) {
+            if a <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        matmul_nt(&mut ws.db2[rh.clone()], &ws.da[rh.clone()], cx.p(pi.mix_w), m, h, h, false);
+        {
+            let (o, l_) = cx.off(pi.mix_w);
+            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l][rh.clone()], &ws.da[rh.clone()], m, h, h);
+            let (o, l_) = cx.off(pi.mix_b);
+            colsum_acc(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], h);
+        }
+        ws.da[rh.clone()].copy_from_slice(&ws.db2[rh.clone()]); // da = dy1
+    }
+    // cond1 + ln1; dx += ln1 input grad
+    if cx.sp {
+        cond_backward_inline(cx, ws, CondSite::Pl1(l), pi.ln1_s, pi.ln1_b, qs, qe);
+    }
+    {
+        let (o, l_) = cx.off(pi.ln1_s);
+        ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], &ws.xhat1[l][rh.clone()], m, h);
+        let (o, l_) = cx.off(pi.ln1_b);
+        colsum_acc(&mut ws.grad[o..o + l_], &ws.da[rh.clone()], h);
+    }
+    ln_backward_dx(
+        &mut ws.db2[rh.clone()],
+        &ws.da[rh.clone()],
+        &ws.xhat1[l][rh.clone()],
+        &ws.rstd1[l][qs..qe],
+        cx.p(pi.ln1_s),
+        m,
+        h,
+    );
+    for (x, &y) in ws.dx[rh.clone()].iter_mut().zip(&ws.db2[rh]) {
+        *x += y; // dx now = grad wrt x[l] on these rows
     }
 }
 
@@ -129,9 +356,7 @@ pub(super) fn loss_backward_row(
     }
     // head cond + head ln -> dx (grad wrt x[placer_layers])
     if cx.sp {
-        cond_backward_inline(
-            cx, ws, CondSite::Head, ids.head_ln_s, ids.head_ln_b, n, h,
-        );
+        cond_backward_inline(cx, ws, CondSite::Head, ids.head_ln_s, ids.head_ln_b, 0, n);
     }
     {
         let (o, l_) = cx.off(ids.head_ln_s);
@@ -141,156 +366,14 @@ pub(super) fn loss_backward_row(
     }
     ln_backward_dx(&mut ws.dx, &ws.da, &ws.xhat_h, &ws.rstd_h, cx.p(ids.head_ln_s), n, h);
 
-    // --- placer layers, reverse ---
-    let scale = 1.0 / (d.dh() as f32).sqrt();
-    for l in (0..d.placer_layers).rev() {
-        let pi = &ids.pl[l];
-        let ffn = d.ffn;
-        // x[l+1] = xmid + ffn_out * mask  =>  d ffn_out = dx * mask
-        for v in 0..n {
-            let mask = rin.node_mask[v];
-            for j in 0..h {
-                ws.da[v * h + j] = ws.dx[v * h + j] * mask;
-            }
-        }
-        // ffn2
-        matmul_nt(&mut ws.df1, &ws.da, cx.p(pi.ffn2_w), n, h, ffn, false);
-        {
-            let (o, l_) = cx.off(pi.ffn2_w);
-            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.f1[l], &ws.da, n, ffn, h);
-            let (o, l_) = cx.off(pi.ffn2_b);
-            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
-        }
-        // relu
-        for (g, &a) in ws.df1.iter_mut().zip(&ws.f1[l]) {
-            if a <= 0.0 {
-                *g = 0.0;
-            }
-        }
-        // ffn1: da <- dy2
-        matmul_nt(&mut ws.da, &ws.df1, cx.p(pi.ffn1_w), n, ffn, h, false);
-        {
-            let (o, l_) = cx.off(pi.ffn1_w);
-            matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y2[l], &ws.df1, n, h, ffn);
-            let (o, l_) = cx.off(pi.ffn1_b);
-            colsum_acc(&mut ws.grad[o..o + l_], &ws.df1, ffn);
-        }
-        // cond2 + ln2; dx += ln2 input grad (residual already in dx)
-        if cx.sp {
-            cond_backward_inline(cx, ws, CondSite::Pl2(l), pi.ln2_s, pi.ln2_b, n, h);
-        }
-        {
-            let (o, l_) = cx.off(pi.ln2_s);
-            ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da, &ws.xhat2[l], n, h);
-            let (o, l_) = cx.off(pi.ln2_b);
-            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
-        }
-        ln_backward_dx(&mut ws.db2, &ws.da, &ws.xhat2[l], &ws.rstd2[l], cx.p(pi.ln2_s), n, h);
-        for (x, &y) in ws.dx.iter_mut().zip(&ws.db2) {
-            *x += y; // dx now = d xmid
-        }
-        // xmid = x[l] + att * mask  =>  d att = dx * mask
-        for v in 0..n {
-            let mask = rin.node_mask[v];
-            for j in 0..h {
-                ws.da[v * h + j] = ws.dx[v * h + j] * mask;
-            }
-        }
-        if cx.att {
-            // wo: att = ocat @ wo_w + wo_b
-            matmul_nt(&mut ws.db2, &ws.da, cx.p(pi.wo_w), n, h, h, false); // db2 = d ocat
-            {
-                let (o, l_) = cx.off(pi.wo_w);
-                matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.ocat[l], &ws.da, n, h, h);
-                let (o, l_) = cx.off(pi.wo_b);
-                colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
-            }
-            let dh = d.dh();
-            ws.dq.fill(0.0);
-            ws.dk.fill(0.0);
-            ws.dv.fill(0.0);
-            for hh in 0..d.heads {
-                let off = hh * dh;
-                // dP[i,j] = dot(d ocat_h[i], v_h[j])
-                for i in 0..n {
-                    let drow = &ws.db2[i * h + off..i * h + off + dh];
-                    for j in 0..n {
-                        ws.dp[i * n + j] =
-                            dot(drow, &ws.v[l][j * h + off..j * h + off + dh]);
-                    }
-                }
-                // dv_h[j] += sum_i P[i,j] * d ocat_h[i]
-                let p = &ws.attp[l][hh * n * n..(hh + 1) * n * n];
-                for i in 0..n {
-                    let drow = &ws.db2[i * h + off..i * h + off + dh];
-                    for j in 0..n {
-                        let c = p[i * n + j];
-                        if c != 0.0 {
-                            for t in 0..dh {
-                                ws.dv[j * h + off + t] += c * drow[t];
-                            }
-                        }
-                    }
-                }
-                // dS = P .* (dP - rowsum(dP .* P)), in place in dp
-                for i in 0..n {
-                    let prow = &p[i * n..(i + 1) * n];
-                    let dprow = &mut ws.dp[i * n..(i + 1) * n];
-                    let s = dot(dprow, prow);
-                    for j in 0..n {
-                        dprow[j] = prow[j] * (dprow[j] - s);
-                    }
-                }
-                // dq_h = scale * dS K_h ; dk_h = scale * dS^T Q_h
-                for i in 0..n {
-                    for j in 0..n {
-                        let c = ws.dp[i * n + j] * scale;
-                        if c != 0.0 {
-                            for t in 0..dh {
-                                ws.dq[i * h + off + t] += c * ws.k[l][j * h + off + t];
-                                ws.dk[j * h + off + t] += c * ws.q[l][i * h + off + t];
-                            }
-                        }
-                    }
-                }
-            }
-            // back through the q/k/v projections: da <- dy1
-            matmul_nt(&mut ws.da, &ws.dq, cx.p(pi.wq), n, h, h, false);
-            matmul_nt(&mut ws.da, &ws.dk, cx.p(pi.wk), n, h, h, true);
-            matmul_nt(&mut ws.da, &ws.dv, cx.p(pi.wv), n, h, h, true);
-            for (id, dz) in [(pi.wq, &ws.dq), (pi.wk, &ws.dk), (pi.wv, &ws.dv)] {
-                let (o, l_) = cx.off(id);
-                matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l], dz, n, h, h);
-            }
-        } else {
-            // mix: att = relu(y1 @ mix_w + mix_b)
-            for (g, &a) in ws.da.iter_mut().zip(&ws.att[l]) {
-                if a <= 0.0 {
-                    *g = 0.0;
-                }
-            }
-            matmul_nt(&mut ws.db2, &ws.da, cx.p(pi.mix_w), n, h, h, false);
-            {
-                let (o, l_) = cx.off(pi.mix_w);
-                matmul_tn_acc(&mut ws.grad[o..o + l_], &ws.y1[l], &ws.da, n, h, h);
-                let (o, l_) = cx.off(pi.mix_b);
-                colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
-            }
-            ws.da.copy_from_slice(&ws.db2); // da = dy1
-        }
-        // cond1 + ln1; dx += ln1 input grad
-        if cx.sp {
-            cond_backward_inline(cx, ws, CondSite::Pl1(l), pi.ln1_s, pi.ln1_b, n, h);
-        }
-        {
-            let (o, l_) = cx.off(pi.ln1_s);
-            ln_grad_scale(&mut ws.grad[o..o + l_], &ws.da, &ws.xhat1[l], n, h);
-            let (o, l_) = cx.off(pi.ln1_b);
-            colsum_acc(&mut ws.grad[o..o + l_], &ws.da, h);
-        }
-        ln_backward_dx(&mut ws.db2, &ws.da, &ws.xhat1[l], &ws.rstd1[l], cx.p(pi.ln1_s), n, h);
-        for (x, &y) in ws.dx.iter_mut().zip(&ws.db2) {
-            *x += y; // dx now = grad wrt x[l]
+    // --- placer windows: gradient-independent of each other (the
+    // stop-gradient memory cuts every cross-window activation path), so
+    // each runs its own reverse layer sweep; ascending window order keeps
+    // the parameter-gradient reduction order fixed ---
+    let (segs, seg_len) = (ws.seg.segments, ws.seg.seg_len);
+    for s in 0..segs {
+        for l in (0..d.placer_layers).rev() {
+            placer_layer_backward_window(cx, rin, ws, l, s, s * seg_len, (s + 1) * seg_len);
         }
     }
 
@@ -386,18 +469,21 @@ enum CondSite {
     Pl2(usize),
 }
 
-/// Backward through `y = (xhat*s + b) * cs`, `cs = 2*sigmoid(g@W + b)`:
-/// consumes `ws.da` as dy (rescaling it in place to d(affine)), and
-/// accumulates cond-param grads plus `ws.dg`.
+/// Backward through `y = (xhat*s + b) * cs`, `cs = 2*sigmoid(g@W + b)`,
+/// over rows `[qs, qe)`: consumes `ws.da` as dy (rescaling those rows in
+/// place to d(affine)), and accumulates cond-param grads plus `ws.dg`.
+/// Window calls accumulate — the per-site total over all windows equals
+/// the full-rows sum.
 fn cond_backward_inline(
     cx: &Ctx,
     ws: &mut RowWs,
     site: CondSite,
     ln_s: usize,
     ln_b: usize,
-    n: usize,
-    h: usize,
+    qs: usize,
+    qe: usize,
 ) {
+    let h = cx.d.h;
     let (cond_w, cond_b) = match site {
         CondSite::Head => (cx.ids.head_cond_w, cx.ids.head_cond_b),
         CondSite::Pl1(l) => (cx.ids.pl[l].cond1_w, cx.ids.pl[l].cond1_b),
@@ -412,7 +498,7 @@ fn cond_backward_inline(
             CondSite::Pl2(l) => &ws.xhat2[l],
         };
         let (s, b) = (cx.p(ln_s), cx.p(ln_b));
-        for v in 0..n {
+        for v in qs..qe {
             for j in 0..h {
                 let ya = xhat[v * h + j] * s[j] + b[j];
                 ws.dvec[j] += ws.da[v * h + j] * ya;
@@ -426,7 +512,7 @@ fn cond_backward_inline(
             CondSite::Pl1(l) => &ws.cs1[l],
             CondSite::Pl2(l) => &ws.cs2[l],
         };
-        for v in 0..n {
+        for v in qs..qe {
             for j in 0..h {
                 ws.da[v * h + j] *= cs[j];
             }

@@ -1,10 +1,20 @@
 //! Native forward pass for one batch row: GraphSAGE embedding (Eq. 2-3),
 //! transformer placer with masked MHA + superposition conditioning
 //! (Eq. 4), head, device-masked logits. Mirrors
-//! `python/compile/model.py::{graph_embed, placer}` (segments == 1) op
+//! `python/compile/model.py::{graph_embed, placer, placer_segmented}` op
 //! for op; every intermediate the backward pass needs lands in `RowWs`.
+//!
+//! The placer runs in `segments` attention windows (paper §3.2,
+//! Transformer-XL style): layer *l* of window *s* attends over
+//! `concat(sg(mem), x)` where `mem` is layer *l*'s input (post-ln1,
+//! post-conditioning `y1`) from window *s−1*. Because that memory is just
+//! the previous window's rows of the shared `[N, H]` per-layer buffers,
+//! a window's keys/values are the contiguous row range
+//! `SegWs::kv_range(s)` and full attention is simply the single-window
+//! case — both paths share the same blocked-GEMM attention kernels and
+//! O(N·kv_len) score buffers.
 
-use super::linalg::{dot, matmul_nn, sigmoid};
+use super::linalg::{gemm_nn, gemm_nt, matmul_nn, sigmoid};
 use super::workspace::RowWs;
 use super::{Ctx, RowIn, EPS_LN, NEG_INF};
 
@@ -65,9 +75,167 @@ fn affine_cond(
     }
 }
 
+/// Masked multi-head attention for query window `s` (rows `[qs, qe)`):
+/// scores and probabilities live in the `[heads, N, kv_len]` slab of
+/// `SegWs`; Q·Kᵀ and P·V run as panel-blocked strided GEMMs over the
+/// per-head `[rows, dh]` panels of the `[N, H]` q/k/v buffers. Masked
+/// keys score `NEG_INF` and underflow to exact 0 probability.
+fn attention_window(
+    cx: &Ctx,
+    rin: &RowIn,
+    ws: &mut RowWs,
+    l: usize,
+    s: usize,
+    qs: usize,
+    qe: usize,
+) {
+    let d = cx.d;
+    let (n, h, heads) = (d.n, d.h, d.heads);
+    let dh = d.dh();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (ks, ke) = ws.seg.kv_range(s);
+    let (m, kvn, kv_len) = (qe - qs, ke - ks, ws.seg.kv_len);
+    for hh in 0..heads {
+        let off = hh * dh;
+        let slab = hh * n * kv_len;
+        let pr = slab + qs * kv_len..slab + qe * kv_len;
+        {
+            let (q, k) = (&ws.q[l], &ws.k[l]);
+            let p = &mut ws.seg.attp[l][pr.clone()];
+            // raw scores: Q_h[qs..qe] · K_h[ks..ke]^T
+            gemm_nt(
+                p, kv_len,
+                &q[qs * h + off..qe * h], h,
+                &k[ks * h + off..ke * h], h,
+                m, dh, kvn, false,
+            );
+            // scale + node-mask + row softmax
+            for i in 0..m {
+                let prow = &mut p[i * kv_len..i * kv_len + kvn];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, pv) in prow.iter_mut().enumerate() {
+                    *pv = if rin.node_mask[ks + j] > 0.0 { *pv * scale } else { NEG_INF };
+                    if *pv > mx {
+                        mx = *pv;
+                    }
+                }
+                let mut sum = 0f32;
+                for pv in prow.iter_mut() {
+                    *pv = (*pv - mx).exp();
+                    sum += *pv;
+                }
+                let inv = 1.0 / sum;
+                for pv in prow.iter_mut() {
+                    *pv *= inv;
+                }
+            }
+        }
+        // O_h[qs..qe] = P · V_h[ks..ke]
+        let p = &ws.seg.attp[l][pr];
+        gemm_nn(
+            &mut ws.ocat[l][qs * h + off..qe * h], h,
+            p, kv_len,
+            &ws.v[l][ks * h + off..ke * h], h,
+            m, kvn, dh, false,
+        );
+    }
+}
+
+/// One placer layer applied to window rows `[qs, qe)`: ln1 (+ cond1),
+/// attention over the window's kv range (or token-local mixing),
+/// residual, ln2 (+ cond2), FFN, residual — the exact op order of
+/// `model.py::placer_segmented`, which reduces to `placer` at one window.
+fn placer_layer_window(
+    cx: &Ctx,
+    rin: &RowIn,
+    ws: &mut RowWs,
+    l: usize,
+    s: usize,
+    qs: usize,
+    qe: usize,
+) {
+    let d = cx.d;
+    let (h, ffn) = (d.h, d.ffn);
+    let m = qe - qs;
+    let rh = qs * h..qe * h;
+    let pi = &cx.ids.pl[l];
+    // ln1 (+ cond1)
+    {
+        let (x_in, xhat, rstd) =
+            (&ws.x[l][rh.clone()], &mut ws.xhat1[l][rh.clone()], &mut ws.rstd1[l][qs..qe]);
+        layer_norm(x_in, xhat, rstd, m, h);
+    }
+    {
+        let cs = if cx.sp { Some(ws.cs1[l].as_slice()) } else { None };
+        let (xhat, y1) = (&ws.xhat1[l][rh.clone()], &mut ws.y1[l][rh.clone()]);
+        affine_cond(y1, xhat, cx.p(pi.ln1_s), cx.p(pi.ln1_b), cs, m, h);
+    }
+    // attention (or token-local mixing) sub-layer
+    if cx.att {
+        matmul_nn(&mut ws.q[l][rh.clone()], &ws.y1[l][rh.clone()], cx.p(pi.wq), m, h, h, false);
+        matmul_nn(&mut ws.k[l][rh.clone()], &ws.y1[l][rh.clone()], cx.p(pi.wk), m, h, h, false);
+        matmul_nn(&mut ws.v[l][rh.clone()], &ws.y1[l][rh.clone()], cx.p(pi.wv), m, h, h, false);
+        attention_window(cx, rin, ws, l, s, qs, qe);
+        matmul_nn(&mut ws.att[l][rh.clone()], &ws.ocat[l][rh.clone()], cx.p(pi.wo_w), m, h, h, false);
+        let wob = cx.p(pi.wo_b);
+        for v in qs..qe {
+            for (z, &b) in ws.att[l][v * h..(v + 1) * h].iter_mut().zip(wob) {
+                *z += b;
+            }
+        }
+    } else {
+        matmul_nn(&mut ws.att[l][rh.clone()], &ws.y1[l][rh.clone()], cx.p(pi.mix_w), m, h, h, false);
+        let mb = cx.p(pi.mix_b);
+        for v in qs..qe {
+            for (z, &b) in ws.att[l][v * h..(v + 1) * h].iter_mut().zip(mb) {
+                *z = (*z + b).max(0.0);
+            }
+        }
+    }
+    // residual 1
+    {
+        let (x_in, att, xmid) = (&ws.x[l], &ws.att[l], &mut ws.xmid[l]);
+        for v in qs..qe {
+            let mask = rin.node_mask[v];
+            for j in 0..h {
+                xmid[v * h + j] = x_in[v * h + j] + att[v * h + j] * mask;
+            }
+        }
+    }
+    // ln2 (+ cond2) + FFN
+    {
+        let (xmid, xhat, rstd) =
+            (&ws.xmid[l][rh.clone()], &mut ws.xhat2[l][rh.clone()], &mut ws.rstd2[l][qs..qe]);
+        layer_norm(xmid, xhat, rstd, m, h);
+    }
+    {
+        let cs = if cx.sp { Some(ws.cs2[l].as_slice()) } else { None };
+        let (xhat, y2) = (&ws.xhat2[l][rh.clone()], &mut ws.y2[l][rh.clone()]);
+        affine_cond(y2, xhat, cx.p(pi.ln2_s), cx.p(pi.ln2_b), cs, m, h);
+    }
+    let rf = qs * ffn..qe * ffn;
+    matmul_nn(&mut ws.f1[l][rf.clone()], &ws.y2[l][rh.clone()], cx.p(pi.ffn1_w), m, h, ffn, false);
+    let f1b = cx.p(pi.ffn1_b);
+    for v in qs..qe {
+        for (z, &b) in ws.f1[l][v * ffn..(v + 1) * ffn].iter_mut().zip(f1b) {
+            *z = (*z + b).max(0.0);
+        }
+    }
+    // ffn2 into scratch, then residual 2
+    matmul_nn(&mut ws.da[rh.clone()], &ws.f1[l][rf], cx.p(pi.ffn2_w), m, ffn, h, false);
+    let f2b = cx.p(pi.ffn2_b);
+    let (xmid, da, x_next) = (&ws.xmid[l], &ws.da, &mut ws.x[l + 1]);
+    for v in qs..qe {
+        let mask = rin.node_mask[v];
+        for j in 0..h {
+            x_next[v * h + j] = xmid[v * h + j] + (da[v * h + j] + f2b[j]) * mask;
+        }
+    }
+}
+
 pub(super) fn forward_row(cx: &Ctx, rin: &RowIn, ws: &mut RowWs) {
     let d = cx.d;
-    let (n, h, f, dd, ffn) = (d.n, d.h, d.f, d.d, d.ffn);
+    let (n, h, f, dd) = (d.n, d.h, d.f, d.d);
     let ids = cx.ids;
 
     // --- embed: h0 = relu(feats @ W + b) * node_mask ---
@@ -157,130 +325,30 @@ pub(super) fn forward_row(cx: &Ctx, rin: &RowIn, ws: &mut RowWs) {
         *o /= denom;
     }
 
-    // --- placer layers ---
+    // --- superposition gates: depend only on g, shared by every window ---
+    if cx.sp {
+        for l in 0..d.placer_layers {
+            let pi = &ids.pl[l];
+            {
+                let (g, cs) = (&ws.g, &mut ws.cs1[l]);
+                cond_scale(cs, g, cx.p(pi.cond1_w), cx.p(pi.cond1_b), h);
+            }
+            {
+                let (g, cs) = (&ws.g, &mut ws.cs2[l]);
+                cond_scale(cs, g, cx.p(pi.cond2_w), cx.p(pi.cond2_b), h);
+            }
+        }
+        let (g, cs) = (&ws.g, &mut ws.cs_h);
+        cond_scale(cs, g, cx.p(ids.head_cond_w), cx.p(ids.head_cond_b), h);
+    }
+
+    // --- placer: windows in order (window s reads window s-1's cached
+    // y1 memory through its kv range) ---
     ws.x[0].copy_from_slice(hfin);
-    let scale = 1.0 / (d.dh() as f32).sqrt();
-    for l in 0..d.placer_layers {
-        let pi = &ids.pl[l];
-        // ln1 (+ cond1)
-        {
-            let (x_in, xhat, rstd) = (&ws.x[l], &mut ws.xhat1[l], &mut ws.rstd1[l]);
-            layer_norm(x_in, xhat, rstd, n, h);
-        }
-        if cx.sp {
-            let (g, cs) = (&ws.g, &mut ws.cs1[l]);
-            cond_scale(cs, g, cx.p(pi.cond1_w), cx.p(pi.cond1_b), h);
-        }
-        {
-            let cs = if cx.sp { Some(ws.cs1[l].as_slice()) } else { None };
-            let (xhat, y1) = (&ws.xhat1[l], &mut ws.y1[l]);
-            affine_cond(y1, xhat, cx.p(pi.ln1_s), cx.p(pi.ln1_b), cs, n, h);
-        }
-        // attention (or token-local mixing) sub-layer
-        if cx.att {
-            let dh = d.dh();
-            matmul_nn(&mut ws.q[l], &ws.y1[l], cx.p(pi.wq), n, h, h, false);
-            matmul_nn(&mut ws.k[l], &ws.y1[l], cx.p(pi.wk), n, h, h, false);
-            matmul_nn(&mut ws.v[l], &ws.y1[l], cx.p(pi.wv), n, h, h, false);
-            for hh in 0..d.heads {
-                let off = hh * dh;
-                let (q, k, v) = (&ws.q[l], &ws.k[l], &ws.v[l]);
-                let p = &mut ws.attp[l][hh * n * n..(hh + 1) * n * n];
-                for i in 0..n {
-                    let qrow = &q[i * h + off..i * h + off + dh];
-                    let prow = &mut p[i * n..(i + 1) * n];
-                    let mut mx = f32::NEG_INFINITY;
-                    for j in 0..n {
-                        let s = if rin.node_mask[j] > 0.0 {
-                            dot(qrow, &k[j * h + off..j * h + off + dh]) * scale
-                        } else {
-                            NEG_INF
-                        };
-                        prow[j] = s;
-                        if s > mx {
-                            mx = s;
-                        }
-                    }
-                    let mut sum = 0f32;
-                    for pj in prow.iter_mut() {
-                        *pj = (*pj - mx).exp();
-                        sum += *pj;
-                    }
-                    let inv = 1.0 / sum;
-                    for pj in prow.iter_mut() {
-                        *pj *= inv;
-                    }
-                    // o_h[i] = sum_j P[i,j] v_h[j]
-                    let orow = &mut ws.ocat[l][i * h + off..i * h + off + dh];
-                    orow.fill(0.0);
-                    for j in 0..n {
-                        let c = prow[j];
-                        if c != 0.0 {
-                            for (o, &vv) in
-                                orow.iter_mut().zip(&v[j * h + off..j * h + off + dh])
-                            {
-                                *o += c * vv;
-                            }
-                        }
-                    }
-                }
-            }
-            matmul_nn(&mut ws.att[l], &ws.ocat[l], cx.p(pi.wo_w), n, h, h, false);
-            let wob = cx.p(pi.wo_b);
-            for v in 0..n {
-                for (z, &b) in ws.att[l][v * h..(v + 1) * h].iter_mut().zip(wob) {
-                    *z += b;
-                }
-            }
-        } else {
-            matmul_nn(&mut ws.att[l], &ws.y1[l], cx.p(pi.mix_w), n, h, h, false);
-            let mb = cx.p(pi.mix_b);
-            for v in 0..n {
-                for (z, &b) in ws.att[l][v * h..(v + 1) * h].iter_mut().zip(mb) {
-                    *z = (*z + b).max(0.0);
-                }
-            }
-        }
-        // residual 1
-        {
-            let (x_in, att, xmid) = (&ws.x[l], &ws.att[l], &mut ws.xmid[l]);
-            for v in 0..n {
-                let mask = rin.node_mask[v];
-                for j in 0..h {
-                    xmid[v * h + j] = x_in[v * h + j] + att[v * h + j] * mask;
-                }
-            }
-        }
-        // ln2 (+ cond2) + FFN
-        {
-            let (xmid, xhat, rstd) = (&ws.xmid[l], &mut ws.xhat2[l], &mut ws.rstd2[l]);
-            layer_norm(xmid, xhat, rstd, n, h);
-        }
-        if cx.sp {
-            let (g, cs) = (&ws.g, &mut ws.cs2[l]);
-            cond_scale(cs, g, cx.p(pi.cond2_w), cx.p(pi.cond2_b), h);
-        }
-        {
-            let cs = if cx.sp { Some(ws.cs2[l].as_slice()) } else { None };
-            let (xhat, y2) = (&ws.xhat2[l], &mut ws.y2[l]);
-            affine_cond(y2, xhat, cx.p(pi.ln2_s), cx.p(pi.ln2_b), cs, n, h);
-        }
-        matmul_nn(&mut ws.f1[l], &ws.y2[l], cx.p(pi.ffn1_w), n, h, ffn, false);
-        let f1b = cx.p(pi.ffn1_b);
-        for v in 0..n {
-            for (z, &b) in ws.f1[l][v * ffn..(v + 1) * ffn].iter_mut().zip(f1b) {
-                *z = (*z + b).max(0.0);
-            }
-        }
-        // ffn2 into scratch, then residual 2
-        matmul_nn(&mut ws.da, &ws.f1[l], cx.p(pi.ffn2_w), n, ffn, h, false);
-        let f2b = cx.p(pi.ffn2_b);
-        let (xmid, da, x_next) = (&ws.xmid[l], &ws.da, &mut ws.x[l + 1]);
-        for v in 0..n {
-            let mask = rin.node_mask[v];
-            for j in 0..h {
-                x_next[v * h + j] = xmid[v * h + j] + (da[v * h + j] + f2b[j]) * mask;
-            }
+    let (segs, seg_len) = (ws.seg.segments, ws.seg.seg_len);
+    for s in 0..segs {
+        for l in 0..d.placer_layers {
+            placer_layer_window(cx, rin, ws, l, s, s * seg_len, (s + 1) * seg_len);
         }
     }
 
@@ -289,11 +357,6 @@ pub(super) fn forward_row(cx: &Ctx, rin: &RowIn, ws: &mut RowWs) {
     {
         let (x_fin, xhat, rstd) = (&ws.x[pl], &mut ws.xhat_h, &mut ws.rstd_h);
         layer_norm(x_fin, xhat, rstd, n, h);
-    }
-    if cx.sp {
-        let (hc_w, hc_b) = (ids.head_cond_w, ids.head_cond_b);
-        let (g, cs) = (&ws.g, &mut ws.cs_h);
-        cond_scale(cs, g, cx.p(hc_w), cx.p(hc_b), h);
     }
     {
         let cs = if cx.sp { Some(ws.cs_h.as_slice()) } else { None };

@@ -3,6 +3,13 @@
 //! `NB`-wide stripe of the output and of `b` resident in L1 while the
 //! i–k–j inner loops stream `a` once; all inner loops are contiguous
 //! slice zips so the compiler auto-vectorizes them.
+//!
+//! The `gemm_*` entry points take explicit row strides (`ld*` >= the
+//! logical row width) so the attention math — per-head `[rows, dh]`
+//! panels embedded in `[N, H]` buffers, score blocks embedded in
+//! `[N, kv_len]` slabs — runs through the same blocked kernels as the
+//! dense layers instead of scalar gather loops. The unit-stride
+//! `matmul_*` wrappers keep the historical dense-layer signatures.
 
 /// Output-column panel width (f32s): 64 columns = one 256-byte stripe per
 /// accumulator row, comfortably inside L1 alongside the `b` panel.
@@ -24,30 +31,109 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// `out[m,n] = a[m,k] @ b[k,n]` (`+=` when `acc`).
-pub fn matmul_nn(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, acc: bool) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
+/// Strided NN GEMM: `out[i*ldo+j] (+)= Σ_kk a[i*lda+kk] * b[kk*ldb+j]`
+/// for `i < m, kk < k, j < n`. Panel-blocked over output columns;
+/// zero-skip on `a` (padded node rows and masked attention probabilities
+/// are exactly zero, and 0 * x contributes nothing — operands are
+/// finite).
+pub fn gemm_nn(
+    out: &mut [f32], ldo: usize,
+    a: &[f32], lda: usize,
+    b: &[f32], ldb: usize,
+    m: usize, k: usize, n: usize,
+    acc: bool,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(ldo >= n && lda >= k && ldb >= n);
+    debug_assert!(out.len() >= (m - 1) * ldo + n);
+    debug_assert!(a.len() >= (m - 1) * lda + k);
+    debug_assert!(k == 0 || b.len() >= (k - 1) * ldb + n);
     let mut jb = 0;
     while jb < n {
         let je = (jb + NB).min(n);
         for i in 0..m {
-            let orow = &mut out[i * n + jb..i * n + je];
+            let orow = &mut out[i * ldo + jb..i * ldo + je];
             if !acc {
                 orow.fill(0.0);
             }
-            let arow = &a[i * k..(i + 1) * k];
+            let arow = &a[i * lda..i * lda + k];
             for (kk, &av) in arow.iter().enumerate() {
-                // Zero-skip: padded node rows are exactly zero, and
-                // 0 * x contributes nothing (operands are finite).
                 if av != 0.0 {
-                    axpy(orow, av, &b[kk * n + jb..kk * n + je]);
+                    axpy(orow, av, &b[kk * ldb + jb..kk * ldb + je]);
                 }
             }
         }
         jb = je;
     }
+}
+
+/// Strided NT GEMM: `out[i*ldo+j] (+)= dot(a_row_i, b_row_j)` — the
+/// Q·Kᵀ score and dO·Vᵀ contractions. Contiguous-row dot products,
+/// panel-blocked over `j` so a stripe of `b` rows stays hot across `i`.
+pub fn gemm_nt(
+    out: &mut [f32], ldo: usize,
+    a: &[f32], lda: usize,
+    b: &[f32], ldb: usize,
+    m: usize, k: usize, n: usize,
+    acc: bool,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(ldo >= n && lda >= k && ldb >= k);
+    debug_assert!(out.len() >= (m - 1) * ldo + n);
+    debug_assert!(a.len() >= (m - 1) * lda + k);
+    debug_assert!(b.len() >= (n - 1) * ldb + k);
+    let mut jb = 0;
+    while jb < n {
+        let je = (jb + NB).min(n);
+        for i in 0..m {
+            let arow = &a[i * lda..i * lda + k];
+            let orow = &mut out[i * ldo + jb..i * ldo + je];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let d = dot(arow, &b[(jb + j) * ldb..(jb + j) * ldb + k]);
+                *o = if acc { *o + d } else { d };
+            }
+        }
+        jb = je;
+    }
+}
+
+/// Strided transposed-A accumulation:
+/// `out[kk*ldo+j] += Σ_i a[i*lda+kk] * b[i*ldb+j]` — weight gradients
+/// (Xᵀ·dY) and the dSᵀ·Q / Pᵀ·dO attention contractions.
+pub fn gemm_tn_acc(
+    out: &mut [f32], ldo: usize,
+    a: &[f32], lda: usize,
+    b: &[f32], ldb: usize,
+    m: usize, k: usize, n: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(ldo >= n && lda >= k && ldb >= n);
+    debug_assert!(out.len() >= (k - 1) * ldo + n);
+    debug_assert!(a.len() >= (m - 1) * lda + k);
+    debug_assert!(b.len() >= (m - 1) * ldb + n);
+    for i in 0..m {
+        let brow = &b[i * ldb..i * ldb + n];
+        let arow = &a[i * lda..i * lda + k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                axpy(&mut out[kk * ldo..kk * ldo + n], av, brow);
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (`+=` when `acc`).
+pub fn matmul_nn(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize, acc: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    gemm_nn(out, n, a, k, b, n, m, k, n, acc);
 }
 
 /// `out[m,n] = a[m,k] @ b[n,k]^T` (`+=` when `acc`); both operands are
@@ -56,14 +142,7 @@ pub fn matmul_nt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: u
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let d = dot(arow, &b[j * k..(j + 1) * k]);
-            *o = if acc { *o + d } else { d };
-        }
-    }
+    gemm_nt(out, n, a, k, b, k, m, k, n, acc);
 }
 
 /// `out[k,n] += a[m,k]^T @ b[m,n]` — the weight-gradient contraction.
@@ -71,15 +150,7 @@ pub fn matmul_tn_acc(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, 
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let brow = &b[i * n..(i + 1) * n];
-        let arow = &a[i * k..(i + 1) * k];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                axpy(&mut out[kk * n..(kk + 1) * n], av, brow);
-            }
-        }
-    }
+    gemm_tn_acc(out, n, a, k, b, n, m, k, n);
 }
 
 /// `out[j] += sum_i a[i,j]` — bias gradients.
@@ -164,6 +235,78 @@ mod tests {
         for (x, y) in out2.iter().zip(&want2) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    /// Embed logical operands at `ld >= width` row strides (the per-head
+    /// attention layout) and check every strided kernel against the naive
+    /// contraction, including the untouched inter-row gap bytes.
+    #[test]
+    fn strided_gemms_match_naive_and_preserve_gaps() {
+        let (m, k, n) = (5, 16, 9);
+        let (lda, ldb, ldo) = (k + 7, 21, n + 3);
+        let af = fill(m * lda, 10);
+        let bn = fill(k * ldb, 11); // NN: b rows along k, width n
+        let bt = fill(n * ldb, 12); // NT/TN-b style: rows along n, width k
+        let a_dense: Vec<f32> =
+            (0..m).flat_map(|i| af[i * lda..i * lda + k].to_vec()).collect();
+
+        // NN
+        let mut out = fill(m * ldo, 13);
+        let sentinel = out.clone();
+        gemm_nn(&mut out, ldo, &af, lda, &bn, ldb, m, k, n, false);
+        let bn_dense: Vec<f32> =
+            (0..k).flat_map(|kk| bn[kk * ldb..kk * ldb + n].to_vec()).collect();
+        let want = naive_nn(&a_dense, &bn_dense, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                assert!((out[i * ldo + j] - want[i * n + j]).abs() < 1e-4);
+            }
+            for j in n..ldo {
+                assert_eq!(out[i * ldo + j], sentinel[i * ldo + j], "gap clobbered");
+            }
+        }
+
+        // NT: out = a @ bt^T where bt rows are strided length-k vectors
+        let mut out = fill(m * ldo, 14);
+        let gaps = out.clone();
+        gemm_nt(&mut out, ldo, &af, lda, &bt, ldb, m, k, n, false);
+        for i in 0..m {
+            for j in 0..n {
+                let want = dot(&af[i * lda..i * lda + k], &bt[j * ldb..j * ldb + k]);
+                assert!((out[i * ldo + j] - want).abs() < 1e-4);
+            }
+            for j in n..ldo {
+                assert_eq!(out[i * ldo + j], gaps[i * ldo + j]);
+            }
+        }
+
+        // TN: out[k,n] += a^T @ c with strided rows everywhere
+        let ldc = n + 5;
+        let c = fill(m * ldc, 15);
+        let mut out = vec![0f32; k * ldo];
+        gemm_tn_acc(&mut out, ldo, &af, lda, &c, ldc, m, k, n);
+        for kk in 0..k {
+            for j in 0..n {
+                let mut want = 0f32;
+                for i in 0..m {
+                    want += af[i * lda + kk] * c[i * ldc + j];
+                }
+                assert!((out[kk * ldo + j] - want).abs() < 1e-4);
+            }
+        }
+
+        // acc variants accumulate instead of overwriting
+        let mut base = vec![1.0f32; m * ldo];
+        gemm_nn(&mut base, ldo, &af, lda, &bn, ldb, m, k, n, true);
+        for i in 0..m {
+            for j in 0..n {
+                assert!((base[i * ldo + j] - 1.0 - want_nn(&af, &bn, lda, ldb, i, j, k)).abs() < 1e-4);
+            }
+        }
+    }
+
+    fn want_nn(a: &[f32], b: &[f32], lda: usize, ldb: usize, i: usize, j: usize, k: usize) -> f32 {
+        (0..k).map(|kk| a[i * lda + kk] * b[kk * ldb + j]).sum()
     }
 
     #[test]

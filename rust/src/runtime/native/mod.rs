@@ -4,12 +4,19 @@
 //! conditioning -> device-masked logits) and training (PPO clipped
 //! objective, analytic backward for every layer, global-norm grad clip,
 //! Adam) — consuming the same sorted-key `ParamStore`/`Manifest` ABI and
-//! `Batch` literals as the PJRT path.
+//! `Batch` literals as the PJRT path. All four model variants run here,
+//! including `segmented`: the paper's §3.2 segment-level recurrent placer
+//! (`model.py::placer_segmented`), whose windowed attention keeps the
+//! score buffers O(N·W) for window length W — the mechanism that scales
+//! policy-step cost linearly in graph size instead of quadratically.
 //!
 //! Built for throughput in the PR-2 `SimPlan`/`SimWorkspace` style:
-//! - one preallocated [`PolicyWorkspace`] of flat row-major f32 buffers,
-//!   zero heap allocation per step after construction;
-//! - blocked matmul kernels ([`linalg`]);
+//! - one preallocated [`PolicyWorkspace`] of flat row-major f32 buffers
+//!   (attention windows in its `SegWs`), zero heap allocation per step
+//!   after construction;
+//! - panel-blocked matmul kernels ([`linalg`]), including the strided
+//!   `gemm_*` forms the attention score / P·V / gradient contractions
+//!   run through;
 //! - scoped-thread parallelism across the B batch rows for both forward
 //!   and backward (per-row gradients reduced in fixed order, so results
 //!   are bit-identical for any thread count).
@@ -178,18 +185,22 @@ pub struct NativePolicy {
 
 impl NativePolicy {
     pub fn new(manifest: Manifest) -> Result<Self> {
-        if manifest.variant == "segmented" {
-            bail!(
-                "the segmented variant's segment-level recurrence is not \
-                 implemented natively; use the pjrt backend with artifacts"
-            );
-        }
         let d = manifest.dims;
         if d.heads == 0 || d.h % d.heads != 0 {
             bail!("H={} not divisible by heads={}", d.h, d.heads);
         }
         if d.d == 0 || d.n == 0 || d.b == 0 {
             bail!("degenerate dims {:?}", d);
+        }
+        if d.segments > 1 {
+            // Segment-level recurrence is an attention mechanism; the
+            // no_attention ablation has no kv path for the memory.
+            if !manifest.use_attention {
+                bail!("segments={} requires attention", d.segments);
+            }
+            if d.n % d.segments != 0 {
+                bail!("N={} not divisible by segments={}", d.n, d.segments);
+            }
         }
         // ABI check: the manifest must be exactly the layout
         // model.py::init_params emits for these dims + flags.
@@ -434,6 +445,19 @@ impl NativePolicy {
     /// across steps proves zero per-step (re)allocation.
     pub fn workspace_fingerprint(&self) -> u64 {
         self.ws.lock().unwrap().fingerprint()
+    }
+
+    /// Total preallocated workspace footprint in bytes (all rows + the
+    /// gradient reduction buffer) — the peak-memory metric benches record.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.lock().unwrap().f32_elems() * std::mem::size_of::<f32>()
+    }
+
+    /// Attention score/probability f32 elements per batch row: grows
+    /// O(N·W) for the segmented placer (W = N / segments), O(N²) for full
+    /// attention — pinned by the workspace-size regression test.
+    pub fn attention_elems_per_row(&self) -> usize {
+        self.ws.lock().unwrap().attention_elems_per_row()
     }
 }
 

@@ -6,8 +6,69 @@
 //! `fingerprint` hashes every buffer's (pointer, capacity) pair so tests
 //! can assert the workspace is genuinely reused (any reallocation moves a
 //! pointer or grows a capacity).
+//!
+//! Attention scratch lives in [`SegWs`]: the segment-level recurrent
+//! placer's window geometry plus its probability/score buffers, sized
+//! `[heads, N, kv_len]` where `kv_len = 2·W` for window length
+//! `W = N / segments` — O(N·W), linear in graph size for a fixed window.
+//! Full attention is the degenerate single-window case (`segments = 1`,
+//! `kv_len = N`), so both placer paths share the same buffers and
+//! kernels.
 
 use crate::runtime::manifest::Manifest;
+
+/// Windowed-attention geometry + scratch for one batch row.
+///
+/// The node sequence is processed in `segments` windows of `seg_len`
+/// nodes; layer *l* of window *s* attends over the concatenation of the
+/// previous window's cached layer-*l* input (`seg_len` memory rows,
+/// gradients stopped) and the current window (`seg_len` rows). Because
+/// memory rows are just the previous window's rows of the same per-layer
+/// `[N, H]` activation buffers, one window's keys/values are a contiguous
+/// row range — see [`SegWs::kv_range`].
+pub struct SegWs {
+    /// Number of attention windows S (1 = full all-to-all attention).
+    pub segments: usize,
+    /// Window length W = N / S.
+    pub seg_len: usize,
+    /// Keys/values visible to one query window: 2·W when segmented
+    /// (memory + current), N when S = 1. Row stride of `attp` / `dp`.
+    pub kv_len: usize,
+    /// Attention probabilities, per placer layer: `[heads, N, kv_len]`
+    /// flattened (query row-major inside each head slab). Window 0 has no
+    /// memory rows; its unused trailing columns stay zero.
+    pub attp: Vec<Vec<f32>>,
+    /// Softmax backward scratch `[seg_len, kv_len]` (one head at a time).
+    pub dp: Vec<f32>,
+}
+
+impl SegWs {
+    fn new(m: &Manifest) -> Self {
+        let d = m.dims;
+        let (segments, seg_len, kv_len) = (d.segments.max(1), d.seg_len(), d.kv_len());
+        let layers = if m.use_attention { d.placer_layers } else { 0 };
+        Self {
+            segments,
+            seg_len,
+            kv_len,
+            attp: per_layer(layers, d.heads * d.n * kv_len),
+            dp: zeros(if layers > 0 { seg_len * kv_len } else { 0 }),
+        }
+    }
+
+    /// Contiguous key/value row range for query window `s`: the previous
+    /// window's memory rows (when any) followed by the window itself.
+    #[inline]
+    pub fn kv_range(&self, s: usize) -> (usize, usize) {
+        (s.saturating_sub(1) * self.seg_len, (s + 1) * self.seg_len)
+    }
+
+    /// f32 elements held by the attention score/probability buffers — the
+    /// surface the O(N·W) regression test pins down.
+    pub fn attention_elems(&self) -> usize {
+        self.attp.iter().map(|v| v.len()).sum::<usize>() + self.dp.len()
+    }
+}
 
 /// Per-batch-row activations (forward caches) + gradients (backward).
 pub struct RowWs {
@@ -30,7 +91,8 @@ pub struct RowWs {
     pub x: Vec<Vec<f32>>,
     pub xhat1: Vec<Vec<f32>>,
     pub rstd1: Vec<Vec<f32>>,
-    /// post-ln1-affine, post-cond1 (the q/k/v | mix input) `[N,H]`
+    /// post-ln1-affine, post-cond1 (the q/k/v | mix input, and the
+    /// segment-recurrence memory cached for the next window) `[N,H]`
     pub y1: Vec<Vec<f32>>,
     /// superposition scales, `[H]` each
     pub cs1: Vec<Vec<f32>>,
@@ -38,8 +100,8 @@ pub struct RowWs {
     pub q: Vec<Vec<f32>>,
     pub k: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
-    /// attention probabilities `[heads, N, N]` flattened
-    pub attp: Vec<Vec<f32>>,
+    /// windowed-attention geometry + probability buffers (O(N·W))
+    pub seg: SegWs,
     /// concatenated per-head attention outputs `[N,H]`
     pub ocat: Vec<Vec<f32>>,
     /// attention/mix sub-layer output `[N,H]`
@@ -69,7 +131,6 @@ pub struct RowWs {
     pub dq: Vec<f32>,
     pub dk: Vec<f32>,
     pub dv: Vec<f32>,
-    pub dp: Vec<f32>,
     pub df1: Vec<f32>,
     pub dhn: Vec<f32>,
     pub dt: Vec<f32>,
@@ -116,7 +177,7 @@ impl RowWs {
             q: per_layer(if att { pl } else { 0 }, n * h),
             k: per_layer(if att { pl } else { 0 }, n * h),
             v: per_layer(if att { pl } else { 0 }, n * h),
-            attp: per_layer(if att { pl } else { 0 }, d.heads * n * n),
+            seg: SegWs::new(m),
             ocat: per_layer(if att { pl } else { 0 }, n * h),
             att: per_layer(pl, n * h),
             xmid: per_layer(pl, n * h),
@@ -136,7 +197,6 @@ impl RowWs {
             dq: zeros(if att { n * h } else { 0 }),
             dk: zeros(if att { n * h } else { 0 }),
             dv: zeros(if att { n * h } else { 0 }),
-            dp: zeros(if att { n * n } else { 0 }),
             df1: zeros(n * ffn),
             dhn: zeros(n * h),
             dt: zeros(n * h),
@@ -149,36 +209,48 @@ impl RowWs {
         }
     }
 
-    fn fingerprint_into(&self, h: &mut u64) {
-        fn f32s(h: &mut u64, v: &Vec<f32>) {
-            mix(h, v.as_ptr() as u64);
-            mix(h, v.capacity() as u64);
-        }
-        fn u32s(h: &mut u64, v: &Vec<u32>) {
-            mix(h, v.as_ptr() as u64);
-            mix(h, v.capacity() as u64);
-        }
-        fn mix(h: &mut u64, x: u64) {
-            *h = (*h ^ x).wrapping_mul(0x100000001B3);
-        }
-        for v in [&self.h0, &self.g, &self.xhat_h, &self.rstd_h, &self.cs_h,
-                  &self.xcond, &self.logits, &self.dlogits, &self.dx, &self.da,
-                  &self.db2, &self.dq, &self.dk, &self.dv, &self.dp, &self.df1,
-                  &self.dhn, &self.dt, &self.dvec, &self.dg, &self.grad] {
-            f32s(h, v);
+    /// Visit every f32 buffer (fingerprint + footprint accounting walk
+    /// the same list so neither can silently miss a buffer).
+    fn for_each_f32(&self, f: &mut dyn FnMut(&Vec<f32>)) {
+        for v in [&self.h0, &self.g, &self.seg.dp, &self.xhat_h, &self.rstd_h,
+                  &self.cs_h, &self.xcond, &self.logits, &self.dlogits,
+                  &self.dx, &self.da, &self.db2, &self.dq, &self.dk, &self.dv,
+                  &self.df1, &self.dhn, &self.dt, &self.dvec, &self.dg,
+                  &self.grad] {
+            f(v);
         }
         for group in [&self.gnn_t, &self.gnn_hn, &self.gnn_h, &self.x,
                       &self.xhat1, &self.rstd1, &self.y1, &self.cs1, &self.cs2,
-                      &self.q, &self.k, &self.v, &self.attp, &self.ocat,
+                      &self.q, &self.k, &self.v, &self.seg.attp, &self.ocat,
                       &self.att, &self.xmid, &self.xhat2, &self.rstd2,
                       &self.y2, &self.f1] {
             for v in group.iter() {
-                f32s(h, v);
+                f(v);
             }
         }
-        for v in &self.gnn_src {
-            u32s(h, v);
+    }
+
+    fn fingerprint_into(&self, h: &mut u64) {
+        fn mix(h: &mut u64, x: u64) {
+            *h = (*h ^ x).wrapping_mul(0x100000001B3);
         }
+        let mut hash = *h;
+        self.for_each_f32(&mut |v| {
+            mix(&mut hash, v.as_ptr() as u64);
+            mix(&mut hash, v.capacity() as u64);
+        });
+        for v in &self.gnn_src {
+            mix(&mut hash, v.as_ptr() as u64);
+            mix(&mut hash, v.capacity() as u64);
+        }
+        *h = hash;
+    }
+
+    /// Total f32 elements across every buffer (footprint metric).
+    fn f32_elems(&self) -> usize {
+        let mut total = 0usize;
+        self.for_each_f32(&mut |v| total += v.len());
+        total
     }
 }
 
@@ -207,5 +279,20 @@ impl PolicyWorkspace {
         h = (h ^ self.grad_total.as_ptr() as u64).wrapping_mul(0x100000001B3);
         h = (h ^ self.grad_total.capacity() as u64).wrapping_mul(0x100000001B3);
         h
+    }
+
+    /// Total f32 elements held (gnn_src u32 buffers counted too: same
+    /// width) — the peak-workspace metric benches record.
+    pub fn f32_elems(&self) -> usize {
+        self.rows
+            .iter()
+            .map(|r| r.f32_elems() + r.gnn_src.iter().map(|v| v.len()).sum::<usize>())
+            .sum::<usize>()
+            + self.grad_total.len()
+    }
+
+    /// Attention score/probability elements per row (O(N·W) surface).
+    pub fn attention_elems_per_row(&self) -> usize {
+        self.rows.first().map_or(0, |r| r.seg.attention_elems())
     }
 }

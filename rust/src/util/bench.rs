@@ -84,15 +84,23 @@ impl BenchStats {
 pub struct BenchRecorder {
     suite: String,
     entries: Vec<(String, BenchStats)>,
+    /// Scalar side-metrics (peak workspace bytes, buffer element counts…)
+    /// recorded alongside the timings in the same artifact.
+    metrics: Vec<(String, f64)>,
 }
 
 impl BenchRecorder {
     pub fn new(suite: impl Into<String>) -> Self {
-        Self { suite: suite.into(), entries: Vec::new() }
+        Self { suite: suite.into(), entries: Vec::new(), metrics: Vec::new() }
     }
 
     pub fn add(&mut self, key: impl Into<String>, stats: BenchStats) {
         self.entries.push((key.into(), stats));
+    }
+
+    /// Record a non-timing scalar (e.g. memory footprint) under `key`.
+    pub fn metric(&mut self, key: impl Into<String>, value: f64) {
+        self.metrics.push((key.into(), value));
     }
 
     pub fn to_json(&self) -> Json {
@@ -104,6 +112,15 @@ impl BenchRecorder {
                     self.entries
                         .iter()
                         .map(|(k, s)| (k.clone(), s.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
                         .collect(),
                 ),
             ),

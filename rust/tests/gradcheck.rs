@@ -1,9 +1,10 @@
 //! Finite-difference gradient check for the native policy engine: on tiny
 //! dims (N=8, H=8, B=2), the analytic backward must match central
 //! differences of the PPO loss for EVERY parameter tensor — covering the
-//! MHA, superposition-conditioning, layernorm, GNN max-pool and
-//! clipped-surrogate paths, with padded nodes, masked devices and
-//! non-uniform per-row device counts in the batch.
+//! MHA, segment-level recurrence (stop-gradient memory), superposition-
+//! conditioning, layernorm, GNN max-pool and clipped-surrogate paths,
+//! with padded nodes, masked devices and non-uniform per-row device
+//! counts in the batch.
 
 use gdp::graph::features::GraphFeatures;
 use gdp::runtime::{Batch, Dims, Manifest, NativePolicy, ParamStore};
@@ -21,6 +22,7 @@ fn tiny_dims() -> Dims {
         placer_layers: 2,
         heads: 2,
         ffn: 8,
+        segments: 1,
         clip_eps: 0.2,
     }
 }
@@ -103,7 +105,11 @@ fn make_case(manifest: &Manifest, rng: &mut Rng) -> Case {
 /// clear of relu / PPO-min kinks, where central differences are not a
 /// valid gradient estimate; these seeds were pre-screened for margin.
 fn gradcheck_variant(variant: &str, seed: u64) {
-    let manifest = Manifest::synthesize_variant(tiny_dims(), variant).unwrap();
+    gradcheck_dims(tiny_dims(), variant, seed);
+}
+
+fn gradcheck_dims(dims: Dims, variant: &str, seed: u64) {
+    let manifest = Manifest::synthesize_variant(dims, variant).unwrap();
     let policy = NativePolicy::new(manifest.clone()).unwrap();
     let mut rng = Rng::new(seed);
     let flat = random_flat(&manifest, &mut rng);
@@ -169,6 +175,18 @@ fn gradcheck_no_attention_variant() {
 #[test]
 fn gradcheck_no_superposition_variant() {
     gradcheck_variant("no_superposition", 0xBEEF01);
+}
+
+/// The segmented placer (2 windows of 4 nodes): exercises the windowed
+/// attention backward, the stop-gradient memory boundary (window 1's kv
+/// rows include window 0's cached y1) and the wk/wv weight contraction
+/// over memory rows. Row 0's padding (n_real = 6) also leaves window 1
+/// partially masked.
+#[test]
+fn gradcheck_segmented_variant() {
+    let mut dims = tiny_dims();
+    dims.segments = 2;
+    gradcheck_dims(dims, "segmented", 0x5E62010);
 }
 
 #[test]
