@@ -1,44 +1,52 @@
-//! Generalization demo (paper §4.3 / Figure 2 at example scale): pretrain
-//! GDP-batch on several workloads, then place an UNSEEN workload zero-shot
-//! and after a short fine-tune, comparing against the human expert.
+//! Generalization demo (paper §3.3 / Table 4 at example scale): pre-train
+//! GDP-batch on the corpus (hold-outs excluded), persist a versioned
+//! checkpoint, then place an UNSEEN workload zero-shot and after a short
+//! superposition-only fine-tune, comparing against the human expert.
 //!
 //!     cargo run --release --example generalization [target]
+//!
+//! `target` defaults to `wavenet2` — the WaveNet family never appears in
+//! the pre-train corpus, so this is true cross-family transfer. The same
+//! protocol at full budget is `gdp pretrain` + `gdp finetune` /
+//! `gdp experiment --id table4`.
 
 use gdp::coordinator::baseline_eval::eval_human;
-use gdp::coordinator::{infer, train, Session, TrainConfig};
+use gdp::coordinator::{generalize, Session, TrainConfig};
 use gdp::workloads;
+use gdp::workloads::corpus::{pretrain_corpus, CorpusLevel};
 
 fn main() -> anyhow::Result<()> {
     let target = std::env::args().nth(1).unwrap_or_else(|| "wavenet2".into());
     let artifacts = std::path::Path::new("artifacts");
     let session = Session::open(artifacts, "full")?;
 
-    // Pretrain on four other families (target held out).
-    let pretrain_ids: Vec<&str> = ["rnnlm2", "gnmt2", "txl2", "inception", "amoebanet"]
-        .into_iter()
-        .filter(|id| *id != target)
-        .collect();
-    println!("pretraining GDP-batch on {pretrain_ids:?} (target {target} held out)");
-    let mut tasks = Vec::new();
-    for id in &pretrain_ids {
-        tasks.push(session.task(id, 0)?);
-    }
-    let mut store = session.init_params()?;
+    // Pre-train on the base corpus: hold-outs and the whole WaveNet
+    // family are excluded by construction.
+    let corpus = pretrain_corpus(CorpusLevel::Base);
+    let ids: Vec<&str> = corpus.iter().map(|c| c.id.as_str()).collect();
+    println!("pretraining GDP-batch on {ids:?} (hold-outs excluded)");
     let cfg = TrainConfig { steps: 120, verbose: true, log_every: 30, ..Default::default() };
-    train(&*session.policy, &mut store, &tasks, &cfg)?;
+    let (store, _) = generalize::pretrain(&session, &corpus, &cfg)?;
 
-    // Zero-shot on the held-out target.
+    // Persist + reload through the versioned checkpoint format (the load
+    // validates variant/dims/param layout against this session).
+    let ckpt = std::env::temp_dir().join("gdp_example_pretrained.ckpt");
+    session.save_checkpoint(&store, &ckpt)?;
+    let mut store = session.load_params(&ckpt)?;
+    println!("checkpoint round-tripped via {}", ckpt.display());
+
+    // Zero-shot on the held-out target: no updates.
     let task = session.task(&target, 0)?;
-    let zs = infer(&*session.policy, &store, &task, 8, 11)?;
+    let zs = generalize::zeroshot(&session, &store, &task, 8, 11)?;
     println!("\nzero-shot on {target}: {:.4}s", zs.best_time);
 
-    // Fine-tune < 50 steps (paper: takes under a minute).
-    store.reset_optimizer()?;
+    // Fine-tune < 50 steps, superposition-conditioning tensors only: the
+    // shared GNN+placer stays bit-frozen (paper: takes under a minute).
     let ft_cfg = TrainConfig { steps: 30, lr: 3e-4, verbose: false, ..Default::default() };
     let ft_task = session.task(&target, 0)?;
-    let ft = train(&*session.policy, &mut store, &[ft_task], &ft_cfg)?;
+    let ft = generalize::finetune(&session, &mut store, ft_task, &ft_cfg)?;
     let ft_best = ft.per_task[0].best_time.min(zs.best_time);
-    println!("after 30-step fine-tune: {ft_best:.4}s");
+    println!("after 30-step superposition-only fine-tune: {ft_best:.4}s");
 
     let hp = eval_human(&workloads::by_id(&target).unwrap()).step_time;
     if let Some(h) = hp {
@@ -48,5 +56,6 @@ fn main() -> anyhow::Result<()> {
             (h - ft_best) / h * 100.0
         );
     }
+    std::fs::remove_file(&ckpt).ok();
     Ok(())
 }

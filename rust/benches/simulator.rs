@@ -1,6 +1,6 @@
 //! Bench: simulator throughput — the quantity behind every search method's
 //! cost (GDP rollouts, HDP samples, random search all pay one simulate()
-//! per candidate). Target (DESIGN.md §8): >= 10k evals/s on ~256-node
+//! per candidate). Target (DESIGN.md §9): >= 10k evals/s on ~256-node
 //! graphs.
 //!
 //! Three measurements per workload:

@@ -11,13 +11,16 @@ pub mod fig4;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod table4;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::util::cli::Args;
 use common::ExpOpts;
 
-/// CLI entry: `gdp experiment --id <table1|table2|table3|fig2|fig3|fig4|all>`.
+/// CLI entry:
+/// `gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>`
+/// (`fig4_transfer` is an alias for `table4`, the generalization harness).
 pub fn run_from_cli(args: &Args) -> Result<()> {
     let id = args.str_or("id", "all");
     let opts = ExpOpts::from_args(args)?;
@@ -30,6 +33,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<()> {
         "table1" => table1::run(opts),
         "table2" => table2::run(opts),
         "table3" => table3::run(opts),
+        "table4" | "fig4_transfer" => table4::run(opts),
         "fig2" => fig2::run(opts),
         "fig3" => fig3::run(opts),
         "fig4" => fig4::run(opts),
@@ -37,6 +41,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<()> {
             table1::run(opts)?;
             table2::run(opts)?;
             table3::run(opts)?;
+            table4::run(opts)?;
             fig2::run(opts)?;
             fig3::run(opts)?;
             fig4::run(opts)

@@ -1,0 +1,191 @@
+//! Table 4 / Fig. 4-transfer: the generalization protocol on hold-out
+//! graphs (GDP §3.3, §4.4). Pre-train on the corpus (hold-outs and the
+//! whole unseen WaveNet family excluded — `workloads::corpus`), write a
+//! versioned checkpoint, then for each hold-out compare at an EQUAL
+//! fine-tune step budget:
+//!
+//! - **zero-shot** — the checkpoint places the graph with no updates;
+//! - **fine-tune** — superposition-conditioning tensors only, shared
+//!   GNN+placer frozen (the paper's transfer setting);
+//! - **scratch**  — from fresh parameters, all tensors trainable.
+//!
+//! Prints the paper-shaped table, writes `runs/table4.json`, and emits
+//! `BENCH_GENERALIZE.json` in the working directory — the CI-tracked
+//! artifact whose headline is "fine-tune beats from-scratch at equal
+//! budget on the hold-outs" (EXPERIMENTS.md §Generalization).
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::coordinator::metrics::write_json;
+use crate::coordinator::{generalize, train, Session, TrainConfig};
+use crate::runtime::ParamStore;
+use crate::util::json::Json;
+use crate::util::math::geomean;
+use crate::workloads::corpus::{holdout_ids, pretrain_corpus, CorpusLevel};
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let session = Session::open(&opts.artifacts, &opts.variant)?;
+    let level = if opts.quick { CorpusLevel::Base } else { CorpusLevel::Diverse };
+    let corpus = pretrain_corpus(level);
+
+    // --- pre-train on the corpus, hold-outs never seen ---
+    eprintln!(
+        "[table4] pretraining on {} corpus graphs ({:?}, {} steps) ...",
+        corpus.len(),
+        level,
+        opts.pretrain_steps
+    );
+    let cfg = opts.train_cfg(opts.pretrain_steps, 0x9E4);
+    let (store, pre) = generalize::pretrain(&session, &corpus, &cfg)?;
+    let ckpt = opts.out_dir.join(format!("pretrained_{}.ckpt", opts.variant));
+    session.save_checkpoint(&store, &ckpt)?;
+    eprintln!(
+        "[table4] checkpoint -> {} ({} sim evals, {:.1}s wall)",
+        ckpt.display(),
+        pre.sim_evals,
+        pre.wall_secs
+    );
+    let pre_flat = store.to_flat()?;
+
+    println!(
+        "\n=== Table 4: transfer to hold-out graphs (equal {}-step budget) ===",
+        opts.finetune_steps
+    );
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>16}",
+        "Hold-out", "zero-shot", "finetune", "scratch", "ft vs scratch"
+    );
+    print_rule(62);
+
+    let mut rows = Vec::new();
+    let mut ratios = Vec::new();
+    let mut ft_wins = 0usize;
+    for target in holdout_ids() {
+        // zero-shot: no updates at all
+        let task = session.task(target, opts.seed)?;
+        let zs = generalize::zeroshot(
+            &session,
+            &store,
+            &task,
+            opts.zeroshot_samples,
+            opts.seed ^ 0x25,
+        )?;
+        let zs_t = if zs.best_valid { Some(zs.best_time) } else { None };
+
+        // fine-tune: fresh copy of the pretrained params, frozen shared
+        let mut ft_store = ParamStore::from_flat(session.manifest(), &pre_flat)?;
+        let ft_cfg = TrainConfig {
+            steps: opts.finetune_steps,
+            lr: 3e-4,
+            seed: opts.seed ^ fxhash(target) ^ 0x44,
+            verbose: false,
+            ..Default::default()
+        };
+        let ft_task = session.task(target, opts.seed)?;
+        let ft = generalize::finetune(&session, &mut ft_store, ft_task, &ft_cfg)?;
+        let fb = &ft.per_task[0];
+        let ft_t = if fb.best_valid { Some(fb.best_time) } else { None };
+
+        // from-scratch: fresh init, all tensors trainable, SAME step budget
+        let mut sc_store = session.init_params()?;
+        let sc_cfg = TrainConfig {
+            steps: opts.finetune_steps,
+            seed: opts.seed ^ fxhash(target) ^ 0x5C,
+            verbose: false,
+            ..Default::default()
+        };
+        let sc_task = session.task(target, opts.seed)?;
+        let sc = train(&*session.policy, &mut sc_store, &[sc_task], &sc_cfg)?;
+        let sb = &sc.per_task[0];
+        let sc_t = if sb.best_valid { Some(sb.best_time) } else { None };
+
+        let ft_better = match (ft_t, sc_t) {
+            (Some(f), Some(s)) => f < s,
+            (Some(_), None) => true, // valid beats OOM
+            _ => false,
+        };
+        if ft_better {
+            ft_wins += 1;
+        }
+        if let Some(r) = ratio(sc_t, ft_t) {
+            ratios.push(r);
+        }
+        println!(
+            "{:<12} {:>10} {:>10} {:>10} {:>16}",
+            target,
+            fmt_time(zs_t),
+            fmt_time(ft_t),
+            fmt_time(sc_t),
+            fmt_speedup(sc_t, ft_t)
+        );
+        rows.push(Json::obj(vec![
+            ("workload", Json::str(*target)),
+            ("zeroshot", zs_t.map(Json::num).unwrap_or(Json::Null)),
+            ("finetune", ft_t.map(Json::num).unwrap_or(Json::Null)),
+            ("scratch", sc_t.map(Json::num).unwrap_or(Json::Null)),
+            ("finetune_beats_scratch", Json::Bool(ft_better)),
+            (
+                "finetune_sim_evals",
+                Json::num(ft.sim_evals as f64),
+            ),
+            (
+                "scratch_sim_evals",
+                Json::num(sc.sim_evals as f64),
+            ),
+        ]));
+    }
+    print_rule(62);
+    let gm = geomean(&ratios);
+    let gm_s = if gm.is_finite() {
+        format!("{gm:.2}x")
+    } else {
+        "n/a (no (valid, valid) pair)".to_string()
+    };
+    println!(
+        "fine-tune beats scratch on {}/{} hold-outs; speedup geomean {gm_s} \
+         (paper: pretrained GDP transfers with < 50-step fine-tunes)\n",
+        ft_wins,
+        holdout_ids().len()
+    );
+
+    let doc = Json::obj(vec![
+        ("experiment", Json::str("table4_generalization")),
+        ("variant", Json::str(&opts.variant)),
+        (
+            "corpus",
+            Json::obj(vec![
+                ("level", Json::str(format!("{level:?}"))),
+                ("items", Json::num(corpus.len() as f64)),
+                (
+                    "ids",
+                    Json::arr(corpus.iter().map(|c| Json::str(&c.id)).collect()),
+                ),
+            ]),
+        ),
+        (
+            "budgets",
+            Json::obj(vec![
+                ("pretrain_steps", Json::num(opts.pretrain_steps as f64)),
+                ("finetune_steps", Json::num(opts.finetune_steps as f64)),
+                ("zeroshot_samples", Json::num(opts.zeroshot_samples as f64)),
+                ("seed", Json::num(opts.seed as f64)),
+            ]),
+        ),
+        ("checkpoint", Json::str(ckpt.display().to_string())),
+        ("rows", Json::arr(rows)),
+        ("finetune_wins", Json::num(ft_wins as f64)),
+        ("holdouts", Json::num(holdout_ids().len() as f64)),
+        (
+            "geomean_ft_vs_scratch",
+            // NaN when no hold-out produced a (valid, valid) pair — keep
+            // the artifact valid JSON.
+            if gm.is_finite() { Json::num(gm) } else { Json::Null },
+        ),
+    ]);
+    let table_path = opts.out_dir.join("table4.json");
+    write_json(&table_path, &doc)?;
+    write_json(std::path::Path::new("BENCH_GENERALIZE.json"), &doc)?;
+    println!("wrote {} and BENCH_GENERALIZE.json", table_path.display());
+    Ok(())
+}

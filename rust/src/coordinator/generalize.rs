@@ -1,0 +1,124 @@
+//! The generalization pipeline (GDP §3.3, DESIGN.md §7): pre-train the
+//! shared GNN+placer on a corpus of graphs, persist a checkpoint, then
+//! place hold-out graphs either **zero-shot** (no updates at all) or
+//! after a short **fine-tune** that adapts only the superposition-
+//! conditioning tensors while every shared tensor stays frozen.
+//!
+//! The three entry points mirror the CLI subcommands (`gdp pretrain` /
+//! `finetune` / `zeroshot`) and the Table-4 harness
+//! ([`crate::coordinator::experiments::table4`]):
+//!
+//! - [`pretrain`] — GDP-batch PPO over [`CorpusItem`]s from fresh
+//!   parameters; the caller persists the result with
+//!   [`Session::save_checkpoint`].
+//! - [`finetune`] — installs the manifest's superposition update mask
+//!   ([`crate::runtime::Manifest::superposition_update_mask`]) on the
+//!   store, resets the optimizer, and trains: frozen tensors are left
+//!   bit-identical by both backends (the [`crate::runtime::PolicyBackend`]
+//!   update-mask contract, regression-tested in
+//!   `rust/tests/generalize.rs`).
+//! - [`zeroshot`] — greedy + sampled placements from the checkpoint with
+//!   no parameter updates (the store is immutable here by construction).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{infer, train, Session, TaskBest, TrainConfig, TrainResult};
+use crate::policy::PlacementTask;
+use crate::runtime::ParamStore;
+use crate::workloads::corpus::CorpusItem;
+
+/// Build one [`PlacementTask`] per corpus item (ids preserved; per-task
+/// feature seeds are salted with the item index).
+pub fn corpus_tasks(
+    session: &Session,
+    items: &[CorpusItem],
+    seed: u64,
+) -> Vec<PlacementTask> {
+    items
+        .iter()
+        .enumerate()
+        .map(|(i, it)| {
+            PlacementTask::new(
+                it.id.clone(),
+                it.graph.clone(),
+                session.feat_dims(),
+                seed ^ i as u64,
+            )
+        })
+        .collect()
+}
+
+/// Pre-train from fresh parameters on the corpus (GDP-batch: rows
+/// round-robin over all corpus graphs). Returns the trained store and
+/// the training telemetry; persist with [`Session::save_checkpoint`].
+pub fn pretrain(
+    session: &Session,
+    items: &[CorpusItem],
+    cfg: &TrainConfig,
+) -> Result<(ParamStore, TrainResult)> {
+    if items.is_empty() {
+        bail!("empty pre-train corpus");
+    }
+    let tasks = corpus_tasks(session, items, cfg.seed);
+    let mut store = session.init_params()?;
+    let result = train(&*session.policy, &mut store, &tasks, cfg)?;
+    Ok((store, result))
+}
+
+/// Fine-tune `store` (typically loaded from a pre-trained checkpoint) on
+/// one hold-out task, updating ONLY the superposition-conditioning
+/// tensors: the optimizer restarts and the manifest's superposition
+/// update mask freezes every shared GNN/placer tensor for the whole run.
+/// The mask stays installed on the store afterwards, so saved fine-tuned
+/// checkpoints and later steps keep the same frozen set.
+///
+/// Errors for variants without superposition tensors (`no_superposition`)
+/// — there is nothing to adapt; use [`finetune_full`] to update all
+/// parameters instead.
+pub fn finetune(
+    session: &Session,
+    store: &mut ParamStore,
+    task: PlacementTask,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    let mask = session.manifest().superposition_update_mask();
+    if !mask.iter().any(|&t| t) {
+        bail!(
+            "variant {:?} has no superposition-conditioning tensors to \
+             fine-tune (the mask would freeze everything) — use \
+             finetune_full / --unfrozen, or a superposition variant",
+            session.manifest().variant
+        );
+    }
+    store.reset_optimizer()?;
+    store.set_update_mask(Some(mask))?;
+    train(&*session.policy, store, &[task], cfg)
+}
+
+/// Fine-tune with every tensor trainable (the mask is cleared): the
+/// from-scratch / full-adaptation ablation the Table-4 harness compares
+/// against.
+pub fn finetune_full(
+    session: &Session,
+    store: &mut ParamStore,
+    task: PlacementTask,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    store.reset_optimizer()?;
+    store.set_update_mask(None)?;
+    train(&*session.policy, store, &[task], cfg)
+}
+
+/// Zero-shot placement from a checkpoint: greedy + `samples` stochastic
+/// draws, best simulated candidate wins, **no parameter updates** (the
+/// store is borrowed immutably; `rust/tests/generalize.rs` pins
+/// bit-identity of the store across a call).
+pub fn zeroshot(
+    session: &Session,
+    store: &ParamStore,
+    task: &PlacementTask,
+    samples: usize,
+    seed: u64,
+) -> Result<TaskBest> {
+    infer(&*session.policy, store, task, samples, seed)
+}

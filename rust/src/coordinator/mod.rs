@@ -1,10 +1,13 @@
 //! L3 coordinator: the paper's system contribution — GDP-one / GDP-batch /
 //! fine-tune / zero-shot training orchestration over the AOT policy,
 //! baseline evaluation, metrics, and the experiment harnesses that
-//! regenerate every table and figure of the paper.
+//! regenerate every table and figure of the paper. The [`generalize`]
+//! module is the transfer pipeline (pre-train → checkpoint → fine-tune /
+//! zero-shot on hold-out graphs, GDP §3.3).
 
 pub mod baseline_eval;
 pub mod experiments;
+pub mod generalize;
 pub mod metrics;
 pub mod trainer;
 
@@ -92,9 +95,18 @@ impl Session {
         }
     }
 
-    /// Parameters from a checkpoint blob.
+    /// Parameters from disk: a versioned checkpoint (header validated
+    /// against this session's manifest — see [`crate::runtime::checkpoint`])
+    /// or a legacy raw f32 blob, auto-detected.
     pub fn load_params(&self, path: &Path) -> Result<ParamStore> {
-        ParamStore::load_blob(self.manifest(), path)
+        crate::runtime::checkpoint::load_auto(self.manifest(), path)
+    }
+
+    /// Persist `store` as a versioned checkpoint carrying this session's
+    /// full ABI header (variant, dims, parameter table), so any later
+    /// session validates compatibility before loading a single value.
+    pub fn save_checkpoint(&self, store: &ParamStore, path: &Path) -> Result<()> {
+        crate::runtime::checkpoint::save(self.manifest(), store, path)
     }
 
     /// Build a placement task for a registry workload.

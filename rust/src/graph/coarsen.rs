@@ -24,7 +24,7 @@ use std::collections::HashMap;
 #[derive(Clone, Debug)]
 pub struct Coarsened {
     pub graph: OpGraph,
-    /// members[c] = original node ids merged into coarse node c.
+    /// `members[c]` = original node ids merged into coarse node c.
     pub members: Vec<Vec<u32>>,
     pub orig_n: usize,
 }

@@ -24,15 +24,15 @@ pub struct FeatDims {
 /// Flattened, padded policy inputs for ONE graph (one batch row).
 #[derive(Clone, Debug)]
 pub struct GraphFeatures {
-    /// [N*F] row-major node features.
+    /// `[N*F]` row-major node features.
     pub feats: Vec<f32>,
-    /// [N*K] neighbor indices (0-padded).
+    /// `[N*K]` neighbor indices (0-padded).
     pub nbr_idx: Vec<i32>,
-    /// [N*K] 1.0 where the neighbor slot is valid.
+    /// `[N*K]` 1.0 where the neighbor slot is valid.
     pub nbr_mask: Vec<f32>,
-    /// [N] 1.0 for real (non-padding) nodes.
+    /// `[N]` 1.0 for real (non-padding) nodes.
     pub node_mask: Vec<f32>,
-    /// [D] 1.0 for devices this workload may use.
+    /// `[D]` 1.0 for devices this workload may use.
     pub dev_mask: Vec<f32>,
     /// Real node count.
     pub n_real: usize,

@@ -1,14 +1,28 @@
 //! GDP: Generalized Device Placement for Dataflow Graphs (Zhou et al., 2019)
 //! — a rust + JAX + Pallas reproduction.
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see DESIGN.md, and `rust/README.md` for the
+//! guided tour):
 //! - L1/L2 (build time, python): Pallas kernels + JAX policy, AOT-lowered to
 //!   HLO text under `artifacts/`.
-//! - L3 (this crate): the coordinator — dataflow-graph substrates, the
-//!   event-driven multi-device simulator that supplies the RL reward, the
-//!   baseline placers (human expert, METIS-style partitioner, HDP proxy),
-//!   the PPO training loop driving the AOT policy via PJRT, and the
-//!   experiment harnesses regenerating every table/figure of the paper.
+//! - L3 (this crate): the coordinator — dataflow-graph substrates
+//!   ([`graph`], [`workloads`]), the event-driven multi-device simulator
+//!   that supplies the RL reward ([`sim`]), the baseline placers (human
+//!   expert, METIS-style partitioner, HDP proxy — [`baselines`]), the
+//!   policy engines behind the [`runtime::PolicyBackend`] trait (native
+//!   pure-Rust engine and the AOT/PJRT path), and the training /
+//!   generalization / experiment orchestration ([`coordinator`]):
+//!   GDP-one, GDP-batch, and the paper's transfer pipeline — pre-train on
+//!   a graph corpus, checkpoint, then fine-tune only the superposition
+//!   network (or place zero-shot) on hold-out graphs.
+//!
+//! Data flows `workloads -> graph::coarsen/features -> runtime (policy
+//! fwd) -> policy::rollout sampling -> sim (reward) -> runtime
+//! (train_step)`, driven by [`coordinator::train`]; every stochastic
+//! piece draws from one seeded RNG so runs replay bit-identically
+//! (DESIGN.md §8).
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod baselines;
 pub mod coordinator;

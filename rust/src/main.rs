@@ -1,30 +1,41 @@
 //! `gdp` — the GDP reproduction CLI (L3 coordinator entry point).
 //!
 //! Subcommands:
-//!   list                         workload registry + baselines overview
-//!   simulate  <workload>         simulate baseline placements
-//!   train     <workload...>      GDP-one (one id) / GDP-batch (many ids)
-//!   infer     <workload>         zero-shot placement from a checkpoint
-//!   experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
 //!
-//! Run `gdp <cmd> --help` for flags. train/infer/experiment run on the
-//! native policy backend out of the box — every variant, including the
-//! `segmented` recurrent placer; `--backend pjrt` (or `GDP_BACKEND=pjrt`)
-//! selects the AOT/PJRT path, which needs `make artifacts`.
+//! ```text
+//! list                         workload registry + baselines overview
+//! simulate  <workload>         simulate baseline placements
+//! train     <workload...>      GDP-one (one id) / GDP-batch (many ids)
+//! infer     <workload>         placement from params (greedy + samples)
+//! pretrain                     GDP-batch over the generalization corpus
+//!                              -> versioned checkpoint
+//! finetune  <workload>         superposition-only adaptation of a
+//!                              checkpoint on a hold-out graph
+//! zeroshot  <workload>         place a hold-out from a checkpoint with
+//!                              no updates
+//! experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
+//! ```
+//!
+//! Run `gdp <cmd> --help` for flags (see rust/README.md for the full CLI
+//! reference). Everything runs on the native policy backend out of the
+//! box — every variant, including the `segmented` recurrent placer;
+//! `--backend pjrt` (or `GDP_BACKEND=pjrt`) selects the AOT/PJRT path,
+//! which needs `make artifacts`.
 
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
 use gdp::coordinator::experiments;
-use gdp::coordinator::{self, Session, TrainConfig};
+use gdp::coordinator::{self, generalize, Session, TrainConfig};
 use gdp::coordinator::baseline_eval::{eval_hdp, eval_heuristics};
 use gdp::runtime::PolicyBackend;
 use gdp::sim::{simulate_default, Topology};
 use gdp::util::cli::Args;
 use gdp::workloads;
+use gdp::workloads::corpus::{self, CorpusLevel};
 
-const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|experiment> [flags]
+const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetune|zeroshot|experiment> [flags]
   gdp list
   gdp simulate <workload> [--hdp-steps N]
   gdp trace <workload> --placement <human|metis|single> [--out trace.json]
@@ -35,7 +46,13 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|experiment> [fl
             [--save ckpt.bin] [--load ckpt.bin] [--quiet]
   gdp infer <workload> --load ckpt.bin [--samples N] [--variant V]
             [--backend native|pjrt]
-  gdp experiment --id <table1|table2|table3|fig2|fig3|fig4|all>
+  gdp pretrain [--corpus base|diverse] [--steps N] [--save ckpt]
+            [--variant V] [--backend B] [--seed N] [--quiet]
+  gdp finetune <workload> --checkpoint ckpt [--steps N] [--lr X]
+            [--unfrozen] [--save out.ckpt] [--variant V] [--backend B]
+  gdp zeroshot <workload> --checkpoint ckpt [--samples N] [--seed N]
+            [--variant V] [--backend B]
+  gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
             [--steps N] [--quick] [--out runs/]";
 
 fn main() {
@@ -59,6 +76,9 @@ fn run() -> Result<()> {
         "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
         "infer" => cmd_infer(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "finetune" => cmd_finetune(&args),
+        "zeroshot" => cmd_zeroshot(&args),
         "experiment" => cmd_experiment(&args),
         other => bail!("unknown subcommand {other:?}"),
     }
@@ -183,7 +203,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.wall_secs, result.xla_secs, result.sim_evals
     );
     if let Some(p) = save {
-        store.save(&p)?;
+        session.save_checkpoint(&store, &p)?;
         println!("saved checkpoint to {}", p.display());
     }
     Ok(())
@@ -216,6 +236,147 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let hist = best.best_placement.histogram(task.graph.num_devices);
     println!("  device histogram: {hist:?}");
     let _ = Topology::p100_pcie(task.graph.num_devices);
+    Ok(())
+}
+
+/// `gdp pretrain`: GDP-batch PPO over the generalization corpus (hold-outs
+/// excluded — see `workloads::corpus`), persisted as a versioned
+/// checkpoint for `finetune` / `zeroshot` / `experiment --id table4`.
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let level_s = args.str_or("corpus", "diverse");
+    let level = CorpusLevel::parse(&level_s)
+        .ok_or_else(|| anyhow!("--corpus expects base|diverse, got {level_s:?}"))?;
+    let save =
+        PathBuf::from(args.str_or("save", &format!("runs/pretrained_{variant}.ckpt")));
+    let backend = backend_from(args)?;
+    let mut cfg = train_cfg_from(args)?;
+    cfg.steps = args.usize_or("steps", 240).map_err(|e| anyhow!(e))?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let session = Session::open_with(&artifacts, &variant, backend)?;
+    let items = corpus::pretrain_corpus(level);
+    eprintln!(
+        "[pretrain] variant={variant} backend={} corpus={} graphs ({level_s}) \
+         steps={} hold-outs {:?} never seen",
+        session.policy.backend_name(),
+        items.len(),
+        cfg.steps,
+        corpus::holdout_ids()
+    );
+    let (store, result) = generalize::pretrain(&session, &items, &cfg)?;
+    for t in &result.per_task {
+        println!(
+            "{:<16} best {}",
+            t.task_id,
+            if t.best_valid { format!("{:.4}s", t.best_time) } else { "OOM".into() }
+        );
+    }
+    session.save_checkpoint(&store, &save)?;
+    println!(
+        "wall {:.1}s | {} sim evals | checkpoint -> {}",
+        result.wall_secs,
+        result.sim_evals,
+        save.display()
+    );
+    Ok(())
+}
+
+/// `gdp finetune`: adapt a pre-trained checkpoint to one (hold-out)
+/// workload, updating only the superposition-conditioning tensors; the
+/// shared GNN+placer stays frozen unless `--unfrozen` is passed.
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("finetune needs a workload id"))?;
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let ckpt = PathBuf::from(args.get("checkpoint").ok_or_else(|| {
+        anyhow!("finetune needs --checkpoint <pretrained.ckpt> (run `gdp pretrain` first)")
+    })?);
+    let unfrozen = args.flag("unfrozen");
+    let save = args.get("save").map(PathBuf::from);
+    let backend = backend_from(args)?;
+    let mut cfg = train_cfg_from(args)?;
+    cfg.steps = args.usize_or("steps", 30).map_err(|e| anyhow!(e))?;
+    cfg.lr = args.f64_or("lr", 3e-4).map_err(|e| anyhow!(e))? as f32;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let session = Session::open_with(&artifacts, &variant, backend)?;
+    let mut store = session.load_params(&ckpt)?;
+    let task = session.task(id, cfg.seed)?;
+    let frozen = if unfrozen {
+        0
+    } else {
+        session
+            .manifest()
+            .superposition_update_mask()
+            .iter()
+            .filter(|&&t| !t)
+            .count()
+    };
+    eprintln!(
+        "[finetune] {id} from {} | steps={} lr={} | {frozen}/{} tensors frozen",
+        ckpt.display(),
+        cfg.steps,
+        cfg.lr,
+        session.manifest().params.len()
+    );
+    let result = if unfrozen {
+        generalize::finetune_full(&session, &mut store, task, &cfg)?
+    } else {
+        generalize::finetune(&session, &mut store, task, &cfg)?
+    };
+    let b = &result.per_task[0];
+    println!(
+        "{:<12} best {}  (converged @ {} sim evals)",
+        b.task_id,
+        if b.best_valid { format!("{:.4}s", b.best_time) } else { "OOM".into() },
+        b.tracker.evals_to_within(0.05)
+    );
+    println!(
+        "wall {:.1}s | xla {:.1}s | {} sim evals",
+        result.wall_secs, result.xla_secs, result.sim_evals
+    );
+    if let Some(p) = save {
+        session.save_checkpoint(&store, &p)?;
+        println!("saved fine-tuned checkpoint to {}", p.display());
+    }
+    Ok(())
+}
+
+/// `gdp zeroshot`: place a workload straight from a checkpoint — greedy
+/// plus `--samples` stochastic draws, best simulated candidate wins, no
+/// parameter updates.
+fn cmd_zeroshot(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("zeroshot needs a workload id"))?;
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let ckpt = PathBuf::from(args.get("checkpoint").ok_or_else(|| {
+        anyhow!("zeroshot needs --checkpoint <pretrained.ckpt> (run `gdp pretrain` first)")
+    })?);
+    let samples = args.usize_or("samples", 8).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_or("seed", 3).map_err(|e| anyhow!(e))?;
+    let backend = backend_from(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let session = Session::open_with(&artifacts, &variant, backend)?;
+    let store = session.load_params(&ckpt)?;
+    let task = session.task(id, seed)?;
+    let best = generalize::zeroshot(&session, &store, &task, samples, seed)?;
+    println!(
+        "{id}: zero-shot best {}",
+        if best.best_valid { format!("{:.4}s", best.best_time) } else { "OOM".into() }
+    );
+    println!(
+        "  device histogram: {:?}",
+        best.best_placement.histogram(task.graph.num_devices)
+    );
     Ok(())
 }
 

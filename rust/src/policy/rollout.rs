@@ -8,11 +8,11 @@ use crate::util::{argmax, Rng};
 /// One sampled (or greedy) placement for a batch row.
 #[derive(Clone, Debug)]
 pub struct Sample {
-    /// Device per PADDED node slot [N] (0 for padding; fed to train_step).
+    /// Device per PADDED node slot `[N]` (0 for padding; fed to train_step).
     pub actions: Vec<i32>,
-    /// log pi(action | node) per padded slot [N] (0 for padding).
+    /// log pi(action | node) per padded slot `[N]` (0 for padding).
     pub logp: Vec<f32>,
-    /// Device per REAL coarse node [n_real] (fed to the simulator).
+    /// Device per REAL coarse node `[n_real]` (fed to the simulator).
     pub placement: Vec<usize>,
 }
 

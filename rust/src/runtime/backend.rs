@@ -53,6 +53,14 @@ impl BackendKind {
 /// surrogate with entropy bonus over node-masked slots, analytic gradients,
 /// global-norm clip at 1.0, one Adam update applied to `store` in place,
 /// `store.step` advanced by one.
+///
+/// **Update-mask contract** (fine-tuning, GDP §3.3): when the store
+/// carries an update mask ([`ParamStore::set_update_mask`]), `train_step`
+/// must leave every frozen tensor — value and Adam moments — bit-identical
+/// to its pre-step state. The native engine additionally excludes frozen
+/// gradients from the global-norm clip; the PJRT engine restores frozen
+/// tensors after the full HLO update (its in-graph clip norm still sees
+/// frozen grads — see DESIGN.md §7 for the exact semantics).
 pub trait PolicyBackend {
     fn manifest(&self) -> &Manifest;
 

@@ -1,0 +1,389 @@
+//! Versioned policy checkpoints: the on-disk format behind `gdp pretrain`
+//! / `finetune` / `zeroshot` and the transfer experiments (DESIGN.md §7).
+//!
+//! # Format contract (version 1)
+//!
+//! A checkpoint is a single file:
+//!
+//! ```text
+//! bytes 0..7    magic  b"GDPCKPT"
+//! byte  7       format version (1)
+//! bytes 8..12   u32 LE header length `hl`
+//! bytes 12..12+hl  JSON header (utf-8)
+//! rest          payload: `total_elements` f32 values, little-endian,
+//!               in the manifest's sorted-key order
+//! ```
+//!
+//! The JSON header records everything needed to validate the payload
+//! against a session's [`Manifest`] before a single byte of it is
+//! interpreted: the model `variant`, every static dimension (`dims`),
+//! the full parameter table (name / shape / offset per tensor, sorted-key
+//! order, contiguous offsets) and `total_elements`, plus the training
+//! `step` at save time for provenance. [`load`] cross-checks each of
+//! these and fails with an actionable message naming the first mismatch,
+//! so a checkpoint can never be silently reinterpreted under a different
+//! ABI (wrong variant, resized dims, drifted parameter layout).
+//!
+//! The payload is byte-identical to [`ParamStore::to_flat`] — f32
+//! bit-exact, NaNs and signed zeros included — so save → load reproduces
+//! the forward pass bit-for-bit (pinned by `rust/tests/checkpoint.rs`).
+//!
+//! Checkpoints carry **parameters only**: Adam moments are not saved and
+//! the optimizer restarts from zero on load, matching the paper's
+//! fine-tuning setup (GDP §3.3). The pre-PR-5 raw flat blob
+//! (`params_init.bin` and old `--save` files) remains readable through
+//! [`load_auto`], which dispatches on the magic bytes.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Dims, Manifest};
+use super::params::ParamStore;
+use crate::util::json::{parse, Json};
+
+/// First 7 bytes of every versioned checkpoint.
+pub const MAGIC: &[u8; 7] = b"GDPCKPT";
+/// Current (and only) format version.
+pub const FORMAT_VERSION: u8 = 1;
+
+/// Named dims fields, for field-by-field mismatch reporting. Keys match
+/// `manifest.json` (`python/compile/config.py`).
+fn dims_fields(d: &Dims) -> [(&'static str, f64); 12] {
+    [
+        ("N", d.n as f64),
+        ("K", d.k as f64),
+        ("F", d.f as f64),
+        ("H", d.h as f64),
+        ("D", d.d as f64),
+        ("B", d.b as f64),
+        ("gnn_layers", d.gnn_layers as f64),
+        ("placer_layers", d.placer_layers as f64),
+        ("heads", d.heads as f64),
+        ("ffn", d.ffn as f64),
+        ("segments", d.segments as f64),
+        ("clip_eps", d.clip_eps),
+    ]
+}
+
+fn header_json(manifest: &Manifest, step: f32) -> Json {
+    let dims = Json::obj(
+        dims_fields(&manifest.dims)
+            .iter()
+            .map(|&(k, v)| (k, Json::num(v)))
+            .collect(),
+    );
+    let params = Json::arr(
+        manifest
+            .params
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("name", Json::str(&p.name)),
+                    (
+                        "shape",
+                        Json::arr(p.shape.iter().map(|&x| Json::num(x as f64)).collect()),
+                    ),
+                    ("elements", Json::num(p.elements as f64)),
+                    ("offset", Json::num(p.offset as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("format_version", Json::num(FORMAT_VERSION as f64)),
+        ("variant", Json::str(&manifest.variant)),
+        ("use_attention", Json::Bool(manifest.use_attention)),
+        ("use_superposition", Json::Bool(manifest.use_superposition)),
+        ("dims", dims),
+        ("step", Json::num(step as f64)),
+        ("params", params),
+        ("total_elements", Json::num(manifest.total_elements as f64)),
+    ])
+}
+
+/// True when `bytes` start with the versioned-checkpoint magic (any
+/// version byte). Raw legacy blobs of f32s essentially never collide with
+/// the 7-byte ASCII magic.
+pub fn is_checkpoint(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC
+}
+
+/// Write `store`'s parameters as a version-1 checkpoint for `manifest`.
+///
+/// The store must belong to `manifest` (same tensor count and total
+/// element count); parent directories are created as needed.
+pub fn save(manifest: &Manifest, store: &ParamStore, path: &Path) -> Result<()> {
+    if store.num_tensors() != manifest.params.len() {
+        bail!(
+            "cannot checkpoint: store has {} tensors, manifest {:?} has {}",
+            store.num_tensors(),
+            manifest.variant,
+            manifest.params.len()
+        );
+    }
+    let flat = store.to_flat()?;
+    if flat.len() != manifest.total_elements {
+        bail!(
+            "cannot checkpoint: store flattens to {} elements, manifest \
+             {:?} expects {}",
+            flat.len(),
+            manifest.variant,
+            manifest.total_elements
+        );
+    }
+    let header = header_json(manifest, store.step).to_string();
+    let mut bytes =
+        Vec::with_capacity(12 + header.len() + flat.len() * 4);
+    bytes.extend_from_slice(MAGIC);
+    bytes.push(FORMAT_VERSION);
+    bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
+    for x in flat {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, bytes)
+        .with_context(|| format!("writing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a version-1 checkpoint, validating every header field against
+/// `manifest` before touching the payload. Returns a fresh [`ParamStore`]
+/// with zeroed optimizer state (`step = 0`); the header's saved step is
+/// provenance only.
+pub fn load(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let ctx = |msg: String| anyhow!("{}: {msg}", path.display());
+    if !is_checkpoint(&bytes) {
+        return Err(ctx(
+            "not a GDP checkpoint (bad magic) — raw f32 blobs like \
+             params_init.bin load via ParamStore::load_blob or \
+             checkpoint::load_auto"
+                .into(),
+        ));
+    }
+    if bytes.len() < 12 {
+        return Err(ctx("truncated before header length".into()));
+    }
+    let version = bytes[MAGIC.len()];
+    if version != FORMAT_VERSION {
+        return Err(ctx(format!(
+            "checkpoint format version {version} unsupported (this build \
+             reads version {FORMAT_VERSION})"
+        )));
+    }
+    let hl = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+    let body = 12 + hl;
+    if bytes.len() < body {
+        return Err(ctx(format!(
+            "truncated header: need {hl} bytes, file has {}",
+            bytes.len() - 12
+        )));
+    }
+    let header_text = std::str::from_utf8(&bytes[12..body])
+        .map_err(|_| ctx("header is not valid utf-8 (corrupt file?)".into()))?;
+    let header = parse(header_text)
+        .map_err(|e| ctx(format!("header is not valid json ({e}) — corrupt file?")))?;
+
+    // --- validate header against the session manifest, field by field ---
+    let variant = header
+        .get("variant")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ctx("header missing variant".into()))?;
+    if variant != manifest.variant {
+        return Err(ctx(format!(
+            "checkpoint was written for variant {variant:?} but the session \
+             is {:?} — reopen with --variant {variant}",
+            manifest.variant
+        )));
+    }
+    let dims_v = header
+        .get("dims")
+        .ok_or_else(|| ctx("header missing dims".into()))?;
+    for (key, ours) in dims_fields(&manifest.dims) {
+        let theirs = dims_v
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ctx(format!("header dims missing {key}")))?;
+        if theirs != ours {
+            return Err(ctx(format!(
+                "checkpoint dims {key}={theirs} != session dims {key}={ours} \
+                 — the checkpoint was written under different AOT dims and \
+                 cannot be loaded into this session"
+            )));
+        }
+    }
+    let params_v = header
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ctx("header missing params table".into()))?;
+    if params_v.len() != manifest.params.len() {
+        return Err(ctx(format!(
+            "checkpoint has {} parameter tensors, session manifest has {} \
+             — parameter-layout (ABI) drift",
+            params_v.len(),
+            manifest.params.len()
+        )));
+    }
+    for (p, ours) in params_v.iter().zip(&manifest.params) {
+        let name = p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ctx("param entry missing name".into()))?;
+        let offset = p
+            .get("offset")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ctx(format!("param {name} missing offset")))?;
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ctx(format!("param {name} missing shape")))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        if name != ours.name || shape != ours.shape || offset != ours.offset {
+            return Err(ctx(format!(
+                "checkpoint param table mismatch: checkpoint has {name:?} \
+                 shape {shape:?} at offset {offset}, session manifest has \
+                 {:?} shape {:?} at offset {} — parameter-layout (ABI) drift",
+                ours.name, ours.shape, ours.offset
+            )));
+        }
+    }
+    let total = header
+        .get("total_elements")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ctx("header missing total_elements".into()))?;
+    if total != manifest.total_elements {
+        return Err(ctx(format!(
+            "checkpoint total_elements {total} != manifest {} — ABI drift",
+            manifest.total_elements
+        )));
+    }
+
+    // --- payload ---
+    let payload = &bytes[body..];
+    if payload.len() != total * 4 {
+        return Err(ctx(format!(
+            "payload has {} bytes, header promises {} ({} f32s) — file \
+             truncated or corrupt",
+            payload.len(),
+            total * 4,
+            total
+        )));
+    }
+    let flat: Vec<f32> = payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    ParamStore::from_flat(manifest, &flat)
+}
+
+/// Load either a versioned checkpoint (validated, see [`load`]) or a
+/// legacy raw f32 blob (size-checked only), dispatching on the magic
+/// bytes. This is what CLI `--load` / `--checkpoint` flags go through.
+pub fn load_auto(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
+    let mut head = [0u8; 7];
+    let is_versioned = std::fs::File::open(path)
+        .and_then(|mut f| std::io::Read::read_exact(&mut f, &mut head))
+        .map(|_| &head == MAGIC)
+        .unwrap_or(false);
+    if is_versioned {
+        load(manifest, path)
+    } else {
+        ParamStore::load_blob(manifest, path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::parse_str(
+            r#"{
+          "variant":"t","use_attention":true,"use_superposition":true,
+          "dims":{"N":4,"K":2,"F":4,"H":4,"D":2,"B":2,
+                  "gnn_layers":1,"placer_layers":1,"heads":1,"clip_eps":0.2},
+          "params":[
+            {"name":"a","shape":[2,2],"elements":4,"offset":0},
+            {"name":"b","shape":[3],"elements":3,"offset":4}
+          ],
+          "total_elements":7
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let m = tiny_manifest();
+        // include values that only survive bit-exact encoding
+        let flat = vec![0.1f32, -0.0, f32::MIN_POSITIVE, 1e-40, 3.5, -7.25, 0.3];
+        let store = ParamStore::from_flat(&m, &flat).unwrap();
+        let dir = std::env::temp_dir().join("gdp_ckpt_unit");
+        let path = dir.join("a.ckpt");
+        save(&m, &store, &path).unwrap();
+        let back = load(&m, &path).unwrap();
+        let flat2 = back.to_flat().unwrap();
+        assert_eq!(flat.len(), flat2.len());
+        for (a, b) in flat.iter().zip(&flat2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.step, 0.0, "optimizer restarts on load");
+        // auto path reads both formats
+        let auto = load_auto(&m, &path).unwrap();
+        assert_eq!(auto.to_flat().unwrap(), flat);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_blob_via_auto() {
+        let m = tiny_manifest();
+        let flat: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let store = ParamStore::from_flat(&m, &flat).unwrap();
+        let dir = std::env::temp_dir().join("gdp_ckpt_unit_legacy");
+        let path = dir.join("raw.bin");
+        store.save(&path).unwrap(); // raw flat blob
+        assert!(load(&m, &path).is_err(), "raw blob is not a checkpoint");
+        let back = load_auto(&m, &path).unwrap();
+        assert_eq!(back.to_flat().unwrap(), flat);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mismatches_rejected_with_context() {
+        let m = tiny_manifest();
+        let flat: Vec<f32> = (0..7).map(|i| i as f32 * 0.5).collect();
+        let store = ParamStore::from_flat(&m, &flat).unwrap();
+        let dir = std::env::temp_dir().join("gdp_ckpt_unit_bad");
+        let path = dir.join("a.ckpt");
+        save(&m, &store, &path).unwrap();
+
+        // wrong variant
+        let mut other = m.clone();
+        other.variant = "u".into();
+        let err = load(&other, &path).unwrap_err().to_string();
+        assert!(err.contains("variant"), "{err}");
+
+        // wrong dims
+        let mut other = m.clone();
+        other.dims.h = 8;
+        let err = load(&other, &path).unwrap_err().to_string();
+        assert!(err.contains("H="), "{err}");
+
+        // truncated payload
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 4);
+        let cut = dir.join("cut.ckpt");
+        std::fs::write(&cut, &bytes).unwrap();
+        let err = load(&m, &cut).unwrap_err().to_string();
+        assert!(err.contains("truncated") || err.contains("corrupt"), "{err}");
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -165,6 +165,20 @@ impl Policy {
         if adv.len() != d.b {
             bail!("advantage shape mismatch");
         }
+        // Snapshot frozen tensors before execution (see restore below).
+        let mut frozen_snapshot: Vec<(usize, Literal, Literal, Literal)> = Vec::new();
+        if let Some(mask) = store.update_mask() {
+            for (i, &updatable) in mask.iter().enumerate() {
+                if !updatable {
+                    frozen_snapshot.push((
+                        i,
+                        store.values[i].clone(),
+                        store.m[i].clone(),
+                        store.v[i].clone(),
+                    ));
+                }
+            }
+        }
         let sh = |dims: &[usize]| dims.iter().map(|&x| x as i64).collect::<Vec<_>>();
         let t_lit = Literal::scalar(store.step + 1.0);
         let lr_lit = Literal::scalar(lr);
@@ -202,6 +216,17 @@ impl Policy {
         let v = outs.split_off(2 * p);
         let m = outs.split_off(p);
         store.update(outs, m, v);
+        // Fine-tune freezing (update mask): the lowered HLO predates the
+        // mask, so frozen tensors are restored post-hoc — values AND Adam
+        // moments — from the snapshot taken above. Frozen tensors stay
+        // bit-identical, same contract as the native backend (which also
+        // excludes frozen grads from the clip norm; here the HLO's clip
+        // still sees them — documented in DESIGN.md §7).
+        for (i, val, m, v) in frozen_snapshot {
+            store.values[i] = val;
+            store.m[i] = m;
+            store.v[i] = v;
+        }
         Ok(TrainStats { loss, entropy, approx_kl: kl, exec_secs: t0.elapsed().as_secs_f64() })
     }
 }

@@ -255,6 +255,16 @@ impl Manifest {
         };
         Self::synthesize(dims, variant, att, sp)
     }
+
+    /// Per-tensor update mask for the paper's fine-tuning protocol (GDP
+    /// §3.3, DESIGN.md §7): `true` (trainable) exactly for the
+    /// superposition-conditioning tensors — `pl{l}_cond1_*`,
+    /// `pl{l}_cond2_*`, `head_cond_*` — and `false` for every shared
+    /// GNN/placer tensor. All-false for the `no_superposition` ablation,
+    /// which has nothing to fine-tune (callers should reject that).
+    pub fn superposition_update_mask(&self) -> Vec<bool> {
+        self.params.iter().map(|p| p.name.contains("cond")).collect()
+    }
 }
 
 /// Unsorted (name, shape) list mirroring `model.py::init_params` insertion
@@ -400,6 +410,16 @@ mod tests {
         assert_eq!(
             seg.params.iter().map(|p| &p.name).collect::<Vec<_>>(),
             full.params.iter().map(|p| &p.name).collect::<Vec<_>>()
+        );
+        // fine-tune mask: exactly the cond tensors are trainable
+        let mask = full.superposition_update_mask();
+        for (p, &trainable) in full.params.iter().zip(&mask) {
+            assert_eq!(trainable, p.name.contains("cond"), "{}", p.name);
+        }
+        assert!(mask.iter().any(|&t| t) && mask.iter().any(|&t| !t));
+        assert!(
+            nosp.superposition_update_mask().iter().all(|&t| !t),
+            "no_superposition has no trainable fine-tune tensors"
         );
         // a caller-chosen window count is honored; indivisible N is not
         let mut d4 = dims;

@@ -14,8 +14,13 @@
 //!
 //! Both backends share the sorted-key `ParamStore`/`Manifest` ABI and the
 //! `Batch` literal marshalling, so checkpoints are interchangeable.
+//! `checkpoint` defines the versioned on-disk format (self-describing
+//! header validated against the manifest) that persists pretrained
+//! parameters across sessions; `params` carries the per-tensor update
+//! mask both backends honor when fine-tuning.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod exec;
 pub mod manifest;
 pub mod native;

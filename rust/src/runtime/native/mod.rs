@@ -11,7 +11,7 @@
 //! policy-step cost linearly in graph size instead of quadratically.
 //!
 //! Built for throughput in the PR-2 `SimPlan`/`SimWorkspace` style:
-//! - one preallocated [`PolicyWorkspace`] of flat row-major f32 buffers
+//! - one preallocated `PolicyWorkspace` of flat row-major f32 buffers
 //!   (attention windows in its `SegWs`), zero heap allocation per step
 //!   after construction;
 //! - panel-blocked matmul kernels ([`linalg`]), including the strided
@@ -513,6 +513,17 @@ impl PolicyBackend for NativePolicy {
         let (loss, entropy, kl) = self.compute_loss_and_grad(
             store, batch, actions, logp_old, adv, entropy_coef, &mut ws,
         )?;
+        // Fine-tune freezing (update mask): zero frozen tensors' gradients
+        // BEFORE the global-norm clip, so the clip scale reflects only the
+        // trainable parameters, then skip their Adam state entirely —
+        // frozen values and moments stay bit-identical across steps.
+        if store.frozen_tensors() > 0 {
+            for (i, &(off, len)) in self.offs.iter().enumerate() {
+                if !store.tensor_updatable(i) {
+                    ws.grad_total[off..off + len].fill(0.0);
+                }
+            }
+        }
         // global-norm clip (f64 accumulation for a stable norm)
         let gn = (ws
             .grad_total
@@ -527,6 +538,9 @@ impl PolicyBackend for NativePolicy {
         let bc1 = 1.0 - ADAM_B1.powf(t);
         let bc2 = 1.0 - ADAM_B2.powf(t);
         for (i, &(off, len)) in self.offs.iter().enumerate() {
+            if !store.tensor_updatable(i) {
+                continue;
+            }
             let g = &ws.grad_total[off..off + len];
             let val = store.values[i].f32_slice_mut()?;
             let m = store.m[i].f32_slice_mut()?;

@@ -1,8 +1,22 @@
 //! Parameter store: the policy's flattened parameters + Adam state as XLA
 //! literals, in the manifest's sorted-name order (the HLO input order).
-//! Checkpoints are the same flat little-endian f32 blob format the python
-//! AOT writes for `params_init.bin`, so init/pretrained/fine-tuned params
-//! are interchangeable.
+//!
+//! Two on-disk formats exist:
+//! - the **raw flat blob** — little-endian f32s in manifest order, the
+//!   format the python AOT writes for `params_init.bin`
+//!   ([`ParamStore::save`] / [`ParamStore::load_blob`]);
+//! - the **versioned checkpoint** — the raw payload prefixed with a
+//!   self-describing header that [`crate::runtime::checkpoint`] validates
+//!   against the session manifest (variant, dims, sorted-key parameter
+//!   table) before loading. New tooling writes this format; CLI load
+//!   paths accept both via [`crate::runtime::checkpoint::load_auto`].
+//!
+//! The store also carries the **per-tensor update mask** the fine-tuning
+//! protocol uses (GDP §3.3): when a mask is set, both policy backends'
+//! Adam steps leave masked-out tensors — values *and* moments —
+//! bit-identical, so "freeze the shared GNN+placer, adapt only the
+//! superposition conditioning" is a property of the store rather than of
+//! any one training loop.
 
 use std::path::Path;
 
@@ -21,6 +35,8 @@ pub struct ParamStore {
     /// 1-based Adam step counter (f32 for bias correction in the HLO).
     pub step: f32,
     shapes: Vec<Vec<usize>>,
+    /// Per-tensor update gate (manifest order); `None` = all trainable.
+    update_mask: Option<Vec<bool>>,
 }
 
 fn literal_from(data: &[f32], shape: &[usize]) -> Result<Literal> {
@@ -50,7 +66,7 @@ impl ParamStore {
             v.push(literal_from(&zeros, &p.shape)?);
             shapes.push(p.shape.clone());
         }
-        Ok(Self { values, m, v, step: 0.0, shapes })
+        Ok(Self { values, m, v, step: 0.0, shapes, update_mask: None })
     }
 
     /// Load the python-written init blob (or any checkpoint blob).
@@ -81,8 +97,11 @@ impl ParamStore {
         Ok(out)
     }
 
-    /// Save a checkpoint blob (params only; Adam state is reset on load,
-    /// matching the paper's fine-tuning setup).
+    /// Save the raw flat blob (params only; Adam state is reset on load,
+    /// matching the paper's fine-tuning setup). This is the legacy /
+    /// python-interchange format; prefer [`crate::runtime::checkpoint::save`]
+    /// for anything a human will move between sessions — it embeds the
+    /// ABI header that makes loads self-validating.
     pub fn save(&self, path: &Path) -> Result<()> {
         let flat = self.to_flat()?;
         let mut bytes = Vec::with_capacity(flat.len() * 4);
@@ -125,6 +144,40 @@ impl ParamStore {
 
     pub fn num_tensors(&self) -> usize {
         self.values.len()
+    }
+
+    /// Install (or clear, with `None`) the per-tensor update mask.
+    /// `mask[i] == false` freezes tensor `i` (manifest order): both
+    /// backends' Adam steps then leave its value and moments untouched.
+    pub fn set_update_mask(&mut self, mask: Option<Vec<bool>>) -> Result<()> {
+        if let Some(m) = &mask {
+            if m.len() != self.values.len() {
+                bail!(
+                    "update mask has {} entries, store has {} tensors",
+                    m.len(),
+                    self.values.len()
+                );
+            }
+        }
+        self.update_mask = mask;
+        Ok(())
+    }
+
+    /// The active update mask, if any (manifest order).
+    pub fn update_mask(&self) -> Option<&[bool]> {
+        self.update_mask.as_deref()
+    }
+
+    /// Whether tensor `i` receives optimizer updates.
+    pub fn tensor_updatable(&self, i: usize) -> bool {
+        self.update_mask.as_ref().map_or(true, |m| m[i])
+    }
+
+    /// Number of frozen tensors under the active mask (0 when unmasked).
+    pub fn frozen_tensors(&self) -> usize {
+        self.update_mask
+            .as_ref()
+            .map_or(0, |m| m.iter().filter(|&&u| !u).count())
     }
 }
 
@@ -175,5 +228,21 @@ mod tests {
     fn wrong_size_rejected() {
         let m = tiny_manifest();
         assert!(ParamStore::from_flat(&m, &[0.0; 6]).is_err());
+    }
+
+    #[test]
+    fn update_mask_validated_and_queried() {
+        let m = tiny_manifest();
+        let flat: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let mut store = ParamStore::from_flat(&m, &flat).unwrap();
+        assert_eq!(store.frozen_tensors(), 0);
+        assert!(store.tensor_updatable(0) && store.tensor_updatable(1));
+        assert!(store.set_update_mask(Some(vec![true])).is_err(), "wrong len");
+        store.set_update_mask(Some(vec![false, true])).unwrap();
+        assert_eq!(store.frozen_tensors(), 1);
+        assert!(!store.tensor_updatable(0));
+        assert!(store.tensor_updatable(1));
+        store.set_update_mask(None).unwrap();
+        assert_eq!(store.frozen_tensors(), 0);
     }
 }

@@ -33,9 +33,9 @@ impl DeviceSpec {
 #[derive(Clone, Debug)]
 pub struct Topology {
     pub devices: Vec<DeviceSpec>,
-    /// Row-major [d*d] link bandwidth, bytes/s (diagonal unused).
+    /// Row-major `[d*d]` link bandwidth, bytes/s (diagonal unused).
     pub link_bw: Vec<f64>,
-    /// Row-major [d*d] link latency, seconds.
+    /// Row-major `[d*d]` link latency, seconds.
     pub link_lat: Vec<f64>,
 }
 

@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 
 /// Flags that never take a value (`--quick target` must not eat `target`).
-const BOOL_FLAGS: &[&str] = &["quick", "quiet", "verbose", "help"];
+const BOOL_FLAGS: &[&str] = &["quick", "quiet", "verbose", "help", "unfrozen"];
 
 #[derive(Debug, Default)]
 pub struct Args {

@@ -1,0 +1,174 @@
+//! Pre-train corpus and hold-out split for the generalization pipeline
+//! (GDP §3.3, DESIGN.md §7).
+//!
+//! The paper's transfer claim is evaluated by pre-training the shared
+//! GNN+placer on a *corpus* of graphs and then fine-tuning only the
+//! superposition network on graphs the policy never saw. This module is
+//! the split protocol:
+//!
+//! - [`holdout_ids`] — the evaluation set: `gnmt8` and `rnnlm8` (deeper
+//!   instances of families that ARE pre-trained at 2/4 layers) plus
+//!   `wavenet4` from the **unseen family**: no WaveNet graph of any size
+//!   appears in any pre-train corpus, so placing it exercises pure
+//!   structural generalization rather than family memorization.
+//! - [`pretrain_corpus`] — the registry's non-hold-out workloads
+//!   ([`CorpusLevel::Base`]), optionally expanded with parameterized
+//!   mutations of each family's generator config — layer counts, hidden
+//!   widths, batch sizes, unroll lengths ([`CorpusLevel::Diverse`]) —
+//!   for the scenario diversity the superposition network conditions on.
+//!
+//! Mutations mostly shrink or mildly perturb the base configs so every
+//! corpus graph stays placeable within its family's device budget; ids
+//! are `<base>@<mutation>` (e.g. `rnnlm2@b32`, `gnmt4@h2048`) and are
+//! unique across the corpus (asserted in `rust/tests/generalize.rs`).
+
+use crate::graph::OpGraph;
+use crate::workloads::{self, gnmt, rnnlm, transformer_xl};
+
+/// One named corpus graph, ready to become a
+/// [`crate::policy::PlacementTask`].
+pub struct CorpusItem {
+    /// Unique id: a registry id, or `<base>@<mutation>` for mutated
+    /// configs.
+    pub id: String,
+    pub graph: OpGraph,
+}
+
+impl CorpusItem {
+    pub fn new(id: impl Into<String>, graph: OpGraph) -> Self {
+        Self { id: id.into(), graph }
+    }
+}
+
+/// How much scenario diversity the pre-train corpus carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusLevel {
+    /// Registry workloads only (minus hold-outs): fast smoke runs.
+    Base,
+    /// Base plus parameterized mutations of each family generator:
+    /// the default for real pre-training runs.
+    Diverse,
+}
+
+impl CorpusLevel {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "base" => Some(Self::Base),
+            "diverse" => Some(Self::Diverse),
+            _ => None,
+        }
+    }
+}
+
+/// The hold-out evaluation set: never present in any pre-train corpus.
+/// `gnmt8`/`rnnlm8` test depth extrapolation within seen families;
+/// `wavenet4` tests an entirely unseen family (no `wavenet*` graph is
+/// pre-trained).
+pub fn holdout_ids() -> &'static [&'static str] {
+    &["gnmt8", "rnnlm8", "wavenet4"]
+}
+
+/// True when `id` may not appear in a pre-train corpus: an explicit
+/// hold-out, or any member of the unseen WaveNet family.
+pub fn is_holdout(id: &str) -> bool {
+    holdout_ids().contains(&id) || id.starts_with("wavenet")
+}
+
+/// Build the pre-train corpus at the requested diversity level. Graphs
+/// are built eagerly (generators are cheap relative to one PPO step);
+/// deterministic — no RNG, the mutation set is fixed.
+pub fn pretrain_corpus(level: CorpusLevel) -> Vec<CorpusItem> {
+    let mut items: Vec<CorpusItem> = Vec::new();
+    // Registry workloads, hold-out families carved out.
+    for spec in workloads::registry() {
+        if is_holdout(spec.id) {
+            continue;
+        }
+        items.push(CorpusItem::new(spec.id, (spec.build)()));
+    }
+    if level == CorpusLevel::Base {
+        return items;
+    }
+    // Parameterized mutations (Diverse): vary batch size, hidden width,
+    // unroll length and depth around each recurrent family's base config.
+    // RNNLM: the paper's hardest family — batch and width sweeps plus an
+    // intermediate depth absent from the registry.
+    {
+        let mut c = rnnlm::Config::with_layers(2);
+        c.batch = 32;
+        items.push(CorpusItem::new("rnnlm2@b32", rnnlm::build_cfg(&c, 2)));
+        let mut c = rnnlm::Config::with_layers(2);
+        c.hidden = 2048;
+        items.push(CorpusItem::new("rnnlm2@h2048", rnnlm::build_cfg(&c, 2)));
+        let mut c = rnnlm::Config::with_layers(3);
+        c.steps = 24;
+        items.push(CorpusItem::new("rnnlm3@t24", rnnlm::build_cfg(&c, 4)));
+        let mut c = rnnlm::Config::with_layers(4);
+        c.batch = 96;
+        c.hidden = 3072;
+        items.push(CorpusItem::new("rnnlm4@b96h3072", rnnlm::build_cfg(&c, 4)));
+    }
+    // GNMT: width and unroll-length sweeps.
+    {
+        let mut c = gnmt::Config::with_layers(2);
+        c.hidden = 2048;
+        items.push(CorpusItem::new("gnmt2@h2048", gnmt::build_cfg(&c, 2)));
+        let mut c = gnmt::Config::with_layers(4);
+        c.steps = 16;
+        items.push(CorpusItem::new("gnmt4@t16", gnmt::build_cfg(&c, 4)));
+        let mut c = gnmt::Config::with_layers(4);
+        c.batch = 32;
+        items.push(CorpusItem::new("gnmt4@b32", gnmt::build_cfg(&c, 4)));
+    }
+    // Transformer-XL: segment-count and model-width sweeps.
+    {
+        let mut c = transformer_xl::Config::with_layers(2);
+        c.segments = 2;
+        items.push(CorpusItem::new("txl2@s2", transformer_xl::build_cfg(&c, 2)));
+        let mut c = transformer_xl::Config::with_layers(4);
+        c.d_model = 512;
+        c.d_ffn = 2048;
+        items.push(CorpusItem::new("txl4@d512", transformer_xl::build_cfg(&c, 4)));
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_excludes_holdouts_and_builds_valid_graphs() {
+        for level in [CorpusLevel::Base, CorpusLevel::Diverse] {
+            let corpus = pretrain_corpus(level);
+            assert!(corpus.len() >= 9, "{level:?}: corpus too small");
+            let mut seen = std::collections::BTreeSet::new();
+            for item in &corpus {
+                assert!(seen.insert(item.id.clone()), "dup id {}", item.id);
+                let base = item.id.split('@').next().unwrap();
+                assert!(!is_holdout(base), "{} leaks a hold-out", item.id);
+                assert!(!base.starts_with("wavenet"), "{} leaks wavenet", item.id);
+                assert!(
+                    item.graph.validate().is_ok(),
+                    "{}: {:?}",
+                    item.id,
+                    item.graph.validate()
+                );
+                assert!(item.graph.n() >= 50, "{} too small", item.id);
+            }
+        }
+        assert!(
+            pretrain_corpus(CorpusLevel::Diverse).len()
+                > pretrain_corpus(CorpusLevel::Base).len()
+        );
+    }
+
+    #[test]
+    fn holdouts_exist_in_registry() {
+        for id in holdout_ids() {
+            assert!(workloads::by_id(id).is_some(), "{id} missing from registry");
+        }
+        assert!(is_holdout("wavenet2"), "whole wavenet family is unseen");
+        assert!(!is_holdout("gnmt4"));
+    }
+}

@@ -8,13 +8,21 @@
 //! generators reproduce the placement-relevant structure — long recurrent
 //! grids, multi-branch convolutional cells, dilated stacks, attention
 //! blocks — with realistic FLOP/byte/parameter magnitudes.
+//!
+//! [`corpus`] layers the generalization split on top of the registry: the
+//! pre-train corpus (registry minus hold-outs, optionally expanded with
+//! parameterized config mutations) and the hold-out set the transfer
+//! experiments evaluate on (DESIGN.md §7).
 
 pub mod amoebanet;
+pub mod corpus;
 pub mod gnmt;
 pub mod inception;
 pub mod rnnlm;
 pub mod transformer_xl;
 pub mod wavenet;
+
+pub use corpus::{holdout_ids, pretrain_corpus, CorpusItem, CorpusLevel};
 
 use crate::graph::OpGraph;
 

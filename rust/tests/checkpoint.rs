@@ -1,0 +1,159 @@
+//! Checkpoint format contract tests (DESIGN.md §7): save → load must
+//! reproduce the forward pass bit-for-bit on every model variant, and a
+//! checkpoint must never load under a mismatched ABI — wrong variant,
+//! different dims, drifted parameter table, or a corrupt/truncated file —
+//! failing instead with an error that names the mismatch.
+
+use std::path::{Path, PathBuf};
+
+use gdp::coordinator::Session;
+use gdp::runtime::{checkpoint, Batch, Dims, Manifest, ParamStore};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gdp_ckpt_it_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// One PPO step so the stored values are real training output, not the
+/// (structured) init state.
+fn perturbed_store(session: &Session, batch: &Batch) -> ParamStore {
+    let dims = session.manifest().dims;
+    let mut store = session.init_params().unwrap();
+    let actions = vec![0i32; dims.b * dims.n];
+    let logp_old = vec![-0.69f32; dims.b * dims.n];
+    let adv: Vec<f32> =
+        (0..dims.b).map(|i| if i % 2 == 0 { 0.4 } else { -0.3 }).collect();
+    session
+        .policy
+        .train_step(&mut store, batch, &actions, &logp_old, &adv, 1e-3, 0.01)
+        .unwrap();
+    store
+}
+
+#[test]
+fn roundtrip_bit_identical_forward_all_variants() {
+    let dir = tmpdir("roundtrip");
+    for variant in ["full", "no_attention", "no_superposition", "segmented"] {
+        let session = Session::open(Path::new("artifacts"), variant).unwrap();
+        let task = session.task("rnnlm2", 0).unwrap();
+        let batch = Batch::from_rows(session.manifest(), &[&task.feats]).unwrap();
+        let store = perturbed_store(&session, &batch);
+        let before = session.policy.forward(&store, &batch).unwrap();
+
+        let path = dir.join(format!("{variant}.ckpt"));
+        session.save_checkpoint(&store, &path).unwrap();
+        let restored = session.load_params(&path).unwrap();
+
+        // payload is f32 bit-exact ...
+        let a = store.to_flat().unwrap();
+        let b = restored.to_flat().unwrap();
+        assert_eq!(a.len(), b.len(), "{variant}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{variant}: payload drift");
+        }
+        // ... and so is the forward pass
+        let after = session.policy.forward(&restored, &batch).unwrap();
+        assert_eq!(before, after, "{variant}: forward differs after round-trip");
+        // optimizer restarts on load (paper's fine-tuning setup)
+        assert_eq!(restored.step, 0.0, "{variant}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_variant_rejected_with_actionable_error() {
+    let dir = tmpdir("variant");
+    let full = Session::open(Path::new("artifacts"), "full").unwrap();
+    let store = full.init_params().unwrap();
+    let path = dir.join("full.ckpt");
+    full.save_checkpoint(&store, &path).unwrap();
+
+    for other in ["no_attention", "no_superposition", "segmented"] {
+        let session = Session::open(Path::new("artifacts"), other).unwrap();
+        let err = session.load_params(&path).unwrap_err().to_string();
+        // the message must name both variants so the fix is obvious
+        assert!(err.contains("full"), "{other}: {err}");
+        assert!(err.contains("variant"), "{other}: {err}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mismatched_dims_rejected() {
+    let dir = tmpdir("dims");
+    let manifest = Manifest::synthesize_variant(Dims::default_aot(), "full").unwrap();
+    let store =
+        gdp::runtime::native::init_param_store(&manifest, 7).unwrap();
+    let path = dir.join("a.ckpt");
+    checkpoint::save(&manifest, &store, &path).unwrap();
+
+    // same variant, different hidden width -> different ABI
+    let mut dims = Dims::default_aot();
+    dims.h = 32;
+    dims.ffn = 64;
+    let narrow = Manifest::synthesize_variant(dims, "full").unwrap();
+    let err = checkpoint::load(&narrow, &path).unwrap_err().to_string();
+    assert!(err.contains("H="), "must name the mismatched dim: {err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_files_rejected() {
+    let dir = tmpdir("corrupt");
+    let manifest = Manifest::synthesize_variant(Dims::default_aot(), "full").unwrap();
+    let store = gdp::runtime::native::init_param_store(&manifest, 3).unwrap();
+    let path = dir.join("a.ckpt");
+    checkpoint::save(&manifest, &store, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // truncated payload
+    let cut = dir.join("cut.ckpt");
+    std::fs::write(&cut, &good[..good.len() - 8]).unwrap();
+    let err = checkpoint::load(&manifest, &cut).unwrap_err().to_string();
+    assert!(
+        err.contains("truncated") || err.contains("corrupt"),
+        "{err}"
+    );
+
+    // header bytes flipped -> invalid json or field mismatch, never a load
+    let mut bad = good.clone();
+    for b in bad.iter_mut().skip(16).take(8) {
+        *b = b'#';
+    }
+    let scrambled = dir.join("scrambled.ckpt");
+    std::fs::write(&scrambled, &bad).unwrap();
+    assert!(checkpoint::load(&manifest, &scrambled).is_err());
+
+    // bad magic: strict load refuses, auto path treats it as a raw blob
+    // (and then rejects it for its size — actionable either way)
+    let mut nomagic = good.clone();
+    nomagic[0] = b'X';
+    let raw = dir.join("nomagic.ckpt");
+    std::fs::write(&raw, &nomagic).unwrap();
+    let err = checkpoint::load(&manifest, &raw).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // unsupported future version
+    let mut vfuture = good;
+    vfuture[7] = 9;
+    let v9 = dir.join("v9.ckpt");
+    std::fs::write(&v9, &vfuture).unwrap();
+    let err = checkpoint::load(&manifest, &v9).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn legacy_raw_blob_still_loads_via_session() {
+    let dir = tmpdir("legacy");
+    let session = Session::open(Path::new("artifacts"), "full").unwrap();
+    let store = session.init_params().unwrap();
+    let path = dir.join("legacy.bin");
+    store.save(&path).unwrap(); // pre-PR-5 raw flat format
+    let restored = session.load_params(&path).unwrap();
+    assert_eq!(restored.to_flat().unwrap(), store.to_flat().unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,127 @@
+//! Generalization-pipeline regression tests (DESIGN.md §7): the
+//! fine-tune update mask must freeze the shared GNN+placer bit-exactly
+//! while the superposition-conditioning tensors adapt, zero-shot must not
+//! touch the store at all, and the pre-train corpus must never leak a
+//! hold-out graph.
+
+use std::path::{Path, PathBuf};
+
+use gdp::coordinator::{generalize, Session, TrainConfig};
+use gdp::runtime::ParamStore;
+use gdp::workloads::corpus::{holdout_ids, is_holdout, pretrain_corpus, CorpusLevel};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gdp_gen_it_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn session() -> Session {
+    Session::open(Path::new("artifacts"), "full").expect("native session")
+}
+
+/// Assert the post-fine-tune store against the checkpoint it started
+/// from: every non-cond tensor (value AND Adam moments) bit-identical /
+/// still zero, at least one cond tensor actually moved.
+fn assert_mask_held(session: &Session, ckpt_flat: &[f32], store: &ParamStore) {
+    let manifest = session.manifest();
+    let mut cond_changed = false;
+    for (i, p) in manifest.params.iter().enumerate() {
+        let before = &ckpt_flat[p.offset..p.offset + p.elements];
+        let after = store.values[i].f32_slice().unwrap();
+        if p.name.contains("cond") {
+            if before.iter().zip(after).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                cond_changed = true;
+            }
+        } else {
+            for (j, (a, b)) in before.iter().zip(after).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "frozen tensor {} drifted at element {j}",
+                    p.name
+                );
+            }
+            // frozen moments must remain exactly the reset (zero) state
+            for buf in [&store.m[i], &store.v[i]] {
+                assert!(
+                    buf.f32_slice().unwrap().iter().all(|&x| x.to_bits() == 0),
+                    "frozen tensor {} accumulated Adam state",
+                    p.name
+                );
+            }
+        }
+    }
+    assert!(cond_changed, "no superposition tensor changed — nothing fine-tuned");
+}
+
+#[test]
+fn pretrain_checkpoint_finetune_respects_frozen_mask() {
+    let dir = tmpdir("pipeline");
+    let session = session();
+
+    // tiny pre-train on two corpus graphs, persisted as a checkpoint
+    let corpus = pretrain_corpus(CorpusLevel::Base);
+    let cfg = TrainConfig { steps: 2, verbose: false, ..Default::default() };
+    let (store, _) = generalize::pretrain(&session, &corpus[..2], &cfg).unwrap();
+    let ckpt = dir.join("pretrained.ckpt");
+    session.save_checkpoint(&store, &ckpt).unwrap();
+    let ckpt_flat = store.to_flat().unwrap();
+
+    // fine-tune a hold-out: only superposition tensors may move
+    let mut ft_store = session.load_params(&ckpt).unwrap();
+    let ft_cfg =
+        TrainConfig { steps: 3, lr: 3e-3, verbose: false, ..Default::default() };
+    let task = session.task("gnmt8", 0).unwrap();
+    let result = generalize::finetune(&session, &mut ft_store, task, &ft_cfg).unwrap();
+    assert_eq!(result.per_task.len(), 1);
+    assert!(ft_store.frozen_tensors() > 0, "mask must stay installed");
+    assert_mask_held(&session, &ckpt_flat, &ft_store);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zeroshot_leaves_store_bit_untouched() {
+    let session = session();
+    let store = session.init_params().unwrap();
+    let before = store.to_flat().unwrap();
+    let task = session.task("wavenet4", 0).unwrap();
+    let best = generalize::zeroshot(&session, &store, &task, 4, 9).unwrap();
+    assert!(best.best_time.is_finite() || !best.best_valid);
+    let after = store.to_flat().unwrap();
+    assert_eq!(before.len(), after.len());
+    for (a, b) in before.iter().zip(&after) {
+        assert_eq!(a.to_bits(), b.to_bits(), "zero-shot mutated the store");
+    }
+    assert_eq!(store.step, 0.0);
+    assert_eq!(store.frozen_tensors(), 0, "zero-shot must not install a mask");
+}
+
+#[test]
+fn finetune_rejects_variant_without_superposition() {
+    let session =
+        Session::open(Path::new("artifacts"), "no_superposition").unwrap();
+    let mut store = session.init_params().unwrap();
+    let task = session.task("rnnlm2", 0).unwrap();
+    let cfg = TrainConfig { steps: 1, verbose: false, ..Default::default() };
+    let err = generalize::finetune(&session, &mut store, task, &cfg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("superposition"), "{err}");
+}
+
+#[test]
+fn corpus_tasks_preserve_ids_and_exclude_holdouts() {
+    let session = session();
+    let corpus = pretrain_corpus(CorpusLevel::Base);
+    let tasks = generalize::corpus_tasks(&session, &corpus, 0);
+    assert_eq!(tasks.len(), corpus.len());
+    for (task, item) in tasks.iter().zip(&corpus) {
+        assert_eq!(task.id, item.id);
+        assert!(!is_holdout(&task.id), "{} leaked into pre-training", task.id);
+        assert!(task.n_coarse() <= session.manifest().dims.n);
+    }
+    // and the hold-outs are exactly the advertised set
+    assert_eq!(holdout_ids(), ["gnmt8", "rnnlm8", "wavenet4"]);
+}
