@@ -11,9 +11,10 @@ pub mod generalize;
 pub mod metrics;
 pub mod trainer;
 
-pub use trainer::{infer, train, TaskBest, TrainConfig, TrainResult};
+pub use trainer::{infer, infer_from_logits, train, TaskBest, TrainConfig, TrainResult};
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -30,8 +31,12 @@ use crate::runtime::{
 /// needs no artifacts — the manifest and init params are constructed in
 /// Rust when `artifacts/<variant>/` is absent — and covers every variant
 /// including `segmented`; `Pjrt` compiles the AOT HLO-text artifacts.
+///
+/// The engine is held as `Arc<dyn PolicyBackend>` so long-running callers
+/// (the serve daemon) can share one warm engine across threads; one-shot
+/// CLI paths never notice the difference.
 pub struct Session {
-    pub policy: Box<dyn PolicyBackend>,
+    pub policy: Arc<dyn PolicyBackend>,
     pub artifacts_dir: PathBuf,
     pub variant: String,
     pub backend: BackendKind,
@@ -50,10 +55,10 @@ impl Session {
         backend: BackendKind,
     ) -> Result<Self> {
         let vdir = artifacts_dir.join(variant);
-        let policy: Box<dyn PolicyBackend> = match backend {
+        let policy: Arc<dyn PolicyBackend> = match backend {
             BackendKind::Pjrt => {
                 let runtime = XlaRuntime::cpu()?;
-                Box::new(Policy::load(&runtime, &vdir)?)
+                Arc::new(Policy::load(&runtime, &vdir)?)
             }
             BackendKind::Native => {
                 // Prefer the python-written manifest when artifacts exist
@@ -63,7 +68,7 @@ impl Session {
                 } else {
                     Manifest::synthesize_variant(Dims::default_aot(), variant)?
                 };
-                Box::new(NativePolicy::new(manifest)?)
+                Arc::new(NativePolicy::new(manifest)?)
             }
         };
         Ok(Self {
@@ -76,6 +81,11 @@ impl Session {
 
     pub fn manifest(&self) -> &Manifest {
         self.policy.manifest()
+    }
+
+    /// A shareable handle to the warm engine (serve daemon threads).
+    pub fn shared_policy(&self) -> Arc<dyn PolicyBackend> {
+        Arc::clone(&self.policy)
     }
 
     pub fn feat_dims(&self) -> FeatDims {

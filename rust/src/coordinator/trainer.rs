@@ -280,6 +280,25 @@ pub fn infer(
     let batch = Batch::from_rows(policy.manifest(), &[&task.feats])?;
     let logits = policy.forward(store, &batch)?;
     let stride = dims.n * dims.d;
+    Ok(infer_from_logits(&logits[..stride], dims.n, dims.d, task, extra_samples, seed))
+}
+
+/// The candidate-generation + selection half of [`infer`], operating on
+/// one row of already-computed logits `[N * D]`. Factored out so the
+/// serve daemon's batched path — one policy forward over B concurrent
+/// requests — reuses the exact one-shot code and stays **bit-identical**
+/// to `gdp zeroshot` for the same checkpoint, samples and seed (rows are
+/// computed independently by both engines, so per-row logits do not
+/// depend on what else shares the batch).
+pub fn infer_from_logits(
+    row_logits: &[f32],
+    n: usize,
+    d: usize,
+    task: &PlacementTask,
+    extra_samples: usize,
+    seed: u64,
+) -> TaskBest {
+    debug_assert_eq!(row_logits.len(), n * d);
     let mut rng = Rng::new(seed);
     let mut tracker = ConvergenceTracker::new();
 
@@ -291,9 +310,9 @@ pub fn infer(
     // evaluate the whole candidate set in parallel and pick the winner in
     // candidate order, so the result is identical to the serial loop.
     let greedy = greedy_from_logits(
-        &logits[..stride],
-        dims.n,
-        dims.d,
+        row_logits,
+        n,
+        d,
         task.n_coarse(),
         task.graph.num_devices,
     );
@@ -301,9 +320,9 @@ pub fn infer(
     candidates.push(greedy.placement);
     for _ in 0..extra_samples {
         let s = sample_from_logits(
-            &logits[..stride],
-            dims.n,
-            dims.d,
+            row_logits,
+            n,
+            d,
             task.n_coarse(),
             task.graph.num_devices,
             1.0,
@@ -329,11 +348,11 @@ pub fn infer(
         }
     }
 
-    Ok(TaskBest {
+    TaskBest {
         task_id: task.id.clone(),
         best_time,
         best_valid,
         best_placement,
         tracker,
-    })
+    }
 }

@@ -40,9 +40,64 @@ pub enum OpKind {
 
 pub const NUM_OP_KINDS: usize = 20;
 
+/// All kinds, index order (`OpKind::ALL[k.index()] == k`).
+pub const ALL_OP_KINDS: [OpKind; NUM_OP_KINDS] = [
+    OpKind::Input,
+    OpKind::Const,
+    OpKind::Variable,
+    OpKind::Embedding,
+    OpKind::MatMul,
+    OpKind::Conv2D,
+    OpKind::DepthwiseConv,
+    OpKind::RnnCell,
+    OpKind::Attention,
+    OpKind::Elementwise,
+    OpKind::Norm,
+    OpKind::Softmax,
+    OpKind::Pool,
+    OpKind::Concat,
+    OpKind::Split,
+    OpKind::Reshape,
+    OpKind::Reduce,
+    OpKind::Loss,
+    OpKind::ApplyGrad,
+    OpKind::Output,
+];
+
 impl OpKind {
     pub fn index(self) -> usize {
         self as usize
+    }
+
+    /// Stable wire name (serve JSON protocol / graph import-export).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Input => "Input",
+            OpKind::Const => "Const",
+            OpKind::Variable => "Variable",
+            OpKind::Embedding => "Embedding",
+            OpKind::MatMul => "MatMul",
+            OpKind::Conv2D => "Conv2D",
+            OpKind::DepthwiseConv => "DepthwiseConv",
+            OpKind::RnnCell => "RnnCell",
+            OpKind::Attention => "Attention",
+            OpKind::Elementwise => "Elementwise",
+            OpKind::Norm => "Norm",
+            OpKind::Softmax => "Softmax",
+            OpKind::Pool => "Pool",
+            OpKind::Concat => "Concat",
+            OpKind::Split => "Split",
+            OpKind::Reshape => "Reshape",
+            OpKind::Reduce => "Reduce",
+            OpKind::Loss => "Loss",
+            OpKind::ApplyGrad => "ApplyGrad",
+            OpKind::Output => "Output",
+        }
+    }
+
+    /// Inverse of [`OpKind::name`].
+    pub fn from_name(s: &str) -> Option<Self> {
+        ALL_OP_KINDS.iter().copied().find(|k| k.name() == s)
     }
 
     /// Fraction of device peak FLOP/s this op kind typically achieves
@@ -299,5 +354,14 @@ mod tests {
     #[test]
     fn opkind_vocab_size() {
         assert_eq!(OpKind::Output.index() + 1, NUM_OP_KINDS);
+    }
+
+    #[test]
+    fn opkind_names_round_trip() {
+        for (i, k) in ALL_OP_KINDS.iter().enumerate() {
+            assert_eq!(k.index(), i, "ALL_OP_KINDS out of index order");
+            assert_eq!(OpKind::from_name(k.name()), Some(*k));
+        }
+        assert_eq!(OpKind::from_name("NotAnOp"), None);
     }
 }

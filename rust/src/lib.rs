@@ -21,6 +21,13 @@
 //! (train_step)`, driven by [`coordinator::train`]; every stochastic
 //! piece draws from one seeded RNG so runs replay bit-identically
 //! (DESIGN.md §8).
+//!
+//! The [`serve`] subsystem wraps a pre-trained checkpoint as a
+//! long-running placement daemon (`gdp serve`): request batching over
+//! the same [`runtime`] batch machinery, an LRU placement cache keyed by
+//! permutation-invariant graph fingerprints, and a load-generator
+//! harness (`gdp loadgen`) — answers stay bit-identical to one-shot
+//! `gdp zeroshot` (DESIGN.md §Serving).
 
 #![deny(rustdoc::broken_intra_doc_links)]
 
@@ -30,6 +37,7 @@ pub mod graph;
 pub mod placement;
 pub mod policy;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workloads;

@@ -13,6 +13,11 @@
 //!                              checkpoint on a hold-out graph
 //! zeroshot  <workload>         place a hold-out from a checkpoint with
 //!                              no updates
+//! serve                        placement-as-a-service daemon: warm
+//!                              checkpoint, request batching, LRU cache
+//!                              (stdio or --listen TCP)
+//! loadgen                      closed-loop traffic against the daemon
+//!                              (in-process or --connect TCP)
 //! experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
 //! ```
 //!
@@ -35,7 +40,7 @@ use gdp::util::cli::Args;
 use gdp::workloads;
 use gdp::workloads::corpus::{self, CorpusLevel};
 
-const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetune|zeroshot|experiment> [flags]
+const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetune|zeroshot|serve|loadgen|experiment> [flags]
   gdp list
   gdp simulate <workload> [--hdp-steps N]
   gdp trace <workload> --placement <human|metis|single> [--out trace.json]
@@ -52,6 +57,15 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
             [--unfrozen] [--save out.ckpt] [--variant V] [--backend B]
   gdp zeroshot <workload> --checkpoint ckpt [--samples N] [--seed N]
             [--variant V] [--backend B]
+  gdp serve [--checkpoint ckpt] [--listen HOST:PORT] [--warmup]
+            [--batch-window-ms N] [--cache N] [--max-nodes N]
+            [--samples N] [--seed N] [--bench-out BENCH_SERVE.json]
+            [--variant V] [--backend B] [--artifacts DIR]
+  gdp loadgen [--requests N] [--clients N] [--mix id,id,...]
+            [--connect HOST:PORT | --checkpoint ckpt] [--warmup]
+            [--samples N] [--seed N] [--cache N] [--batch-window-ms N]
+            [--out BENCH_SERVE.json] [--variant V] [--backend B]
+            [--artifacts DIR]
   gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
             [--steps N] [--quick] [--out runs/]";
 
@@ -79,6 +93,8 @@ fn run() -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "finetune" => cmd_finetune(&args),
         "zeroshot" => cmd_zeroshot(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "experiment" => cmd_experiment(&args),
         other => bail!("unknown subcommand {other:?}"),
     }
@@ -376,6 +392,144 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
     println!(
         "  device histogram: {:?}",
         best.best_placement.histogram(task.graph.num_devices)
+    );
+    Ok(())
+}
+
+/// Shared flag parsing for the daemon knobs (`serve` and in-process
+/// `loadgen` accept the same set).
+fn serve_cfg_from(args: &Args) -> Result<gdp::serve::ServeConfig> {
+    Ok(gdp::serve::ServeConfig {
+        batch_window_ms: args.u64_or("batch-window-ms", 2).map_err(|e| anyhow!(e))?,
+        cache_capacity: args.usize_or("cache", 256).map_err(|e| anyhow!(e))?,
+        max_nodes: args.usize_or("max-nodes", 4096).map_err(|e| anyhow!(e))?,
+        default_samples: args.usize_or("samples", 8).map_err(|e| anyhow!(e))?,
+        default_seed: args.u64_or("seed", 3).map_err(|e| anyhow!(e))?,
+        warmup: args.flag("warmup"),
+    })
+}
+
+/// Open a session and parameters for the daemon: a checkpoint when given
+/// (the intended mode), fresh init parameters otherwise (smoke tests).
+fn serve_session_from(
+    args: &Args,
+) -> Result<(Session, gdp::runtime::ParamStore, String)> {
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let ckpt = args.get("checkpoint").map(PathBuf::from);
+    let backend = backend_from(args)?;
+    let session = Session::open_with(&artifacts, &variant, backend)?;
+    let store = match &ckpt {
+        Some(p) => session.load_params(p)?,
+        None => {
+            eprintln!(
+                "[serve] warning: no --checkpoint given — serving fresh init \
+                 parameters (placements will be poor; run `gdp pretrain` first)"
+            );
+            session.init_params()?
+        }
+    };
+    Ok((session, store, variant))
+}
+
+/// `gdp serve`: load a checkpoint once into a warm engine and answer
+/// newline-delimited JSON placement requests (stdio, or TCP with
+/// `--listen`) until a `{"cmd":"shutdown"}` frame or EOF; then write the
+/// serving metrics to `--bench-out`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_cfg_from(args)?;
+    let listen = args.get("listen").map(str::to_string);
+    let bench_out = args.str_or("bench-out", "BENCH_SERVE.json");
+    let (session, store, variant) = serve_session_from(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let service =
+        gdp::serve::PlacementService::start(session.shared_policy(), store, cfg);
+    let warm = service.snapshot().warmup_ms;
+    eprintln!(
+        "[serve] ready: variant={variant} backend={} B={} cache={} window={}ms \
+         max-nodes={} warmup {warm:.1}ms",
+        service.backend_name(),
+        session.manifest().dims.b,
+        service.config().cache_capacity,
+        service.config().batch_window_ms,
+        service.config().max_nodes,
+    );
+    let transport = match listen {
+        Some(addr) => gdp::serve::Transport::Tcp(addr),
+        None => gdp::serve::Transport::Stdio,
+    };
+    gdp::serve::daemon::run(&service, transport, Some(&bench_out))?;
+    Ok(())
+}
+
+/// `gdp loadgen`: replay the workload registry as closed-loop traffic.
+/// Default is in-process (starts the daemon itself — the CI smoke path);
+/// `--connect host:port` targets a running `gdp serve --listen` daemon.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let lcfg = gdp::serve::LoadgenConfig {
+        requests: args.usize_or("requests", 64).map_err(|e| anyhow!(e))?,
+        clients: args.usize_or("clients", 4).map_err(|e| anyhow!(e))?,
+        mix: match args.get("mix") {
+            Some(m) => m.split(',').map(str::to_string).collect(),
+            None => vec!["inception".into(), "rnnlm2".into(), "gnmt4".into()],
+        },
+        samples: args.usize_or("samples", 1).map_err(|e| anyhow!(e))?,
+        seed: args.u64_or("seed", 3).map_err(|e| anyhow!(e))?,
+    };
+    let out = args.str_or("out", "BENCH_SERVE.json");
+    let connect = args.get("connect").map(str::to_string);
+    let mut rec = gdp::util::bench::BenchRecorder::new("serve");
+
+    let report = match connect {
+        Some(addr) => {
+            // Remote daemon: only client-side metrics are observable.
+            args.finish().map_err(|e| anyhow!(e))?;
+            eprintln!(
+                "[loadgen] {} requests x {} clients -> {addr} (mix {:?})",
+                lcfg.requests, lcfg.clients, lcfg.mix
+            );
+            gdp::serve::loadgen::run(&gdp::serve::Target::Tcp(addr), &lcfg)?
+        }
+        None => {
+            let cfg = serve_cfg_from(args)?;
+            let (session, store, variant) = serve_session_from(args)?;
+            args.finish().map_err(|e| anyhow!(e))?;
+            let service = gdp::serve::PlacementService::start(
+                session.shared_policy(),
+                store,
+                cfg,
+            );
+            eprintln!(
+                "[loadgen] {} requests x {} clients, in-process daemon \
+                 (variant={variant} backend={} warmup {:.1}ms, mix {:?})",
+                lcfg.requests,
+                lcfg.clients,
+                service.backend_name(),
+                service.snapshot().warmup_ms,
+                lcfg.mix
+            );
+            let report =
+                gdp::serve::loadgen::run(&gdp::serve::Target::InProc(service.clone()), &lcfg)?;
+            service.stop();
+            service.snapshot().record_into(&mut rec, "server_");
+            report
+        }
+    };
+    report.record_into(&mut rec, "client_");
+    rec.write(&out)?;
+    println!(
+        "loadgen: {} requests ({} ok, {} cached, {} errors) | p50 {:.2}ms \
+         p95 {:.2}ms p99 {:.2}ms | {:.1} req/s | mean batch rows {:.2}",
+        report.requests,
+        report.ok,
+        report.cached,
+        report.errors,
+        report.p50_ms,
+        report.p95_ms,
+        report.p99_ms,
+        report.throughput_rps,
+        report.mean_batch_rows,
     );
     Ok(())
 }

@@ -8,6 +8,14 @@
 //! candidate evaluations rebuild nothing. `evaluate_in` takes a
 //! caller-owned workspace for `EvalPool` workers evaluating candidates of
 //! the same task concurrently.
+//!
+//! A task is deliberately split into shared read-only state (graph,
+//! coarse view, features, topology, `SimPlan`) and per-call mutable
+//! state (`SimWorkspace`), so a `PlacementTask` is `Send + Sync`: the
+//! serve daemon hands `Arc<PlacementTask>`s between its reader,
+//! dispatcher and evaluation threads, each thread bringing its own
+//! workspace via `evaluate_in`/`evaluate_ref` (the internal mutex only
+//! guards the convenience serial `evaluate` path).
 
 use std::sync::Mutex;
 
@@ -34,6 +42,12 @@ pub struct PlacementTask {
     /// own via `evaluate_in`).
     ws: Mutex<SimWorkspace>,
 }
+
+// Shareable across serve-daemon threads (see module docs).
+const _: () = {
+    const fn assert_sync<T: Send + Sync>() {}
+    assert_sync::<PlacementTask>();
+};
 
 impl PlacementTask {
     pub fn new(id: impl Into<String>, graph: OpGraph, dims: FeatDims, seed: u64) -> Self {

@@ -16,11 +16,47 @@
 //! Both consume the same sorted-key `ParamStore`/`Manifest` ABI and the
 //! same `Batch` literals, so checkpoints and batches are interchangeable.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::Result;
 
 use super::exec::{Batch, TrainStats};
 use super::manifest::Manifest;
 use super::params::ParamStore;
+
+/// Lock-free cumulative wall-clock accumulator (f64 seconds stored as
+/// bits in an `AtomicU64`). Replaces the `Cell<f64>` the engines used
+/// before the serve daemon required `PolicyBackend: Sync` — a shared
+/// warm policy is read concurrently from dispatcher and metrics threads.
+#[derive(Debug, Default)]
+pub struct ExecClock(AtomicU64);
+
+impl ExecClock {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0f64.to_bits()))
+    }
+
+    /// Add `secs` to the running total.
+    pub fn add(&self, secs: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + secs).to_bits();
+            match self.0.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
 
 /// Which engine executes the policy (CLI `--backend`, `GDP_BACKEND` env).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,7 +97,14 @@ impl BackendKind {
 /// gradients from the global-norm clip; the PJRT engine restores frozen
 /// tensors after the full HLO update (its in-graph clip norm still sees
 /// frozen grads — see DESIGN.md §7 for the exact semantics).
-pub trait PolicyBackend {
+///
+/// **Thread contract**: implementations are `Send + Sync` so a warm
+/// engine can be shared (`Arc<dyn PolicyBackend>`) across the serve
+/// daemon's threads. Interior mutability must be synchronized (the
+/// native engine's workspace sits behind a mutex; concurrent `forward`
+/// calls serialize — the serve batcher packs concurrency into rows of
+/// one batch instead).
+pub trait PolicyBackend: Send + Sync {
     fn manifest(&self) -> &Manifest;
 
     /// Engine name for logs ("native" / "pjrt").

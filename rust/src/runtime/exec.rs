@@ -102,7 +102,7 @@ pub struct Policy {
     fwd: xla::PjRtLoadedExecutable,
     train: xla::PjRtLoadedExecutable,
     /// cumulative XLA execute time (perf accounting)
-    pub exec_secs_total: std::cell::Cell<f64>,
+    pub exec_secs_total: super::backend::ExecClock,
 }
 
 impl Policy {
@@ -119,12 +119,12 @@ impl Policy {
             manifest,
             fwd,
             train,
-            exec_secs_total: std::cell::Cell::new(0.0),
+            exec_secs_total: super::backend::ExecClock::new(),
         })
     }
 
     fn track(&self, secs: f64) {
-        self.exec_secs_total.set(self.exec_secs_total.get() + secs);
+        self.exec_secs_total.add(secs);
     }
 
     /// Policy forward: returns logits, flattened [B * N * D].
@@ -262,6 +262,6 @@ impl super::backend::PolicyBackend for Policy {
     }
 
     fn exec_secs_total(&self) -> f64 {
-        self.exec_secs_total.get()
+        self.exec_secs_total.total()
     }
 }

@@ -27,7 +27,7 @@ pub mod native;
 pub mod params;
 pub mod xla;
 
-pub use backend::{BackendKind, PolicyBackend};
+pub use backend::{BackendKind, ExecClock, PolicyBackend};
 pub use exec::{Batch, Policy, TrainStats};
 pub use manifest::{Dims, Manifest, ParamEntry};
 pub use native::NativePolicy;

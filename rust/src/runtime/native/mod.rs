@@ -27,14 +27,13 @@ mod bwd;
 mod fwd;
 mod workspace;
 
-use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::backend::PolicyBackend;
+use super::backend::{ExecClock, PolicyBackend};
 use super::exec::{Batch, TrainStats};
 use super::manifest::{Dims, Manifest};
 use super::params::ParamStore;
@@ -180,7 +179,7 @@ pub struct NativePolicy {
     /// (offset, elements) per tensor, manifest order (flat grad layout).
     offs: Vec<(usize, usize)>,
     ws: Mutex<PolicyWorkspace>,
-    exec_secs: Cell<f64>,
+    exec_secs: ExecClock,
 }
 
 impl NativePolicy {
@@ -289,7 +288,7 @@ impl NativePolicy {
         };
         let offs = manifest.params.iter().map(|p| (p.offset, p.elements)).collect();
         let ws = Mutex::new(PolicyWorkspace::new(&manifest));
-        Ok(Self { manifest, ids, offs, ws, exec_secs: Cell::new(0.0) })
+        Ok(Self { manifest, ids, offs, ws, exec_secs: ExecClock::new() })
     }
 
     /// Native engine for a Rust-synthesized manifest (no artifacts).
@@ -494,7 +493,7 @@ impl PolicyBackend for NativePolicy {
         for (bi, row) in ws.rows.iter().enumerate() {
             out[bi * stride..(bi + 1) * stride].copy_from_slice(&row.logits);
         }
-        self.exec_secs.set(self.exec_secs.get() + t0.elapsed().as_secs_f64());
+        self.exec_secs.add(t0.elapsed().as_secs_f64());
         Ok(out)
     }
 
@@ -555,7 +554,7 @@ impl PolicyBackend for NativePolicy {
         }
         store.step += 1.0;
         let secs = t0.elapsed().as_secs_f64();
-        self.exec_secs.set(self.exec_secs.get() + secs);
+        self.exec_secs.add(secs);
         Ok(TrainStats {
             loss: loss as f32,
             entropy: entropy as f32,
@@ -565,6 +564,13 @@ impl PolicyBackend for NativePolicy {
     }
 
     fn exec_secs_total(&self) -> f64 {
-        self.exec_secs.get()
+        self.exec_secs.total()
     }
 }
+
+// The serve daemon shares one warm engine across threads
+// (`Arc<dyn PolicyBackend>`); keep that property pinned at compile time.
+const _: () = {
+    const fn assert_sync<T: Send + Sync>() {}
+    assert_sync::<NativePolicy>();
+};

@@ -1,0 +1,176 @@
+//! Placement cache: an LRU keyed by [`super::fingerprint::cache_key`]
+//! with hit/miss accounting.
+//!
+//! Capacity is small (hundreds of entries, each a placement vector), so
+//! the classic HashMap + monotonic-tick design with an O(n) eviction
+//! scan beats maintaining an intrusive list — eviction runs once per
+//! miss-at-capacity, the scan is over `capacity` integers, and lookups
+//! stay a single hash probe. The cache itself is not synchronized; the
+//! service wraps it in a `Mutex` (probes are far cheaper than the policy
+//! forward they shortcut, so one lock is never the bottleneck).
+
+use std::collections::HashMap;
+
+/// The reusable part of an answer: everything except per-request
+/// metadata (latency, batch occupancy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedPlacement {
+    /// Device per ORIGINAL graph node.
+    pub placement: Vec<usize>,
+    pub predicted_time: Option<f64>,
+    pub valid: bool,
+}
+
+pub struct PlacementCache {
+    capacity: usize,
+    map: HashMap<u64, Entry>,
+    /// Monotonic use counter; the entry with the smallest stamp is LRU.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+struct Entry {
+    value: CachedPlacement,
+    stamp: u64,
+}
+
+impl PlacementCache {
+    /// `capacity == 0` disables caching (every probe is a miss, inserts
+    /// are dropped) — `gdp serve --cache 0`.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            map: HashMap::with_capacity(capacity.min(1024)),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a key, refreshing its recency on hit. Counts the probe.
+    pub fn get(&mut self, key: u64) -> Option<CachedPlacement> {
+        self.tick += 1;
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                e.stamp = self.tick;
+                self.hits += 1;
+                Some(e.value.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a key, evicting the least-recently-used entry
+    /// when at capacity.
+    pub fn put(&mut self, key: u64, value: CachedPlacement) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.stamp = self.tick;
+            e.value = value;
+            return;
+        }
+        if self.map.len() >= self.capacity {
+            let lru = self.map.iter().min_by_key(|(_, e)| e.stamp).map(|(&k, _)| k);
+            if let Some(k) = lru {
+                self.map.remove(&k);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(key, Entry { value, stamp: self.tick });
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Hits / probes, 0.0 before the first probe.
+    pub fn hit_rate(&self) -> f64 {
+        let probes = self.hits + self.misses;
+        if probes == 0 {
+            0.0
+        } else {
+            self.hits as f64 / probes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(tag: usize) -> CachedPlacement {
+        CachedPlacement {
+            placement: vec![tag],
+            predicted_time: Some(tag as f64),
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = PlacementCache::new(4);
+        assert!(c.get(1).is_none());
+        c.put(1, v(1));
+        assert_eq!(c.get(1), Some(v(1)));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = PlacementCache::new(3);
+        c.put(1, v(1));
+        c.put(2, v(2));
+        c.put(3, v(3));
+        // touch 1 and 2 so 3 is LRU
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_some());
+        c.put(4, v(4)); // evicts 3
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(3).is_none());
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_some());
+        assert!(c.get(4).is_some());
+        // put-refresh also counts as recency: refresh 1, insert 5 -> evicts 2
+        c.put(1, v(10));
+        c.put(5, v(5));
+        assert!(c.get(2).is_none());
+        assert_eq!(c.get(1), Some(v(10)));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = PlacementCache::new(0);
+        c.put(1, v(1));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.misses(), 1);
+    }
+}

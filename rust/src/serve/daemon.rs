@@ -1,0 +1,148 @@
+//! Daemon transports for the placement service: stdio (default) and TCP.
+//!
+//! Both speak the same newline-delimited protocol ([`super::proto`]).
+//! Stdio serves one client (the parent process pipe); TCP accepts any
+//! number of connections, one handler thread each, all sharing the one
+//! warm [`PlacementService`]. A `{"cmd":"shutdown"}` frame stops the
+//! daemon after the in-flight lines finish; on exit the server metrics
+//! snapshot is written to `BENCH_SERVE.json` (configurable) in the same
+//! `BenchRecorder` artifact shape as the other BENCH_*.json files.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::service::PlacementService;
+use crate::util::bench::BenchRecorder;
+
+/// Where the daemon listens.
+pub enum Transport {
+    /// Lines on stdin, responses on stdout (logs go to stderr).
+    Stdio,
+    /// TCP socket, e.g. `127.0.0.1:7077`.
+    Tcp(String),
+}
+
+/// Run the daemon until shutdown (control verb, or EOF on stdio); then
+/// write the metrics artifact and return the final snapshot.
+pub fn run(
+    service: &Arc<PlacementService>,
+    transport: Transport,
+    bench_out: Option<&str>,
+) -> Result<super::metrics::Snapshot> {
+    match transport {
+        Transport::Stdio => serve_stdio(service)?,
+        Transport::Tcp(addr) => serve_tcp(service, &addr)?,
+    }
+    service.stop();
+    let snap = service.snapshot();
+    if let Some(path) = bench_out {
+        write_artifact(&snap, path)?;
+    }
+    eprintln!(
+        "[serve] done: {} requests ({} cached, {} errors) | p50 {:.2}ms p95 {:.2}ms \
+         p99 {:.2}ms | {:.1} req/s | occupancy {:.2} | hit rate {:.2}",
+        snap.requests,
+        snap.cached,
+        snap.errors,
+        snap.p50_ms,
+        snap.p95_ms,
+        snap.p99_ms,
+        snap.throughput_rps,
+        snap.batch_occupancy,
+        snap.cache_hit_rate,
+    );
+    Ok(snap)
+}
+
+/// Write a snapshot as a `BenchRecorder` artifact (suite "serve").
+pub fn write_artifact(snap: &super::metrics::Snapshot, path: &str) -> Result<()> {
+    let mut rec = BenchRecorder::new("serve");
+    snap.record_into(&mut rec, "server_");
+    rec.write(path).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+fn serve_stdio(service: &Arc<PlacementService>) -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line.context("reading stdin")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = service.call(&line);
+        {
+            let mut out = stdout.lock();
+            out.write_all(resp.as_bytes())?;
+            out.write_all(b"\n")?;
+            out.flush()?;
+        }
+        if service.shutdown_requested() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn serve_tcp(service: &Arc<PlacementService>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    // Non-blocking accept so the loop can observe the shutdown flag set
+    // by a connection handler.
+    listener.set_nonblocking(true)?;
+    eprintln!("[serve] listening on {}", listener.local_addr()?);
+    let live = Arc::new(AtomicUsize::new(0));
+    while !service.shutdown_requested() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let svc = Arc::clone(service);
+                let live = Arc::clone(&live);
+                live.fetch_add(1, Ordering::SeqCst);
+                std::thread::Builder::new()
+                    .name(format!("gdp-serve-conn-{peer}"))
+                    .spawn(move || {
+                        let _ = handle_conn(&svc, stream);
+                        live.fetch_sub(1, Ordering::SeqCst);
+                    })
+                    .context("spawning connection handler")?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).context("accept"),
+        }
+    }
+    // Give in-flight handlers a moment to flush their last response.
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    while live.load(Ordering::SeqCst) > 0 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    Ok(())
+}
+
+fn handle_conn(service: &Arc<PlacementService>, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client went away mid-line
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = service.call(&line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if service.shutdown_requested() {
+            break;
+        }
+    }
+    Ok(())
+}

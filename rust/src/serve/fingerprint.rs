@@ -1,0 +1,197 @@
+//! Permutation-invariant graph fingerprints — the placement-cache key.
+//!
+//! Two requests describing the same dataflow graph must hit the same
+//! cache slot even if their node orders differ (graph dumps rarely agree
+//! on ordering), so the fingerprint is a Weisfeiler–Lehman style hash:
+//! each node starts from a hash of its placement-relevant attributes
+//! (op kind, flops, output/param bytes, shape, layer — names are
+//! deliberately excluded, they cannot affect a placement), then absorbs
+//! sorted multisets of its producer and consumer hashes for a few
+//! rounds, and the graph hash is a sorted fold of the final node hashes
+//! plus the device count. Node-order invariance is exact; distinct
+//! graphs collide only with ordinary 64-bit-hash probability.
+//!
+//! [`cache_key`] further mixes the request's `samples` and `seed` —
+//! both change the returned placement, so they are part of the identity
+//! of a cached answer.
+
+use crate::graph::OpGraph;
+
+/// splitmix64 finalizer: the avalanche core of every mix below.
+#[inline]
+fn smix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn mix(h: u64, x: u64) -> u64 {
+    smix(h ^ x.wrapping_mul(0xFF51_AFD7_ED55_8CCD))
+}
+
+/// Refinement rounds. Two hops of neighborhood context is enough to
+/// separate every structure the registry produces; collisions beyond
+/// that are as likely as raw 64-bit collisions.
+const WL_ROUNDS: usize = 3;
+
+/// Hash of one node's placement-relevant attributes (order-free).
+fn node_hash(g: &OpGraph, v: usize) -> u64 {
+    let n = &g.nodes[v];
+    let mut h = mix(0x6E0D_E5EE_D5EE_D000, n.kind.index() as u64);
+    h = mix(h, n.flops.to_bits());
+    h = mix(h, n.output_bytes);
+    h = mix(h, n.param_bytes);
+    for &d in &n.out_shape {
+        h = mix(h, d as u64);
+    }
+    mix(h, n.layer as u64)
+}
+
+/// Permutation-invariant structural fingerprint of a frozen graph.
+pub fn graph_fingerprint(g: &OpGraph) -> u64 {
+    let n = g.n();
+    let mut h: Vec<u64> = (0..n).map(|v| node_hash(g, v)).collect();
+    let mut next = vec![0u64; n];
+    let mut nbuf: Vec<u64> = Vec::new();
+    for _ in 0..WL_ROUNDS {
+        for v in 0..n {
+            let mut acc = mix(h[v], 0xA11C_E5ED);
+            // producers and consumers fold separately (direction matters)
+            for (tag, nbrs) in
+                [(0x70_u64, g.producers(v)), (0xC0_u64, g.consumers(v))]
+            {
+                nbuf.clear();
+                nbuf.extend(nbrs.iter().map(|&u| h[u as usize]));
+                nbuf.sort_unstable();
+                acc = mix(acc, tag);
+                for &x in &nbuf {
+                    acc = mix(acc, x);
+                }
+            }
+            next[v] = acc;
+        }
+        std::mem::swap(&mut h, &mut next);
+    }
+    h.sort_unstable();
+    let mut acc = mix(0xF16E_2152, n as u64);
+    acc = mix(acc, g.edges.len() as u64);
+    acc = mix(acc, g.num_devices as u64);
+    for x in h {
+        acc = mix(acc, x);
+    }
+    acc
+}
+
+/// Full cache key: graph identity + the request knobs that change the
+/// answer (sample budget and seed).
+pub fn cache_key(graph_fp: u64, samples: usize, seed: u64) -> u64 {
+    mix(mix(graph_fp, samples as u64), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpGraph, OpKind, OpNode};
+
+    fn line_graph(names_kinds: &[(&str, OpKind, f64)], edges: &[(u32, u32)]) -> OpGraph {
+        let mut g = OpGraph::new("t", 2);
+        for &(name, kind, flops) in names_kinds {
+            let mut n = OpNode::new(name, kind);
+            n.flops = flops;
+            g.nodes.push(n);
+        }
+        g.edges = edges.to_vec();
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn stable_across_rebuilds() {
+        let a = crate::workloads::by_id("inception").unwrap();
+        let b = crate::workloads::by_id("inception").unwrap();
+        assert_eq!(graph_fingerprint(&a), graph_fingerprint(&b));
+    }
+
+    #[test]
+    fn node_permutation_preserves_fingerprint() {
+        // a -> b -> c chain vs the same chain stored in reversed index
+        // order (edges re-indexed accordingly).
+        let g1 = line_graph(
+            &[("a", OpKind::Input, 0.0), ("b", OpKind::MatMul, 1e9), ("c", OpKind::Output, 0.0)],
+            &[(0, 1), (1, 2)],
+        );
+        let g2 = line_graph(
+            &[("c", OpKind::Output, 0.0), ("b", OpKind::MatMul, 1e9), ("a", OpKind::Input, 0.0)],
+            &[(2, 1), (1, 0)],
+        );
+        assert_eq!(graph_fingerprint(&g1), graph_fingerprint(&g2));
+        // names do not matter, costs do
+        let g3 = line_graph(
+            &[("x", OpKind::Input, 0.0), ("y", OpKind::MatMul, 1e9), ("z", OpKind::Output, 0.0)],
+            &[(0, 1), (1, 2)],
+        );
+        assert_eq!(graph_fingerprint(&g1), graph_fingerprint(&g3));
+    }
+
+    #[test]
+    fn registry_permutation_invariance() {
+        // Shuffle a real workload's node ids with a fixed permutation and
+        // re-index edges; fingerprints must agree.
+        let g = crate::workloads::by_id("inception").unwrap();
+        let n = g.n();
+        // deterministic pseudo-shuffle: reverse
+        let perm: Vec<usize> = (0..n).rev().collect();
+        let mut inv = vec![0usize; n];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let mut p = OpGraph::new(g.name.clone(), g.num_devices);
+        p.nodes = perm.iter().map(|&old| g.nodes[old].clone()).collect();
+        p.edges = g
+            .edges
+            .iter()
+            .map(|&(u, v)| (inv[u as usize] as u32, inv[v as usize] as u32))
+            .collect();
+        p.freeze();
+        assert_eq!(graph_fingerprint(&g), graph_fingerprint(&p));
+    }
+
+    #[test]
+    fn structure_cost_and_devices_change_fingerprint() {
+        let base = line_graph(
+            &[("a", OpKind::Input, 0.0), ("b", OpKind::MatMul, 1e9), ("c", OpKind::Output, 0.0)],
+            &[(0, 1), (1, 2)],
+        );
+        // cost change
+        let cost = line_graph(
+            &[("a", OpKind::Input, 0.0), ("b", OpKind::MatMul, 2e9), ("c", OpKind::Output, 0.0)],
+            &[(0, 1), (1, 2)],
+        );
+        assert_ne!(graph_fingerprint(&base), graph_fingerprint(&cost));
+        // structure change (extra skip edge)
+        let skip = line_graph(
+            &[("a", OpKind::Input, 0.0), ("b", OpKind::MatMul, 1e9), ("c", OpKind::Output, 0.0)],
+            &[(0, 1), (1, 2), (0, 2)],
+        );
+        assert_ne!(graph_fingerprint(&base), graph_fingerprint(&skip));
+        // device-spec change
+        let mut dev = base.clone();
+        dev.num_devices = 4;
+        assert_ne!(graph_fingerprint(&base), graph_fingerprint(&dev));
+        // distinct registry workloads never collide
+        let mut fps = std::collections::HashSet::new();
+        for spec in crate::workloads::registry() {
+            assert!(fps.insert(graph_fingerprint(&(spec.build)())), "{} collided", spec.id);
+        }
+    }
+
+    #[test]
+    fn cache_key_mixes_samples_and_seed() {
+        let fp = 0xDEAD_BEEF_u64;
+        assert_ne!(cache_key(fp, 8, 3), cache_key(fp, 9, 3));
+        assert_ne!(cache_key(fp, 8, 3), cache_key(fp, 8, 4));
+        assert_eq!(cache_key(fp, 8, 3), cache_key(fp, 8, 3));
+    }
+}

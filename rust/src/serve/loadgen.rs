@@ -1,0 +1,265 @@
+//! `gdp loadgen`: closed-loop traffic against the placement service.
+//!
+//! `--clients` worker threads pull request indices from one shared
+//! counter until `--requests` have been issued; each client keeps
+//! exactly one request in flight (closed loop), so offered concurrency
+//! equals the client count and the dispatcher's batch occupancy directly
+//! reflects it. The workload mix cycles a fixed id list with a fixed
+//! seed, so repeats are cache hits by construction — the hit rate is a
+//! property of the mix (`1 - unique/requests` as requests grow).
+//!
+//! Two targets: in-process (loadgen starts the daemon itself — the CI
+//! smoke path, no socket needed) and `--connect host:port` against a
+//! running `gdp serve --listen` daemon. Client-side latency is measured
+//! around the full round-trip and reported as its own `client_*` metric
+//! set next to the server's `server_*` snapshot in `BENCH_SERVE.json`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::percentile;
+use super::proto::{parse_response, ResponseFrame};
+use super::service::PlacementService;
+use crate::util::bench::BenchRecorder;
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub requests: usize,
+    pub clients: usize,
+    /// Workload ids cycled round-robin across requests.
+    pub mix: Vec<String>,
+    pub samples: usize,
+    pub seed: u64,
+}
+
+/// Where the traffic goes.
+pub enum Target {
+    /// Call the service directly (loadgen started the daemon).
+    InProc(Arc<PlacementService>),
+    /// Connect each client to a remote `gdp serve --listen` daemon.
+    Tcp(String),
+}
+
+/// Client-observed outcome of a loadgen run.
+#[derive(Clone, Debug)]
+pub struct ClientReport {
+    pub requests: usize,
+    pub ok: usize,
+    pub cached: usize,
+    pub errors: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    /// Mean `batch_rows` over non-cached responses (server-reported).
+    pub mean_batch_rows: f64,
+}
+
+impl ClientReport {
+    pub fn record_into(&self, rec: &mut BenchRecorder, prefix: &str) {
+        let p = |k: &str| format!("{prefix}{k}");
+        rec.metric(p("requests"), self.requests as f64);
+        rec.metric(p("ok"), self.ok as f64);
+        rec.metric(p("cached"), self.cached as f64);
+        rec.metric(p("errors"), self.errors as f64);
+        rec.metric(p("latency_p50_ms"), self.p50_ms);
+        rec.metric(p("latency_p95_ms"), self.p95_ms);
+        rec.metric(p("latency_p99_ms"), self.p99_ms);
+        rec.metric(p("latency_mean_ms"), self.mean_ms);
+        rec.metric(p("wall_secs"), self.wall_secs);
+        rec.metric(p("throughput_rps"), self.throughput_rps);
+        rec.metric(p("mean_batch_rows"), self.mean_batch_rows);
+    }
+}
+
+/// One client's connection to the target.
+enum Conn {
+    InProc(Arc<PlacementService>),
+    Tcp { reader: BufReader<TcpStream>, writer: TcpStream },
+}
+
+impl Conn {
+    fn open(target: &Target) -> Result<Self> {
+        match target {
+            Target::InProc(svc) => Ok(Conn::InProc(Arc::clone(svc))),
+            Target::Tcp(addr) => {
+                let stream = TcpStream::connect(addr)
+                    .with_context(|| format!("connecting to {addr}"))?;
+                stream.set_nodelay(true).ok();
+                let reader = BufReader::new(stream.try_clone()?);
+                Ok(Conn::Tcp { reader, writer: stream })
+            }
+        }
+    }
+
+    fn call(&mut self, line: &str) -> Result<String> {
+        match self {
+            Conn::InProc(svc) => Ok(svc.call(line)),
+            Conn::Tcp { reader, writer } => {
+                writer.write_all(line.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                let mut resp = String::new();
+                let n = reader.read_line(&mut resp)?;
+                if n == 0 {
+                    bail!("server closed the connection");
+                }
+                Ok(resp)
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct Tally {
+    latencies_ms: Vec<f64>,
+    ok: usize,
+    cached: usize,
+    errors: usize,
+    batch_rows_sum: usize,
+    batch_rows_n: usize,
+}
+
+/// Run the closed-loop load. Each client issues requests until the
+/// shared counter reaches `cfg.requests`.
+pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
+    if cfg.mix.is_empty() {
+        bail!("loadgen needs a non-empty workload mix");
+    }
+    for id in &cfg.mix {
+        if crate::workloads::by_id(id).is_none() {
+            bail!("unknown workload {id:?} in mix");
+        }
+    }
+    let counter = Arc::new(AtomicUsize::new(0));
+    let tally = Arc::new(Mutex::new(Tally::default()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(cfg.clients.max(1));
+        for _ in 0..cfg.clients.max(1) {
+            let counter = Arc::clone(&counter);
+            let tally = Arc::clone(&tally);
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut conn = Conn::open(target)?;
+                let mut local = Tally::default();
+                loop {
+                    let i = counter.fetch_add(1, Ordering::SeqCst);
+                    if i >= cfg.requests {
+                        break;
+                    }
+                    let wid = &cfg.mix[i % cfg.mix.len()];
+                    let line = format!(
+                        r#"{{"id":"r{i}","workload":"{wid}","samples":{},"seed":{}}}"#,
+                        cfg.samples, cfg.seed
+                    );
+                    let rt0 = Instant::now();
+                    let resp = conn.call(&line)?;
+                    local.latencies_ms.push(rt0.elapsed().as_secs_f64() * 1e3);
+                    match parse_response(resp.trim()) {
+                        Ok(ResponseFrame::Place(p)) => {
+                            local.ok += 1;
+                            if p.cached {
+                                local.cached += 1;
+                            } else {
+                                local.batch_rows_sum += p.batch_rows;
+                                local.batch_rows_n += 1;
+                            }
+                        }
+                        Ok(_) | Err(_) => local.errors += 1,
+                    }
+                }
+                let mut t = tally.lock().unwrap();
+                t.latencies_ms.extend_from_slice(&local.latencies_ms);
+                t.ok += local.ok;
+                t.cached += local.cached;
+                t.errors += local.errors;
+                t.batch_rows_sum += local.batch_rows_sum;
+                t.batch_rows_n += local.batch_rows_n;
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("loadgen client panicked")?;
+        }
+        Ok(())
+    })?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let t = Arc::try_unwrap(tally)
+        .map_err(|_| anyhow::anyhow!("tally still shared"))?
+        .into_inner()
+        .unwrap();
+    let mut sorted = t.latencies_ms;
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let n = sorted.len();
+    Ok(ClientReport {
+        requests: n,
+        ok: t.ok,
+        cached: t.cached,
+        errors: t.errors,
+        p50_ms: percentile(&sorted, 0.50),
+        p95_ms: percentile(&sorted, 0.95),
+        p99_ms: percentile(&sorted, 0.99),
+        mean_ms: if n == 0 { 0.0 } else { sorted.iter().sum::<f64>() / n as f64 },
+        wall_secs,
+        throughput_rps: if wall_secs > 0.0 { n as f64 / wall_secs } else { 0.0 },
+        mean_batch_rows: if t.batch_rows_n == 0 {
+            0.0
+        } else {
+            t.batch_rows_sum as f64 / t.batch_rows_n as f64
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Session;
+    use crate::serve::service::ServeConfig;
+    use std::path::Path;
+
+    #[test]
+    fn in_process_loadgen_reports_and_hits_cache() {
+        let session = Session::open(Path::new("artifacts"), "full").unwrap();
+        let store = session.init_params().unwrap();
+        let svc = PlacementService::start(
+            session.shared_policy(),
+            store,
+            ServeConfig { warmup: false, ..Default::default() },
+        );
+        let cfg = LoadgenConfig {
+            requests: 8,
+            clients: 3,
+            mix: vec!["inception".into(), "rnnlm2".into()],
+            samples: 1,
+            seed: 3,
+        };
+        let report = run(&Target::InProc(Arc::clone(&svc)), &cfg).unwrap();
+        assert_eq!(report.requests, 8);
+        assert_eq!(report.ok, 8);
+        assert_eq!(report.errors, 0);
+        // 2 unique keys among 8 requests -> at least 6 cache hits (a hit
+        // can only be missed if two misses for the same key race into
+        // the same batch window; with 2 workloads and 3 clients at most
+        // 2 extra misses are possible).
+        assert!(report.cached >= 4, "cached={}", report.cached);
+        assert!(report.p99_ms >= report.p50_ms);
+        let snap = svc.snapshot();
+        assert_eq!(snap.requests, 8);
+        assert!(snap.forwards >= 1);
+        svc.stop();
+        // the combined artifact shape parses
+        let mut rec = BenchRecorder::new("serve");
+        report.record_into(&mut rec, "client_");
+        snap.record_into(&mut rec, "server_");
+        let back = crate::util::json::parse(&rec.to_json().to_string()).unwrap();
+        assert!(back.get("metrics").unwrap().get("client_requests").is_some());
+        assert!(back.get("metrics").unwrap().get("server_requests").is_some());
+    }
+}

@@ -1,0 +1,214 @@
+//! Serving metrics: latency percentiles, throughput, cache hit rate,
+//! batch occupancy — snapshotted on demand (the `stats` control verb)
+//! and written to `BENCH_SERVE.json` on shutdown.
+//!
+//! Latencies are recorded per request in milliseconds; percentiles use
+//! the nearest-rank method on a sort-on-snapshot copy, which is exact
+//! (no histogram buckets) and cheap at serving volumes. The recorder is
+//! not synchronized — the service wraps it in a `Mutex` alongside the
+//! cache.
+
+use std::time::Instant;
+
+use crate::util::bench::BenchRecorder;
+use crate::util::json::Json;
+
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// Per-request wall latency (admission -> response), ms.
+    latencies_ms: Vec<f64>,
+    /// Requests answered from cache (no forward).
+    cached: u64,
+    /// Structured error responses sent.
+    errors: u64,
+    /// One entry per policy forward: real rows packed into it.
+    batch_rows: Vec<usize>,
+    /// Batch capacity B (dims.b), for occupancy.
+    pub batch_capacity: usize,
+    /// Startup warmup wall time, ms (0 when --warmup is off).
+    pub warmup_ms: f64,
+    /// Set when serving starts, for throughput.
+    started: Option<Instant>,
+}
+
+/// A point-in-time summary of the counters (plus cache stats supplied by
+/// the caller, which owns the cache).
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub cached: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub throughput_rps: f64,
+    pub forwards: u64,
+    /// Mean real rows per forward / batch capacity, in [0, 1].
+    pub batch_occupancy: f64,
+    pub cache_hit_rate: f64,
+    pub cache_entries: usize,
+    pub cache_evictions: u64,
+    pub warmup_ms: f64,
+    pub uptime_secs: f64,
+}
+
+/// Nearest-rank percentile of an unsorted sample set (q in [0,1]).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+impl ServeMetrics {
+    pub fn new(batch_capacity: usize) -> Self {
+        Self { batch_capacity, ..Default::default() }
+    }
+
+    /// Mark serving start (throughput denominator).
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn record_request(&mut self, latency_ms: f64, cached: bool) {
+        self.latencies_ms.push(latency_ms);
+        if cached {
+            self.cached += 1;
+        }
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn record_forward(&mut self, real_rows: usize) {
+        self.batch_rows.push(real_rows);
+    }
+
+    pub fn snapshot(
+        &self,
+        cache_hit_rate: f64,
+        cache_entries: usize,
+        cache_evictions: u64,
+    ) -> Snapshot {
+        let mut sorted = self.latencies_ms.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let n = sorted.len();
+        let mean_ms = if n == 0 { 0.0 } else { sorted.iter().sum::<f64>() / n as f64 };
+        let uptime_secs = self
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        let throughput_rps = if uptime_secs > 0.0 { n as f64 / uptime_secs } else { 0.0 };
+        let batch_occupancy = if self.batch_rows.is_empty() || self.batch_capacity == 0 {
+            0.0
+        } else {
+            let mean_rows = self.batch_rows.iter().sum::<usize>() as f64
+                / self.batch_rows.len() as f64;
+            mean_rows / self.batch_capacity as f64
+        };
+        Snapshot {
+            requests: n as u64,
+            errors: self.errors,
+            cached: self.cached,
+            p50_ms: percentile(&sorted, 0.50),
+            p95_ms: percentile(&sorted, 0.95),
+            p99_ms: percentile(&sorted, 0.99),
+            mean_ms,
+            throughput_rps,
+            forwards: self.batch_rows.len() as u64,
+            batch_occupancy,
+            cache_hit_rate,
+            cache_entries,
+            cache_evictions,
+            warmup_ms: self.warmup_ms,
+            uptime_secs,
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("cached", Json::num(self.cached as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("forwards", Json::num(self.forwards as f64)),
+            ("batch_occupancy", Json::num(self.batch_occupancy)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate)),
+            ("cache_entries", Json::num(self.cache_entries as f64)),
+            ("cache_evictions", Json::num(self.cache_evictions as f64)),
+            ("warmup_ms", Json::num(self.warmup_ms)),
+            ("uptime_secs", Json::num(self.uptime_secs)),
+        ])
+    }
+
+    /// Flatten into a [`BenchRecorder`] (suite "serve") so the artifact
+    /// shape matches the other BENCH_*.json files CI uploads.
+    pub fn record_into(&self, rec: &mut BenchRecorder, prefix: &str) {
+        let p = |k: &str| format!("{prefix}{k}");
+        rec.metric(p("requests"), self.requests as f64);
+        rec.metric(p("errors"), self.errors as f64);
+        rec.metric(p("cached"), self.cached as f64);
+        rec.metric(p("latency_p50_ms"), self.p50_ms);
+        rec.metric(p("latency_p95_ms"), self.p95_ms);
+        rec.metric(p("latency_p99_ms"), self.p99_ms);
+        rec.metric(p("latency_mean_ms"), self.mean_ms);
+        rec.metric(p("throughput_rps"), self.throughput_rps);
+        rec.metric(p("forwards"), self.forwards as f64);
+        rec.metric(p("batch_occupancy"), self.batch_occupancy);
+        rec.metric(p("cache_hit_rate"), self.cache_hit_rate);
+        rec.metric(p("cache_entries"), self.cache_entries as f64);
+        rec.metric(p("cache_evictions"), self.cache_evictions as f64);
+        rec.metric(p("warmup_ms"), self.warmup_ms);
+        rec.metric(p("uptime_secs"), self.uptime_secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&s, 0.50), 50.0);
+        assert_eq!(percentile(&s, 0.95), 95.0);
+        assert_eq!(percentile(&s, 0.99), 99.0);
+        assert_eq!(percentile(&s, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn snapshot_aggregates() {
+        let mut m = ServeMetrics::new(4);
+        m.start();
+        for i in 0..10 {
+            m.record_request(i as f64, i % 2 == 0);
+        }
+        m.record_error();
+        m.record_forward(4);
+        m.record_forward(2);
+        let s = m.snapshot(0.5, 3, 1);
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.cached, 5);
+        assert_eq!(s.forwards, 2);
+        assert!((s.batch_occupancy - 0.75).abs() < 1e-12);
+        assert!((s.cache_hit_rate - 0.5).abs() < 1e-12);
+        assert!(s.throughput_rps > 0.0);
+        // round-trips through the JSON writer
+        let j = s.to_json();
+        let back = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("requests").unwrap().as_usize(), Some(10));
+        assert_eq!(back.get("batch_occupancy").unwrap().as_f64(), Some(0.75));
+    }
+}

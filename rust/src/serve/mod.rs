@@ -1,0 +1,36 @@
+//! Placement-as-a-service: the `gdp serve` daemon and its client side.
+//!
+//! A long-running process loads one checkpoint into a warm
+//! [`crate::runtime::PolicyBackend`] and answers zero-shot placement
+//! requests over newline-delimited JSON (stdin/stdout or TCP):
+//!
+//! - [`proto`] — the wire protocol (request/response/error frames, the
+//!   inline-graph JSON codec);
+//! - [`fingerprint`] — permutation-invariant graph fingerprints, the
+//!   cache key;
+//! - [`cache`] — the LRU placement cache with hit/miss accounting;
+//! - [`metrics`] — latency percentiles, throughput, cache hit rate,
+//!   batch occupancy (`BENCH_SERVE.json`);
+//! - [`service`] — the core: client threads prepare tasks, one
+//!   dispatcher packs up to `B` pending requests into a single policy
+//!   forward (the training batch machinery) and finishes each row with
+//!   the exact `gdp zeroshot` candidate selection, so daemon answers
+//!   are bit-identical to one-shot answers;
+//! - [`daemon`] — stdio/TCP transports and artifact writing;
+//! - [`loadgen`] — the closed-loop load-generator harness
+//!   (`gdp loadgen`).
+
+pub mod cache;
+pub mod daemon;
+pub mod fingerprint;
+pub mod loadgen;
+pub mod metrics;
+pub mod proto;
+pub mod service;
+
+pub use cache::{CachedPlacement, PlacementCache};
+pub use daemon::Transport;
+pub use fingerprint::{cache_key, graph_fingerprint};
+pub use loadgen::{LoadgenConfig, Target};
+pub use metrics::{ServeMetrics, Snapshot};
+pub use service::{PlacementService, ServeConfig};

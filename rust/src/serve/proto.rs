@@ -1,0 +1,552 @@
+//! The serve wire protocol: newline-delimited JSON frames.
+//!
+//! One request per line in, one response per line out; responses carry
+//! the request `id` so clients may pipeline (the daemon answers cache
+//! hits and errors out of order). The request/response shape follows the
+//! dp.cpp subprocess protocol of SNIPPETS.md #1 and the Placeto env
+//! interface (nodes with costs/sizes + edges + device count in;
+//! placement + predicted runtime out).
+//!
+//! **Requests**
+//!
+//! ```json
+//! {"id":"r1","workload":"gnmt4","samples":8,"seed":3}
+//! {"id":"r2","graph":{"name":"g","num_devices":2,
+//!    "nodes":[{"name":"a","kind":"MatMul","flops":1e9,
+//!              "output_bytes":4096,"param_bytes":0,
+//!              "out_shape":[8,16,0,0],"layer":0}, ...],
+//!    "edges":[[0,1], ...]}}
+//! {"id":"c1","cmd":"stats"}        // also: "ping", "shutdown"
+//! ```
+//!
+//! **Responses**
+//!
+//! ```json
+//! {"id":"r1","ok":true,"placement":[0,1,...],"predicted_time":0.123,
+//!  "valid":true,"cached":false,"latency_ms":1.9,"batch_rows":3}
+//! {"id":"r2","ok":false,"error":{"code":"too_large","message":"..."}}
+//! ```
+//!
+//! Error codes: `parse` (malformed JSON), `bad_request` (well-formed but
+//! invalid: unknown workload, bad graph, missing fields), `too_large`
+//! (graph exceeds `--max-nodes`), `internal` (engine failure). Every
+//! error is a structured frame — the daemon never exits on bad input.
+
+use crate::graph::{OpGraph, OpKind, OpNode};
+use crate::util::json::{self, Json};
+
+/// Machine-readable error categories (the `error.code` field).
+pub mod code {
+    pub const PARSE: &str = "parse";
+    pub const BAD_REQUEST: &str = "bad_request";
+    pub const TOO_LARGE: &str = "too_large";
+    pub const INTERNAL: &str = "internal";
+}
+
+/// A structured wire error: code + message (+ the request id when it
+/// could still be extracted from the malformed frame).
+#[derive(Clone, Debug)]
+pub struct WireError {
+    pub id: Option<String>,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(id: Option<String>, code: &'static str, message: impl Into<String>) -> Self {
+        Self { id, code, message: message.into() }
+    }
+
+    /// Serialize as a response line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        Json::obj(vec![
+            (
+                "id",
+                match &self.id {
+                    Some(s) => Json::str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::obj(vec![
+                    ("code", Json::str(self.code)),
+                    ("message", Json::str(self.message.clone())),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// Where the graph of a placement request comes from.
+pub enum GraphSource {
+    /// A registry workload id (`workloads::by_id`).
+    Workload(String),
+    /// An inline graph, already parsed, validated and frozen.
+    Inline(Box<OpGraph>),
+}
+
+/// One placement request.
+pub struct PlaceRequest {
+    pub id: String,
+    pub source: GraphSource,
+    /// Stochastic draws beyond greedy (daemon default when absent).
+    pub samples: Option<usize>,
+    /// Sampling + featurization seed (daemon default when absent).
+    pub seed: Option<u64>,
+}
+
+/// Daemon control verbs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControlVerb {
+    Ping,
+    Stats,
+    Shutdown,
+}
+
+/// A parsed request frame.
+pub enum Frame {
+    Place(Box<PlaceRequest>),
+    Control { id: String, verb: ControlVerb },
+}
+
+/// Parse one request line into a [`Frame`].
+pub fn parse_frame(line: &str) -> Result<Frame, WireError> {
+    let v = json::parse(line)
+        .map_err(|e| WireError::new(None, code::PARSE, format!("malformed JSON: {e}")))?;
+    // From here on the frame is an object; try hard to carry the id into
+    // any error so the client can correlate it.
+    let id = v.get("id").and_then(|x| x.as_str()).map(str::to_string);
+    let fail = {
+        let id = id.clone();
+        move |c, m: String| WireError::new(id.clone(), c, m)
+    };
+    if !matches!(v, Json::Obj(_)) {
+        return Err(WireError::new(None, code::BAD_REQUEST, "frame must be a JSON object"));
+    }
+
+    if let Some(cmd) = v.get("cmd") {
+        let id = id.ok_or_else(|| fail(code::BAD_REQUEST, "control frame needs an id".into()))?;
+        let verb = match cmd.as_str() {
+            Some("ping") => ControlVerb::Ping,
+            Some("stats") => ControlVerb::Stats,
+            Some("shutdown") => ControlVerb::Shutdown,
+            other => {
+                return Err(WireError::new(
+                    Some(id),
+                    code::BAD_REQUEST,
+                    format!("unknown cmd {other:?} (ping|stats|shutdown)"),
+                ))
+            }
+        };
+        return Ok(Frame::Control { id, verb });
+    }
+
+    let id = id.ok_or_else(|| fail(code::BAD_REQUEST, "request needs a string \"id\"".into()))?;
+    let fail = {
+        let id = id.clone();
+        move |c, m: String| WireError::new(Some(id.clone()), c, m)
+    };
+    let samples = match v.get("samples") {
+        None => None,
+        Some(x) => Some(
+            x.as_f64()
+                .filter(|&f| f >= 0.0 && f.fract() == 0.0 && f <= 4096.0)
+                .map(|f| f as usize)
+                .ok_or_else(|| {
+                    fail(code::BAD_REQUEST, "\"samples\" must be an integer in [0, 4096]".into())
+                })?,
+        ),
+    };
+    let seed = match v.get("seed") {
+        None => None,
+        Some(x) => Some(
+            x.as_f64()
+                .filter(|&f| f >= 0.0 && f.fract() == 0.0)
+                .map(|f| f as u64)
+                .ok_or_else(|| {
+                    fail(code::BAD_REQUEST, "\"seed\" must be a non-negative integer".into())
+                })?,
+        ),
+    };
+    let source = match (v.get("workload"), v.get("graph")) {
+        (Some(w), None) => {
+            let wid = w
+                .as_str()
+                .ok_or_else(|| fail(code::BAD_REQUEST, "\"workload\" must be a string".into()))?;
+            GraphSource::Workload(wid.to_string())
+        }
+        (None, Some(gj)) => {
+            let g = graph_from_json(gj)
+                .map_err(|e| fail(code::BAD_REQUEST, format!("bad graph: {e}")))?;
+            GraphSource::Inline(Box::new(g))
+        }
+        (Some(_), Some(_)) => {
+            return Err(fail(code::BAD_REQUEST, "give \"workload\" or \"graph\", not both".into()))
+        }
+        (None, None) => {
+            return Err(fail(code::BAD_REQUEST, "request needs \"workload\" or \"graph\"".into()))
+        }
+    };
+    Ok(Frame::Place(Box::new(PlaceRequest { id, source, samples, seed })))
+}
+
+/// One successful placement response.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlaceResponse {
+    pub id: String,
+    /// Device per ORIGINAL (full-resolution) graph node.
+    pub placement: Vec<usize>,
+    /// Simulated step time of the returned placement; `None` when no
+    /// valid (non-OOM) placement was found.
+    pub predicted_time: Option<f64>,
+    pub valid: bool,
+    /// Served from the placement cache (no policy forward).
+    pub cached: bool,
+    /// Wall time from request admission to response, milliseconds.
+    pub latency_ms: f64,
+    /// Real rows in the policy forward that served this request
+    /// (batch occupancy; 0 for cache hits).
+    pub batch_rows: usize,
+}
+
+impl PlaceResponse {
+    pub fn to_line(&self) -> String {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("ok", Json::Bool(true)),
+            (
+                "placement",
+                Json::arr(self.placement.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            (
+                "predicted_time",
+                self.predicted_time.map_or(Json::Null, Json::num),
+            ),
+            ("valid", Json::Bool(self.valid)),
+            ("cached", Json::Bool(self.cached)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("batch_rows", Json::num(self.batch_rows as f64)),
+        ])
+        .to_string()
+    }
+}
+
+/// A parsed response line (client side: loadgen, tests).
+pub enum ResponseFrame {
+    Place(PlaceResponse),
+    /// Control acknowledgement; `stats` carries the snapshot object.
+    Ack { id: String, stats: Option<Json> },
+    Error(WireError),
+}
+
+/// Parse one response line (inverse of the daemon's writers).
+pub fn parse_response(line: &str) -> Result<ResponseFrame, String> {
+    let v = json::parse(line)?;
+    let id = v.get("id").and_then(|x| x.as_str()).map(str::to_string);
+    let ok = v.get("ok").and_then(|x| x.as_bool()).ok_or("missing \"ok\"")?;
+    if !ok {
+        let e = v.get("error").ok_or("error frame missing \"error\"")?;
+        let code = match e.get("code").and_then(|x| x.as_str()) {
+            Some("parse") => code::PARSE,
+            Some("bad_request") => code::BAD_REQUEST,
+            Some("too_large") => code::TOO_LARGE,
+            _ => code::INTERNAL,
+        };
+        let message =
+            e.get("message").and_then(|x| x.as_str()).unwrap_or_default().to_string();
+        return Ok(ResponseFrame::Error(WireError { id, code, message }));
+    }
+    let id = id.ok_or("response missing id")?;
+    match v.get("placement") {
+        None => Ok(ResponseFrame::Ack { id, stats: v.get("stats").cloned() }),
+        Some(p) => {
+            let placement = p
+                .as_arr()
+                .ok_or("placement must be an array")?
+                .iter()
+                .map(|x| x.as_usize().ok_or("placement entries must be integers"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let predicted_time = match v.get("predicted_time") {
+                None | Some(Json::Null) => None,
+                Some(x) => Some(x.as_f64().ok_or("predicted_time must be a number")?),
+            };
+            Ok(ResponseFrame::Place(PlaceResponse {
+                id,
+                placement,
+                predicted_time,
+                valid: v.get("valid").and_then(|x| x.as_bool()).unwrap_or(false),
+                cached: v.get("cached").and_then(|x| x.as_bool()).unwrap_or(false),
+                latency_ms: v.get("latency_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                batch_rows: v.get("batch_rows").and_then(|x| x.as_usize()).unwrap_or(0),
+            }))
+        }
+    }
+}
+
+// ---- OpGraph JSON codec (inline requests; also a graph export format) ----
+
+/// Serialize a graph as the wire JSON object.
+pub fn graph_to_json(g: &OpGraph) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(g.name.clone())),
+        ("num_devices", Json::num(g.num_devices as f64)),
+        (
+            "nodes",
+            Json::arr(
+                g.nodes
+                    .iter()
+                    .map(|n| {
+                        Json::obj(vec![
+                            ("name", Json::str(n.name.clone())),
+                            ("kind", Json::str(n.kind.name())),
+                            ("flops", Json::num(n.flops)),
+                            ("output_bytes", Json::num(n.output_bytes as f64)),
+                            ("param_bytes", Json::num(n.param_bytes as f64)),
+                            (
+                                "out_shape",
+                                Json::arr(
+                                    n.out_shape
+                                        .iter()
+                                        .map(|&d| Json::num(d as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            ("layer", Json::num(n.layer as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "edges",
+            Json::arr(
+                g.edges
+                    .iter()
+                    .map(|&(u, v)| {
+                        Json::arr(vec![Json::num(u as f64), Json::num(v as f64)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse, validate and freeze a graph from the wire JSON object.
+pub fn graph_from_json(j: &Json) -> Result<OpGraph, String> {
+    let name = j.get("name").and_then(|x| x.as_str()).unwrap_or("inline").to_string();
+    let num_devices = j
+        .req("num_devices")?
+        .as_usize()
+        .filter(|&d| d >= 1)
+        .ok_or("num_devices must be a positive integer")?;
+    let nodes_j = j.req("nodes")?.as_arr().ok_or("nodes must be an array")?;
+    let mut g = OpGraph::new(name, num_devices);
+    for (i, nj) in nodes_j.iter().enumerate() {
+        let kind_s = nj
+            .req("kind")
+            .map_err(|e| format!("node {i}: {e}"))?
+            .as_str()
+            .ok_or_else(|| format!("node {i}: kind must be a string"))?;
+        let kind = OpKind::from_name(kind_s)
+            .ok_or_else(|| format!("node {i}: unknown op kind {kind_s:?}"))?;
+        let nname = nj
+            .get("name")
+            .and_then(|x| x.as_str())
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("n{i}"));
+        let mut node = OpNode::new(nname, kind);
+        node.flops = nj.get("flops").and_then(|x| x.as_f64()).unwrap_or(0.0);
+        if !node.flops.is_finite() || node.flops < 0.0 {
+            return Err(format!("node {i}: flops must be finite and >= 0"));
+        }
+        node.output_bytes =
+            nj.get("output_bytes").and_then(|x| x.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+        node.param_bytes =
+            nj.get("param_bytes").and_then(|x| x.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+        if let Some(sh) = nj.get("out_shape") {
+            let arr = sh.as_arr().ok_or_else(|| format!("node {i}: out_shape must be an array"))?;
+            if arr.len() > 4 {
+                return Err(format!("node {i}: out_shape rank > 4"));
+            }
+            for (k, dj) in arr.iter().enumerate() {
+                node.out_shape[k] = dj
+                    .as_usize()
+                    .ok_or_else(|| format!("node {i}: out_shape entries must be integers"))?
+                    as u32;
+            }
+        }
+        node.layer = nj.get("layer").and_then(|x| x.as_usize()).unwrap_or(0) as u32;
+        g.nodes.push(node);
+    }
+    let edges_j = j.req("edges")?.as_arr().ok_or("edges must be an array")?;
+    for (i, ej) in edges_j.iter().enumerate() {
+        let pair = ej.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+            format!("edge {i}: must be a [producer, consumer] pair")
+        })?;
+        let u = pair[0].as_usize().ok_or_else(|| format!("edge {i}: bad producer"))?;
+        let v = pair[1].as_usize().ok_or_else(|| format!("edge {i}: bad consumer"))?;
+        g.edges.push((u as u32, v as u32));
+    }
+    g.validate()?;
+    // validate() catches out-of-range/self-loop/duplicate edges; freeze()
+    // would panic on a cycle, so detect it here and report instead.
+    if has_cycle(&g) {
+        return Err("graph has a cycle".into());
+    }
+    g.freeze();
+    Ok(g)
+}
+
+/// Kahn cycle check without panicking (freeze() asserts on cycles).
+fn has_cycle(g: &OpGraph) -> bool {
+    let n = g.n();
+    let mut indeg = vec![0usize; n];
+    for &(_, v) in &g.edges {
+        indeg[v as usize] += 1;
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(u) = queue.pop() {
+        seen += 1;
+        for &(a, b) in &g.edges {
+            if a as usize == u {
+                indeg[b as usize] -= 1;
+                if indeg[b as usize] == 0 {
+                    queue.push(b as usize);
+                }
+            }
+        }
+    }
+    seen != n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_request_round_trip_workload() {
+        let f = parse_frame(r#"{"id":"r1","workload":"gnmt4","samples":4,"seed":9}"#).unwrap();
+        match f {
+            Frame::Place(p) => {
+                assert_eq!(p.id, "r1");
+                assert_eq!(p.samples, Some(4));
+                assert_eq!(p.seed, Some(9));
+                assert!(matches!(p.source, GraphSource::Workload(ref w) if w == "gnmt4"));
+            }
+            _ => panic!("expected place frame"),
+        }
+    }
+
+    #[test]
+    fn control_frames_parse() {
+        for (verb, s) in [
+            (ControlVerb::Ping, "ping"),
+            (ControlVerb::Stats, "stats"),
+            (ControlVerb::Shutdown, "shutdown"),
+        ] {
+            let f = parse_frame(&format!(r#"{{"id":"c","cmd":"{s}"}}"#)).unwrap();
+            match f {
+                Frame::Control { id, verb: v } => {
+                    assert_eq!(id, "c");
+                    assert_eq!(v, verb);
+                }
+                _ => panic!("expected control frame"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_and_invalid_frames_error_with_codes() {
+        // malformed JSON: no id recoverable
+        let e = parse_frame("{nope").unwrap_err();
+        assert_eq!(e.code, code::PARSE);
+        assert!(e.id.is_none());
+        // well-formed but invalid: id carried into the error
+        let e = parse_frame(r#"{"id":"x","samples":3}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_REQUEST);
+        assert_eq!(e.id.as_deref(), Some("x"));
+        // bad samples type
+        let e = parse_frame(r#"{"id":"x","workload":"w","samples":1.5}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_REQUEST);
+        // error frame round-trips through the writer + parser
+        let line = e.to_line();
+        match parse_response(&line).unwrap() {
+            ResponseFrame::Error(w) => {
+                assert_eq!(w.code, code::BAD_REQUEST);
+                assert_eq!(w.id.as_deref(), Some("x"));
+                assert!(w.message.contains("samples"));
+            }
+            _ => panic!("expected error frame"),
+        }
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let r = PlaceResponse {
+            id: "r9".into(),
+            placement: vec![0, 1, 1, 0],
+            predicted_time: Some(0.12345),
+            valid: true,
+            cached: true,
+            latency_ms: 1.5,
+            batch_rows: 3,
+        };
+        match parse_response(&r.to_line()).unwrap() {
+            ResponseFrame::Place(back) => assert_eq!(back, r),
+            _ => panic!("expected place response"),
+        }
+        // invalid placements serialize predicted_time as null
+        let r = PlaceResponse { predicted_time: None, valid: false, ..r };
+        match parse_response(&r.to_line()).unwrap() {
+            ResponseFrame::Place(back) => {
+                assert_eq!(back.predicted_time, None);
+                assert!(!back.valid);
+            }
+            _ => panic!("expected place response"),
+        }
+    }
+
+    #[test]
+    fn graph_json_round_trips_through_inline_request() {
+        let g = crate::workloads::by_id("inception").unwrap();
+        let j = graph_to_json(&g);
+        let back = graph_from_json(&j).unwrap();
+        assert_eq!(back.n(), g.n());
+        assert_eq!(back.edges, g.edges);
+        assert_eq!(back.num_devices, g.num_devices);
+        for (a, b) in g.nodes.iter().zip(&back.nodes) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.flops.to_bits(), b.flops.to_bits());
+            assert_eq!(a.output_bytes, b.output_bytes);
+            assert_eq!(a.param_bytes, b.param_bytes);
+            assert_eq!(a.out_shape, b.out_shape);
+            assert_eq!(a.layer, b.layer);
+        }
+        // and as a full request line
+        let line = format!(r#"{{"id":"g1","graph":{}}}"#, j.to_string());
+        match parse_frame(&line).unwrap() {
+            Frame::Place(p) => match p.source {
+                GraphSource::Inline(ig) => assert_eq!(ig.n(), g.n()),
+                _ => panic!("expected inline graph"),
+            },
+            _ => panic!("expected place frame"),
+        }
+    }
+
+    #[test]
+    fn inline_graph_rejects_cycles_and_bad_edges() {
+        let cyc = r#"{"num_devices":2,
+            "nodes":[{"kind":"MatMul"},{"kind":"MatMul"}],
+            "edges":[[0,1],[1,0]]}"#;
+        let e = graph_from_json(&json::parse(cyc).unwrap()).unwrap_err();
+        assert!(e.contains("cycle"), "{e}");
+        let oob = r#"{"num_devices":2,
+            "nodes":[{"kind":"MatMul"}],
+            "edges":[[0,5]]}"#;
+        assert!(graph_from_json(&json::parse(oob).unwrap()).is_err());
+    }
+}

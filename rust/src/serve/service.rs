@@ -1,0 +1,488 @@
+//! The placement service: one warm policy engine answering concurrent
+//! placement requests with batching and caching.
+//!
+//! **Threading model.** Client threads (one per connection / loadgen
+//! worker) do all per-request work that parallelizes well — parsing,
+//! graph resolution, fingerprinting, `PlacementTask` construction
+//! (coarsen + featurize + `SimPlan`) — then hand a `Job` to the single
+//! dispatcher thread over a channel and block on a reply. The dispatcher
+//! owns the policy forward: it takes the first pending job, lingers up
+//! to `batch_window_ms` to drain more (up to the engine's batch capacity
+//! `B = dims.b`), packs them as rows of ONE `Batch` (the training-path
+//! filler-row machinery cycles rows when under-filled), runs one
+//! forward, and finishes each row with [`infer_from_logits`] — the exact
+//! candidate-selection code of `gdp zeroshot`. Rows are computed
+//! independently by both engines, so a request's logits do not depend on
+//! its batch-mates: batched answers are **bit-identical** to one-shot
+//! answers for the same checkpoint, samples and seed.
+//!
+//! **Cache keying.** The LRU key is the permutation-invariant graph
+//! fingerprint (structure + costs + device count) mixed with the
+//! request's `samples` and `seed` — everything that determines the
+//! answer and nothing that doesn't (names, node order, request id).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::infer_from_logits;
+use crate::coordinator::TaskBest;
+use crate::graph::features::FeatDims;
+use crate::graph::{GraphBuilder, OpGraph, OpKind};
+use crate::policy::PlacementTask;
+use crate::runtime::{Batch, ParamStore, PolicyBackend};
+
+use super::cache::{CachedPlacement, PlacementCache};
+use super::fingerprint::{cache_key, graph_fingerprint};
+use super::metrics::{ServeMetrics, Snapshot};
+use super::proto::{
+    self, code, ControlVerb, Frame, GraphSource, PlaceResponse, WireError,
+};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// How long the dispatcher lingers for batch-mates after the first
+    /// pending request (milliseconds). 0 = no batching delay (batches
+    /// still form under backlog).
+    pub batch_window_ms: u64,
+    /// LRU capacity in entries; 0 disables the cache.
+    pub cache_capacity: usize,
+    /// Reject inline graphs larger than this (`too_large`).
+    pub max_nodes: usize,
+    /// Defaults applied when a request omits `samples` / `seed` —
+    /// mirroring the `gdp zeroshot` flag defaults.
+    pub default_samples: usize,
+    pub default_seed: u64,
+    /// Run synthetic warmup forwards at startup.
+    pub warmup: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            batch_window_ms: 2,
+            cache_capacity: 256,
+            max_nodes: 4096,
+            default_samples: 8,
+            default_seed: 3,
+            warmup: false,
+        }
+    }
+}
+
+/// One admitted placement request, ready for the dispatcher.
+struct Job {
+    task: Arc<PlacementTask>,
+    samples: usize,
+    seed: u64,
+    reply: Sender<Result<(TaskBest, usize), String>>,
+}
+
+pub struct PlacementService {
+    policy: Arc<dyn PolicyBackend>,
+    store: Arc<ParamStore>,
+    feat_dims: FeatDims,
+    cfg: ServeConfig,
+    cache: Mutex<PlacementCache>,
+    metrics: Mutex<ServeMetrics>,
+    /// Cloned per request; `stop()` takes it so the dispatcher drains
+    /// and exits.
+    tx: Mutex<Option<Sender<Job>>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    shutdown: AtomicBool,
+}
+
+impl PlacementService {
+    /// Spawn the dispatcher and return the shared service handle. Runs
+    /// warmup synchronously when configured (time lands in the metrics).
+    pub fn start(
+        policy: Arc<dyn PolicyBackend>,
+        store: ParamStore,
+        cfg: ServeConfig,
+    ) -> Arc<Self> {
+        let dims = policy.manifest().dims;
+        let feat_dims = FeatDims { n: dims.n, k: dims.k, f: dims.f, d: dims.d };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let svc = Arc::new(Self {
+            policy,
+            store: Arc::new(store),
+            feat_dims,
+            cfg: cfg.clone(),
+            cache: Mutex::new(PlacementCache::new(cfg.cache_capacity)),
+            metrics: Mutex::new(ServeMetrics::new(dims.b)),
+            tx: Mutex::new(Some(tx)),
+            dispatcher: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+        });
+        if cfg.warmup {
+            let ms = svc.warmup();
+            svc.metrics.lock().unwrap().warmup_ms = ms;
+        }
+        svc.metrics.lock().unwrap().start();
+        let d = Arc::clone(&svc);
+        let handle = std::thread::Builder::new()
+            .name("gdp-serve-dispatch".into())
+            .spawn(move || d.dispatch_loop(rx))
+            .expect("spawn dispatcher");
+        *svc.dispatcher.lock().unwrap() = Some(handle);
+        svc
+    }
+
+    /// One synthetic forward per distinct registry device count, so the
+    /// first real request of any device width hits warmed engine
+    /// workspaces (and the allocator's high-water marks). Returns wall ms.
+    fn warmup(&self) -> f64 {
+        let t0 = Instant::now();
+        let mut widths: Vec<usize> =
+            crate::workloads::registry().iter().map(|s| s.num_devices).collect();
+        widths.sort_unstable();
+        widths.dedup();
+        for nd in widths {
+            let g = synthetic_chain(nd);
+            let task = PlacementTask::new("warmup", g, self.feat_dims, 0);
+            if let Ok(batch) = Batch::from_rows(self.policy.manifest(), &[&task.feats]) {
+                let _ = self.policy.forward(&self.store, &batch);
+            }
+        }
+        t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// The dispatcher: batch pending jobs into one forward.
+    fn dispatch_loop(&self, rx: Receiver<Job>) {
+        let dims = self.policy.manifest().dims;
+        let window = Duration::from_millis(self.cfg.batch_window_ms);
+        while let Ok(first) = rx.recv() {
+            let mut jobs = vec![first];
+            let deadline = Instant::now() + window;
+            while jobs.len() < dims.b {
+                let left = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(j) => jobs.push(j),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            let rows: Vec<&crate::graph::features::GraphFeatures> =
+                jobs.iter().map(|j| &j.task.feats).collect();
+            let logits = Batch::from_rows(self.policy.manifest(), &rows)
+                .and_then(|batch| self.policy.forward(&self.store, &batch));
+            match logits {
+                Err(e) => {
+                    let msg = format!("policy forward failed: {e:#}");
+                    for j in &jobs {
+                        let _ = j.reply.send(Err(msg.clone()));
+                    }
+                }
+                Ok(logits) => {
+                    self.metrics.lock().unwrap().record_forward(jobs.len());
+                    let stride = dims.n * dims.d;
+                    for (i, j) in jobs.iter().enumerate() {
+                        let best = infer_from_logits(
+                            &logits[i * stride..(i + 1) * stride],
+                            dims.n,
+                            dims.d,
+                            &j.task,
+                            j.samples,
+                            j.seed,
+                        );
+                        let _ = j.reply.send(Ok((best, jobs.len())));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Handle one request line, returning the response line (no trailing
+    /// newline). Never panics on any input: engine panics are caught and
+    /// surfaced as `internal` error frames.
+    pub fn call(&self, line: &str) -> String {
+        let t0 = Instant::now();
+        let line = line.trim();
+        let frame = match proto::parse_frame(line) {
+            Ok(f) => f,
+            Err(e) => {
+                self.metrics.lock().unwrap().record_error();
+                return e.to_line();
+            }
+        };
+        match frame {
+            Frame::Control { id, verb } => self.control(id, verb),
+            Frame::Place(req) => {
+                let id = req.id.clone();
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || self.place(*req, t0),
+                ));
+                match out {
+                    Ok(Ok(resp)) => resp.to_line(),
+                    Ok(Err(e)) => {
+                        self.metrics.lock().unwrap().record_error();
+                        e.to_line()
+                    }
+                    Err(panic) => {
+                        self.metrics.lock().unwrap().record_error();
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "engine panic".into());
+                        WireError::new(Some(id), code::INTERNAL, msg).to_line()
+                    }
+                }
+            }
+        }
+    }
+
+    fn control(&self, id: String, verb: ControlVerb) -> String {
+        let mut fields = vec![
+            ("id", Json::str(id)),
+            ("ok", Json::Bool(true)),
+        ];
+        match verb {
+            ControlVerb::Ping => {}
+            ControlVerb::Stats => {
+                fields.push(("stats", self.snapshot().to_json()));
+            }
+            ControlVerb::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+            }
+        }
+        Json::obj(fields).to_string()
+    }
+
+    fn place(
+        &self,
+        req: proto::PlaceRequest,
+        t0: Instant,
+    ) -> Result<PlaceResponse, WireError> {
+        let id = req.id;
+        let fail = {
+            let id = id.clone();
+            move |c, m: String| WireError::new(Some(id.clone()), c, m)
+        };
+        let (task_id, graph): (String, OpGraph) = match req.source {
+            GraphSource::Workload(wid) => {
+                let g = crate::workloads::by_id(&wid).ok_or_else(|| {
+                    fail(code::BAD_REQUEST, format!("unknown workload {wid:?}"))
+                })?;
+                (wid, g)
+            }
+            GraphSource::Inline(g) => (g.name.clone(), *g),
+        };
+        if graph.n() > self.cfg.max_nodes {
+            return Err(fail(
+                code::TOO_LARGE,
+                format!("graph has {} nodes (max {})", graph.n(), self.cfg.max_nodes),
+            ));
+        }
+        if graph.num_devices > self.feat_dims.d {
+            return Err(fail(
+                code::BAD_REQUEST,
+                format!(
+                    "num_devices {} exceeds policy width {}",
+                    graph.num_devices, self.feat_dims.d
+                ),
+            ));
+        }
+        let samples = req.samples.unwrap_or(self.cfg.default_samples);
+        let seed = req.seed.unwrap_or(self.cfg.default_seed);
+        let key = cache_key(graph_fingerprint(&graph), samples, seed);
+
+        if let Some(hit) = self.cache.lock().unwrap().get(key) {
+            let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.metrics.lock().unwrap().record_request(latency_ms, true);
+            return Ok(PlaceResponse {
+                id,
+                placement: hit.placement,
+                predicted_time: hit.predicted_time,
+                valid: hit.valid,
+                cached: true,
+                latency_ms,
+                batch_rows: 0,
+            });
+        }
+
+        // Miss: prepare on this thread (parallel across clients), then
+        // queue for the batched forward. The seed feeds BOTH featurize
+        // (PlacementTask::new) and candidate sampling, exactly like
+        // `gdp zeroshot`'s session.task(id, seed) + zeroshot(.., seed).
+        let task = Arc::new(PlacementTask::new(
+            task_id,
+            graph,
+            self.feat_dims,
+            seed,
+        ));
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or_else(|| {
+                fail(code::INTERNAL, "service is shutting down".into())
+            })?;
+            tx.send(Job { task: Arc::clone(&task), samples, seed, reply: reply_tx })
+                .map_err(|_| fail(code::INTERNAL, "dispatcher is gone".into()))?;
+        }
+        let (best, batch_rows) = reply_rx
+            .recv()
+            .map_err(|_| fail(code::INTERNAL, "dispatcher dropped the request".into()))?
+            .map_err(|e| fail(code::INTERNAL, e))?;
+
+        let predicted_time = best.best_valid.then_some(best.best_time);
+        let cached = CachedPlacement {
+            placement: best.best_placement.devices.clone(),
+            predicted_time,
+            valid: best.best_valid,
+        };
+        self.cache.lock().unwrap().put(key, cached);
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.metrics.lock().unwrap().record_request(latency_ms, false);
+        Ok(PlaceResponse {
+            id,
+            placement: best.best_placement.devices,
+            predicted_time,
+            valid: best.best_valid,
+            cached: false,
+            latency_ms,
+            batch_rows,
+        })
+    }
+
+    /// Point-in-time metrics (cache counters folded in).
+    pub fn snapshot(&self) -> Snapshot {
+        let (rate, entries, evictions) = {
+            let c = self.cache.lock().unwrap();
+            (c.hit_rate(), c.len(), c.evictions())
+        };
+        self.metrics.lock().unwrap().snapshot(rate, entries, evictions)
+    }
+
+    /// Set by the `shutdown` control verb; transports poll it.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.policy.backend_name()
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Stop the dispatcher (drains pending jobs first) and join it.
+    pub fn stop(&self) {
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PlacementService {
+    fn drop(&mut self) {
+        // Owning Arc dropped without stop(): the channel sender dies with
+        // us, the dispatcher exits on Disconnected; nothing to join (the
+        // handle only remains if stop() was never called — detached
+        // threads ending is fine at process exit).
+        self.tx.lock().unwrap().take();
+    }
+}
+
+/// Tiny layered chain used by warmup: Input -> MatMul x4 -> Output on
+/// `num_devices` devices. Costs are arbitrary but fixed.
+fn synthetic_chain(num_devices: usize) -> OpGraph {
+    let mut b = GraphBuilder::new(format!("warmup_d{num_devices}"), num_devices);
+    let mut prev = b.op("in", OpKind::Input).out_bytes(1 << 12).id();
+    for i in 0..4 {
+        prev = b
+            .op(format!("mm{i}"), OpKind::MatMul)
+            .flops(1e8)
+            .out_bytes(1 << 12)
+            .after(&[prev])
+            .id();
+    }
+    b.op("out", OpKind::Output).after(&[prev]);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Session;
+    use std::path::Path;
+
+    fn service(cfg: ServeConfig) -> Arc<PlacementService> {
+        let session =
+            Session::open(Path::new("artifacts"), "full").expect("native session");
+        let store = session.init_params().expect("init params");
+        PlacementService::start(session.shared_policy(), store, cfg)
+    }
+
+    #[test]
+    fn serves_workload_and_caches_repeat() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
+        let r1 = svc.call(r#"{"id":"a","workload":"inception","samples":1,"seed":3}"#);
+        let r2 = svc.call(r#"{"id":"b","workload":"inception","samples":1,"seed":3}"#);
+        let p1 = match proto::parse_response(&r1).unwrap() {
+            proto::ResponseFrame::Place(p) => p,
+            _ => panic!("expected placement: {r1}"),
+        };
+        let p2 = match proto::parse_response(&r2).unwrap() {
+            proto::ResponseFrame::Place(p) => p,
+            _ => panic!("expected placement: {r2}"),
+        };
+        assert!(!p1.cached);
+        assert!(p2.cached);
+        assert_eq!(p1.placement, p2.placement);
+        assert_eq!(p1.predicted_time, p2.predicted_time);
+        assert!(p1.batch_rows >= 1);
+        assert_eq!(p2.batch_rows, 0);
+        let snap = svc.snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.cached, 1);
+        assert!(snap.cache_hit_rate > 0.0);
+        svc.stop();
+    }
+
+    #[test]
+    fn structured_errors_and_daemon_stays_up() {
+        let svc = service(ServeConfig {
+            warmup: false,
+            max_nodes: 3,
+            ..Default::default()
+        });
+        // malformed
+        let e = svc.call("{broken");
+        assert!(e.contains("\"parse\""), "{e}");
+        // unknown workload
+        let e = svc.call(r#"{"id":"u","workload":"nope"}"#);
+        assert!(e.contains("bad_request"), "{e}");
+        // oversized inline graph (max_nodes = 3)
+        let g = proto::graph_to_json(&crate::workloads::by_id("inception").unwrap());
+        let e = svc.call(&format!(r#"{{"id":"big","graph":{}}}"#, g.to_string()));
+        assert!(e.contains("too_large"), "{e}");
+        // still serving after all that
+        let ok = svc.call(r#"{"id":"p","cmd":"ping"}"#);
+        assert!(ok.contains("true"), "{ok}");
+        assert!(!svc.shutdown_requested());
+        let snap = svc.snapshot();
+        assert_eq!(snap.errors, 3);
+        svc.stop();
+    }
+
+    #[test]
+    fn shutdown_verb_flags_and_stats_report() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
+        let s = svc.call(r#"{"id":"s","cmd":"stats"}"#);
+        match proto::parse_response(&s).unwrap() {
+            proto::ResponseFrame::Ack { stats, .. } => {
+                let stats = stats.expect("stats payload");
+                assert!(stats.get("requests").is_some());
+            }
+            _ => panic!("expected ack: {s}"),
+        }
+        svc.call(r#"{"id":"q","cmd":"shutdown"}"#);
+        assert!(svc.shutdown_requested());
+        svc.stop();
+    }
+}

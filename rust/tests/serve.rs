@@ -1,0 +1,219 @@
+//! Serve-daemon integration tests: the daemon must be a transparent
+//! wrapper around `gdp zeroshot` — same checkpoint, samples and seed in,
+//! bit-identical placement out, whether the request rode a batch, the
+//! cache, or a TCP socket — and it must survive hostile input.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gdp::coordinator::{generalize, Session};
+use gdp::serve::proto::{self, ResponseFrame};
+use gdp::serve::{daemon, PlacementService, ServeConfig, Transport};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gdp_serve_it_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn session() -> Session {
+    Session::open(Path::new("artifacts"), "full").expect("native session")
+}
+
+fn place(svc: &PlacementService, id: &str, wid: &str, samples: usize, seed: u64) -> proto::PlaceResponse {
+    let line = format!(r#"{{"id":"{id}","workload":"{wid}","samples":{samples},"seed":{seed}}}"#);
+    let resp = svc.call(&line);
+    match proto::parse_response(&resp).unwrap() {
+        ResponseFrame::Place(p) => p,
+        other => panic!(
+            "expected placement for {wid}, got {}",
+            match other {
+                ResponseFrame::Error(e) => format!("{}: {}", e.code, e.message),
+                _ => "ack".into(),
+            }
+        ),
+    }
+}
+
+/// The tentpole guarantee: for the same checkpoint, samples and seed the
+/// daemon's answer — through task construction, batching and the filler-
+/// row machinery — is bit-identical to one-shot `gdp zeroshot`.
+#[test]
+fn daemon_matches_one_shot_zeroshot_bit_identically() {
+    let dir = tmpdir("bitident");
+    let ckpt = dir.join("pre.ckpt");
+    let session = session();
+    let store = session.init_params().unwrap();
+    session.save_checkpoint(&store, &ckpt).unwrap();
+
+    // Daemon loads the checkpoint exactly like `gdp serve --checkpoint`.
+    let daemon_store = session.load_params(&ckpt).unwrap();
+    let svc = PlacementService::start(
+        session.shared_policy(),
+        daemon_store,
+        ServeConfig { warmup: true, ..Default::default() },
+    );
+
+    let (samples, seed) = (2, 5);
+    for wid in ["inception", "gnmt4", "rnnlm2"] {
+        let task = session.task(wid, seed).unwrap();
+        let one = generalize::zeroshot(&session, &store, &task, samples, seed).unwrap();
+        let served = place(&svc, wid, wid, samples, seed);
+        assert_eq!(
+            served.placement, one.best_placement.devices,
+            "{wid}: daemon placement diverged from one-shot zeroshot"
+        );
+        assert_eq!(served.valid, one.best_valid, "{wid}: validity diverged");
+        match (served.predicted_time, one.best_valid.then_some(one.best_time)) {
+            (Some(a), Some(b)) => assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{wid}: predicted time not bit-identical ({a} vs {b})"
+            ),
+            (None, None) => {}
+            (a, b) => panic!("{wid}: predicted_time mismatch ({a:?} vs {b:?})"),
+        }
+    }
+    svc.stop();
+}
+
+/// Concurrent same-seed requests land in shared batches; every answer
+/// must still equal its one-shot counterpart (rows are independent).
+#[test]
+fn concurrent_batched_requests_stay_bit_identical() {
+    let session = session();
+    let store = session.init_params().unwrap();
+    let svc = PlacementService::start(
+        session.shared_policy(),
+        session.init_params().unwrap(),
+        // cache off + a wide window so concurrent requests actually share
+        // a forward instead of being answered from the LRU
+        ServeConfig { cache_capacity: 0, batch_window_ms: 60, ..Default::default() },
+    );
+    let (samples, seed) = (1, 7);
+    let mix = ["inception", "gnmt4", "rnnlm2"];
+    let mut expected = Vec::new();
+    for wid in mix {
+        let task = session.task(wid, seed).unwrap();
+        expected.push(generalize::zeroshot(&session, &store, &task, samples, seed).unwrap());
+    }
+    std::thread::scope(|scope| {
+        for round in 0..2 {
+            for (i, &wid) in mix.iter().enumerate() {
+                let svc = Arc::clone(&svc);
+                let want = &expected[i];
+                scope.spawn(move || {
+                    let p = place(&svc, &format!("c{round}_{i}"), wid, samples, seed);
+                    assert_eq!(p.placement, want.best_placement.devices, "{wid} diverged");
+                    assert!(!p.cached);
+                });
+            }
+        }
+    });
+    let snap = svc.snapshot();
+    assert_eq!(snap.requests, 6);
+    // 6 requests, batch capacity >= 2 and a shared window: fewer forwards
+    // than requests proves real batching happened.
+    assert!(
+        snap.forwards < 6,
+        "no batching: {} forwards for {} requests",
+        snap.forwards,
+        snap.requests
+    );
+    svc.stop();
+}
+
+/// Full TCP round-trip: ping, placement, hostile lines, stats, shutdown.
+/// The daemon must answer every line (errors as structured frames), then
+/// exit cleanly on the shutdown verb and write the metrics artifact.
+#[test]
+fn tcp_daemon_serves_survives_garbage_and_writes_artifact() {
+    let dir = tmpdir("tcp");
+    let bench = dir.join("BENCH_SERVE.json");
+    let session = session();
+    let svc = PlacementService::start(
+        session.shared_policy(),
+        session.init_params().unwrap(),
+        ServeConfig { warmup: false, ..Default::default() },
+    );
+    let addr = "127.0.0.1:47117";
+    let handle = {
+        let svc = Arc::clone(&svc);
+        let bench = bench.to_str().unwrap().to_string();
+        std::thread::spawn(move || {
+            daemon::run(&svc, Transport::Tcp(addr.into()), Some(&bench)).unwrap()
+        })
+    };
+    // the listener comes up asynchronously
+    let stream = {
+        let mut tries = 0;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    tries += 1;
+                    assert!(tries < 250, "daemon never listened: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    };
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut call = |line: &str| -> String {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim().to_string()
+    };
+
+    let pong = call(r#"{"id":"p","cmd":"ping"}"#);
+    assert!(pong.contains("true"), "{pong}");
+
+    let ok = call(r#"{"id":"r1","workload":"inception","samples":1,"seed":3}"#);
+    match proto::parse_response(&ok).unwrap() {
+        ResponseFrame::Place(p) => assert!(!p.placement.is_empty()),
+        _ => panic!("expected placement: {ok}"),
+    }
+
+    // hostile input: malformed JSON, then a bogus workload — both must
+    // come back as structured error frames on the same connection
+    let e1 = call("{definitely not json");
+    assert!(e1.contains("\"parse\""), "{e1}");
+    let e2 = call(r#"{"id":"r2","workload":"no_such_graph"}"#);
+    assert!(e2.contains("bad_request"), "{e2}");
+
+    // and the daemon still serves afterwards
+    let again = call(r#"{"id":"r3","workload":"inception","samples":1,"seed":3}"#);
+    match proto::parse_response(&again).unwrap() {
+        ResponseFrame::Place(p) => assert!(p.cached, "repeat should hit the cache"),
+        _ => panic!("expected placement: {again}"),
+    }
+
+    let stats = call(r#"{"id":"s","cmd":"stats"}"#);
+    match proto::parse_response(&stats).unwrap() {
+        ResponseFrame::Ack { stats: Some(s), .. } => {
+            assert_eq!(s.get("errors").and_then(|x| x.as_usize()), Some(2));
+        }
+        _ => panic!("expected stats ack: {stats}"),
+    }
+
+    call(r#"{"id":"q","cmd":"shutdown"}"#);
+    let snap = handle.join().expect("daemon thread");
+    assert_eq!(snap.requests, 2);
+    assert_eq!(snap.errors, 2);
+    assert_eq!(snap.cached, 1);
+
+    // the artifact landed and has the server_* metrics
+    let text = std::fs::read_to_string(&bench).unwrap();
+    let j = gdp::util::json::parse(&text).unwrap();
+    assert_eq!(j.get("suite").unwrap().as_str(), Some("serve"));
+    let m = j.get("metrics").unwrap();
+    assert_eq!(m.get("server_requests").unwrap().as_usize(), Some(2));
+    assert!(m.get("server_latency_p99_ms").is_some());
+}
