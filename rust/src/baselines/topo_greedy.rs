@@ -1,0 +1,109 @@
+//! Deterministic topo-greedy list scheduler — the serve daemon's
+//! degraded-mode fallback placer.
+//!
+//! When the learned policy is unavailable (forward panic, non-finite
+//! logits, blown deadline, open circuit breaker) the daemon still owes
+//! the client *a* placement: classical algorithmic placers show a fast
+//! deterministic answer is always computable (Tarnawski et al.,
+//! 2006.16423). This one walks the graph in topological order and
+//! assigns each op to the device minimizing its earliest finish estimate
+//! (current device load + compute cost + a transfer penalty for every
+//! producer placed elsewhere), with memory-pressure tie-breaking.
+//!
+//! The placer touches no RNG and no floating-point reduction whose order
+//! depends on thread scheduling, so for a fixed graph the output is
+//! **bit-deterministic** across runs, threads and machines — a property
+//! the degraded-response tests pin.
+
+use crate::graph::OpGraph;
+use crate::placement::Placement;
+
+/// Compute-to-seconds and bytes-to-seconds scales. Absolute values only
+/// matter relative to each other (they shape the compute/comm tradeoff);
+/// they roughly mirror `sim::CostModel`'s defaults.
+const FLOPS_PER_SEC: f64 = 1e12;
+const BYTES_PER_SEC: f64 = 1e10;
+
+/// Greedy earliest-finish list scheduling over `g.topo_order()`.
+/// Deterministic: ties break toward the lowest device index.
+pub fn topo_greedy_place(g: &OpGraph) -> Placement {
+    let n = g.n();
+    let d = g.num_devices.max(1);
+    let mut devices = vec![0usize; n];
+    // Per-device accumulated compute time and resident bytes.
+    let mut load = vec![0f64; d];
+    let mut mem = vec![0u64; d];
+    for &u in g.topo_order() {
+        let u = u as usize;
+        let node = &g.nodes[u];
+        let compute = node.flops.max(0.0) / FLOPS_PER_SEC;
+        let mut best_dev = 0usize;
+        let mut best_cost = f64::INFINITY;
+        let mut best_mem = u64::MAX;
+        for dev in 0..d {
+            // Producers on other devices pay a transfer penalty; the
+            // node cannot start before its inputs arrive.
+            let mut ready = load[dev];
+            for &p in g.producers(u) {
+                let p = p as usize;
+                let mut t = load[devices[p]];
+                if devices[p] != dev {
+                    t += g.nodes[p].output_bytes as f64 / BYTES_PER_SEC;
+                }
+                if t > ready {
+                    ready = t;
+                }
+            }
+            let cost = ready + compute;
+            // Strict less-than keeps the lowest index on cost ties;
+            // among exact cost ties prefer the emptier device so deep
+            // chains still spread parameter memory.
+            if cost < best_cost || (cost == best_cost && mem[dev] < best_mem) {
+                best_cost = cost;
+                best_dev = dev;
+                best_mem = mem[dev];
+            }
+        }
+        devices[u] = best_dev;
+        load[best_dev] = best_cost;
+        mem[best_dev] += node.param_bytes + node.output_bytes;
+    }
+    Placement::new(devices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate_default;
+    use crate::workloads;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let g = workloads::by_id("gnmt4").unwrap();
+        let a = topo_greedy_place(&g);
+        let b = topo_greedy_place(&g);
+        assert_eq!(a.devices, b.devices, "placer must be bit-deterministic");
+        assert_eq!(a.devices.len(), g.n());
+        assert!(a.devices.iter().all(|&dev| dev < g.num_devices));
+    }
+
+    #[test]
+    fn simulates_and_spreads_on_multi_device_models() {
+        let g = workloads::by_id("rnnlm4").unwrap();
+        let p = topo_greedy_place(&g);
+        let rep = simulate_default(&g, &p.devices);
+        assert!(rep.step_time.is_finite());
+        let used: std::collections::BTreeSet<usize> =
+            p.devices.iter().copied().collect();
+        assert!(used.len() > 1, "expected multi-device spread, got {used:?}");
+    }
+
+    #[test]
+    fn single_device_graph_stays_on_device_zero() {
+        let g = workloads::by_id("inception").unwrap();
+        if g.num_devices == 1 {
+            let p = topo_greedy_place(&g);
+            assert!(p.devices.iter().all(|&dev| dev == 0));
+        }
+    }
+}

@@ -22,8 +22,11 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{infer, train, Session, TaskBest, TrainConfig, TrainResult};
+use crate::coordinator::{
+    infer, train_from, Session, TaskBest, TrainConfig, TrainResult,
+};
 use crate::policy::PlacementTask;
+use crate::runtime::checkpoint::TrainState;
 use crate::runtime::ParamStore;
 use crate::workloads::corpus::CorpusItem;
 
@@ -56,12 +59,30 @@ pub fn pretrain(
     items: &[CorpusItem],
     cfg: &TrainConfig,
 ) -> Result<(ParamStore, TrainResult)> {
+    pretrain_from(session, items, cfg, None)
+}
+
+/// [`pretrain`] with crash-safe resume: pass the `(ParamStore,
+/// TrainState)` pair from [`Session::load_train_checkpoint`] to continue
+/// an interrupted run from its last autosave. The corpus and config must
+/// match the original run for the replay to be bit-identical; a task-count
+/// mismatch is rejected by the trainer.
+pub fn pretrain_from(
+    session: &Session,
+    items: &[CorpusItem],
+    cfg: &TrainConfig,
+    init: Option<(ParamStore, TrainState)>,
+) -> Result<(ParamStore, TrainResult)> {
     if items.is_empty() {
         bail!("empty pre-train corpus");
     }
     let tasks = corpus_tasks(session, items, cfg.seed);
-    let mut store = session.init_params()?;
-    let result = train(&*session.policy, &mut store, &tasks, cfg)?;
+    let (mut store, state) = match init {
+        Some((store, state)) => (store, Some(state)),
+        None => (session.init_params()?, None),
+    };
+    let result =
+        train_from(&*session.policy, &mut store, &tasks, cfg, state.as_ref())?;
     Ok((store, result))
 }
 
@@ -81,6 +102,20 @@ pub fn finetune(
     task: PlacementTask,
     cfg: &TrainConfig,
 ) -> Result<TrainResult> {
+    finetune_from(session, store, task, cfg, None)
+}
+
+/// [`finetune`] with crash-safe resume. On resume the optimizer is NOT
+/// reset — the Adam moments come from the training checkpoint — and the
+/// update mask (not serialized; it is a pure function of the manifest)
+/// is reinstalled before continuing.
+pub fn finetune_from(
+    session: &Session,
+    store: &mut ParamStore,
+    task: PlacementTask,
+    cfg: &TrainConfig,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
     let mask = session.manifest().superposition_update_mask();
     if !mask.iter().any(|&t| t) {
         bail!(
@@ -90,9 +125,11 @@ pub fn finetune(
             session.manifest().variant
         );
     }
-    store.reset_optimizer()?;
+    if resume.is_none() {
+        store.reset_optimizer()?;
+    }
     store.set_update_mask(Some(mask))?;
-    train(&*session.policy, store, &[task], cfg)
+    train_from(&*session.policy, store, &[task], cfg, resume)
 }
 
 /// Fine-tune with every tensor trainable (the mask is cleared): the
@@ -104,9 +141,22 @@ pub fn finetune_full(
     task: PlacementTask,
     cfg: &TrainConfig,
 ) -> Result<TrainResult> {
-    store.reset_optimizer()?;
+    finetune_full_from(session, store, task, cfg, None)
+}
+
+/// [`finetune_full`] with crash-safe resume (see [`finetune_from`]).
+pub fn finetune_full_from(
+    session: &Session,
+    store: &mut ParamStore,
+    task: PlacementTask,
+    cfg: &TrainConfig,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
+    if resume.is_none() {
+        store.reset_optimizer()?;
+    }
     store.set_update_mask(None)?;
-    train(&*session.policy, store, &[task], cfg)
+    train_from(&*session.policy, store, &[task], cfg, resume)
 }
 
 /// Zero-shot placement from a checkpoint: greedy + `samples` stochastic

@@ -11,7 +11,10 @@ pub mod generalize;
 pub mod metrics;
 pub mod trainer;
 
-pub use trainer::{infer, infer_from_logits, train, TaskBest, TrainConfig, TrainResult};
+pub use trainer::{
+    infer, infer_from_logits, train, train_from, AutosaveCfg, TaskBest, TrainConfig,
+    TrainResult,
+};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -117,6 +120,25 @@ impl Session {
     /// session validates compatibility before loading a single value.
     pub fn save_checkpoint(&self, store: &ParamStore, path: &Path) -> Result<()> {
         crate::runtime::checkpoint::save(self.manifest(), store, path)
+    }
+
+    /// Persist a full training snapshot (params + Adam moments + train
+    /// state) as a version-2 checkpoint — the crash-safe autosave format.
+    pub fn save_train_checkpoint(
+        &self,
+        store: &ParamStore,
+        state: &crate::runtime::checkpoint::TrainState,
+        path: &Path,
+    ) -> Result<()> {
+        crate::runtime::checkpoint::save_train(self.manifest(), store, state, path)
+    }
+
+    /// Load a version-2 training checkpoint for `--resume`.
+    pub fn load_train_checkpoint(
+        &self,
+        path: &Path,
+    ) -> Result<(ParamStore, crate::runtime::checkpoint::TrainState)> {
+        crate::runtime::checkpoint::load_train(self.manifest(), path)
     }
 
     /// Build a placement task for a registry workload.

@@ -10,18 +10,42 @@
 //! temperature sampling, full-fidelity simulator evaluation (reward
 //! -sqrt(time), -10 invalid), per-graph EMA baseline for the advantage,
 //! then `ppo_epochs` x `train_step`.
+//!
+//! **Crash safety.** [`train_from`] resumes a run from a
+//! [`TrainState`] captured at a step boundary: because every source of
+//! nondeterminism (the RNG stream, per-task EMA baselines, convergence
+//! counters, incumbents, Adam moments, the absolute step index that
+//! drives row assignment and temperature annealing) is restored
+//! bit-exactly, a resumed run produces parameters **bit-identical** to
+//! the uninterrupted run at every subsequent step. `TrainConfig.autosave`
+//! writes such a snapshot atomically every K steps; a non-finite
+//! loss/entropy/KL after `train_step` rolls parameters and optimizer
+//! state back to the pre-step snapshot and skips the poisoned batch
+//! (counted in `TrainResult::skipped_batches`) instead of letting one
+//! bad batch destroy the run.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::placement::Placement;
 use crate::policy::{greedy_from_logits, sample_from_logits, PlacementTask, Sample};
+use crate::runtime::checkpoint::{self, TaskTrainState, TrainState};
 use crate::runtime::{Batch, ParamStore, PolicyBackend};
 use crate::sim::{reward, EvalPool, INVALID_REWARD};
 use crate::util::stats::ConvergenceTracker;
 use crate::util::{Ema, Rng};
+
+/// Periodic crash-safe checkpointing for [`train_from`].
+#[derive(Clone, Debug)]
+pub struct AutosaveCfg {
+    /// Where the version-2 training checkpoint lands (atomic writes).
+    pub path: PathBuf,
+    /// Save after every `every` completed steps (and at completion).
+    pub every: usize,
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -39,6 +63,15 @@ pub struct TrainConfig {
     /// Results are identical for any value — sampling stays sequential
     /// and rewards are consumed in row order.
     pub eval_threads: usize,
+    /// Periodic crash-safe checkpointing (None = off).
+    pub autosave: Option<AutosaveCfg>,
+    /// Simulated crash: error out before executing this absolute step.
+    /// Steps `0..halt_after` complete (the kill half of the CI
+    /// kill-and-resume harness; recovery replays from the last autosave).
+    pub halt_after: Option<usize>,
+    /// Poison the advantage vector at this absolute step, exercising the
+    /// non-finite guard end to end (test hook).
+    pub inject_nan_step: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -54,6 +87,9 @@ impl Default for TrainConfig {
             log_every: 20,
             verbose: false,
             eval_threads: 0,
+            autosave: None,
+            halt_after: None,
+            inject_nan_step: None,
         }
     }
 }
@@ -87,6 +123,8 @@ pub struct TrainResult {
     pub sim_evals: usize,
     /// Total XLA execute seconds (fwd + train).
     pub xla_secs: f64,
+    /// Batches discarded by the non-finite guard (params rolled back).
+    pub skipped_batches: usize,
 }
 
 impl TrainResult {
@@ -103,33 +141,119 @@ pub fn train(
     tasks: &[PlacementTask],
     cfg: &TrainConfig,
 ) -> Result<TrainResult> {
+    train_from(policy, store, tasks, cfg, None)
+}
+
+/// Capture the loop state at a step boundary (`next_step` not yet run).
+fn capture_state(
+    next_step: usize,
+    rng: &Rng,
+    baselines: &[Ema],
+    bests: &[TaskBest],
+) -> TrainState {
+    TrainState {
+        next_step,
+        rng: rng.state(),
+        tasks: bests
+            .iter()
+            .zip(baselines)
+            .map(|(b, ema)| TaskTrainState {
+                baseline: ema.value(),
+                best_time: b.best_time,
+                best_valid: b.best_valid,
+                best_placement: b.best_placement.devices.clone(),
+                evals: b.tracker.evals,
+                tracker_best: b.tracker.best,
+            })
+            .collect(),
+    }
+}
+
+/// [`train`] with crash-safe resume: when `resume` is given (a state
+/// loaded from a version-2 checkpoint alongside its `ParamStore`), the
+/// loop continues from `resume.next_step` with the RNG stream, EMA
+/// baselines, incumbents, and convergence counters restored — the
+/// remaining steps replay bit-identically to a run that never stopped.
+pub fn train_from(
+    policy: &dyn PolicyBackend,
+    store: &mut ParamStore,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
     assert!(!tasks.is_empty());
     let dims = policy.manifest().dims;
     let t_start = Instant::now();
     let xla_start = policy.exec_secs_total();
-    let mut rng = Rng::new(cfg.seed);
 
-    let mut baselines: Vec<Ema> =
-        tasks.iter().map(|_| Ema::new(cfg.baseline_alpha)).collect();
-    let mut bests: Vec<TaskBest> = tasks
-        .iter()
-        .map(|t| TaskBest {
-            task_id: t.id.clone(),
-            best_time: f64::INFINITY,
-            best_valid: false,
-            best_placement: Placement::single(t.graph.n()),
-            tracker: ConvergenceTracker::new(),
-        })
-        .collect();
-    let mut history = Vec::with_capacity(cfg.steps);
+    let mut rng;
+    let mut baselines: Vec<Ema>;
+    let mut bests: Vec<TaskBest>;
+    let start_step;
+    match resume {
+        Some(state) => {
+            if state.tasks.len() != tasks.len() {
+                bail!(
+                    "resume state has {} tasks but {} were given",
+                    state.tasks.len(),
+                    tasks.len()
+                );
+            }
+            rng = Rng::from_state(state.rng);
+            baselines = state
+                .tasks
+                .iter()
+                .map(|t| Ema::restore(cfg.baseline_alpha, t.baseline))
+                .collect();
+            bests = tasks
+                .iter()
+                .zip(&state.tasks)
+                .map(|(task, t)| TaskBest {
+                    task_id: task.id.clone(),
+                    best_time: t.best_time,
+                    best_valid: t.best_valid,
+                    best_placement: Placement::new(t.best_placement.clone()),
+                    tracker: ConvergenceTracker {
+                        // Improvement history is reporting-only telemetry;
+                        // evals + best fully determine the training math.
+                        improvements: Vec::new(),
+                        evals: t.evals,
+                        best: t.tracker_best,
+                    },
+                })
+                .collect();
+            start_step = state.next_step;
+        }
+        None => {
+            rng = Rng::new(cfg.seed);
+            baselines =
+                tasks.iter().map(|_| Ema::new(cfg.baseline_alpha)).collect();
+            bests = tasks
+                .iter()
+                .map(|t| TaskBest {
+                    task_id: t.id.clone(),
+                    best_time: f64::INFINITY,
+                    best_valid: false,
+                    best_placement: Placement::single(t.graph.n()),
+                    tracker: ConvergenceTracker::new(),
+                })
+                .collect();
+            start_step = 0;
+        }
+    }
+    let mut history = Vec::with_capacity(cfg.steps.saturating_sub(start_step));
     let mut sim_evals = 0usize;
+    let mut skipped_batches = 0usize;
     let pool = EvalPool::new(cfg.eval_threads);
 
     // Cache marshalled batches per unique row assignment (GDP-one: 1 entry;
     // GDP-batch with T tasks: gcd-cycle of assignments).
     let mut batch_cache: HashMap<Vec<usize>, Batch> = HashMap::new();
 
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
+        if cfg.halt_after == Some(step) {
+            bail!("simulated crash: halting before step {step} (--halt-after)");
+        }
         // --- assemble batch rows (round-robin over tasks) ---
         let row_tasks: Vec<usize> =
             (0..dims.b).map(|i| (step * dims.b + i) % tasks.len()).collect();
@@ -221,7 +345,16 @@ pub fn train(
         }
         mean_reward /= real_rows.max(1) as f64;
 
+        if cfg.inject_nan_step == Some(step) {
+            adv[0] = f32::NAN;
+        }
+
         // --- PPO updates ---
+        // Snapshot params + optimizer state so one poisoned batch (NaN/Inf
+        // anywhere in the gradient math) rolls back instead of corrupting
+        // the run.
+        let snapshot =
+            (store.values.clone(), store.m.clone(), store.v.clone(), store.step);
         let mut last = None;
         for _ in 0..cfg.ppo_epochs.max(1) {
             let stats = policy.train_step(
@@ -236,6 +369,29 @@ pub fn train(
             last = Some(stats);
         }
         let stats = last.unwrap();
+        if !stats.loss.is_finite()
+            || !stats.entropy.is_finite()
+            || !stats.approx_kl.is_finite()
+        {
+            // Non-finite guard: discard the update, restore the pre-step
+            // snapshot bit-exactly, and move on. The RNG/baseline advance
+            // from the rollout is kept — replays remain deterministic.
+            (store.values, store.m, store.v, store.step) = snapshot;
+            skipped_batches += 1;
+            if cfg.verbose {
+                eprintln!(
+                    "[train] step {step:4} non-finite loss — batch skipped, \
+                     params restored"
+                );
+            }
+            if let Some(a) = &cfg.autosave {
+                if a.every > 0 && (step + 1) % a.every == 0 {
+                    let state = capture_state(step + 1, &rng, &baselines, &bests);
+                    checkpoint::save_train(policy.manifest(), store, &state, &a.path)?;
+                }
+            }
+            continue;
+        }
         let best_now = row_tasks
             .iter()
             .map(|&ti| bests[ti].best_time)
@@ -255,6 +411,21 @@ pub fn train(
                 stats.loss, stats.entropy, stats.approx_kl
             );
         }
+        if let Some(a) = &cfg.autosave {
+            if a.every > 0 && (step + 1) % a.every == 0 {
+                let state = capture_state(step + 1, &rng, &baselines, &bests);
+                checkpoint::save_train(policy.manifest(), store, &state, &a.path)?;
+            }
+        }
+    }
+
+    // Final snapshot so `--resume` on a completed run is a no-op (and the
+    // autosave file always reflects the returned parameters).
+    if let Some(a) = &cfg.autosave {
+        if cfg.steps > start_step {
+            let state = capture_state(cfg.steps, &rng, &baselines, &bests);
+            checkpoint::save_train(policy.manifest(), store, &state, &a.path)?;
+        }
     }
 
     Ok(TrainResult {
@@ -263,6 +434,7 @@ pub fn train(
         wall_secs: t_start.elapsed().as_secs_f64(),
         sim_evals,
         xla_secs: policy.exec_secs_total() - xla_start,
+        skipped_batches,
     })
 }
 

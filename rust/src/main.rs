@@ -52,20 +52,29 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
   gdp infer <workload> --load ckpt.bin [--samples N] [--variant V]
             [--backend native|pjrt]
   gdp pretrain [--corpus base|diverse] [--steps N] [--save ckpt]
-            [--variant V] [--backend B] [--seed N] [--quiet]
+            [--autosave train.ckpt] [--autosave-every N] [--resume]
+            [--halt-after N] [--variant V] [--backend B] [--seed N]
+            [--quiet]
   gdp finetune <workload> --checkpoint ckpt [--steps N] [--lr X]
-            [--unfrozen] [--save out.ckpt] [--variant V] [--backend B]
+            [--unfrozen] [--save out.ckpt] [--autosave train.ckpt]
+            [--autosave-every N] [--resume] [--halt-after N]
+            [--variant V] [--backend B]
   gdp zeroshot <workload> --checkpoint ckpt [--samples N] [--seed N]
             [--variant V] [--backend B]
   gdp serve [--checkpoint ckpt] [--listen HOST:PORT] [--warmup]
             [--batch-window-ms N] [--cache N] [--max-nodes N]
-            [--samples N] [--seed N] [--bench-out BENCH_SERVE.json]
-            [--variant V] [--backend B] [--artifacts DIR]
+            [--samples N] [--seed N] [--default-deadline-ms N]
+            [--queue N] [--max-conns N] [--idle-timeout-ms N]
+            [--breaker-threshold N] [--breaker-cooldown-ms N]
+            [--inject panic=E[:B],nan=E,slow=E:MS]
+            [--bench-out BENCH_SERVE.json] [--variant V] [--backend B]
+            [--artifacts DIR]
   gdp loadgen [--requests N] [--clients N] [--mix id,id,...]
             [--connect HOST:PORT | --checkpoint ckpt] [--warmup]
+            [--rate RPS] [--chaos all|kind,...[,every=N][,nodes=N][,slowms=MS]]
             [--samples N] [--seed N] [--cache N] [--batch-window-ms N]
             [--out BENCH_SERVE.json] [--variant V] [--backend B]
-            [--artifacts DIR]
+            [--artifacts DIR]  (+ the serve daemon flags when in-process)
   gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
             [--steps N] [--quick] [--out runs/]";
 
@@ -156,6 +165,34 @@ fn train_cfg_from(args: &Args) -> Result<TrainConfig> {
         verbose: !args.flag("quiet"),
         ..TrainConfig::default()
     })
+}
+
+/// An integer flag with no default (absent = None).
+fn opt_usize(args: &Args, key: &str) -> Result<Option<usize>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+    }
+}
+
+/// Crash-safety knobs shared by `pretrain` and `finetune`: periodic
+/// atomic autosave, simulated-crash halt, and the NaN-injection test
+/// hook. Returns the autosave path (also the `--resume` source).
+fn crash_safety_flags(
+    args: &Args,
+    cfg: &mut TrainConfig,
+) -> Result<Option<PathBuf>> {
+    let autosave = args.get("autosave").map(PathBuf::from);
+    let every = args.usize_or("autosave-every", 10).map_err(|e| anyhow!(e))?;
+    cfg.autosave = autosave
+        .clone()
+        .map(|path| coordinator::AutosaveCfg { path, every });
+    cfg.halt_after = opt_usize(args, "halt-after")?;
+    cfg.inject_nan_step = opt_usize(args, "inject-nan-step")?;
+    Ok(autosave)
 }
 
 fn backend_from(args: &Args) -> Result<gdp::runtime::BackendKind> {
@@ -269,10 +306,27 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let backend = backend_from(args)?;
     let mut cfg = train_cfg_from(args)?;
     cfg.steps = args.usize_or("steps", 240).map_err(|e| anyhow!(e))?;
+    let autosave = crash_safety_flags(args, &mut cfg)?;
+    let resume = args.flag("resume");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let session = Session::open_with(&artifacts, &variant, backend)?;
     let items = corpus::pretrain_corpus(level);
+    let init = if resume {
+        let p = autosave.as_ref().ok_or_else(|| {
+            anyhow!("--resume needs --autosave PATH (the checkpoint to resume from)")
+        })?;
+        let (store, state) = session.load_train_checkpoint(p)?;
+        eprintln!(
+            "[pretrain] resuming from {} at step {}/{}",
+            p.display(),
+            state.next_step,
+            cfg.steps
+        );
+        Some((store, state))
+    } else {
+        None
+    };
     eprintln!(
         "[pretrain] variant={variant} backend={} corpus={} graphs ({level_s}) \
          steps={} hold-outs {:?} never seen",
@@ -281,7 +335,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
         cfg.steps,
         corpus::holdout_ids()
     );
-    let (store, result) = generalize::pretrain(&session, &items, &cfg)?;
+    let (store, result) = generalize::pretrain_from(&session, &items, &cfg, init)?;
     for t in &result.per_task {
         println!(
             "{:<16} best {}",
@@ -291,9 +345,14 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     }
     session.save_checkpoint(&store, &save)?;
     println!(
-        "wall {:.1}s | {} sim evals | checkpoint -> {}",
+        "wall {:.1}s | {} sim evals{} | checkpoint -> {}",
         result.wall_secs,
         result.sim_evals,
+        if result.skipped_batches > 0 {
+            format!(" | {} batches skipped (non-finite)", result.skipped_batches)
+        } else {
+            String::new()
+        },
         save.display()
     );
     Ok(())
@@ -309,19 +368,45 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("finetune needs a workload id"))?;
     let variant = args.str_or("variant", "full");
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let ckpt = PathBuf::from(args.get("checkpoint").ok_or_else(|| {
-        anyhow!("finetune needs --checkpoint <pretrained.ckpt> (run `gdp pretrain` first)")
-    })?);
+    let ckpt = args.get("checkpoint").map(PathBuf::from);
     let unfrozen = args.flag("unfrozen");
     let save = args.get("save").map(PathBuf::from);
     let backend = backend_from(args)?;
     let mut cfg = train_cfg_from(args)?;
     cfg.steps = args.usize_or("steps", 30).map_err(|e| anyhow!(e))?;
     cfg.lr = args.f64_or("lr", 3e-4).map_err(|e| anyhow!(e))? as f32;
+    let autosave = crash_safety_flags(args, &mut cfg)?;
+    let resume = args.flag("resume");
     args.finish().map_err(|e| anyhow!(e))?;
 
     let session = Session::open_with(&artifacts, &variant, backend)?;
-    let mut store = session.load_params(&ckpt)?;
+    let resumed = if resume {
+        let p = autosave.as_ref().ok_or_else(|| {
+            anyhow!("--resume needs --autosave PATH (the checkpoint to resume from)")
+        })?;
+        let (store, state) = session.load_train_checkpoint(p)?;
+        eprintln!(
+            "[finetune] resuming from {} at step {}/{}",
+            p.display(),
+            state.next_step,
+            cfg.steps
+        );
+        Some((store, state))
+    } else {
+        None
+    };
+    let (mut store, state) = match resumed {
+        Some((store, state)) => (store, Some(state)),
+        None => {
+            let p = ckpt.as_ref().ok_or_else(|| {
+                anyhow!(
+                    "finetune needs --checkpoint <pretrained.ckpt> (run `gdp \
+                     pretrain` first) — or --resume with --autosave"
+                )
+            })?;
+            (session.load_params(p)?, None)
+        }
+    };
     let task = session.task(id, cfg.seed)?;
     let frozen = if unfrozen {
         0
@@ -335,15 +420,19 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     };
     eprintln!(
         "[finetune] {id} from {} | steps={} lr={} | {frozen}/{} tensors frozen",
-        ckpt.display(),
+        match (&state, &ckpt) {
+            (Some(_), _) => format!("{} (resumed)", autosave.as_ref().unwrap().display()),
+            (None, Some(p)) => p.display().to_string(),
+            (None, None) => unreachable!("checked above"),
+        },
         cfg.steps,
         cfg.lr,
         session.manifest().params.len()
     );
     let result = if unfrozen {
-        generalize::finetune_full(&session, &mut store, task, &cfg)?
+        generalize::finetune_full_from(&session, &mut store, task, &cfg, state.as_ref())?
     } else {
-        generalize::finetune(&session, &mut store, task, &cfg)?
+        generalize::finetune_from(&session, &mut store, task, &cfg, state.as_ref())?
     };
     let b = &result.per_task[0];
     println!(
@@ -353,8 +442,15 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         b.tracker.evals_to_within(0.05)
     );
     println!(
-        "wall {:.1}s | xla {:.1}s | {} sim evals",
-        result.wall_secs, result.xla_secs, result.sim_evals
+        "wall {:.1}s | xla {:.1}s | {} sim evals{}",
+        result.wall_secs,
+        result.xla_secs,
+        result.sim_evals,
+        if result.skipped_batches > 0 {
+            format!(" | {} batches skipped (non-finite)", result.skipped_batches)
+        } else {
+            String::new()
+        },
     );
     if let Some(p) = save {
         session.save_checkpoint(&store, &p)?;
@@ -399,6 +495,10 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
 /// Shared flag parsing for the daemon knobs (`serve` and in-process
 /// `loadgen` accept the same set).
 fn serve_cfg_from(args: &Args) -> Result<gdp::serve::ServeConfig> {
+    let fault_spec = match args.get("inject") {
+        None => gdp::serve::FaultSpec::default(),
+        Some(s) => gdp::serve::FaultSpec::parse(s).map_err(|e| anyhow!(e))?,
+    };
     Ok(gdp::serve::ServeConfig {
         batch_window_ms: args.u64_or("batch-window-ms", 2).map_err(|e| anyhow!(e))?,
         cache_capacity: args.usize_or("cache", 256).map_err(|e| anyhow!(e))?,
@@ -406,6 +506,21 @@ fn serve_cfg_from(args: &Args) -> Result<gdp::serve::ServeConfig> {
         default_samples: args.usize_or("samples", 8).map_err(|e| anyhow!(e))?,
         default_seed: args.u64_or("seed", 3).map_err(|e| anyhow!(e))?,
         warmup: args.flag("warmup"),
+        default_deadline_ms: args
+            .u64_or("default-deadline-ms", 0)
+            .map_err(|e| anyhow!(e))?,
+        queue_capacity: args.usize_or("queue", 256).map_err(|e| anyhow!(e))?,
+        breaker_threshold: args
+            .usize_or("breaker-threshold", 5)
+            .map_err(|e| anyhow!(e))?,
+        breaker_cooldown_ms: args
+            .u64_or("breaker-cooldown-ms", 1000)
+            .map_err(|e| anyhow!(e))?,
+        max_conns: args.usize_or("max-conns", 256).map_err(|e| anyhow!(e))?,
+        idle_timeout_ms: args
+            .u64_or("idle-timeout-ms", 30_000)
+            .map_err(|e| anyhow!(e))?,
+        fault_spec,
     })
 }
 
@@ -463,10 +578,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `gdp loadgen`: replay the workload registry as closed-loop traffic.
-/// Default is in-process (starts the daemon itself — the CI smoke path);
+/// `gdp loadgen`: replay the workload registry as traffic — closed-loop
+/// by default, open-loop Poisson with `--rate`. Default target is
+/// in-process (starts the daemon itself — the CI smoke path);
 /// `--connect host:port` targets a running `gdp serve --listen` daemon.
+/// `--chaos <spec>` interleaves client-side faults (malformed frames,
+/// hangups, oversized graphs, slow writers); chaos needs a real socket,
+/// so without `--connect` a loopback TCP daemon is spawned in-process.
 fn cmd_loadgen(args: &Args) -> Result<()> {
+    let chaos = match args.get("chaos") {
+        None => None,
+        Some(s) => Some(gdp::serve::ChaosSpec::parse(s).map_err(|e| anyhow!(e))?),
+    };
     let lcfg = gdp::serve::LoadgenConfig {
         requests: args.usize_or("requests", 64).map_err(|e| anyhow!(e))?,
         clients: args.usize_or("clients", 4).map_err(|e| anyhow!(e))?,
@@ -476,10 +599,19 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         },
         samples: args.usize_or("samples", 1).map_err(|e| anyhow!(e))?,
         seed: args.u64_or("seed", 3).map_err(|e| anyhow!(e))?,
+        rate: args.f64_or("rate", 0.0).map_err(|e| anyhow!(e))?,
+        chaos,
     };
-    let out = args.str_or("out", "BENCH_SERVE.json");
+    let out = args.str_or(
+        "out",
+        if lcfg.chaos.is_some() { "BENCH_CHAOS.json" } else { "BENCH_SERVE.json" },
+    );
     let connect = args.get("connect").map(str::to_string);
-    let mut rec = gdp::util::bench::BenchRecorder::new("serve");
+    let mut rec = gdp::util::bench::BenchRecorder::new(if lcfg.chaos.is_some() {
+        "chaos"
+    } else {
+        "serve"
+    });
 
     let report = match connect {
         Some(addr) => {
@@ -502,16 +634,39 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             );
             eprintln!(
                 "[loadgen] {} requests x {} clients, in-process daemon \
-                 (variant={variant} backend={} warmup {:.1}ms, mix {:?})",
+                 (variant={variant} backend={} warmup {:.1}ms, mix {:?}{})",
                 lcfg.requests,
                 lcfg.clients,
                 service.backend_name(),
                 service.snapshot().warmup_ms,
-                lcfg.mix
+                lcfg.mix,
+                if lcfg.chaos.is_some() { ", chaos on" } else { "" },
             );
-            let report =
-                gdp::serve::loadgen::run(&gdp::serve::Target::InProc(service.clone()), &lcfg)?;
-            service.stop();
+            let report = if lcfg.chaos.is_some() {
+                // Chaos faults live on the wire: spawn a loopback TCP
+                // daemon around the in-process service.
+                let (accept, addr) =
+                    gdp::serve::daemon::spawn_tcp(&service, "127.0.0.1:0")?;
+                let report = gdp::serve::loadgen::run(
+                    &gdp::serve::Target::Tcp(addr.to_string()),
+                    &lcfg,
+                )?;
+                // Drain stops the accept loop (stop() alone only kills
+                // the dispatcher and would leave it polling forever).
+                service.request_drain();
+                accept
+                    .join()
+                    .map_err(|_| anyhow!("accept loop panicked"))??;
+                service.stop();
+                report
+            } else {
+                let report = gdp::serve::loadgen::run(
+                    &gdp::serve::Target::InProc(service.clone()),
+                    &lcfg,
+                )?;
+                service.stop();
+                report
+            };
             service.snapshot().record_into(&mut rec, "server_");
             report
         }
@@ -519,18 +674,33 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     report.record_into(&mut rec, "client_");
     rec.write(&out)?;
     println!(
-        "loadgen: {} requests ({} ok, {} cached, {} errors) | p50 {:.2}ms \
-         p95 {:.2}ms p99 {:.2}ms | {:.1} req/s | mean batch rows {:.2}",
+        "loadgen: {} requests ({} ok, {} cached, {} degraded, {} errors, \
+         {} shed) | p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | {:.1} req/s | \
+         mean batch rows {:.2}",
         report.requests,
         report.ok,
         report.cached,
+        report.degraded,
         report.errors,
+        report.shed,
         report.p50_ms,
         report.p95_ms,
         report.p99_ms,
         report.throughput_rps,
         report.mean_batch_rows,
     );
+    if lcfg.rate > 0.0 {
+        println!(
+            "open-loop: offered {:.1} req/s, achieved {:.1} req/s",
+            report.offered_rps, report.throughput_rps
+        );
+    }
+    if lcfg.chaos.is_some() {
+        println!(
+            "chaos: {} faults injected, {} still answered structurally",
+            report.chaos_injected, report.chaos_answered
+        );
+    }
     Ok(())
 }
 

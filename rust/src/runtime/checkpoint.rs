@@ -28,11 +28,33 @@
 //! bit-exact, NaNs and signed zeros included — so save → load reproduces
 //! the forward pass bit-for-bit (pinned by `rust/tests/checkpoint.rs`).
 //!
-//! Checkpoints carry **parameters only**: Adam moments are not saved and
-//! the optimizer restarts from zero on load, matching the paper's
-//! fine-tuning setup (GDP §3.3). The pre-PR-5 raw flat blob
+//! Version-1 checkpoints carry **parameters only**: Adam moments are not
+//! saved and the optimizer restarts from zero on load, matching the
+//! paper's fine-tuning setup (GDP §3.3). The pre-PR-5 raw flat blob
 //! (`params_init.bin` and old `--save` files) remains readable through
 //! [`load_auto`], which dispatches on the magic bytes.
+//!
+//! # Format version 2: crash-safe training state
+//!
+//! Version 2 is the autosave/`--resume` format. Same container, two
+//! differences:
+//!
+//! - the payload is `3 * total_elements` f32s — parameter values, then
+//!   Adam first moments `m`, then second moments `v`, each in the
+//!   manifest's sorted-key order;
+//! - the header gains a `train_state` object: the absolute `next_step`,
+//!   the optimizer step, the xoshiro RNG state (as 16-hex-digit strings
+//!   — u64 does not survive a f64 JSON number), and per-task reward
+//!   baselines / incumbent placements / convergence counters.
+//!
+//! Together that is every bit of mutable training state, so a run
+//! interrupted at step `s` and resumed produces parameters
+//! **bit-identical** to an uninterrupted run at every step past `s`
+//! (pinned by `rust/tests/crash_safety.rs`). [`load`] accepts v2 files
+//! too, reading just the parameter section with v1 semantics (optimizer
+//! restarts), so `zeroshot`/`finetune --checkpoint` work directly on
+//! autosaves. All writers go through a write-to-temp-then-rename so a
+//! crash mid-save can never corrupt the previous good file.
 
 use std::path::Path;
 
@@ -44,8 +66,162 @@ use crate::util::json::{parse, Json};
 
 /// First 7 bytes of every versioned checkpoint.
 pub const MAGIC: &[u8; 7] = b"GDPCKPT";
-/// Current (and only) format version.
+/// Params-only checkpoint format.
 pub const FORMAT_VERSION: u8 = 1;
+/// Full-training-state (autosave / `--resume`) format.
+pub const TRAIN_FORMAT_VERSION: u8 = 2;
+
+/// Per-task mutable training state (one entry per corpus task, in task
+/// order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskTrainState {
+    /// EMA reward baseline value (None before the first update).
+    pub baseline: Option<f64>,
+    /// Incumbent best step time (infinite until a valid placement).
+    pub best_time: f64,
+    pub best_valid: bool,
+    pub best_placement: Vec<usize>,
+    /// Convergence-tracker counters (improvement history is reporting
+    /// only and is not needed for bit-identical resume).
+    pub evals: usize,
+    pub tracker_best: f64,
+}
+
+/// Everything mutable about a training run besides the parameter and
+/// Adam payloads: enough to resume bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// The next step index to execute (steps 0..next_step are done).
+    pub next_step: usize,
+    /// xoshiro256** state at the top of step `next_step`.
+    pub rng: [u64; 4],
+    pub tasks: Vec<TaskTrainState>,
+}
+
+/// Encode an f64 that may be infinite (JSON has no Infinity literal;
+/// the writer would emit invalid `inf` otherwise).
+fn json_maybe_inf(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn parse_maybe_inf(v: Option<&Json>, what: &str) -> Result<f64> {
+    match v {
+        None | Some(Json::Null) => Ok(f64::INFINITY),
+        Some(x) => x
+            .as_f64()
+            .ok_or_else(|| anyhow!("train_state {what} is not a number")),
+    }
+}
+
+fn train_state_json(state: &TrainState) -> Json {
+    let rng = Json::arr(
+        state
+            .rng
+            .iter()
+            .map(|&x| Json::str(format!("{x:016x}")))
+            .collect(),
+    );
+    let tasks = Json::arr(
+        state
+            .tasks
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    (
+                        "baseline",
+                        match t.baseline {
+                            Some(x) => Json::num(x),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("best_time", json_maybe_inf(t.best_time)),
+                    ("best_valid", Json::Bool(t.best_valid)),
+                    (
+                        "best_placement",
+                        Json::arr(
+                            t.best_placement
+                                .iter()
+                                .map(|&d| Json::num(d as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("evals", Json::num(t.evals as f64)),
+                    ("tracker_best", json_maybe_inf(t.tracker_best)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("next_step", Json::num(state.next_step as f64)),
+        ("rng", rng),
+        ("tasks", tasks),
+    ])
+}
+
+fn parse_train_state(v: &Json) -> Result<TrainState> {
+    let next_step = v
+        .get("next_step")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("train_state missing next_step"))?;
+    let rng_v = v
+        .get("rng")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("train_state missing rng"))?;
+    if rng_v.len() != 4 {
+        bail!("train_state rng has {} words, want 4", rng_v.len());
+    }
+    let mut rng = [0u64; 4];
+    for (i, w) in rng_v.iter().enumerate() {
+        let s = w
+            .as_str()
+            .ok_or_else(|| anyhow!("train_state rng word {i} is not a string"))?;
+        rng[i] = u64::from_str_radix(s, 16)
+            .map_err(|_| anyhow!("train_state rng word {i} is not hex: {s:?}"))?;
+    }
+    let tasks_v = v
+        .get("tasks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("train_state missing tasks"))?;
+    let mut tasks = Vec::with_capacity(tasks_v.len());
+    for (i, t) in tasks_v.iter().enumerate() {
+        let baseline = match t.get("baseline") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(
+                x.as_f64()
+                    .ok_or_else(|| anyhow!("task {i} baseline is not a number"))?,
+            ),
+        };
+        let best_placement = t
+            .get("best_placement")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("task {i} missing best_placement"))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| anyhow!("task {i} best_placement entry not an int"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        tasks.push(TaskTrainState {
+            baseline,
+            best_time: parse_maybe_inf(t.get("best_time"), "best_time")?,
+            best_valid: t
+                .get("best_valid")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("task {i} missing best_valid"))?,
+            best_placement,
+            evals: t
+                .get("evals")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("task {i} missing evals"))?,
+            tracker_best: parse_maybe_inf(t.get("tracker_best"), "tracker_best")?,
+        });
+    }
+    Ok(TrainState { next_step, rng, tasks })
+}
 
 /// Named dims fields, for field-by-field mismatch reporting. Keys match
 /// `manifest.json` (`python/compile/config.py`).
@@ -66,7 +242,12 @@ fn dims_fields(d: &Dims) -> [(&'static str, f64); 12] {
     ]
 }
 
-fn header_json(manifest: &Manifest, step: f32) -> Json {
+fn header_json(
+    manifest: &Manifest,
+    step: f32,
+    version: u8,
+    train_state: Option<&TrainState>,
+) -> Json {
     let dims = Json::obj(
         dims_fields(&manifest.dims)
             .iter()
@@ -90,8 +271,8 @@ fn header_json(manifest: &Manifest, step: f32) -> Json {
             })
             .collect(),
     );
-    Json::obj(vec![
-        ("format_version", Json::num(FORMAT_VERSION as f64)),
+    let mut fields = vec![
+        ("format_version", Json::num(version as f64)),
         ("variant", Json::str(&manifest.variant)),
         ("use_attention", Json::Bool(manifest.use_attention)),
         ("use_superposition", Json::Bool(manifest.use_superposition)),
@@ -99,7 +280,30 @@ fn header_json(manifest: &Manifest, step: f32) -> Json {
         ("step", Json::num(step as f64)),
         ("params", params),
         ("total_elements", Json::num(manifest.total_elements as f64)),
-    ])
+    ];
+    if let Some(state) = train_state {
+        fields.push(("train_state", train_state_json(state)));
+    }
+    Json::obj(fields)
+}
+
+/// Crash-safe file write: to a sibling `.tmp`, then an atomic rename.
+/// A crash mid-write leaves the previous good file untouched.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = std::path::PathBuf::from(os);
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} into {}", tmp.display(), path.display())
+    })?;
+    Ok(())
 }
 
 /// True when `bytes` start with the versioned-checkpoint magic (any
@@ -109,11 +313,7 @@ pub fn is_checkpoint(bytes: &[u8]) -> bool {
     bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC
 }
 
-/// Write `store`'s parameters as a version-1 checkpoint for `manifest`.
-///
-/// The store must belong to `manifest` (same tensor count and total
-/// element count); parent directories are created as needed.
-pub fn save(manifest: &Manifest, store: &ParamStore, path: &Path) -> Result<()> {
+fn check_store(manifest: &Manifest, store: &ParamStore) -> Result<Vec<f32>> {
     if store.num_tensors() != manifest.params.len() {
         bail!(
             "cannot checkpoint: store has {} tensors, manifest {:?} has {}",
@@ -132,29 +332,115 @@ pub fn save(manifest: &Manifest, store: &ParamStore, path: &Path) -> Result<()> 
             manifest.total_elements
         );
     }
-    let header = header_json(manifest, store.step).to_string();
-    let mut bytes =
-        Vec::with_capacity(12 + header.len() + flat.len() * 4);
-    bytes.extend_from_slice(MAGIC);
-    bytes.push(FORMAT_VERSION);
-    bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
-    bytes.extend_from_slice(header.as_bytes());
-    for x in flat {
-        bytes.extend_from_slice(&x.to_le_bytes());
-    }
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    std::fs::write(path, bytes)
-        .with_context(|| format!("writing checkpoint {}", path.display()))?;
-    Ok(())
+    Ok(flat)
 }
 
-/// Load a version-1 checkpoint, validating every header field against
-/// `manifest` before touching the payload. Returns a fresh [`ParamStore`]
-/// with zeroed optimizer state (`step = 0`); the header's saved step is
-/// provenance only.
+fn assemble(header: &str, version: u8, payload: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(12 + header.len() + payload.len() * 4);
+    bytes.extend_from_slice(MAGIC);
+    bytes.push(version);
+    bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
+    for x in payload {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes
+}
+
+/// Write `store`'s parameters as a version-1 checkpoint for `manifest`.
+///
+/// The store must belong to `manifest` (same tensor count and total
+/// element count); parent directories are created as needed. The write
+/// is atomic (temp + rename).
+pub fn save(manifest: &Manifest, store: &ParamStore, path: &Path) -> Result<()> {
+    let flat = check_store(manifest, store)?;
+    let header = header_json(manifest, store.step, FORMAT_VERSION, None).to_string();
+    write_atomic(path, &assemble(&header, FORMAT_VERSION, &flat))
+        .with_context(|| format!("writing checkpoint {}", path.display()))
+}
+
+/// Write a version-2 checkpoint: parameters + Adam moments + `state`.
+/// This is the autosave format — atomic, and loadable either by
+/// [`load_train`] (full resume) or plain [`load`] (params only).
+pub fn save_train(
+    manifest: &Manifest,
+    store: &ParamStore,
+    state: &TrainState,
+    path: &Path,
+) -> Result<()> {
+    let mut payload = check_store(manifest, store)?;
+    payload.reserve(2 * manifest.total_elements);
+    for lits in [&store.m, &store.v] {
+        for lit in lits.iter() {
+            payload.extend(lit.to_vec::<f32>()?);
+        }
+    }
+    if payload.len() != 3 * manifest.total_elements {
+        bail!(
+            "cannot checkpoint: values+m+v flatten to {} elements, \
+             expected {}",
+            payload.len(),
+            3 * manifest.total_elements
+        );
+    }
+    let header =
+        header_json(manifest, store.step, TRAIN_FORMAT_VERSION, Some(state))
+            .to_string();
+    write_atomic(path, &assemble(&header, TRAIN_FORMAT_VERSION, &payload))
+        .with_context(|| format!("writing training checkpoint {}", path.display()))
+}
+
+/// Load a versioned checkpoint's parameters, validating every header
+/// field against `manifest` before touching the payload. Returns a fresh
+/// [`ParamStore`] with zeroed optimizer state (`step = 0`); the header's
+/// saved step is provenance only. Version-2 (training) files load too —
+/// only their parameter section is read.
 pub fn load(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
+    let (_, _, payload) = read_validated(manifest, path)?;
+    ParamStore::from_flat(manifest, &payload[..manifest.total_elements])
+}
+
+/// Load a version-2 training checkpoint in full: parameters, Adam
+/// moments, optimizer step, and the [`TrainState`] needed to resume the
+/// run bit-identically.
+pub fn load_train(manifest: &Manifest, path: &Path) -> Result<(ParamStore, TrainState)> {
+    let (version, header, payload) = read_validated(manifest, path)?;
+    let ctx = |msg: String| anyhow!("{}: {msg}", path.display());
+    if version != TRAIN_FORMAT_VERSION {
+        return Err(ctx(format!(
+            "not a training checkpoint (format version {version}) — only \
+             version {TRAIN_FORMAT_VERSION} files carry optimizer and \
+             train state to resume from"
+        )));
+    }
+    let total = manifest.total_elements;
+    let mut store = ParamStore::from_flat(manifest, &payload[..total])?;
+    for (section, lits) in [(1usize, &mut store.m), (2, &mut store.v)] {
+        for (lit, p) in lits.iter_mut().zip(&manifest.params) {
+            let at = section * total + p.offset;
+            lit.f32_slice_mut()?
+                .copy_from_slice(&payload[at..at + p.elements]);
+        }
+    }
+    store.step = header
+        .get("step")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ctx("header missing step".into()))? as f32;
+    let state = parse_train_state(
+        header
+            .get("train_state")
+            .ok_or_else(|| ctx("header missing train_state".into()))?,
+    )
+    .with_context(|| format!("{}: bad train_state", path.display()))?;
+    if state.rng == [0, 0, 0, 0] {
+        return Err(ctx("train_state rng is all-zero (corrupt)".into()));
+    }
+    Ok((store, state))
+}
+
+/// Read a checkpoint file, validate its header against `manifest`, and
+/// decode the payload (length-checked per format version).
+fn read_validated(manifest: &Manifest, path: &Path) -> Result<(u8, Json, Vec<f32>)> {
     let bytes = std::fs::read(path)
         .with_context(|| format!("reading checkpoint {}", path.display()))?;
     let ctx = |msg: String| anyhow!("{}: {msg}", path.display());
@@ -170,10 +456,10 @@ pub fn load(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
         return Err(ctx("truncated before header length".into()));
     }
     let version = bytes[MAGIC.len()];
-    if version != FORMAT_VERSION {
+    if version != FORMAT_VERSION && version != TRAIN_FORMAT_VERSION {
         return Err(ctx(format!(
             "checkpoint format version {version} unsupported (this build \
-             reads version {FORMAT_VERSION})"
+             reads versions {FORMAT_VERSION} and {TRAIN_FORMAT_VERSION})"
         )));
     }
     let hl = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
@@ -265,22 +551,23 @@ pub fn load(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
         )));
     }
 
-    // --- payload ---
+    // --- payload (v1: params; v2: params + Adam m + Adam v) ---
+    let sections = if version == TRAIN_FORMAT_VERSION { 3 } else { 1 };
     let payload = &bytes[body..];
-    if payload.len() != total * 4 {
+    if payload.len() != sections * total * 4 {
         return Err(ctx(format!(
-            "payload has {} bytes, header promises {} ({} f32s) — file \
-             truncated or corrupt",
+            "payload has {} bytes, format v{version} promises {} ({} f32s) \
+             — file truncated or corrupt",
             payload.len(),
-            total * 4,
-            total
+            sections * total * 4,
+            sections * total
         )));
     }
     let flat: Vec<f32> = payload
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    ParamStore::from_flat(manifest, &flat)
+    Ok((version, header, flat))
 }
 
 /// Load either a versioned checkpoint (validated, see [`load`]) or a
@@ -352,6 +639,82 @@ mod tests {
         assert!(load(&m, &path).is_err(), "raw blob is not a checkpoint");
         let back = load_auto(&m, &path).unwrap();
         assert_eq!(back.to_flat().unwrap(), flat);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_state_roundtrip_bit_exact() {
+        let m = tiny_manifest();
+        let flat = vec![0.1f32, -0.0, f32::MIN_POSITIVE, 1e-40, 3.5, -7.25, 0.3];
+        let mut store = ParamStore::from_flat(&m, &flat).unwrap();
+        // Non-trivial optimizer state: distinct m and v payloads + step.
+        for (i, lit) in store.m.iter_mut().enumerate() {
+            for (j, x) in lit.f32_slice_mut().unwrap().iter_mut().enumerate() {
+                *x = (i * 10 + j) as f32 * 0.125;
+            }
+        }
+        for lit in store.v.iter_mut() {
+            for x in lit.f32_slice_mut().unwrap() {
+                *x = 0.0625;
+            }
+        }
+        store.step = 5.0;
+        let state = TrainState {
+            next_step: 7,
+            rng: [0xdead_beef_0000_0001, 2, 3, u64::MAX],
+            tasks: vec![
+                TaskTrainState {
+                    baseline: Some(-1.25),
+                    best_time: 0.0375,
+                    best_valid: true,
+                    best_placement: vec![0, 1, 1, 0],
+                    evals: 42,
+                    tracker_best: 0.0375,
+                },
+                TaskTrainState {
+                    // pre-first-eval task: None baseline, infinite best
+                    baseline: None,
+                    best_time: f64::INFINITY,
+                    best_valid: false,
+                    best_placement: vec![0, 0],
+                    evals: 0,
+                    tracker_best: f64::INFINITY,
+                },
+            ],
+        };
+        let dir = std::env::temp_dir().join("gdp_ckpt_unit_train");
+        let path = dir.join("auto.ckpt");
+        save_train(&m, &store, &state, &path).unwrap();
+        // no .tmp left behind (atomic rename)
+        assert!(!dir.join("auto.ckpt.tmp").exists());
+
+        let (back, state2) = load_train(&m, &path).unwrap();
+        assert_eq!(state, state2);
+        assert_eq!(back.step, 5.0, "optimizer step resumes");
+        for (a, b) in store.to_flat().unwrap().iter().zip(&back.to_flat().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (ours, theirs) in store.m.iter().zip(&back.m) {
+            assert_eq!(
+                ours.f32_slice().unwrap(),
+                theirs.f32_slice().unwrap(),
+                "Adam m resumes bit-exact"
+            );
+        }
+        for (ours, theirs) in store.v.iter().zip(&back.v) {
+            assert_eq!(ours.f32_slice().unwrap(), theirs.f32_slice().unwrap());
+        }
+
+        // plain load reads the params section with v1 semantics
+        let plain = load(&m, &path).unwrap();
+        assert_eq!(plain.to_flat().unwrap(), flat);
+        assert_eq!(plain.step, 0.0);
+        assert!(plain.m[0].f32_slice().unwrap().iter().all(|&x| x == 0.0));
+        // and a v1 file is not a training checkpoint
+        let v1 = dir.join("v1.ckpt");
+        save(&m, &store, &v1).unwrap();
+        let err = load_train(&m, &v1).unwrap_err().to_string();
+        assert!(err.contains("training checkpoint"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

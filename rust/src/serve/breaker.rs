@@ -1,0 +1,168 @@
+//! Circuit breaker guarding the policy path of the placement service.
+//!
+//! The classic three-state machine:
+//!
+//! - **Closed** — requests flow to the policy; consecutive forward
+//!   failures are counted, and reaching the threshold trips the breaker.
+//! - **Open** — the policy is not consulted at all; every request is
+//!   served by the deterministic fallback placer (reason
+//!   `breaker_open`). After `cooldown` the next request transitions to
+//!   Half-Open.
+//! - **Half-Open** — probe traffic reaches the policy again. One success
+//!   closes the breaker (a recovery); one failure re-opens it.
+//!
+//! A `threshold` of 0 disables the breaker entirely (it never opens).
+//! The service drives it from the dispatcher — one `on_success` /
+//! `on_failure` per *forward*, not per request, since one forward serves
+//! a whole batch — behind the metrics mutex, so no internal locking.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    /// Consecutive failures that trip the breaker; 0 disables it.
+    threshold: usize,
+    cooldown: Duration,
+    state: BreakerState,
+    consecutive_failures: usize,
+    opened_at: Option<Instant>,
+    /// Closed -> Open transitions.
+    pub trips: u64,
+    /// Half-Open -> Closed transitions (successful probes).
+    pub recoveries: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: usize, cooldown: Duration) -> Self {
+        Self {
+            threshold,
+            cooldown,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            opened_at: None,
+            trips: 0,
+            recoveries: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May this request take the policy path right now? In Open state the
+    /// cooldown expiry transitions to Half-Open (the caller's request
+    /// becomes the probe).
+    pub fn allow_policy(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                let expired = self
+                    .opened_at
+                    .map(|t| t.elapsed() >= self.cooldown)
+                    .unwrap_or(true);
+                if expired {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful policy forward.
+    pub fn on_success(&mut self) {
+        if self.state == BreakerState::HalfOpen {
+            self.recoveries += 1;
+        }
+        self.state = BreakerState::Closed;
+        self.consecutive_failures = 0;
+        self.opened_at = None;
+    }
+
+    /// Record a failed policy forward (panic, engine error, NaN logits).
+    pub fn on_failure(&mut self) {
+        if self.threshold == 0 {
+            return; // disabled
+        }
+        match self.state {
+            BreakerState::HalfOpen => {
+                // Failed probe: straight back to Open.
+                self.state = BreakerState::Open;
+                self.opened_at = Some(Instant::now());
+                self.trips += 1;
+            }
+            BreakerState::Closed => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= self.threshold {
+                    self.state = BreakerState::Open;
+                    self.opened_at = Some(Instant::now());
+                    self.trips += 1;
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_threshold_and_recovers_via_probe() {
+        let mut b = CircuitBreaker::new(3, Duration::from_millis(10));
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure();
+        b.on_failure();
+        assert!(b.allow_policy(), "still closed below threshold");
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips, 1);
+        assert!(!b.allow_policy(), "open: fallback-only during cooldown");
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.allow_policy(), "cooldown expired: half-open probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.recoveries, 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let mut b = CircuitBreaker::new(1, Duration::from_millis(5));
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.allow_policy());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips, 2);
+    }
+
+    #[test]
+    fn interleaved_success_resets_the_streak() {
+        let mut b = CircuitBreaker::new(2, Duration::from_millis(5));
+        b.on_failure();
+        b.on_success();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "streak was reset");
+    }
+
+    #[test]
+    fn zero_threshold_disables() {
+        let mut b = CircuitBreaker::new(0, Duration::from_millis(1));
+        for _ in 0..100 {
+            b.on_failure();
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips, 0);
+    }
+}

@@ -1,21 +1,31 @@
 //! Daemon transports for the placement service: stdio (default) and TCP.
 //!
 //! Both speak the same newline-delimited protocol ([`super::proto`]).
-//! Stdio serves one client (the parent process pipe); TCP accepts any
-//! number of connections, one handler thread each, all sharing the one
-//! warm [`PlacementService`]. A `{"cmd":"shutdown"}` frame stops the
-//! daemon after the in-flight lines finish; on exit the server metrics
-//! snapshot is written to `BENCH_SERVE.json` (configurable) in the same
-//! `BenchRecorder` artifact shape as the other BENCH_*.json files.
+//! Stdio serves one client (the parent process pipe); TCP accepts up to
+//! `max_conns` connections, one handler thread each, all sharing the one
+//! warm [`PlacementService`]. Excess connections are answered with a
+//! structured `overloaded` error frame and closed, never silently
+//! dropped. Idle connections (no complete line within `idle_timeout_ms`)
+//! are reaped so slow or wedged clients cannot pin handler threads.
+//!
+//! **Lifecycle.** A `{"cmd":"shutdown"}` frame stops the daemon after
+//! in-flight lines finish. A `{"cmd":"drain"}` frame — or SIGINT/SIGTERM
+//! — is gentler: the listener stops accepting, requests already admitted
+//! run to completion, connections close after their current response,
+//! and the metrics artifact is flushed before exit. Either way the
+//! server metrics snapshot is written to `BENCH_SERVE.json`
+//! (configurable) in the same `BenchRecorder` artifact shape as the
+//! other BENCH_*.json files.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::proto::{code, WireError};
 use super::service::PlacementService;
 use crate::util::bench::BenchRecorder;
 
@@ -27,16 +37,60 @@ pub enum Transport {
     Tcp(String),
 }
 
-/// Run the daemon until shutdown (control verb, or EOF on stdio); then
-/// write the metrics artifact and return the final snapshot.
+/// SIGINT/SIGTERM -> graceful drain, installed via the raw C `signal`
+/// API (no external crates). The handler only flips an atomic; the
+/// accept loop polls it.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(2, on_signal); // SIGINT
+            signal(15, on_signal); // SIGTERM
+        }
+    }
+
+    pub fn fired() -> bool {
+        SIGNALED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+    pub fn fired() -> bool {
+        false
+    }
+}
+
+/// Run the daemon until shutdown or drain (control verb, signal, or EOF
+/// on stdio); then write the metrics artifact and return the final
+/// snapshot.
 pub fn run(
     service: &Arc<PlacementService>,
     transport: Transport,
     bench_out: Option<&str>,
 ) -> Result<super::metrics::Snapshot> {
+    sig::install();
     match transport {
         Transport::Stdio => serve_stdio(service)?,
-        Transport::Tcp(addr) => serve_tcp(service, &addr)?,
+        Transport::Tcp(addr) => {
+            let listener =
+                TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
+            eprintln!("[serve] listening on {}", listener.local_addr()?);
+            accept_loop(service, listener)?;
+        }
     }
     service.stop();
     let snap = service.snapshot();
@@ -44,19 +98,42 @@ pub fn run(
         write_artifact(&snap, path)?;
     }
     eprintln!(
-        "[serve] done: {} requests ({} cached, {} errors) | p50 {:.2}ms p95 {:.2}ms \
-         p99 {:.2}ms | {:.1} req/s | occupancy {:.2} | hit rate {:.2}",
+        "[serve] done: {} requests ({} cached, {} errors, {} shed, {} degraded) | \
+         p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | {:.1} req/s | occupancy {:.2} | \
+         hit rate {:.2} | breaker trips {} recoveries {}",
         snap.requests,
         snap.cached,
         snap.errors,
+        snap.shed,
+        snap.degraded,
         snap.p50_ms,
         snap.p95_ms,
         snap.p99_ms,
         snap.throughput_rps,
         snap.batch_occupancy,
         snap.cache_hit_rate,
+        snap.breaker_trips,
+        snap.breaker_recoveries,
     );
     Ok(snap)
+}
+
+/// Bind a TCP listener (use port 0 for an ephemeral port) and serve it
+/// on a background thread. Returns the bound address immediately — this
+/// is how the loadgen chaos harness runs a real-socket daemon in-process
+/// without artifact/side-effect plumbing.
+pub fn spawn_tcp(
+    service: &Arc<PlacementService>,
+    addr: &str,
+) -> Result<(std::thread::JoinHandle<Result<()>>, SocketAddr)> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    let svc = Arc::clone(service);
+    let handle = std::thread::Builder::new()
+        .name("gdp-serve-accept".into())
+        .spawn(move || accept_loop(&svc, listener))
+        .context("spawning accept loop")?;
+    Ok((handle, local))
 }
 
 /// Write a snapshot as a `BenchRecorder` artifact (suite "serve").
@@ -75,6 +152,9 @@ fn serve_stdio(service: &Arc<PlacementService>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
+        if sig::fired() {
+            service.request_drain();
+        }
         let resp = service.call(&line);
         {
             let mut out = stdout.lock();
@@ -82,30 +162,40 @@ fn serve_stdio(service: &Arc<PlacementService>) -> Result<()> {
             out.write_all(b"\n")?;
             out.flush()?;
         }
-        if service.shutdown_requested() {
+        // On stdio there is one client and no accept loop: drain means
+        // the conversation is over once the current line is answered.
+        if service.shutdown_requested() || service.drain_requested() {
             break;
         }
     }
     Ok(())
 }
 
-fn serve_tcp(service: &Arc<PlacementService>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    // Non-blocking accept so the loop can observe the shutdown flag set
-    // by a connection handler.
+fn accept_loop(service: &Arc<PlacementService>, listener: TcpListener) -> Result<()> {
+    // Non-blocking accept so the loop can observe the shutdown/drain
+    // flags set by a connection handler or a signal.
     listener.set_nonblocking(true)?;
-    eprintln!("[serve] listening on {}", listener.local_addr()?);
+    let max_conns = service.config().max_conns;
+    let idle = service.config().idle_timeout_ms;
     let live = Arc::new(AtomicUsize::new(0));
-    while !service.shutdown_requested() {
+    while !service.shutdown_requested() && !service.drain_requested() {
+        if sig::fired() {
+            service.request_drain();
+            break;
+        }
         match listener.accept() {
             Ok((stream, peer)) => {
+                if max_conns > 0 && live.load(Ordering::SeqCst) >= max_conns {
+                    reject_conn(service, stream, max_conns);
+                    continue;
+                }
                 let svc = Arc::clone(service);
                 let live = Arc::clone(&live);
                 live.fetch_add(1, Ordering::SeqCst);
                 std::thread::Builder::new()
                     .name(format!("gdp-serve-conn-{peer}"))
                     .spawn(move || {
-                        let _ = handle_conn(&svc, stream);
+                        let _ = handle_conn(&svc, stream, idle);
                         live.fetch_sub(1, Ordering::SeqCst);
                     })
                     .context("spawning connection handler")?;
@@ -116,21 +206,61 @@ fn serve_tcp(service: &Arc<PlacementService>, addr: &str) -> Result<()> {
             Err(e) => return Err(e).context("accept"),
         }
     }
-    // Give in-flight handlers a moment to flush their last response.
-    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    // Drain: no new work is admitted past this point (the service sheds
+    // it), so wait for in-flight handlers to finish their responses.
+    let grace = if service.drain_requested() {
+        Duration::from_secs(10)
+    } else {
+        Duration::from_secs(2)
+    };
+    let deadline = std::time::Instant::now() + grace;
     while live.load(Ordering::SeqCst) > 0 && std::time::Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(10));
     }
     Ok(())
 }
 
-fn handle_conn(service: &Arc<PlacementService>, stream: TcpStream) -> Result<()> {
+/// Answer an over-cap connection with a structured `overloaded` frame —
+/// the client learns why instead of seeing a bare RST.
+fn reject_conn(service: &Arc<PlacementService>, mut stream: TcpStream, cap: usize) {
+    service.note_conn_rejected();
+    let frame = WireError::new(
+        None,
+        code::OVERLOADED,
+        format!("connection limit reached ({cap}) — retry later"),
+    )
+    .to_line();
+    let _ = stream.write_all(frame.as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
+}
+
+fn handle_conn(
+    service: &Arc<PlacementService>,
+    stream: TcpStream,
+    idle_timeout_ms: u64,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    if idle_timeout_ms > 0 {
+        stream
+            .set_read_timeout(Some(Duration::from_millis(idle_timeout_ms)))
+            .ok();
+    }
     let mut writer = stream.try_clone().context("cloning stream")?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = match line {
             Ok(l) => l,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // No complete line within the idle window: reap the
+                // connection (this is also the slow-writer guard — a
+                // partial line does not reset the clock server-side).
+                service.note_read_timeout();
+                break;
+            }
             Err(_) => break, // client went away mid-line
         };
         if line.trim().is_empty() {
@@ -140,7 +270,7 @@ fn handle_conn(service: &Arc<PlacementService>, stream: TcpStream) -> Result<()>
         writer.write_all(resp.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
-        if service.shutdown_requested() {
+        if service.shutdown_requested() || service.drain_requested() {
             break;
         }
     }

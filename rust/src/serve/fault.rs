@@ -1,0 +1,181 @@
+//! Policy-level fault injection for the chaos harness.
+//!
+//! A [`FaultInjector`] sits on the service's dispatcher path and, purely
+//! as a function of a monotonically increasing forward counter, makes
+//! the policy forward fail in controlled, *deterministic* ways:
+//!
+//! - `panic=EVERY[:BURST]` — forwards whose index `i` satisfies
+//!   `i % EVERY < BURST` panic (BURST defaults to 1). A burst of
+//!   consecutive panics is what trips the circuit breaker.
+//! - `nan=EVERY` — every EVERY-th forward has its logits overwritten
+//!   with NaN after the engine runs (exercising the non-finite guard).
+//! - `slow=EVERY:MS` — every EVERY-th forward sleeps MS milliseconds
+//!   before returning (exercising deadline expiry).
+//!
+//! Spec strings compose with commas: `panic=10:4,nan=7,slow=13:50`.
+//! Determinism matters: the chaos CI smoke asserts exact recovery
+//! behavior, and seeded runs must replay.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Parsed `--inject` spec. All counts are per-forward, 0 = off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub panic_every: usize,
+    pub panic_burst: usize,
+    pub nan_every: usize,
+    pub slow_every: usize,
+    pub slow_ms: u64,
+}
+
+impl FaultSpec {
+    /// Parse `panic=EVERY[:BURST],nan=EVERY,slow=EVERY:MS`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut out = FaultSpec { panic_burst: 1, ..Default::default() };
+        for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault {part:?}: expected key=value"))?;
+            let mut nums = val.split(':');
+            let first: usize = nums
+                .next()
+                .unwrap_or("")
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault {part:?}: bad count"))?;
+            let second: Option<u64> = match nums.next() {
+                None => None,
+                Some(s) => Some(
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("fault {part:?}: bad parameter"))?,
+                ),
+            };
+            match key.trim() {
+                "panic" => {
+                    out.panic_every = first;
+                    out.panic_burst = second.unwrap_or(1).max(1) as usize;
+                }
+                "nan" => out.nan_every = first,
+                "slow" => {
+                    out.slow_every = first;
+                    out.slow_ms = second
+                        .ok_or_else(|| format!("fault {part:?}: slow needs EVERY:MS"))?;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault kind {other:?} (panic|nan|slow)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.panic_every > 0 || self.nan_every > 0 || self.slow_every > 0
+    }
+}
+
+/// The injector the dispatcher consults around each policy forward.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    forwards: AtomicUsize,
+    /// Faults actually fired, for the metrics snapshot.
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec) -> Self {
+        Self { spec, forwards: AtomicUsize::new(0), injected: AtomicU64::new(0) }
+    }
+
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Claim the next forward index (called once per forward).
+    pub fn next_forward(&self) -> usize {
+        self.forwards.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Called *inside* the dispatcher's catch_unwind, before the engine
+    /// runs: sleeps and/or panics per the spec.
+    pub fn before_forward(&self, index: usize) {
+        if self.spec.slow_every > 0 && index % self.spec.slow_every == 0 {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(self.spec.slow_ms));
+        }
+        if self.spec.panic_every > 0 && index % self.spec.panic_every < self.spec.panic_burst
+        {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+            panic!("injected policy fault (forward {index})");
+        }
+    }
+
+    /// Called after a successful engine forward: poison the logits when
+    /// the spec says so. Returns true when it did.
+    pub fn poison_logits(&self, index: usize, logits: &mut [f32]) -> bool {
+        if self.spec.nan_every > 0 && index % self.spec.nan_every == 0 {
+            self.injected.fetch_add(1, Ordering::SeqCst);
+            for x in logits.iter_mut() {
+                *x = f32::NAN;
+            }
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_composes() {
+        let s = FaultSpec::parse("panic=10:4,nan=7,slow=13:50").unwrap();
+        assert_eq!(s.panic_every, 10);
+        assert_eq!(s.panic_burst, 4);
+        assert_eq!(s.nan_every, 7);
+        assert_eq!(s.slow_every, 13);
+        assert_eq!(s.slow_ms, 50);
+        assert!(s.is_active());
+        assert!(!FaultSpec::parse("").unwrap().is_active());
+        assert!(FaultSpec::parse("boom=1").is_err());
+        assert!(FaultSpec::parse("slow=5").is_err(), "slow needs :MS");
+        assert!(FaultSpec::parse("panic=x").is_err());
+    }
+
+    #[test]
+    fn panic_burst_fires_deterministically() {
+        let inj = FaultInjector::new(FaultSpec::parse("panic=5:2").unwrap());
+        let mut fired = Vec::new();
+        for i in 0..10 {
+            let idx = inj.next_forward();
+            assert_eq!(idx, i);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                inj.before_forward(idx)
+            }));
+            if r.is_err() {
+                fired.push(idx);
+            }
+        }
+        assert_eq!(fired, vec![0, 1, 5, 6]);
+        assert_eq!(inj.injected(), 4);
+    }
+
+    #[test]
+    fn nan_poisoning_hits_every_nth() {
+        let inj = FaultInjector::new(FaultSpec::parse("nan=3").unwrap());
+        let mut logits = vec![1.0f32; 4];
+        assert!(inj.poison_logits(0, &mut logits));
+        assert!(logits.iter().all(|x| x.is_nan()));
+        let mut logits = vec![1.0f32; 4];
+        assert!(!inj.poison_logits(1, &mut logits));
+        assert!(logits.iter().all(|x| *x == 1.0));
+        assert!(inj.poison_logits(3, &mut logits));
+    }
+}

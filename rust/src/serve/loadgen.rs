@@ -1,31 +1,135 @@
-//! `gdp loadgen`: closed-loop traffic against the placement service.
+//! `gdp loadgen`: traffic generation against the placement service.
 //!
-//! `--clients` worker threads pull request indices from one shared
-//! counter until `--requests` have been issued; each client keeps
-//! exactly one request in flight (closed loop), so offered concurrency
-//! equals the client count and the dispatcher's batch occupancy directly
-//! reflects it. The workload mix cycles a fixed id list with a fixed
-//! seed, so repeats are cache hits by construction — the hit rate is a
-//! property of the mix (`1 - unique/requests` as requests grow).
+//! **Closed loop (default).** `--clients` worker threads pull request
+//! indices from one shared counter until `--requests` have been issued;
+//! each client keeps exactly one request in flight, so offered
+//! concurrency equals the client count and the dispatcher's batch
+//! occupancy directly reflects it. The workload mix cycles a fixed id
+//! list with a fixed seed, so repeats are cache hits by construction.
+//!
+//! **Open loop (`--rate R`).** Arrival times are a seeded Poisson
+//! process at R requests/sec (exponential inter-arrivals, xoshiro RNG):
+//! each request has a scheduled send time and clients sleep until it.
+//! Unlike the closed loop, a slow server does not slow the offered load
+//! down — the report carries `offered_rps` next to the achieved
+//! `throughput_rps`, and the gap (plus shed counts) is the overload
+//! signal.
+//!
+//! **Chaos (`--chaos SPEC`).** Deterministically replaces every Nth
+//! request slot with a client-side fault — malformed frames, truncated
+//! frames (half a line then a hangup), mid-request disconnects,
+//! oversized inline graphs, slow-writer clients — cycling the kind list
+//! by slot index, so a given seed+spec replays exactly. Chaos requires a
+//! real socket (the faults are transport-level), so the CLI spawns an
+//! in-process TCP daemon when no `--connect` target is given. The test
+//! invariant is always the same: the daemon answers structured errors
+//! and keeps serving.
 //!
 //! Two targets: in-process (loadgen starts the daemon itself — the CI
 //! smoke path, no socket needed) and `--connect host:port` against a
 //! running `gdp serve --listen` daemon. Client-side latency is measured
 //! around the full round-trip and reported as its own `client_*` metric
-//! set next to the server's `server_*` snapshot in `BENCH_SERVE.json`.
+//! set next to the server's `server_*` snapshot in `BENCH_SERVE.json`
+//! (`BENCH_CHAOS.json` for chaos runs).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::metrics::percentile;
-use super::proto::{parse_response, ResponseFrame};
+use super::proto::{code, graph_to_json, parse_response, ResponseFrame};
 use super::service::PlacementService;
+use crate::graph::{GraphBuilder, OpKind};
 use crate::util::bench::BenchRecorder;
+use crate::util::rng::Rng;
+
+/// One client-side fault kind the chaos harness can inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// A syntactically broken frame (expects a `parse` error back).
+    Malformed,
+    /// Half a frame, then hang up mid-line (no response expected).
+    Truncated,
+    /// A valid request, then hang up without reading the reply.
+    Disconnect,
+    /// An inline graph over the server's `max_nodes` (expects
+    /// `too_large`).
+    Oversized,
+    /// A valid frame written in two halves with a pause between — the
+    /// idle-timeout / slow-client guard probe.
+    SlowWrite,
+}
+
+/// Parsed `--chaos` spec: which faults, how often, and their parameters.
+#[derive(Clone, Debug)]
+pub struct ChaosSpec {
+    /// Kinds cycled across chaos slots (slot j gets `kinds[j % len]`).
+    pub kinds: Vec<ChaosKind>,
+    /// Every `period`-th request slot is a chaos slot (`i % period == 0`).
+    pub period: usize,
+    /// Node count for the oversized inline graph.
+    pub oversized_nodes: usize,
+    /// Pause between the two halves of a slow write, milliseconds.
+    pub slow_write_ms: u64,
+}
+
+impl ChaosSpec {
+    /// Parse `kind[,kind...][,every=N][,nodes=N][,slowms=MS]`, e.g.
+    /// `malformed,disconnect,oversized,every=5`. `all` selects every
+    /// kind.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut out = ChaosSpec {
+            kinds: Vec::new(),
+            period: 7,
+            oversized_nodes: 4097,
+            slow_write_ms: 40,
+        };
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some((key, val)) = part.split_once('=') {
+                let n: u64 = val
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("chaos {part:?}: bad number"))?;
+                match key.trim() {
+                    "every" if n > 0 => out.period = n as usize,
+                    "every" => return Err("chaos every=0 is meaningless".into()),
+                    "nodes" => out.oversized_nodes = (n as usize).max(2),
+                    "slowms" => out.slow_write_ms = n,
+                    other => return Err(format!("unknown chaos option {other:?}")),
+                }
+                continue;
+            }
+            match part {
+                "malformed" => out.kinds.push(ChaosKind::Malformed),
+                "truncated" => out.kinds.push(ChaosKind::Truncated),
+                "disconnect" => out.kinds.push(ChaosKind::Disconnect),
+                "oversized" => out.kinds.push(ChaosKind::Oversized),
+                "slowwrite" => out.kinds.push(ChaosKind::SlowWrite),
+                "all" => out.kinds.extend([
+                    ChaosKind::Malformed,
+                    ChaosKind::Truncated,
+                    ChaosKind::Disconnect,
+                    ChaosKind::Oversized,
+                    ChaosKind::SlowWrite,
+                ]),
+                other => {
+                    return Err(format!(
+                        "unknown chaos kind {other:?} \
+                         (malformed|truncated|disconnect|oversized|slowwrite|all)"
+                    ))
+                }
+            }
+        }
+        if out.kinds.is_empty() {
+            return Err("chaos spec selects no fault kinds".into());
+        }
+        Ok(out)
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
@@ -35,6 +139,10 @@ pub struct LoadgenConfig {
     pub mix: Vec<String>,
     pub samples: usize,
     pub seed: u64,
+    /// Open-loop Poisson arrival rate in requests/sec; 0 = closed loop.
+    pub rate: f64,
+    /// Client-side fault injection; requires a TCP target.
+    pub chaos: Option<ChaosSpec>,
 }
 
 /// Where the traffic goes.
@@ -52,12 +160,21 @@ pub struct ClientReport {
     pub ok: usize,
     pub cached: usize,
     pub errors: usize,
+    /// Degraded (fallback-placed) answers among the oks.
+    pub degraded: usize,
+    /// `overloaded` error frames (load shedding observed client-side).
+    pub shed: usize,
+    /// Chaos slots executed / chaos slots that got a structured answer.
+    pub chaos_injected: usize,
+    pub chaos_answered: usize,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub mean_ms: f64,
     pub wall_secs: f64,
     pub throughput_rps: f64,
+    /// Scheduled arrival rate for open-loop runs (0 for closed loop).
+    pub offered_rps: f64,
     /// Mean `batch_rows` over non-cached responses (server-reported).
     pub mean_batch_rows: f64,
 }
@@ -69,12 +186,17 @@ impl ClientReport {
         rec.metric(p("ok"), self.ok as f64);
         rec.metric(p("cached"), self.cached as f64);
         rec.metric(p("errors"), self.errors as f64);
+        rec.metric(p("degraded"), self.degraded as f64);
+        rec.metric(p("shed"), self.shed as f64);
+        rec.metric(p("chaos_injected"), self.chaos_injected as f64);
+        rec.metric(p("chaos_answered"), self.chaos_answered as f64);
         rec.metric(p("latency_p50_ms"), self.p50_ms);
         rec.metric(p("latency_p95_ms"), self.p95_ms);
         rec.metric(p("latency_p99_ms"), self.p99_ms);
         rec.metric(p("latency_mean_ms"), self.mean_ms);
         rec.metric(p("wall_secs"), self.wall_secs);
         rec.metric(p("throughput_rps"), self.throughput_rps);
+        rec.metric(p("offered_rps"), self.offered_rps);
         rec.metric(p("mean_batch_rows"), self.mean_batch_rows);
     }
 }
@@ -123,12 +245,147 @@ struct Tally {
     ok: usize,
     cached: usize,
     errors: usize,
+    degraded: usize,
+    shed: usize,
+    chaos_injected: usize,
+    chaos_answered: usize,
     batch_rows_sum: usize,
     batch_rows_n: usize,
 }
 
-/// Run the closed-loop load. Each client issues requests until the
-/// shared counter reaches `cfg.requests`.
+impl Tally {
+    /// Fold a parsed response into the counters (shared by normal and
+    /// chaos slots that read an answer).
+    fn absorb(&mut self, resp: &str) {
+        match parse_response(resp.trim()) {
+            Ok(ResponseFrame::Place(p)) => {
+                self.ok += 1;
+                if p.degraded {
+                    self.degraded += 1;
+                }
+                if p.cached {
+                    self.cached += 1;
+                } else {
+                    self.batch_rows_sum += p.batch_rows;
+                    self.batch_rows_n += 1;
+                }
+            }
+            Ok(ResponseFrame::Error(e)) => {
+                self.errors += 1;
+                if e.code == code::OVERLOADED {
+                    self.shed += 1;
+                }
+            }
+            Ok(ResponseFrame::Ack { .. }) | Err(_) => self.errors += 1,
+        }
+    }
+}
+
+/// Execute one chaos slot. `conn` is taken/replaced so fault kinds that
+/// kill the connection force a reconnect on the next slot. Returns true
+/// when the fault got a structured answer back.
+fn inject_chaos(
+    conn: &mut Option<Conn>,
+    spec: &ChaosSpec,
+    kind: ChaosKind,
+    i: usize,
+    oversized_line: &str,
+    tally: &mut Tally,
+) -> Result<bool> {
+    // Take the connection; fault kinds that keep it alive put it back.
+    // An early `?` return leaves `conn` empty, forcing a clean reopen.
+    let mut c = conn.take().expect("chaos slot needs an open connection");
+    match kind {
+        ChaosKind::Malformed => {
+            let resp = c.call(&format!(r#"{{"id":"chaos{i}","nonsense"#))?;
+            tally.absorb(&resp);
+            *conn = Some(c);
+            Ok(true)
+        }
+        ChaosKind::Oversized => {
+            let resp = c.call(oversized_line)?;
+            tally.absorb(&resp);
+            *conn = Some(c);
+            Ok(true)
+        }
+        ChaosKind::Truncated => match &mut c {
+            Conn::Tcp { writer, .. } => {
+                // Half a frame, no newline, then hang up: the server
+                // sees EOF mid-line and must just drop the connection.
+                writer.write_all(
+                    format!(r#"{{"id":"chaos{i}","workload":"incep"#).as_bytes(),
+                )?;
+                writer.flush()?;
+                // `c` is not put back: dropped on return = hang up.
+                Ok(false)
+            }
+            Conn::InProc(_) => bail!("truncated chaos needs a TCP target"),
+        },
+        ChaosKind::Disconnect => match &mut c {
+            Conn::Tcp { writer, .. } => {
+                // A full valid request — then vanish before the reply.
+                // The server computes an answer nobody reads; the write
+                // error must only kill this handler, not the daemon.
+                writer.write_all(
+                    format!(r#"{{"id":"chaos{i}","workload":"inception","samples":1}}"#)
+                        .as_bytes(),
+                )?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                // `c` is not put back: dropped before reading the reply.
+                Ok(false)
+            }
+            Conn::InProc(_) => bail!("disconnect chaos needs a TCP target"),
+        },
+        ChaosKind::SlowWrite => match &mut c {
+            Conn::Tcp { reader, writer } => {
+                let line =
+                    format!(r#"{{"id":"chaos{i}","workload":"inception","samples":1}}"#);
+                let bytes = line.as_bytes();
+                let mid = bytes.len() / 2;
+                writer.write_all(&bytes[..mid])?;
+                writer.flush()?;
+                std::thread::sleep(Duration::from_millis(spec.slow_write_ms));
+                writer.write_all(&bytes[mid..])?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                let mut resp = String::new();
+                match reader.read_line(&mut resp) {
+                    Ok(n) if n > 0 => {
+                        tally.absorb(&resp);
+                        *conn = Some(c);
+                        Ok(true)
+                    }
+                    // Reaped by the idle timeout (or the server closed):
+                    // that is the guard working, not a daemon failure.
+                    _ => Ok(false),
+                }
+            }
+            Conn::InProc(_) => bail!("slowwrite chaos needs a TCP target"),
+        },
+    }
+}
+
+/// A linear inline graph bigger than the server's `max_nodes`, as a
+/// request line (the oversized chaos payload).
+fn oversized_request_line(nodes: usize) -> String {
+    let mut b = GraphBuilder::new("chaos_oversized", 2);
+    let mut prev = b.op("n0", OpKind::Input).out_bytes(64).id();
+    for k in 1..nodes {
+        prev = b
+            .op(format!("n{k}"), OpKind::MatMul)
+            .flops(1e6)
+            .out_bytes(64)
+            .after(&[prev])
+            .id();
+    }
+    let g = b.build();
+    format!(r#"{{"id":"chaos_big","graph":{}}}"#, graph_to_json(&g).to_string())
+}
+
+/// Run the load. Each client issues requests until the shared counter
+/// reaches `cfg.requests`; open-loop runs additionally pace each slot to
+/// its scheduled Poisson arrival time.
 pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
     if cfg.mix.is_empty() {
         bail!("loadgen needs a non-empty workload mix");
@@ -138,6 +395,36 @@ pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
             bail!("unknown workload {id:?} in mix");
         }
     }
+    if cfg.chaos.is_some() && matches!(target, Target::InProc(_)) {
+        bail!(
+            "chaos faults are transport-level and need a TCP target \
+             (the CLI spawns an in-process TCP daemon automatically)"
+        );
+    }
+    // Seeded Poisson schedule: cumulative arrival offsets in seconds.
+    let arrivals: Option<Arc<Vec<f64>>> = if cfg.rate > 0.0 {
+        let mut rng = Rng::new(cfg.seed ^ 0x9e37_79b9_7f4a_7c15);
+        let mut t = 0.0f64;
+        let mut v = Vec::with_capacity(cfg.requests);
+        for _ in 0..cfg.requests {
+            let u: f64 = rng.next_f64();
+            t += -(1.0 - u).ln() / cfg.rate;
+            v.push(t);
+        }
+        Some(Arc::new(v))
+    } else {
+        None
+    };
+    let offered_rps = match (&arrivals, cfg.requests) {
+        (Some(a), n) if n > 0 => n as f64 / a[n - 1].max(1e-9),
+        _ => 0.0,
+    };
+    let oversized_line = cfg
+        .chaos
+        .as_ref()
+        .map(|c| oversized_request_line(c.oversized_nodes))
+        .unwrap_or_default();
+
     let counter = Arc::new(AtomicUsize::new(0));
     let tally = Arc::new(Mutex::new(Tally::default()));
     let t0 = Instant::now();
@@ -146,13 +433,43 @@ pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
         for _ in 0..cfg.clients.max(1) {
             let counter = Arc::clone(&counter);
             let tally = Arc::clone(&tally);
+            let arrivals = arrivals.clone();
+            let oversized_line = oversized_line.as_str();
             handles.push(scope.spawn(move || -> Result<()> {
-                let mut conn = Conn::open(target)?;
+                let mut conn = Some(Conn::open(target)?);
                 let mut local = Tally::default();
                 loop {
                     let i = counter.fetch_add(1, Ordering::SeqCst);
                     if i >= cfg.requests {
                         break;
+                    }
+                    if let Some(arr) = &arrivals {
+                        let due = t0 + Duration::from_secs_f64(arr[i]);
+                        let wait = due.saturating_duration_since(Instant::now());
+                        if !wait.is_zero() {
+                            std::thread::sleep(wait);
+                        }
+                    }
+                    if conn.is_none() {
+                        conn = Some(Conn::open(target)?);
+                    }
+                    if let Some(spec) = &cfg.chaos {
+                        if i % spec.period == 0 {
+                            let kind =
+                                spec.kinds[(i / spec.period) % spec.kinds.len()];
+                            local.chaos_injected += 1;
+                            if inject_chaos(
+                                &mut conn,
+                                spec,
+                                kind,
+                                i,
+                                oversized_line,
+                                &mut local,
+                            )? {
+                                local.chaos_answered += 1;
+                            }
+                            continue;
+                        }
                     }
                     let wid = &cfg.mix[i % cfg.mix.len()];
                     let line = format!(
@@ -160,26 +477,19 @@ pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
                         cfg.samples, cfg.seed
                     );
                     let rt0 = Instant::now();
-                    let resp = conn.call(&line)?;
+                    let resp = conn.as_mut().unwrap().call(&line)?;
                     local.latencies_ms.push(rt0.elapsed().as_secs_f64() * 1e3);
-                    match parse_response(resp.trim()) {
-                        Ok(ResponseFrame::Place(p)) => {
-                            local.ok += 1;
-                            if p.cached {
-                                local.cached += 1;
-                            } else {
-                                local.batch_rows_sum += p.batch_rows;
-                                local.batch_rows_n += 1;
-                            }
-                        }
-                        Ok(_) | Err(_) => local.errors += 1,
-                    }
+                    local.absorb(&resp);
                 }
                 let mut t = tally.lock().unwrap();
                 t.latencies_ms.extend_from_slice(&local.latencies_ms);
                 t.ok += local.ok;
                 t.cached += local.cached;
                 t.errors += local.errors;
+                t.degraded += local.degraded;
+                t.shed += local.shed;
+                t.chaos_injected += local.chaos_injected;
+                t.chaos_answered += local.chaos_answered;
                 t.batch_rows_sum += local.batch_rows_sum;
                 t.batch_rows_n += local.batch_rows_n;
                 Ok(())
@@ -199,16 +509,21 @@ pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
     sorted.sort_by(|a, b| a.total_cmp(b));
     let n = sorted.len();
     Ok(ClientReport {
-        requests: n,
+        requests: cfg.requests,
         ok: t.ok,
         cached: t.cached,
         errors: t.errors,
+        degraded: t.degraded,
+        shed: t.shed,
+        chaos_injected: t.chaos_injected,
+        chaos_answered: t.chaos_answered,
         p50_ms: percentile(&sorted, 0.50),
         p95_ms: percentile(&sorted, 0.95),
         p99_ms: percentile(&sorted, 0.99),
         mean_ms: if n == 0 { 0.0 } else { sorted.iter().sum::<f64>() / n as f64 },
         wall_secs,
         throughput_rps: if wall_secs > 0.0 { n as f64 / wall_secs } else { 0.0 },
+        offered_rps,
         mean_batch_rows: if t.batch_rows_n == 0 {
             0.0
         } else {
@@ -224,26 +539,30 @@ mod tests {
     use crate::serve::service::ServeConfig;
     use std::path::Path;
 
-    #[test]
-    fn in_process_loadgen_reports_and_hits_cache() {
+    fn service(cfg: ServeConfig) -> Arc<PlacementService> {
         let session = Session::open(Path::new("artifacts"), "full").unwrap();
         let store = session.init_params().unwrap();
-        let svc = PlacementService::start(
-            session.shared_policy(),
-            store,
-            ServeConfig { warmup: false, ..Default::default() },
-        );
+        PlacementService::start(session.shared_policy(), store, cfg)
+    }
+
+    #[test]
+    fn in_process_loadgen_reports_and_hits_cache() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
         let cfg = LoadgenConfig {
             requests: 8,
             clients: 3,
             mix: vec!["inception".into(), "rnnlm2".into()],
             samples: 1,
             seed: 3,
+            rate: 0.0,
+            chaos: None,
         };
         let report = run(&Target::InProc(Arc::clone(&svc)), &cfg).unwrap();
         assert_eq!(report.requests, 8);
         assert_eq!(report.ok, 8);
         assert_eq!(report.errors, 0);
+        assert_eq!(report.degraded, 0);
+        assert_eq!(report.shed, 0);
         // 2 unique keys among 8 requests -> at least 6 cache hits (a hit
         // can only be missed if two misses for the same key race into
         // the same batch window; with 2 workloads and 3 clients at most
@@ -261,5 +580,100 @@ mod tests {
         let back = crate::util::json::parse(&rec.to_json().to_string()).unwrap();
         assert!(back.get("metrics").unwrap().get("client_requests").is_some());
         assert!(back.get("metrics").unwrap().get("server_requests").is_some());
+        assert!(back.get("metrics").unwrap().get("client_chaos_injected").is_some());
+        assert!(back.get("metrics").unwrap().get("server_shed").is_some());
+    }
+
+    #[test]
+    fn open_loop_poisson_schedule_is_seeded_and_reported() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
+        let cfg = LoadgenConfig {
+            requests: 6,
+            clients: 2,
+            mix: vec!["inception".into()],
+            samples: 1,
+            seed: 11,
+            rate: 500.0,
+            chaos: None,
+        };
+        let r1 = run(&Target::InProc(Arc::clone(&svc)), &cfg).unwrap();
+        assert_eq!(r1.ok, 6);
+        assert!(r1.offered_rps > 0.0, "offered={}", r1.offered_rps);
+        // The schedule is pure function of (seed, rate): same offered
+        // rate on a re-run.
+        let r2 = run(&Target::InProc(Arc::clone(&svc)), &cfg).unwrap();
+        assert_eq!(r1.offered_rps, r2.offered_rps);
+        svc.stop();
+    }
+
+    #[test]
+    fn chaos_spec_parses() {
+        let s = ChaosSpec::parse("malformed,oversized,every=5,nodes=65,slowms=10")
+            .unwrap();
+        assert_eq!(s.kinds, vec![ChaosKind::Malformed, ChaosKind::Oversized]);
+        assert_eq!(s.period, 5);
+        assert_eq!(s.oversized_nodes, 65);
+        assert_eq!(s.slow_write_ms, 10);
+        assert_eq!(ChaosSpec::parse("all").unwrap().kinds.len(), 5);
+        assert!(ChaosSpec::parse("").is_err());
+        assert!(ChaosSpec::parse("explode").is_err());
+        assert!(ChaosSpec::parse("malformed,every=0").is_err());
+    }
+
+    #[test]
+    fn chaos_requires_tcp_target() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
+        let cfg = LoadgenConfig {
+            requests: 4,
+            clients: 1,
+            mix: vec!["inception".into()],
+            samples: 1,
+            seed: 3,
+            rate: 0.0,
+            chaos: Some(ChaosSpec::parse("malformed").unwrap()),
+        };
+        let err = run(&Target::InProc(Arc::clone(&svc)), &cfg).unwrap_err();
+        assert!(format!("{err}").contains("TCP"), "{err}");
+        svc.stop();
+    }
+
+    /// The headline chaos invariant: every client fault lands on a live
+    /// daemon, answers stay structured, and the daemon keeps serving.
+    #[test]
+    fn chaos_against_real_socket_daemon_survives() {
+        let svc = service(ServeConfig {
+            warmup: false,
+            max_nodes: 64,
+            idle_timeout_ms: 0, // slowwrite must not be reaped here
+            ..Default::default()
+        });
+        let (accept, addr) = super::super::daemon::spawn_tcp(&svc, "127.0.0.1:0")
+            .expect("spawn tcp");
+        let cfg = LoadgenConfig {
+            requests: 30,
+            clients: 2,
+            mix: vec!["inception".into(), "rnnlm2".into()],
+            samples: 1,
+            seed: 3,
+            rate: 0.0,
+            chaos: Some(
+                ChaosSpec::parse("all,every=3,nodes=65,slowms=5").unwrap(),
+            ),
+        };
+        let target = Target::Tcp(addr.to_string());
+        let report = run(&target, &cfg).unwrap();
+        assert_eq!(report.requests, 30);
+        assert_eq!(report.chaos_injected, 10, "deterministic schedule");
+        assert!(report.chaos_answered >= 1, "{report:?}");
+        assert!(report.ok >= 15, "normal slots still served: {report:?}");
+        assert!(report.errors >= 1, "malformed/oversized answer errors");
+        // The daemon is still alive and answering after all faults.
+        let mut probe = Conn::open(&target).unwrap();
+        let pong = probe.call(r#"{"id":"p","cmd":"ping"}"#).unwrap();
+        assert!(pong.contains("true"), "{pong}");
+        // Shut it down cleanly and join the accept loop.
+        let _ = probe.call(r#"{"id":"q","cmd":"shutdown"}"#).unwrap();
+        accept.join().expect("accept loop").expect("accept ok");
+        svc.stop();
     }
 }

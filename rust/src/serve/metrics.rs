@@ -21,6 +21,22 @@ pub struct ServeMetrics {
     cached: u64,
     /// Structured error responses sent.
     errors: u64,
+    /// Requests shed with `overloaded` (queue full, conn limit, drain).
+    shed: u64,
+    /// Degraded (fallback-placed) responses, total and per reason.
+    degraded: u64,
+    degraded_deadline: u64,
+    degraded_breaker: u64,
+    degraded_policy: u64,
+    /// Policy forwards that failed (panic / engine error / NaN logits).
+    policy_failures: u64,
+    /// Jobs the dispatcher dropped because their deadline had already
+    /// expired before the forward started.
+    deadline_expired: u64,
+    /// TCP connects rejected at the `--max-conns` cap.
+    conns_rejected: u64,
+    /// Connections closed by the idle read timeout.
+    read_timeouts: u64,
     /// One entry per policy forward: real rows packed into it.
     batch_rows: Vec<usize>,
     /// Batch capacity B (dims.b), for occupancy.
@@ -31,6 +47,20 @@ pub struct ServeMetrics {
     started: Option<Instant>,
 }
 
+/// Counters owned outside `ServeMetrics` (cache, fault injector,
+/// circuit breaker), folded into the [`Snapshot`] by the service.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExternalStats {
+    pub cache_hit_rate: f64,
+    pub cache_entries: usize,
+    pub cache_evictions: u64,
+    pub faults_injected: u64,
+    /// 0 = closed, 1 = open, 2 = half-open.
+    pub breaker_state: u8,
+    pub breaker_trips: u64,
+    pub breaker_recoveries: u64,
+}
+
 /// A point-in-time summary of the counters (plus cache stats supplied by
 /// the caller, which owns the cache).
 #[derive(Clone, Debug)]
@@ -38,6 +68,20 @@ pub struct Snapshot {
     pub requests: u64,
     pub errors: u64,
     pub cached: u64,
+    pub shed: u64,
+    pub degraded: u64,
+    pub degraded_deadline: u64,
+    pub degraded_breaker: u64,
+    pub degraded_policy: u64,
+    pub policy_failures: u64,
+    pub deadline_expired: u64,
+    pub conns_rejected: u64,
+    pub read_timeouts: u64,
+    pub faults_injected: u64,
+    /// 0 = closed, 1 = open, 2 = half-open.
+    pub breaker_state: u8,
+    pub breaker_trips: u64,
+    pub breaker_recoveries: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -83,16 +127,44 @@ impl ServeMetrics {
         self.errors += 1;
     }
 
+    /// A request shed with `overloaded` (also counts as an error frame).
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+        self.errors += 1;
+    }
+
+    /// A degraded (fallback) response, by reason code.
+    pub fn record_degraded(&mut self, reason: &str) {
+        use super::proto::reason as r;
+        self.degraded += 1;
+        match reason {
+            r::DEADLINE => self.degraded_deadline += 1,
+            r::BREAKER_OPEN => self.degraded_breaker += 1,
+            _ => self.degraded_policy += 1,
+        }
+    }
+
+    pub fn record_policy_failure(&mut self) {
+        self.policy_failures += 1;
+    }
+
+    pub fn record_deadline_expired(&mut self) {
+        self.deadline_expired += 1;
+    }
+
+    pub fn record_conn_rejected(&mut self) {
+        self.conns_rejected += 1;
+    }
+
+    pub fn record_read_timeout(&mut self) {
+        self.read_timeouts += 1;
+    }
+
     pub fn record_forward(&mut self, real_rows: usize) {
         self.batch_rows.push(real_rows);
     }
 
-    pub fn snapshot(
-        &self,
-        cache_hit_rate: f64,
-        cache_entries: usize,
-        cache_evictions: u64,
-    ) -> Snapshot {
+    pub fn snapshot(&self, ext: ExternalStats) -> Snapshot {
         let mut sorted = self.latencies_ms.clone();
         sorted.sort_by(|a, b| a.total_cmp(b));
         let n = sorted.len();
@@ -113,6 +185,19 @@ impl ServeMetrics {
             requests: n as u64,
             errors: self.errors,
             cached: self.cached,
+            shed: self.shed,
+            degraded: self.degraded,
+            degraded_deadline: self.degraded_deadline,
+            degraded_breaker: self.degraded_breaker,
+            degraded_policy: self.degraded_policy,
+            policy_failures: self.policy_failures,
+            deadline_expired: self.deadline_expired,
+            conns_rejected: self.conns_rejected,
+            read_timeouts: self.read_timeouts,
+            faults_injected: ext.faults_injected,
+            breaker_state: ext.breaker_state,
+            breaker_trips: ext.breaker_trips,
+            breaker_recoveries: ext.breaker_recoveries,
             p50_ms: percentile(&sorted, 0.50),
             p95_ms: percentile(&sorted, 0.95),
             p99_ms: percentile(&sorted, 0.99),
@@ -120,9 +205,9 @@ impl ServeMetrics {
             throughput_rps,
             forwards: self.batch_rows.len() as u64,
             batch_occupancy,
-            cache_hit_rate,
-            cache_entries,
-            cache_evictions,
+            cache_hit_rate: ext.cache_hit_rate,
+            cache_entries: ext.cache_entries,
+            cache_evictions: ext.cache_evictions,
             warmup_ms: self.warmup_ms,
             uptime_secs,
         }
@@ -135,6 +220,19 @@ impl Snapshot {
             ("requests", Json::num(self.requests as f64)),
             ("errors", Json::num(self.errors as f64)),
             ("cached", Json::num(self.cached as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("degraded", Json::num(self.degraded as f64)),
+            ("degraded_deadline", Json::num(self.degraded_deadline as f64)),
+            ("degraded_breaker", Json::num(self.degraded_breaker as f64)),
+            ("degraded_policy", Json::num(self.degraded_policy as f64)),
+            ("policy_failures", Json::num(self.policy_failures as f64)),
+            ("deadline_expired", Json::num(self.deadline_expired as f64)),
+            ("conns_rejected", Json::num(self.conns_rejected as f64)),
+            ("read_timeouts", Json::num(self.read_timeouts as f64)),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("breaker_state", Json::num(self.breaker_state as f64)),
+            ("breaker_trips", Json::num(self.breaker_trips as f64)),
+            ("breaker_recoveries", Json::num(self.breaker_recoveries as f64)),
             ("p50_ms", Json::num(self.p50_ms)),
             ("p95_ms", Json::num(self.p95_ms)),
             ("p99_ms", Json::num(self.p99_ms)),
@@ -157,6 +255,19 @@ impl Snapshot {
         rec.metric(p("requests"), self.requests as f64);
         rec.metric(p("errors"), self.errors as f64);
         rec.metric(p("cached"), self.cached as f64);
+        rec.metric(p("shed"), self.shed as f64);
+        rec.metric(p("degraded"), self.degraded as f64);
+        rec.metric(p("degraded_deadline"), self.degraded_deadline as f64);
+        rec.metric(p("degraded_breaker"), self.degraded_breaker as f64);
+        rec.metric(p("degraded_policy"), self.degraded_policy as f64);
+        rec.metric(p("policy_failures"), self.policy_failures as f64);
+        rec.metric(p("deadline_expired"), self.deadline_expired as f64);
+        rec.metric(p("conns_rejected"), self.conns_rejected as f64);
+        rec.metric(p("read_timeouts"), self.read_timeouts as f64);
+        rec.metric(p("faults_injected"), self.faults_injected as f64);
+        rec.metric(p("breaker_state"), self.breaker_state as f64);
+        rec.metric(p("breaker_trips"), self.breaker_trips as f64);
+        rec.metric(p("breaker_recoveries"), self.breaker_recoveries as f64);
         rec.metric(p("latency_p50_ms"), self.p50_ms);
         rec.metric(p("latency_p95_ms"), self.p95_ms);
         rec.metric(p("latency_p99_ms"), self.p99_ms);
@@ -195,11 +306,38 @@ mod tests {
             m.record_request(i as f64, i % 2 == 0);
         }
         m.record_error();
+        m.record_shed();
+        m.record_degraded(crate::serve::proto::reason::DEADLINE);
+        m.record_degraded(crate::serve::proto::reason::BREAKER_OPEN);
+        m.record_degraded(crate::serve::proto::reason::NAN_LOGITS);
+        m.record_policy_failure();
+        m.record_deadline_expired();
+        m.record_conn_rejected();
+        m.record_read_timeout();
         m.record_forward(4);
         m.record_forward(2);
-        let s = m.snapshot(0.5, 3, 1);
+        let s = m.snapshot(ExternalStats {
+            cache_hit_rate: 0.5,
+            cache_entries: 3,
+            cache_evictions: 1,
+            faults_injected: 2,
+            breaker_state: 1,
+            breaker_trips: 1,
+            breaker_recoveries: 1,
+        });
         assert_eq!(s.requests, 10);
-        assert_eq!(s.errors, 1);
+        assert_eq!(s.errors, 2, "shed counts as an error frame too");
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.degraded, 3);
+        assert_eq!(s.degraded_deadline, 1);
+        assert_eq!(s.degraded_breaker, 1);
+        assert_eq!(s.degraded_policy, 1);
+        assert_eq!(s.policy_failures, 1);
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.conns_rejected, 1);
+        assert_eq!(s.read_timeouts, 1);
+        assert_eq!(s.faults_injected, 2);
+        assert_eq!(s.breaker_trips, 1);
         assert_eq!(s.cached, 5);
         assert_eq!(s.forwards, 2);
         assert!((s.batch_occupancy - 0.75).abs() < 1e-12);
@@ -210,5 +348,8 @@ mod tests {
         let back = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("requests").unwrap().as_usize(), Some(10));
         assert_eq!(back.get("batch_occupancy").unwrap().as_f64(), Some(0.75));
+        assert_eq!(back.get("degraded").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("shed").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("breaker_trips").unwrap().as_usize(), Some(1));
     }
 }

@@ -5,32 +5,43 @@
 //! requests over newline-delimited JSON (stdin/stdout or TCP):
 //!
 //! - [`proto`] — the wire protocol (request/response/error frames, the
-//!   inline-graph JSON codec);
+//!   inline-graph JSON codec, error and degradation reason codes);
 //! - [`fingerprint`] — permutation-invariant graph fingerprints, the
 //!   cache key;
 //! - [`cache`] — the LRU placement cache with hit/miss accounting;
 //! - [`metrics`] — latency percentiles, throughput, cache hit rate,
-//!   batch occupancy (`BENCH_SERVE.json`);
+//!   batch occupancy, fault/degradation/shed counters
+//!   (`BENCH_SERVE.json`);
 //! - [`service`] — the core: client threads prepare tasks, one
 //!   dispatcher packs up to `B` pending requests into a single policy
 //!   forward (the training batch machinery) and finishes each row with
 //!   the exact `gdp zeroshot` candidate selection, so daemon answers
-//!   are bit-identical to one-shot answers;
-//! - [`daemon`] — stdio/TCP transports and artifact writing;
-//! - [`loadgen`] — the closed-loop load-generator harness
-//!   (`gdp loadgen`).
+//!   are bit-identical to one-shot answers. Requests carry deadlines,
+//!   the queue is bounded (load shedding), and policy failures degrade
+//!   to a deterministic fallback placer;
+//! - [`breaker`] — the circuit breaker guarding the policy path;
+//! - [`fault`] — deterministic policy-fault injection (chaos harness);
+//! - [`daemon`] — stdio/TCP transports (connection caps, idle
+//!   timeouts, graceful drain on signal) and artifact writing;
+//! - [`loadgen`] — the load-generator harness (`gdp loadgen`):
+//!   closed-loop or open-loop Poisson arrivals, plus seeded client-side
+//!   chaos (`--chaos`).
 
+pub mod breaker;
 pub mod cache;
 pub mod daemon;
+pub mod fault;
 pub mod fingerprint;
 pub mod loadgen;
 pub mod metrics;
 pub mod proto;
 pub mod service;
 
+pub use breaker::{BreakerState, CircuitBreaker};
 pub use cache::{CachedPlacement, PlacementCache};
 pub use daemon::Transport;
+pub use fault::{FaultInjector, FaultSpec};
 pub use fingerprint::{cache_key, graph_fingerprint};
-pub use loadgen::{LoadgenConfig, Target};
-pub use metrics::{ServeMetrics, Snapshot};
+pub use loadgen::{ChaosKind, ChaosSpec, LoadgenConfig, Target};
+pub use metrics::{ExternalStats, ServeMetrics, Snapshot};
 pub use service::{PlacementService, ServeConfig};

@@ -16,21 +16,30 @@
 //!              "output_bytes":4096,"param_bytes":0,
 //!              "out_shape":[8,16,0,0],"layer":0}, ...],
 //!    "edges":[[0,1], ...]}}
-//! {"id":"c1","cmd":"stats"}        // also: "ping", "shutdown"
+//! {"id":"c1","cmd":"stats"}        // also: "ping", "shutdown", "drain"
 //! ```
+//!
+//! Requests may carry `"deadline_ms": N` — the daemon answers within N
+//! milliseconds or serves a degraded fallback placement.
 //!
 //! **Responses**
 //!
 //! ```json
 //! {"id":"r1","ok":true,"placement":[0,1,...],"predicted_time":0.123,
-//!  "valid":true,"cached":false,"latency_ms":1.9,"batch_rows":3}
+//!  "valid":true,"cached":false,"degraded":false,"latency_ms":1.9,
+//!  "batch_rows":3}
 //! {"id":"r2","ok":false,"error":{"code":"too_large","message":"..."}}
 //! ```
 //!
 //! Error codes: `parse` (malformed JSON), `bad_request` (well-formed but
 //! invalid: unknown workload, bad graph, missing fields), `too_large`
-//! (graph exceeds `--max-nodes`), `internal` (engine failure). Every
+//! (graph exceeds `--max-nodes`), `overloaded` (queue full, connection
+//! limit, or draining — retry later), `internal` (engine failure). Every
 //! error is a structured frame — the daemon never exits on bad input.
+//!
+//! Degraded responses are still `ok:true`: `"degraded":true` plus a
+//! `"degraded_reason"` code ([`reason`]) mark a placement produced by the
+//! deterministic topo-greedy fallback instead of the policy.
 
 use crate::graph::{OpGraph, OpKind, OpNode};
 use crate::util::json::{self, Json};
@@ -40,7 +49,38 @@ pub mod code {
     pub const PARSE: &str = "parse";
     pub const BAD_REQUEST: &str = "bad_request";
     pub const TOO_LARGE: &str = "too_large";
+    /// Load shed: dispatcher queue full, connection limit reached, or
+    /// the daemon is draining. The request was not processed; retry.
+    pub const OVERLOADED: &str = "overloaded";
     pub const INTERNAL: &str = "internal";
+
+    /// Every code the daemon can emit — the schema-stability tests
+    /// assert each round-trips through the writer + parser.
+    pub const ALL: &[&str] = &[PARSE, BAD_REQUEST, TOO_LARGE, OVERLOADED, INTERNAL];
+}
+
+/// Machine-readable reason codes for `degraded: true` responses (why the
+/// fallback placer answered instead of the policy).
+pub mod reason {
+    /// The policy forward panicked.
+    pub const POLICY_PANIC: &str = "policy_panic";
+    /// The policy forward returned an engine error.
+    pub const POLICY_ERROR: &str = "policy_error";
+    /// The forward produced non-finite logits.
+    pub const NAN_LOGITS: &str = "nan_logits";
+    /// The request's deadline expired before the policy answered.
+    pub const DEADLINE: &str = "deadline";
+    /// The circuit breaker is open: fallback-only until the cooldown
+    /// probe succeeds.
+    pub const BREAKER_OPEN: &str = "breaker_open";
+
+    pub const ALL: &[&str] =
+        &[POLICY_PANIC, POLICY_ERROR, NAN_LOGITS, DEADLINE, BREAKER_OPEN];
+
+    /// Map a wire string back to its static code (parser side).
+    pub fn from_str(s: &str) -> Option<&'static str> {
+        ALL.iter().copied().find(|&r| r == s)
+    }
 }
 
 /// A structured wire error: code + message (+ the request id when it
@@ -96,6 +136,9 @@ pub struct PlaceRequest {
     pub samples: Option<usize>,
     /// Sampling + featurization seed (daemon default when absent).
     pub seed: Option<u64>,
+    /// Answer within this budget or serve a degraded fallback
+    /// (`--default-deadline-ms` when absent; 0 = no deadline).
+    pub deadline_ms: Option<u64>,
 }
 
 /// Daemon control verbs.
@@ -104,6 +147,9 @@ pub enum ControlVerb {
     Ping,
     Stats,
     Shutdown,
+    /// Graceful drain: stop accepting new work, finish in-flight
+    /// requests, then exit and flush the metrics artifact.
+    Drain,
 }
 
 /// A parsed request frame.
@@ -133,11 +179,12 @@ pub fn parse_frame(line: &str) -> Result<Frame, WireError> {
             Some("ping") => ControlVerb::Ping,
             Some("stats") => ControlVerb::Stats,
             Some("shutdown") => ControlVerb::Shutdown,
+            Some("drain") => ControlVerb::Drain,
             other => {
                 return Err(WireError::new(
                     Some(id),
                     code::BAD_REQUEST,
-                    format!("unknown cmd {other:?} (ping|stats|shutdown)"),
+                    format!("unknown cmd {other:?} (ping|stats|shutdown|drain)"),
                 ))
             }
         };
@@ -171,6 +218,20 @@ pub fn parse_frame(line: &str) -> Result<Frame, WireError> {
                 })?,
         ),
     };
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => Some(
+            x.as_f64()
+                .filter(|&f| f >= 0.0 && f.fract() == 0.0 && f <= 86_400_000.0)
+                .map(|f| f as u64)
+                .ok_or_else(|| {
+                    fail(
+                        code::BAD_REQUEST,
+                        "\"deadline_ms\" must be an integer in [0, 86400000]".into(),
+                    )
+                })?,
+        ),
+    };
     let source = match (v.get("workload"), v.get("graph")) {
         (Some(w), None) => {
             let wid = w
@@ -190,7 +251,7 @@ pub fn parse_frame(line: &str) -> Result<Frame, WireError> {
             return Err(fail(code::BAD_REQUEST, "request needs \"workload\" or \"graph\"".into()))
         }
     };
-    Ok(Frame::Place(Box::new(PlaceRequest { id, source, samples, seed })))
+    Ok(Frame::Place(Box::new(PlaceRequest { id, source, samples, seed, deadline_ms })))
 }
 
 /// One successful placement response.
@@ -205,16 +266,21 @@ pub struct PlaceResponse {
     pub valid: bool,
     /// Served from the placement cache (no policy forward).
     pub cached: bool,
+    /// Produced by the deterministic fallback placer, not the policy
+    /// (see [`reason`] for why). Degraded answers are never cached.
+    pub degraded: bool,
+    /// Reason code when `degraded` (one of [`reason::ALL`]).
+    pub degraded_reason: Option<&'static str>,
     /// Wall time from request admission to response, milliseconds.
     pub latency_ms: f64,
     /// Real rows in the policy forward that served this request
-    /// (batch occupancy; 0 for cache hits).
+    /// (batch occupancy; 0 for cache hits and degraded answers).
     pub batch_rows: usize,
 }
 
 impl PlaceResponse {
     pub fn to_line(&self) -> String {
-        Json::obj(vec![
+        let mut fields = vec![
             ("id", Json::str(self.id.clone())),
             ("ok", Json::Bool(true)),
             (
@@ -227,10 +293,14 @@ impl PlaceResponse {
             ),
             ("valid", Json::Bool(self.valid)),
             ("cached", Json::Bool(self.cached)),
-            ("latency_ms", Json::num(self.latency_ms)),
-            ("batch_rows", Json::num(self.batch_rows as f64)),
-        ])
-        .to_string()
+            ("degraded", Json::Bool(self.degraded)),
+        ];
+        if let Some(r) = self.degraded_reason {
+            fields.push(("degraded_reason", Json::str(r)));
+        }
+        fields.push(("latency_ms", Json::num(self.latency_ms)));
+        fields.push(("batch_rows", Json::num(self.batch_rows as f64)));
+        Json::obj(fields).to_string()
     }
 }
 
@@ -250,10 +320,8 @@ pub fn parse_response(line: &str) -> Result<ResponseFrame, String> {
     if !ok {
         let e = v.get("error").ok_or("error frame missing \"error\"")?;
         let code = match e.get("code").and_then(|x| x.as_str()) {
-            Some("parse") => code::PARSE,
-            Some("bad_request") => code::BAD_REQUEST,
-            Some("too_large") => code::TOO_LARGE,
-            _ => code::INTERNAL,
+            Some(s) => code::ALL.iter().copied().find(|&c| c == s).unwrap_or(code::INTERNAL),
+            None => code::INTERNAL,
         };
         let message =
             e.get("message").and_then(|x| x.as_str()).unwrap_or_default().to_string();
@@ -279,6 +347,11 @@ pub fn parse_response(line: &str) -> Result<ResponseFrame, String> {
                 predicted_time,
                 valid: v.get("valid").and_then(|x| x.as_bool()).unwrap_or(false),
                 cached: v.get("cached").and_then(|x| x.as_bool()).unwrap_or(false),
+                degraded: v.get("degraded").and_then(|x| x.as_bool()).unwrap_or(false),
+                degraded_reason: v
+                    .get("degraded_reason")
+                    .and_then(|x| x.as_str())
+                    .and_then(reason::from_str),
                 latency_ms: v.get("latency_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
                 batch_rows: v.get("batch_rows").and_then(|x| x.as_usize()).unwrap_or(0),
             }))
@@ -447,6 +520,7 @@ mod tests {
             (ControlVerb::Ping, "ping"),
             (ControlVerb::Stats, "stats"),
             (ControlVerb::Shutdown, "shutdown"),
+            (ControlVerb::Drain, "drain"),
         ] {
             let f = parse_frame(&format!(r#"{{"id":"c","cmd":"{s}"}}"#)).unwrap();
             match f {
@@ -492,6 +566,8 @@ mod tests {
             predicted_time: Some(0.12345),
             valid: true,
             cached: true,
+            degraded: false,
+            degraded_reason: None,
             latency_ms: 1.5,
             batch_rows: 3,
         };
@@ -508,6 +584,65 @@ mod tests {
             }
             _ => panic!("expected place response"),
         }
+    }
+
+    #[test]
+    fn every_error_code_round_trips() {
+        for &c in code::ALL {
+            let e = WireError::new(Some("rid".into()), c, format!("msg for {c}"));
+            match parse_response(&e.to_line()).unwrap() {
+                ResponseFrame::Error(back) => {
+                    assert_eq!(back.code, c, "code {c} must survive the round trip");
+                    assert_eq!(back.id.as_deref(), Some("rid"));
+                    assert!(back.message.contains(c));
+                }
+                _ => panic!("expected error frame for code {c}"),
+            }
+        }
+        // unknown codes degrade to `internal`, never a parse failure
+        let line = r#"{"id":"x","ok":false,"error":{"code":"galaxy","message":"m"}}"#;
+        match parse_response(line).unwrap() {
+            ResponseFrame::Error(back) => assert_eq!(back.code, code::INTERNAL),
+            _ => panic!("expected error frame"),
+        }
+    }
+
+    #[test]
+    fn every_degraded_reason_round_trips() {
+        for &rsn in reason::ALL {
+            let r = PlaceResponse {
+                id: "d1".into(),
+                placement: vec![0, 1],
+                predicted_time: Some(0.5),
+                valid: true,
+                cached: false,
+                degraded: true,
+                degraded_reason: Some(rsn),
+                latency_ms: 2.0,
+                batch_rows: 0,
+            };
+            match parse_response(&r.to_line()).unwrap() {
+                ResponseFrame::Place(back) => {
+                    assert!(back.degraded);
+                    assert_eq!(back.degraded_reason, Some(rsn));
+                    assert_eq!(back, r);
+                }
+                _ => panic!("expected degraded place response for {rsn}"),
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_validates() {
+        let f = parse_frame(r#"{"id":"r1","workload":"gnmt4","deadline_ms":250}"#).unwrap();
+        match f {
+            Frame::Place(p) => assert_eq!(p.deadline_ms, Some(250)),
+            _ => panic!("expected place frame"),
+        }
+        let e =
+            parse_frame(r#"{"id":"r1","workload":"gnmt4","deadline_ms":-5}"#).unwrap_err();
+        assert_eq!(e.code, code::BAD_REQUEST);
+        assert!(e.message.contains("deadline_ms"), "{}", e.message);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The placement service: one warm policy engine answering concurrent
-//! placement requests with batching and caching.
+//! placement requests with batching, caching and graceful degradation.
 //!
 //! **Threading model.** Client threads (one per connection / loadgen
 //! worker) do all per-request work that parallelizes well — parsing,
@@ -16,12 +16,36 @@
 //! its batch-mates: batched answers are **bit-identical** to one-shot
 //! answers for the same checkpoint, samples and seed.
 //!
+//! **Failure semantics** (DESIGN.md §Serving / Failure semantics):
+//!
+//! - *Backpressure*: the dispatcher queue is bounded
+//!   (`queue_capacity`); at capacity new requests are shed with a
+//!   structured `overloaded` frame instead of queuing unboundedly. The
+//!   same frame answers requests arriving while the daemon drains.
+//! - *Deadlines*: a request's `deadline_ms` (or
+//!   `--default-deadline-ms`) bounds its wall time; if the policy has
+//!   not answered in time, the client thread falls back.
+//! - *Degradation*: when the policy path fails — forward panic, engine
+//!   error, non-finite logits, blown deadline, open breaker — the
+//!   request is answered by the deterministic topo-greedy placer
+//!   ([`crate::baselines::topo_greedy_place`]) with `degraded: true`
+//!   and a machine-readable reason code. Degraded answers are never
+//!   cached, so recovery is observed immediately.
+//! - *Circuit breaker*: `breaker_threshold` consecutive forward
+//!   failures open the breaker; for `breaker_cooldown_ms` every request
+//!   is served fallback-only without touching the policy, then a probe
+//!   request closes it again ([`super::breaker`]).
+//! - *Chaos hook*: a [`FaultInjector`] on the dispatcher path injects
+//!   deterministic policy faults (panic / NaN logits / latency) so all
+//!   of the above is exercisable end-to-end (`gdp loadgen --chaos`,
+//!   `--inject`).
+//!
 //! **Cache keying.** The LRU key is the permutation-invariant graph
 //! fingerprint (structure + costs + device count) mixed with the
 //! request's `samples` and `seed` — everything that determines the
 //! answer and nothing that doesn't (names, node order, request id).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -33,11 +57,13 @@ use crate::graph::{GraphBuilder, OpGraph, OpKind};
 use crate::policy::PlacementTask;
 use crate::runtime::{Batch, ParamStore, PolicyBackend};
 
+use super::breaker::{BreakerState, CircuitBreaker};
 use super::cache::{CachedPlacement, PlacementCache};
+use super::fault::{FaultInjector, FaultSpec};
 use super::fingerprint::{cache_key, graph_fingerprint};
-use super::metrics::{ServeMetrics, Snapshot};
+use super::metrics::{ExternalStats, ServeMetrics, Snapshot};
 use super::proto::{
-    self, code, ControlVerb, Frame, GraphSource, PlaceResponse, WireError,
+    self, code, reason, ControlVerb, Frame, GraphSource, PlaceResponse, WireError,
 };
 use crate::util::json::Json;
 
@@ -57,6 +83,24 @@ pub struct ServeConfig {
     pub default_seed: u64,
     /// Run synthetic warmup forwards at startup.
     pub warmup: bool,
+    /// Deadline applied when a request omits `deadline_ms` (0 = none).
+    pub default_deadline_ms: u64,
+    /// Dispatcher queue bound; requests beyond it are shed with
+    /// `overloaded` (0 = unbounded).
+    pub queue_capacity: usize,
+    /// Consecutive policy-forward failures that open the circuit
+    /// breaker (0 disables it).
+    pub breaker_threshold: usize,
+    /// How long the breaker stays open before probing again.
+    pub breaker_cooldown_ms: u64,
+    /// TCP connection cap enforced by the daemon (0 = unlimited).
+    pub max_conns: usize,
+    /// Per-connection idle read timeout enforced by the daemon,
+    /// milliseconds (0 = none).
+    pub idle_timeout_ms: u64,
+    /// Deterministic policy-fault injection (chaos harness); inactive
+    /// by default.
+    pub fault_spec: FaultSpec,
 }
 
 impl Default for ServeConfig {
@@ -68,8 +112,22 @@ impl Default for ServeConfig {
             default_samples: 8,
             default_seed: 3,
             warmup: false,
+            default_deadline_ms: 0,
+            queue_capacity: 256,
+            breaker_threshold: 5,
+            breaker_cooldown_ms: 1000,
+            max_conns: 256,
+            idle_timeout_ms: 30_000,
+            fault_spec: FaultSpec::default(),
         }
     }
+}
+
+/// Why the policy path could not answer a job (degradation reason).
+#[derive(Clone, Debug)]
+struct PolicyFailure {
+    reason: &'static str,
+    detail: String,
 }
 
 /// One admitted placement request, ready for the dispatcher.
@@ -77,7 +135,9 @@ struct Job {
     task: Arc<PlacementTask>,
     samples: usize,
     seed: u64,
-    reply: Sender<Result<(TaskBest, usize), String>>,
+    /// Absolute response deadline; expired jobs are dropped unbatched.
+    deadline: Option<Instant>,
+    reply: Sender<Result<(TaskBest, usize), PolicyFailure>>,
 }
 
 pub struct PlacementService {
@@ -87,11 +147,16 @@ pub struct PlacementService {
     cfg: ServeConfig,
     cache: Mutex<PlacementCache>,
     metrics: Mutex<ServeMetrics>,
+    breaker: Mutex<CircuitBreaker>,
+    injector: FaultInjector,
+    /// Jobs admitted but not yet dequeued by the dispatcher.
+    queued: AtomicUsize,
     /// Cloned per request; `stop()` takes it so the dispatcher drains
     /// and exits.
     tx: Mutex<Option<Sender<Job>>>,
     dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     shutdown: AtomicBool,
+    draining: AtomicBool,
 }
 
 impl PlacementService {
@@ -112,9 +177,16 @@ impl PlacementService {
             cfg: cfg.clone(),
             cache: Mutex::new(PlacementCache::new(cfg.cache_capacity)),
             metrics: Mutex::new(ServeMetrics::new(dims.b)),
+            breaker: Mutex::new(CircuitBreaker::new(
+                cfg.breaker_threshold,
+                Duration::from_millis(cfg.breaker_cooldown_ms),
+            )),
+            injector: FaultInjector::new(cfg.fault_spec),
+            queued: AtomicUsize::new(0),
             tx: Mutex::new(Some(tx)),
             dispatcher: Mutex::new(None),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
         });
         if cfg.warmup {
             let ms = svc.warmup();
@@ -149,33 +221,89 @@ impl PlacementService {
         t0.elapsed().as_secs_f64() * 1e3
     }
 
-    /// The dispatcher: batch pending jobs into one forward.
+    /// The dispatcher: batch pending jobs into one forward. Jobs whose
+    /// deadline already expired are dropped before batching (their
+    /// client thread has moved on to the fallback). A failed forward —
+    /// injected or real panic, engine error, non-finite logits — feeds
+    /// the circuit breaker and sends the failure reason to every
+    /// batch-mate, whose client threads answer degraded.
     fn dispatch_loop(&self, rx: Receiver<Job>) {
         let dims = self.policy.manifest().dims;
         let window = Duration::from_millis(self.cfg.batch_window_ms);
         while let Ok(first) = rx.recv() {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
             let mut jobs = vec![first];
             let deadline = Instant::now() + window;
             while jobs.len() < dims.b {
                 let left = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(left) {
-                    Ok(j) => jobs.push(j),
+                    Ok(j) => {
+                        self.queued.fetch_sub(1, Ordering::SeqCst);
+                        jobs.push(j);
+                    }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => break,
                 }
             }
+            // Drop jobs that can no longer make their deadline; their
+            // reply receiver has already timed out client-side.
+            let now = Instant::now();
+            let before = jobs.len();
+            jobs.retain(|j| j.deadline.map(|d| now < d).unwrap_or(true));
+            let expired = before - jobs.len();
+            if expired > 0 {
+                let mut m = self.metrics.lock().unwrap();
+                for _ in 0..expired {
+                    m.record_deadline_expired();
+                }
+            }
+            if jobs.is_empty() {
+                continue;
+            }
+
+            let fwd_idx = self.injector.next_forward();
             let rows: Vec<&crate::graph::features::GraphFeatures> =
                 jobs.iter().map(|j| &j.task.feats).collect();
-            let logits = Batch::from_rows(self.policy.manifest(), &rows)
-                .and_then(|batch| self.policy.forward(&self.store, &batch));
-            match logits {
-                Err(e) => {
-                    let msg = format!("policy forward failed: {e:#}");
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.injector.before_forward(fwd_idx);
+                Batch::from_rows(self.policy.manifest(), &rows)
+                    .and_then(|batch| self.policy.forward(&self.store, &batch))
+            }));
+            let outcome: Result<Vec<f32>, PolicyFailure> = match run {
+                Err(panic) => Err(PolicyFailure {
+                    reason: reason::POLICY_PANIC,
+                    detail: panic
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "policy forward panicked".into()),
+                }),
+                Ok(Err(e)) => Err(PolicyFailure {
+                    reason: reason::POLICY_ERROR,
+                    detail: format!("policy forward failed: {e:#}"),
+                }),
+                Ok(Ok(mut logits)) => {
+                    self.injector.poison_logits(fwd_idx, &mut logits);
+                    if logits.iter().any(|x| !x.is_finite()) {
+                        Err(PolicyFailure {
+                            reason: reason::NAN_LOGITS,
+                            detail: "policy forward produced non-finite logits".into(),
+                        })
+                    } else {
+                        Ok(logits)
+                    }
+                }
+            };
+            match outcome {
+                Err(failure) => {
+                    self.metrics.lock().unwrap().record_policy_failure();
+                    self.breaker.lock().unwrap().on_failure();
                     for j in &jobs {
-                        let _ = j.reply.send(Err(msg.clone()));
+                        let _ = j.reply.send(Err(failure.clone()));
                     }
                 }
                 Ok(logits) => {
+                    self.breaker.lock().unwrap().on_success();
                     self.metrics.lock().unwrap().record_forward(jobs.len());
                     let stride = dims.n * dims.d;
                     for (i, j) in jobs.iter().enumerate() {
@@ -217,7 +345,11 @@ impl PlacementService {
                 match out {
                     Ok(Ok(resp)) => resp.to_line(),
                     Ok(Err(e)) => {
-                        self.metrics.lock().unwrap().record_error();
+                        // Shed responses count via record_shed at the
+                        // shed site; everything else is a plain error.
+                        if e.code != code::OVERLOADED {
+                            self.metrics.lock().unwrap().record_error();
+                        }
                         e.to_line()
                     }
                     Err(panic) => {
@@ -247,8 +379,42 @@ impl PlacementService {
             ControlVerb::Shutdown => {
                 self.shutdown.store(true, Ordering::SeqCst);
             }
+            ControlVerb::Drain => {
+                self.draining.store(true, Ordering::SeqCst);
+                fields.push(("draining", Json::Bool(true)));
+            }
         }
         Json::obj(fields).to_string()
+    }
+
+    /// Answer with the deterministic topo-greedy fallback placer: always
+    /// computable, no policy, no RNG — bit-deterministic per graph.
+    fn fallback_response(
+        &self,
+        id: String,
+        graph: &OpGraph,
+        why: &'static str,
+        t0: Instant,
+    ) -> PlaceResponse {
+        let placement = crate::baselines::topo_greedy_place(graph);
+        let rep = crate::sim::simulate_default(graph, &placement.devices);
+        let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.record_request(latency_ms, false);
+            m.record_degraded(why);
+        }
+        PlaceResponse {
+            id,
+            placement: placement.devices,
+            predicted_time: if rep.valid { Some(rep.step_time) } else { None },
+            valid: rep.valid,
+            cached: false,
+            degraded: true,
+            degraded_reason: Some(why),
+            latency_ms,
+            batch_rows: 0,
+        }
     }
 
     fn place(
@@ -261,6 +427,13 @@ impl PlacementService {
             let id = id.clone();
             move |c, m: String| WireError::new(Some(id.clone()), c, m)
         };
+        if self.draining.load(Ordering::SeqCst) {
+            self.metrics.lock().unwrap().record_shed();
+            return Err(fail(
+                code::OVERLOADED,
+                "daemon is draining: not accepting new requests".into(),
+            ));
+        }
         let (task_id, graph): (String, OpGraph) = match req.source {
             GraphSource::Workload(wid) => {
                 let g = crate::workloads::by_id(&wid).ok_or_else(|| {
@@ -287,6 +460,9 @@ impl PlacementService {
         }
         let samples = req.samples.unwrap_or(self.cfg.default_samples);
         let seed = req.seed.unwrap_or(self.cfg.default_seed);
+        let deadline_ms = req.deadline_ms.unwrap_or(self.cfg.default_deadline_ms);
+        let deadline =
+            (deadline_ms > 0).then(|| t0 + Duration::from_millis(deadline_ms));
         let key = cache_key(graph_fingerprint(&graph), samples, seed);
 
         if let Some(hit) = self.cache.lock().unwrap().get(key) {
@@ -298,9 +474,33 @@ impl PlacementService {
                 predicted_time: hit.predicted_time,
                 valid: hit.valid,
                 cached: true,
+                degraded: false,
+                degraded_reason: None,
                 latency_ms,
                 batch_rows: 0,
             });
+        }
+
+        // Open breaker: fallback-only, the policy is not consulted at
+        // all (allow_policy also performs the Open -> HalfOpen probe
+        // transition once the cooldown expires).
+        if !self.breaker.lock().unwrap().allow_policy() {
+            return Ok(self.fallback_response(id, &graph, reason::BREAKER_OPEN, t0));
+        }
+
+        // Bounded queue: atomically reserve a slot (released by the
+        // dispatcher on dequeue) or shed instead of queuing unboundedly.
+        let prev = self.queued.fetch_add(1, Ordering::SeqCst);
+        if self.cfg.queue_capacity > 0 && prev >= self.cfg.queue_capacity {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.lock().unwrap().record_shed();
+            return Err(fail(
+                code::OVERLOADED,
+                format!(
+                    "dispatcher queue full ({} pending) — retry later",
+                    self.cfg.queue_capacity
+                ),
+            ));
         }
 
         // Miss: prepare on this thread (parallel across clients), then
@@ -316,16 +516,68 @@ impl PlacementService {
         let (reply_tx, reply_rx) = mpsc::channel();
         {
             let guard = self.tx.lock().unwrap();
-            let tx = guard.as_ref().ok_or_else(|| {
-                fail(code::INTERNAL, "service is shutting down".into())
-            })?;
-            tx.send(Job { task: Arc::clone(&task), samples, seed, reply: reply_tx })
-                .map_err(|_| fail(code::INTERNAL, "dispatcher is gone".into()))?;
+            let tx = match guard.as_ref() {
+                Some(tx) => tx,
+                None => {
+                    self.queued.fetch_sub(1, Ordering::SeqCst);
+                    return Err(fail(
+                        code::INTERNAL,
+                        "service is shutting down".into(),
+                    ));
+                }
+            };
+            if tx
+                .send(Job {
+                    task: Arc::clone(&task),
+                    samples,
+                    seed,
+                    deadline,
+                    reply: reply_tx,
+                })
+                .is_err()
+            {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                return Err(fail(code::INTERNAL, "dispatcher is gone".into()));
+            }
         }
-        let (best, batch_rows) = reply_rx
-            .recv()
-            .map_err(|_| fail(code::INTERNAL, "dispatcher dropped the request".into()))?
-            .map_err(|e| fail(code::INTERNAL, e))?;
+        let answer = match deadline {
+            Some(d) => {
+                match reply_rx.recv_timeout(d.saturating_duration_since(Instant::now()))
+                {
+                    Ok(r) => Some(r),
+                    // Timeout, or the dispatcher dropped the expired job:
+                    // either way the deadline decides the answer.
+                    Err(_) => None,
+                }
+            }
+            None => match reply_rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => {
+                    return Err(fail(
+                        code::INTERNAL,
+                        "dispatcher dropped the request".into(),
+                    ))
+                }
+            },
+        };
+        let (best, batch_rows) = match answer {
+            None => {
+                return Ok(self.fallback_response(
+                    id,
+                    &task.graph,
+                    reason::DEADLINE,
+                    t0,
+                ))
+            }
+            Some(Err(failure)) => {
+                // Policy failed for this batch; degrade deterministically.
+                let resp =
+                    self.fallback_response(id, &task.graph, failure.reason, t0);
+                let _ = failure.detail; // carried for logs/debugging
+                return Ok(resp);
+            }
+            Some(Ok(r)) => r,
+        };
 
         let predicted_time = best.best_valid.then_some(best.best_time);
         let cached = CachedPlacement {
@@ -342,23 +594,63 @@ impl PlacementService {
             predicted_time,
             valid: best.best_valid,
             cached: false,
+            degraded: false,
+            degraded_reason: None,
             latency_ms,
             batch_rows,
         })
     }
 
-    /// Point-in-time metrics (cache counters folded in).
+    /// Point-in-time metrics (cache, breaker and injector counters
+    /// folded in).
     pub fn snapshot(&self) -> Snapshot {
-        let (rate, entries, evictions) = {
+        let (cache_hit_rate, cache_entries, cache_evictions) = {
             let c = self.cache.lock().unwrap();
             (c.hit_rate(), c.len(), c.evictions())
         };
-        self.metrics.lock().unwrap().snapshot(rate, entries, evictions)
+        let (breaker_state, breaker_trips, breaker_recoveries) = {
+            let b = self.breaker.lock().unwrap();
+            let s = match b.state() {
+                BreakerState::Closed => 0u8,
+                BreakerState::Open => 1,
+                BreakerState::HalfOpen => 2,
+            };
+            (s, b.trips, b.recoveries)
+        };
+        self.metrics.lock().unwrap().snapshot(ExternalStats {
+            cache_hit_rate,
+            cache_entries,
+            cache_evictions,
+            faults_injected: self.injector.injected(),
+            breaker_state,
+            breaker_trips,
+            breaker_recoveries,
+        })
     }
 
     /// Set by the `shutdown` control verb; transports poll it.
     pub fn shutdown_requested(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Set by the `drain` control verb or a signal: stop accepting new
+    /// work, finish in-flight requests, then exit and flush metrics.
+    pub fn drain_requested(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Begin a graceful drain (the signal handler path).
+    pub fn request_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Transport-level accounting (the daemon owns the sockets).
+    pub fn note_conn_rejected(&self) {
+        self.metrics.lock().unwrap().record_conn_rejected();
+    }
+
+    pub fn note_read_timeout(&self) {
+        self.metrics.lock().unwrap().record_read_timeout();
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -418,21 +710,26 @@ mod tests {
         PlacementService::start(session.shared_policy(), store, cfg)
     }
 
+    fn place_of(line: &str) -> PlaceResponse {
+        match proto::parse_response(line).unwrap() {
+            proto::ResponseFrame::Place(p) => p,
+            other => {
+                let _ = other;
+                panic!("expected placement: {line}")
+            }
+        }
+    }
+
     #[test]
     fn serves_workload_and_caches_repeat() {
         let svc = service(ServeConfig { warmup: false, ..Default::default() });
         let r1 = svc.call(r#"{"id":"a","workload":"inception","samples":1,"seed":3}"#);
         let r2 = svc.call(r#"{"id":"b","workload":"inception","samples":1,"seed":3}"#);
-        let p1 = match proto::parse_response(&r1).unwrap() {
-            proto::ResponseFrame::Place(p) => p,
-            _ => panic!("expected placement: {r1}"),
-        };
-        let p2 = match proto::parse_response(&r2).unwrap() {
-            proto::ResponseFrame::Place(p) => p,
-            _ => panic!("expected placement: {r2}"),
-        };
+        let p1 = place_of(&r1);
+        let p2 = place_of(&r2);
         assert!(!p1.cached);
         assert!(p2.cached);
+        assert!(!p1.degraded && !p2.degraded);
         assert_eq!(p1.placement, p2.placement);
         assert_eq!(p1.predicted_time, p2.predicted_time);
         assert!(p1.batch_rows >= 1);
@@ -478,11 +775,174 @@ mod tests {
             proto::ResponseFrame::Ack { stats, .. } => {
                 let stats = stats.expect("stats payload");
                 assert!(stats.get("requests").is_some());
+                assert!(stats.get("degraded").is_some());
+                assert!(stats.get("breaker_state").is_some());
             }
             _ => panic!("expected ack: {s}"),
         }
         svc.call(r#"{"id":"q","cmd":"shutdown"}"#);
         assert!(svc.shutdown_requested());
+        svc.stop();
+    }
+
+    #[test]
+    fn policy_panic_degrades_deterministically() {
+        // Every forward panics; breaker disabled so the reason stays
+        // policy_panic. Cache off so the repeat re-runs the fallback.
+        let cfg = ServeConfig {
+            warmup: false,
+            cache_capacity: 0,
+            breaker_threshold: 0,
+            fault_spec: FaultSpec::parse("panic=1").unwrap(),
+            ..Default::default()
+        };
+        let svc = service(cfg);
+        let line = r#"{"id":"d","workload":"gnmt4","samples":1,"seed":3}"#;
+        let p1 = place_of(&svc.call(line));
+        let p2 = place_of(&svc.call(line));
+        assert!(p1.degraded && p2.degraded);
+        assert_eq!(p1.degraded_reason, Some(reason::POLICY_PANIC));
+        assert_eq!(p1.placement, p2.placement, "fallback must be deterministic");
+        assert_eq!(
+            p1.predicted_time.map(f64::to_bits),
+            p2.predicted_time.map(f64::to_bits),
+            "predicted time must be bit-identical"
+        );
+        // and identical to calling the fallback placer directly
+        let g = crate::workloads::by_id("gnmt4").unwrap();
+        let direct = crate::baselines::topo_greedy_place(&g);
+        assert_eq!(p1.placement, direct.devices);
+        let snap = svc.snapshot();
+        assert_eq!(snap.degraded, 2);
+        assert_eq!(snap.degraded_policy, 2);
+        assert_eq!(snap.policy_failures, 2);
+        assert!(snap.faults_injected >= 2);
+        svc.stop();
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures() {
+        let cfg = ServeConfig {
+            warmup: false,
+            cache_capacity: 0,
+            breaker_threshold: 2,
+            breaker_cooldown_ms: 60_000, // stays open for the whole test
+            fault_spec: FaultSpec::parse("panic=1").unwrap(),
+            ..Default::default()
+        };
+        let svc = service(cfg);
+        let line = r#"{"id":"b","workload":"inception","samples":1,"seed":3}"#;
+        let p1 = place_of(&svc.call(line));
+        let p2 = place_of(&svc.call(line));
+        assert_eq!(p1.degraded_reason, Some(reason::POLICY_PANIC));
+        assert_eq!(p2.degraded_reason, Some(reason::POLICY_PANIC));
+        // Third request: breaker is open, policy never consulted.
+        let p3 = place_of(&svc.call(line));
+        assert_eq!(p3.degraded_reason, Some(reason::BREAKER_OPEN));
+        let snap = svc.snapshot();
+        assert_eq!(snap.breaker_trips, 1);
+        assert_eq!(snap.breaker_state, 1, "open");
+        assert_eq!(snap.policy_failures, 2, "open breaker stops forwards");
+        assert_eq!(snap.degraded_breaker, 1);
+        svc.stop();
+    }
+
+    #[test]
+    fn breaker_recovers_after_cooldown() {
+        let cfg = ServeConfig {
+            warmup: false,
+            cache_capacity: 0,
+            breaker_threshold: 1,
+            breaker_cooldown_ms: 50,
+            // exactly one failing forward (burst 1, then never again)
+            fault_spec: FaultSpec::parse("panic=1000000:1").unwrap(),
+            ..Default::default()
+        };
+        let svc = service(cfg);
+        let line = r#"{"id":"r","workload":"inception","samples":1,"seed":3}"#;
+        let p1 = place_of(&svc.call(line));
+        assert!(p1.degraded, "first forward panics");
+        std::thread::sleep(Duration::from_millis(80));
+        // Probe succeeds: healthy, undegraded answer again.
+        let p2 = place_of(&svc.call(line));
+        assert!(!p2.degraded, "probe closed the breaker: {p2:?}");
+        let snap = svc.snapshot();
+        assert_eq!(snap.breaker_trips, 1);
+        assert_eq!(snap.breaker_recoveries, 1);
+        assert_eq!(snap.breaker_state, 0, "closed again");
+        svc.stop();
+    }
+
+    #[test]
+    fn deadline_blown_falls_back() {
+        let cfg = ServeConfig {
+            warmup: false,
+            cache_capacity: 0,
+            breaker_threshold: 0,
+            fault_spec: FaultSpec::parse("slow=1:400").unwrap(),
+            ..Default::default()
+        };
+        let svc = service(cfg);
+        let p = place_of(
+            &svc.call(r#"{"id":"t","workload":"inception","samples":1,"deadline_ms":40}"#),
+        );
+        assert!(p.degraded);
+        assert_eq!(p.degraded_reason, Some(reason::DEADLINE));
+        assert!(
+            p.latency_ms < 350.0,
+            "deadline must answer before the slow forward: {}ms",
+            p.latency_ms
+        );
+        let snap = svc.snapshot();
+        assert_eq!(snap.degraded_deadline, 1);
+        svc.stop();
+    }
+
+    #[test]
+    fn queue_full_sheds_with_overloaded() {
+        let cfg = ServeConfig {
+            warmup: false,
+            cache_capacity: 0,
+            queue_capacity: 1,
+            breaker_threshold: 0,
+            batch_window_ms: 0,
+            fault_spec: FaultSpec::parse("slow=1:300").unwrap(),
+            ..Default::default()
+        };
+        let svc = service(cfg);
+        let line = r#"{"id":"q","workload":"inception","samples":1,"seed":3}"#;
+        let responses: Vec<String> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let svc = Arc::clone(&svc);
+                    s.spawn(move || svc.call(line))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let shed = responses.iter().filter(|r| r.contains("overloaded")).count();
+        let served = responses.len() - shed;
+        assert!(shed >= 1, "expected at least one shed: {responses:?}");
+        assert!(served >= 1, "expected at least one served: {responses:?}");
+        let snap = svc.snapshot();
+        assert_eq!(snap.shed as usize, shed);
+        svc.stop();
+    }
+
+    #[test]
+    fn drain_rejects_new_work_but_answers_control() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
+        let ack = svc.call(r#"{"id":"d","cmd":"drain"}"#);
+        assert!(ack.contains("draining"), "{ack}");
+        assert!(svc.drain_requested());
+        let e = svc.call(r#"{"id":"n","workload":"inception"}"#);
+        assert!(e.contains("overloaded"), "{e}");
+        assert!(e.contains("draining"), "{e}");
+        // control plane still answers
+        let ok = svc.call(r#"{"id":"p","cmd":"ping"}"#);
+        assert!(ok.contains("true"), "{ok}");
+        let snap = svc.snapshot();
+        assert_eq!(snap.shed, 1);
         svc.stop();
     }
 }

@@ -5,7 +5,8 @@
 use std::collections::BTreeMap;
 
 /// Flags that never take a value (`--quick target` must not eat `target`).
-const BOOL_FLAGS: &[&str] = &["quick", "quiet", "verbose", "help", "unfrozen", "warmup"];
+const BOOL_FLAGS: &[&str] =
+    &["quick", "quiet", "verbose", "help", "unfrozen", "warmup", "resume"];
 
 #[derive(Debug, Default)]
 pub struct Args {

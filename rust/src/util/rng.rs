@@ -30,6 +30,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw generator state, for crash-safe checkpointing. Restoring
+    /// with [`Self::from_state`] continues the exact stream.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator mid-stream (inverse of [`Self::state`]).
+    pub fn from_state(s: [u64; 4]) -> Self {
+        assert!(s.iter().any(|&x| x != 0), "xoshiro state must be non-zero");
+        Self { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]

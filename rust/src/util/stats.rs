@@ -29,6 +29,18 @@ impl Ema {
     pub fn get(&self) -> f64 {
         self.value.unwrap_or(0.0)
     }
+
+    /// The raw state (None before the first observation) — checkpointed
+    /// by the crash-safe training path.
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    /// Rebuild an EMA from checkpointed state (inverse of [`Self::value`]).
+    pub fn restore(alpha: f64, value: Option<f64>) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value }
+    }
 }
 
 /// Tracks the best (lowest) objective seen and the number of candidate

@@ -1,0 +1,165 @@
+//! Crash-safe training regression tests (ISSUE 7 tentpole, part 4):
+//!
+//! - kill-and-resume: a pre-train run interrupted mid-flight (simulated
+//!   crash via `halt_after`) and resumed from its periodic autosave must
+//!   end with parameters **bit-identical** to an uninterrupted run —
+//!   values, Adam moments, and the incumbent placements all match;
+//! - non-finite guard: a poisoned batch (NaN advantage) must be skipped
+//!   with parameters and optimizer state rolled back bit-exactly to the
+//!   pre-step snapshot;
+//! - autosave files are written atomically (no `.tmp` debris).
+
+use std::path::{Path, PathBuf};
+
+use gdp::coordinator::{generalize, AutosaveCfg, Session, TrainConfig};
+use gdp::runtime::ParamStore;
+use gdp::workloads::corpus::{pretrain_corpus, CorpusLevel};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gdp_crash_it_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn session() -> Session {
+    Session::open(Path::new("artifacts"), "full").expect("native session")
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig { steps, verbose: false, ..Default::default() }
+}
+
+/// Bitwise equality over params + Adam moments + optimizer step.
+fn assert_stores_bit_identical(a: &ParamStore, b: &ParamStore, what: &str) {
+    assert_eq!(a.step.to_bits(), b.step.to_bits(), "{what}: optimizer step");
+    for (section, (xs, ys)) in
+        [(&a.values, &b.values), (&a.m, &b.m), (&a.v, &b.v)]
+            .iter()
+            .enumerate()
+    {
+        for (i, (x, y)) in xs.iter().zip(ys.iter()).enumerate() {
+            let xf = x.f32_slice().unwrap();
+            let yf = y.f32_slice().unwrap();
+            for (j, (p, q)) in xf.iter().zip(yf).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "{what}: section {section} tensor {i} element {j} differs"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn killed_pretrain_resumes_bit_identical() {
+    let dir = tmpdir("resume");
+    let auto = dir.join("train.ckpt");
+    let _ = std::fs::remove_file(&auto);
+    let session = session();
+    let items = pretrain_corpus(CorpusLevel::Base);
+    let items = &items[..2.min(items.len())];
+    let steps = 6;
+
+    // Reference: uninterrupted run.
+    let (ref_store, ref_result) =
+        generalize::pretrain(&session, items, &cfg(steps)).unwrap();
+
+    // Crash: autosave every 2 steps, die before step 3 (steps 0..3 ran,
+    // last autosave at step-boundary 2).
+    let mut crash_cfg = cfg(steps);
+    crash_cfg.autosave = Some(AutosaveCfg { path: auto.clone(), every: 2 });
+    crash_cfg.halt_after = Some(3);
+    let err = generalize::pretrain(&session, items, &crash_cfg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("simulated crash"), "unexpected error: {err}");
+    assert!(auto.exists(), "autosave missing after crash");
+    let mut tmp = auto.clone().into_os_string();
+    tmp.push(".tmp");
+    assert!(
+        !PathBuf::from(tmp).exists(),
+        "autosave left a .tmp file — write is not atomic"
+    );
+
+    // Recover: resume from the autosave, run to completion.
+    let (store, state) = session.load_train_checkpoint(&auto).unwrap();
+    assert_eq!(state.next_step, 2, "expected the step-2 autosave");
+    let mut resume_cfg = cfg(steps);
+    resume_cfg.autosave = Some(AutosaveCfg { path: auto.clone(), every: 2 });
+    let (res_store, res_result) =
+        generalize::pretrain_from(&session, items, &resume_cfg, Some((store, state)))
+            .unwrap();
+
+    assert_stores_bit_identical(&ref_store, &res_store, "resumed vs uninterrupted");
+    assert_eq!(res_result.per_task.len(), ref_result.per_task.len());
+    for (r, u) in res_result.per_task.iter().zip(&ref_result.per_task) {
+        assert_eq!(r.task_id, u.task_id);
+        assert_eq!(
+            r.best_time.to_bits(),
+            u.best_time.to_bits(),
+            "{}: incumbent objective diverged",
+            r.task_id
+        );
+        assert_eq!(
+            r.best_placement.devices, u.best_placement.devices,
+            "{}: incumbent placement diverged",
+            r.task_id
+        );
+    }
+    // The resumed run only executed the remaining steps.
+    assert_eq!(res_result.history.len(), steps - 2);
+    assert_eq!(res_result.history.first().unwrap().step, 2);
+
+    // A second resume from the completed run's final autosave is a no-op
+    // that returns the same parameters.
+    let (store2, state2) = session.load_train_checkpoint(&auto).unwrap();
+    assert_eq!(state2.next_step, steps);
+    let (noop_store, noop_result) = generalize::pretrain_from(
+        &session,
+        items,
+        &cfg(steps),
+        Some((store2, state2)),
+    )
+    .unwrap();
+    assert!(noop_result.history.is_empty());
+    assert_stores_bit_identical(&ref_store, &noop_store, "no-op resume");
+}
+
+#[test]
+fn poisoned_batch_is_skipped_with_params_rolled_back() {
+    let session = session();
+    let task = session.task("rnnlm2", 0).unwrap();
+    let mut store_clean = session.init_params().unwrap();
+    let mut store_poisoned = session.init_params().unwrap();
+
+    // Reference: 2 clean steps.
+    let clean = gdp::coordinator::train(
+        &*session.policy,
+        &mut store_clean,
+        std::slice::from_ref(&task),
+        &cfg(2),
+    )
+    .unwrap();
+    assert_eq!(clean.skipped_batches, 0);
+
+    // 3 steps with step 2 (the last) poisoned: its update must be
+    // discarded, leaving parameters exactly where the 2-step run ended.
+    let mut poison_cfg = cfg(3);
+    poison_cfg.inject_nan_step = Some(2);
+    let poisoned = gdp::coordinator::train(
+        &*session.policy,
+        &mut store_poisoned,
+        std::slice::from_ref(&task),
+        &poison_cfg,
+    )
+    .unwrap();
+    assert_eq!(poisoned.skipped_batches, 1, "NaN batch not skipped");
+    assert_stores_bit_identical(
+        &store_clean,
+        &store_poisoned,
+        "post-rollback params",
+    );
+    // The skipped step contributes no history entry.
+    assert_eq!(poisoned.history.len(), 2);
+}

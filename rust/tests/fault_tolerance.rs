@@ -1,0 +1,140 @@
+//! Fault-tolerance regression tests over the public serve API (ISSUE 7):
+//!
+//! - the placement LRU stays coherent under concurrent hit/evict races
+//!   (tiny capacity, many threads, workloads deliberately thrashing);
+//! - the error-frame schema is stable: every failure mode answers
+//!   `{"id"?, "ok":false, "error":{"code","message"}}` with a code from
+//!   the published set, and the daemon keeps serving afterwards;
+//! - degraded answers are bit-deterministic: with the policy forced to
+//!   panic, repeated identical requests return identical fallback
+//!   placements equal to the deterministic topo-greedy placer's output.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use gdp::baselines::topo_greedy_place;
+use gdp::coordinator::Session;
+use gdp::serve::proto::{self, PlaceResponse, ResponseFrame};
+use gdp::serve::{FaultSpec, PlacementService, ServeConfig};
+
+fn service(cfg: ServeConfig) -> Arc<PlacementService> {
+    let session =
+        Session::open(Path::new("artifacts"), "full").expect("native session");
+    let store = session.init_params().expect("init params");
+    PlacementService::start(session.shared_policy(), store, cfg)
+}
+
+fn place_of(line: &str) -> PlaceResponse {
+    match proto::parse_response(line) {
+        Ok(ResponseFrame::Place(p)) => p,
+        _ => panic!("expected placement frame: {line}"),
+    }
+}
+
+#[test]
+fn concurrent_cache_hits_and_evictions_stay_coherent() {
+    // Capacity 2 with 3 distinct graphs: every thread alternates between
+    // hitting and evicting, racing insert-vs-lookup on the shared LRU.
+    let svc = service(ServeConfig {
+        warmup: false,
+        cache_capacity: 2,
+        ..Default::default()
+    });
+    let mix = ["inception", "rnnlm2", "gnmt4"];
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            let mut served = 0usize;
+            for i in 0..12 {
+                let wl = mix[(t + i) % mix.len()];
+                let line = format!(
+                    r#"{{"id":"t{t}i{i}","workload":"{wl}","samples":1,"seed":3}}"#
+                );
+                let p = place_of(&svc.call(&line));
+                assert!(!p.placement.is_empty(), "empty placement");
+                assert!(!p.degraded, "unexpected degraded answer");
+                served += 1;
+            }
+            served
+        }));
+    }
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(served, 72);
+    let snap = svc.snapshot();
+    assert_eq!(snap.requests, 72);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.cache_entries, 2, "LRU exceeded its capacity");
+    assert!(snap.cache_evictions >= 1, "three graphs must evict at least once");
+    assert!(snap.cached >= 1, "no request was ever served from cache");
+    // Same workload + samples + seed => identical answer, cached or not.
+    let pa = place_of(&svc.call(r#"{"id":"x","workload":"inception","samples":1,"seed":3}"#));
+    let pb = place_of(&svc.call(r#"{"id":"y","workload":"inception","samples":1,"seed":3}"#));
+    assert_eq!(pa.placement, pb.placement);
+    svc.stop();
+}
+
+#[test]
+fn error_frame_schema_is_stable() {
+    let svc = service(ServeConfig {
+        warmup: false,
+        max_nodes: 3,
+        ..Default::default()
+    });
+    // (input, expected code) — one per failure mode reachable in-proc.
+    let big = format!(
+        r#"{{"id":"big","graph":{}}}"#,
+        proto::graph_to_json(&gdp::workloads::by_id("inception").unwrap())
+    );
+    let cases: Vec<(String, &str)> = vec![
+        ("{broken".into(), proto::code::PARSE),
+        (r#"{"id":"u","workload":"nope"}"#.into(), proto::code::BAD_REQUEST),
+        (r#"{"id":"n"}"#.into(), proto::code::BAD_REQUEST),
+        (big, proto::code::TOO_LARGE),
+        (r#"{"id":"c","cmd":"reboot"}"#.into(), proto::code::BAD_REQUEST),
+    ];
+    for (line, want) in &cases {
+        let resp = svc.call(line);
+        match proto::parse_response(&resp) {
+            Ok(ResponseFrame::Error(e)) => {
+                assert_eq!(&e.code, want, "wrong code for {line}: {resp}");
+                assert!(
+                    proto::code::ALL.contains(&e.code),
+                    "unpublished error code {:?}",
+                    e.code
+                );
+                assert!(!e.message.is_empty(), "empty message: {resp}");
+            }
+            _ => panic!("expected error frame for {line}, got {resp}"),
+        }
+    }
+    // The daemon survives every malformed input above.
+    let _ = place_of(&svc.call(r#"{"id":"after","workload":"inception","samples":1}"#));
+    let snap = svc.snapshot();
+    assert_eq!(snap.errors, cases.len() as u64);
+    svc.stop();
+}
+
+#[test]
+fn degraded_answers_are_bit_deterministic() {
+    // Policy panics on every forward; breaker disabled so each request
+    // exercises the full panic -> fallback path; cache off so nothing is
+    // memoized between the two calls.
+    let svc = service(ServeConfig {
+        warmup: false,
+        cache_capacity: 0,
+        breaker_threshold: 0,
+        fault_spec: FaultSpec::parse("panic=1").unwrap(),
+        ..Default::default()
+    });
+    let req = r#"{"id":"d","workload":"gnmt4","samples":1,"seed":3}"#;
+    let pa = place_of(&svc.call(req));
+    let pb = place_of(&svc.call(req));
+    assert!(pa.degraded && pb.degraded);
+    assert_eq!(pa.degraded_reason, Some(proto::reason::POLICY_PANIC));
+    assert_eq!(pa.placement, pb.placement, "degraded answers diverged");
+    // ... and both equal the deterministic fallback placer run directly.
+    let g = gdp::workloads::by_id("gnmt4").unwrap();
+    assert_eq!(pa.placement, topo_greedy_place(&g).devices);
+    svc.stop();
+}
