@@ -6,16 +6,21 @@
 //! this reproduction the AOT shape is fixed at N=256, so larger graphs are
 //! coarsened first and the coarse placement is expanded back to every
 //! original op (all members of a coarse node share its device — exactly the
-//! effect of TF colocation groups). Three phases, each cycle-safe:
+//! effect of TF colocation groups). Four phases, each cycle-safe:
 //!
 //! 1. **Chain contraction** — merge u→v when out_deg(u)==1 and
 //!    in_deg(v)==1 (linear pipelines, the bulk of recurrent graphs).
 //! 2. **Same-level matching** — merge node pairs on the same topological
 //!    level (no path can exist between them, so no cycle can form),
 //!    preferring same-layer, small-flops pairs to keep balance.
-//! 3. **Level-bucket collapse** — guaranteed-progress fallback: partition
-//!    topological levels into `target` contiguous buckets and merge each
-//!    (layer, bucket) group.
+//! 3. **Level-bucket collapse** — partition topological levels into
+//!    `target` contiguous buckets and merge each (layer, bucket) group.
+//! 4. **Topo-rank block merge** — the hard guarantee: when layer
+//!    diversity defeats phase 3 (more distinct layers than `target`,
+//!    as arbitrary imported graphs can have), collapse contiguous
+//!    topological-rank blocks regardless of layer. Edges only go from
+//!    lower to higher rank, so block ids are non-decreasing along every
+//!    edge and the result is always a DAG with at most `target` nodes.
 
 use super::{OpGraph, OpKind, OpNode};
 use std::collections::HashMap;
@@ -96,57 +101,68 @@ impl Uf {
     }
 }
 
-/// Rebuild a coarse OpGraph from a union-find over `g`.
+/// Rebuild a coarse OpGraph from a union-find over `g`. O(n + e): one
+/// pass resolves every node's root, one pass aggregates attributes into
+/// its dense coarse node, one pass dedups edges — the per-root rescan
+/// this used to do was O(roots * n), which the fuzzer's 100k-node DAGs
+/// turned into minutes of rebuild time.
 fn rebuild(g: &OpGraph, uf: &mut Uf, members_of: &[Vec<u32>]) -> (OpGraph, Vec<Vec<u32>>) {
-    // Map roots -> dense coarse ids, ordered by min original id for
-    // determinism.
-    let mut roots: Vec<u32> = (0..g.n() as u32)
-        .filter(|&i| uf.find(i) == i)
-        .collect();
-    roots.sort_unstable();
-    let mut dense: HashMap<u32, u32> = HashMap::new();
-    for (ci, &r) in roots.iter().enumerate() {
-        dense.insert(r, ci as u32);
+    let n = g.n();
+    let mut root_of = vec![0u32; n];
+    for i in 0..n as u32 {
+        root_of[i as usize] = uf.find(i);
     }
-
-    let mut members: Vec<Vec<u32>> = vec![vec![]; roots.len()];
-    for i in 0..g.n() as u32 {
-        let c = dense[&uf.find(i)];
-        members[c as usize].extend_from_slice(&members_of[i as usize]);
-    }
-
-    let mut cg = OpGraph::new(g.name.clone(), g.num_devices);
-    for (ci, _) in roots.iter().enumerate() {
-        // Aggregate merged node attributes over the CURRENT graph's
-        // constituents (members[] maps to ORIGINAL ids and is only used for
-        // placement expansion). Representative = max-flops node.
-        let mut node = OpNode::new(String::new(), OpKind::Elementwise);
-        let mut best_flops = -1.0f64;
-        let mut layer_min = u32::MAX;
-        for i in 0..g.n() as u32 {
-            if dense[&uf.find(i)] != ci as u32 {
-                continue;
-            }
-            let src = &g.nodes[i as usize];
-            node.flops += src.flops;
-            node.param_bytes += src.param_bytes;
-            node.output_bytes = node.output_bytes.max(src.output_bytes);
-            layer_min = layer_min.min(src.layer);
-            if src.flops > best_flops {
-                best_flops = src.flops;
-                node.kind = src.kind;
-                node.out_shape = src.out_shape;
-                node.name = src.name.clone();
-            }
+    // Dense coarse ids ordered by root id (ascending scan), exactly the
+    // order the sorted-roots version produced.
+    let mut dense = vec![u32::MAX; n];
+    let mut num_coarse = 0u32;
+    for i in 0..n {
+        if root_of[i] == i as u32 {
+            dense[i] = num_coarse;
+            num_coarse += 1;
         }
-        node.layer = if layer_min == u32::MAX { 0 } else { layer_min };
-        cg.nodes.push(node);
+    }
+
+    let mut members: Vec<Vec<u32>> = vec![vec![]; num_coarse as usize];
+    for i in 0..n {
+        let c = dense[root_of[i] as usize];
+        members[c as usize].extend_from_slice(&members_of[i]);
+    }
+
+    // Aggregate merged node attributes over the CURRENT graph's
+    // constituents (members[] maps to ORIGINAL ids and is only used for
+    // placement expansion), scanning nodes in ascending id order so every
+    // float accumulation and the max-flops representative (first wins on
+    // ties) match the previous per-root scans bit-for-bit.
+    let mut cg = OpGraph::new(g.name.clone(), g.num_devices);
+    cg.nodes = (0..num_coarse)
+        .map(|_| {
+            let mut node = OpNode::new(String::new(), OpKind::Elementwise);
+            node.layer = u32::MAX; // min-layer sentinel; every coarse node has >= 1 member
+            node
+        })
+        .collect();
+    let mut best_flops = vec![-1.0f64; num_coarse as usize];
+    for i in 0..n {
+        let c = dense[root_of[i] as usize] as usize;
+        let src = &g.nodes[i];
+        let node = &mut cg.nodes[c];
+        node.flops += src.flops;
+        node.param_bytes += src.param_bytes;
+        node.output_bytes = node.output_bytes.max(src.output_bytes);
+        node.layer = node.layer.min(src.layer);
+        if src.flops > best_flops[c] {
+            best_flops[c] = src.flops;
+            node.kind = src.kind;
+            node.out_shape = src.out_shape;
+            node.name = src.name.clone();
+        }
     }
 
     // Dedup coarse edges.
     let mut seen = std::collections::HashSet::new();
     for &(u, v) in &g.edges {
-        let (cu, cv) = (dense[&uf.find(u)], dense[&uf.find(v)]);
+        let (cu, cv) = (dense[root_of[u as usize] as usize], dense[root_of[v as usize] as usize]);
         if cu != cv && seen.insert((cu, cv)) {
             cg.edges.push((cu, cv));
         }
@@ -273,11 +289,13 @@ pub fn coarsen(g: &OpGraph, target: usize) -> Coarsened {
         'outer: for key in keys {
             let mut ids = buckets.remove(&key).unwrap();
             // Merge smallest-flops neighbors first to keep balance.
+            // total_cmp: identical order to partial_cmp on the finite
+            // non-negative flops the validators admit, but no panic if a
+            // degenerate value ever slips through.
             ids.sort_by(|&a, &b| {
                 cur.nodes[a as usize]
                     .flops
-                    .partial_cmp(&cur.nodes[b as usize].flops)
-                    .unwrap()
+                    .total_cmp(&cur.nodes[b as usize].flops)
                     .then(a.cmp(&b))
             });
             for pair in ids.chunks(2) {
@@ -335,6 +353,34 @@ pub fn coarsen(g: &OpGraph, target: usize) -> Coarsened {
         if cur.n() == prev_n && widen > 64 {
             break; // one bucket per layer left; cannot shrink further
         }
+    }
+
+    // Phase 4: guaranteed topo-rank block merge. Phase 3 keys on layer,
+    // so a graph with more distinct layer values than `target` (easy to
+    // construct, and arbitrary imported graphs do) leaves it stuck above
+    // the target — which used to trip the assert below. Collapsing
+    // ceil(n/target)-sized blocks of consecutive topological ranks is
+    // cycle-safe (edges go strictly rank-low -> rank-high, so coarse ids
+    // are non-decreasing along edges) and lands at <= target in one step.
+    if cur.n() > target {
+        let mut rank_of = vec![0u32; cur.n()];
+        for (r, &u) in cur.topo_order().iter().enumerate() {
+            rank_of[u as usize] = r as u32;
+        }
+        let per = (cur.n() + target - 1) / target;
+        let mut uf = Uf::new(cur.n());
+        let mut rep: Vec<Option<u32>> = vec![None; target];
+        for i in 0..cur.n() as u32 {
+            let block = rank_of[i as usize] as usize / per;
+            match rep[block] {
+                Some(r) => uf.union(r, i),
+                None => rep[block] = Some(i),
+            }
+        }
+        let (next, next_members) = rebuild(&cur, &mut uf, &members);
+        cur = next;
+        cur.freeze();
+        members = next_members;
     }
 
     assert!(cur.n() <= target, "coarsening failed: {} > {target}", cur.n());
@@ -406,5 +452,68 @@ mod tests {
         let full = c.expand(&coarse);
         assert_eq!(full.len(), g.n());
         assert!(full.iter().all(|&d| d < 4));
+    }
+
+    fn check(g: &OpGraph, target: usize) {
+        let c = coarsen(g, target);
+        assert!(c.graph.n() <= target, "{} > {target}", c.graph.n());
+        assert!(c.graph.validate().is_ok());
+        assert!((c.graph.total_flops() - g.total_flops()).abs() < 1.0);
+        let mut all: Vec<u32> = c.members.iter().flatten().cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..g.n() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_distinct_layers_than_target_still_reaches_target() {
+        // Every node on its own layer defeats phase 3's (layer, bucket)
+        // keying entirely; phase 4 must land this at <= target.
+        let mut b = GraphBuilder::new("ladder", 2);
+        let mut prev = None;
+        for l in 0..300u32 {
+            let mut op = b.op(format!("n{l}"), OpKind::MatMul);
+            op = op.flops(1e6).layer(l);
+            if let Some(p) = prev {
+                op = op.after(&[p]);
+            }
+            // a branch per rung so chain contraction can't collapse it
+            let id = op.id();
+            b.op(format!("s{l}"), OpKind::Elementwise).layer(l).after(&[id]);
+            prev = Some(id);
+        }
+        let g = b.build();
+        check(&g, 16);
+    }
+
+    #[test]
+    fn degenerate_graphs_coarsen_without_panicking() {
+        // all-zero costs
+        let mut b = GraphBuilder::new("zeros", 2);
+        let mut prev = None;
+        for i in 0..64u32 {
+            let mut op = b.op(format!("z{i}"), OpKind::Elementwise);
+            if let Some(p) = prev {
+                op = op.after(&[p]);
+            }
+            prev = Some(op.id());
+        }
+        check(&b.build(), 8);
+
+        // disconnected components (many independent chains)
+        let mut b = GraphBuilder::new("islands", 2);
+        for c in 0..40u32 {
+            let a = b.op(format!("a{c}"), OpKind::MatMul).flops(1e5).id();
+            let m = b.op(format!("b{c}"), OpKind::Elementwise).after(&[a]).id();
+            b.op(format!("c{c}"), OpKind::Output).after(&[m]);
+        }
+        check(&b.build(), 8);
+
+        // wide star: one producer fanning out to many consumers
+        let mut b = GraphBuilder::new("star", 2);
+        let hub = b.op("hub", OpKind::MatMul).flops(1e7).id();
+        for i in 0..200u32 {
+            b.op(format!("leaf{i}"), OpKind::Elementwise).after(&[hub]);
+        }
+        check(&b.build(), 16);
     }
 }

@@ -15,9 +15,13 @@
 //!                              no updates
 //! serve                        placement-as-a-service daemon: warm
 //!                              checkpoint, request batching, LRU cache
-//!                              (stdio or --listen TCP)
+//!                              (stdio, --listen TCP, or unix:PATH)
 //! loadgen                      closed-loop traffic against the daemon
-//!                              (in-process or --connect TCP)
+//!                              (in-process, --connect TCP, or unix:PATH)
+//! fuzz                         seeded DAG fuzzing harness: generated +
+//!                              mutated graphs through import -> coarsen
+//!                              -> place, asserting placement-or-
+//!                              structured-error, never a panic
 //! experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
 //! ```
 //!
@@ -40,7 +44,7 @@ use gdp::util::cli::Args;
 use gdp::workloads;
 use gdp::workloads::corpus::{self, CorpusLevel};
 
-const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetune|zeroshot|serve|loadgen|experiment> [flags]
+const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetune|zeroshot|serve|loadgen|fuzz|experiment> [flags]
   gdp list
   gdp simulate <workload> [--hdp-steps N]
   gdp trace <workload> --placement <human|metis|single> [--out trace.json]
@@ -49,8 +53,8 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
             [--variant full|no_attention|no_superposition|segmented]
             [--backend native|pjrt] [--artifacts DIR]
             [--save ckpt.bin] [--load ckpt.bin] [--quiet]
-  gdp infer <workload> --load ckpt.bin [--samples N] [--variant V]
-            [--backend native|pjrt]
+  gdp infer <workload | --graph-file graph.json> --load ckpt.bin
+            [--samples N] [--variant V] [--backend native|pjrt]
   gdp pretrain [--corpus base|diverse] [--steps N] [--save ckpt]
             [--autosave train.ckpt] [--autosave-every N] [--resume]
             [--halt-after N] [--variant V] [--backend B] [--seed N]
@@ -59,10 +63,11 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
             [--unfrozen] [--save out.ckpt] [--autosave train.ckpt]
             [--autosave-every N] [--resume] [--halt-after N]
             [--variant V] [--backend B]
-  gdp zeroshot <workload> --checkpoint ckpt [--samples N] [--seed N]
-            [--variant V] [--backend B]
-  gdp serve [--checkpoint ckpt] [--listen HOST:PORT] [--warmup]
-            [--batch-window-ms N] [--cache N] [--max-nodes N]
+  gdp zeroshot <workload | --graph-file graph.json> --checkpoint ckpt
+            [--samples N] [--seed N] [--variant V] [--backend B]
+  gdp serve [--checkpoint ckpt] [--listen HOST:PORT|unix:PATH] [--warmup]
+            [--batch-window-ms N] [--cache N] [--cache-file cache.json]
+            [--max-nodes N]
             [--samples N] [--seed N] [--default-deadline-ms N]
             [--queue N] [--max-conns N] [--idle-timeout-ms N]
             [--breaker-threshold N] [--breaker-cooldown-ms N]
@@ -70,11 +75,15 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
             [--bench-out BENCH_SERVE.json] [--variant V] [--backend B]
             [--artifacts DIR]
   gdp loadgen [--requests N] [--clients N] [--mix id,id,...]
-            [--connect HOST:PORT | --checkpoint ckpt] [--warmup]
+            [--connect HOST:PORT|unix:PATH | --checkpoint ckpt] [--warmup]
             [--rate RPS] [--chaos all|kind,...[,every=N][,nodes=N][,slowms=MS]]
             [--samples N] [--seed N] [--cache N] [--batch-window-ms N]
             [--out BENCH_SERVE.json] [--variant V] [--backend B]
             [--artifacts DIR]  (+ the serve daemon flags when in-process)
+  gdp fuzz [--seeds N] [--nodes MIN..MAX] [--samples N] [--seed N]
+            [--repro-every N] [--checkpoint ckpt]
+            [--out BENCH_FUZZ.json] [--variant V] [--backend B]
+            [--artifacts DIR]
   gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
             [--steps N] [--quick] [--out runs/]";
 
@@ -104,6 +113,7 @@ fn run() -> Result<()> {
         "zeroshot" => cmd_zeroshot(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "fuzz" => cmd_fuzz(&args),
         "experiment" => cmd_experiment(&args),
         other => bail!("unknown subcommand {other:?}"),
     }
@@ -262,11 +272,51 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the placement task for `infer`/`zeroshot`: a registry
+/// workload id (positional) or an external dataflow-graph JSON via
+/// `--graph-file` — exactly one of the two. Imported graphs go through
+/// the same strict validator as serve's inline-graph requests, then the
+/// identical coarsen -> featurize pipeline as registry workloads.
+fn resolve_task(
+    session: &Session,
+    id: Option<&str>,
+    graph_file: Option<&std::path::Path>,
+    seed: u64,
+    cmd: &str,
+) -> Result<gdp::policy::PlacementTask> {
+    match (id, graph_file) {
+        (Some(_), Some(_)) => {
+            bail!("{cmd}: pass a workload id or --graph-file, not both")
+        }
+        (Some(id), None) => session.task(id, seed),
+        (None, Some(p)) => {
+            let g = workloads::import::import_graph_file(
+                p,
+                &workloads::ImportLimits::default(),
+            )?;
+            eprintln!(
+                "[{cmd}] imported {:?}: {} nodes, {} devices from {}",
+                g.name,
+                g.n(),
+                g.num_devices,
+                p.display()
+            );
+            Ok(gdp::policy::PlacementTask::new(
+                g.name.clone(),
+                g,
+                session.feat_dims(),
+                seed,
+            ))
+        }
+        (None, None) => {
+            bail!("{cmd} needs a workload id or --graph-file graph.json")
+        }
+    }
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
-    let id = args
-        .positional
-        .get(1)
-        .ok_or_else(|| anyhow!("infer needs a workload id"))?;
+    let id = args.positional.get(1).cloned();
+    let graph_file = args.get("graph-file").map(PathBuf::from);
     let variant = args.str_or("variant", "full");
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let load = args.get("load").map(PathBuf::from);
@@ -280,10 +330,12 @@ fn cmd_infer(args: &Args) -> Result<()> {
         Some(p) => session.load_params(p)?,
         None => session.init_params()?,
     };
-    let task = session.task(id, seed)?;
+    let task =
+        resolve_task(&session, id.as_deref(), graph_file.as_deref(), seed, "infer")?;
     let best = coordinator::infer(&session.policy, &store, &task, samples, seed)?;
     println!(
-        "{id}: zero-shot best {}",
+        "{}: zero-shot best {}",
+        task.id,
         if best.best_valid { format!("{:.4}s", best.best_time) } else { "OOM".into() }
     );
     let hist = best.best_placement.histogram(task.graph.num_devices);
@@ -463,10 +515,8 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 /// plus `--samples` stochastic draws, best simulated candidate wins, no
 /// parameter updates.
 fn cmd_zeroshot(args: &Args) -> Result<()> {
-    let id = args
-        .positional
-        .get(1)
-        .ok_or_else(|| anyhow!("zeroshot needs a workload id"))?;
+    let id = args.positional.get(1).cloned();
+    let graph_file = args.get("graph-file").map(PathBuf::from);
     let variant = args.str_or("variant", "full");
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let ckpt = PathBuf::from(args.get("checkpoint").ok_or_else(|| {
@@ -479,10 +529,17 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
 
     let session = Session::open_with(&artifacts, &variant, backend)?;
     let store = session.load_params(&ckpt)?;
-    let task = session.task(id, seed)?;
+    let task = resolve_task(
+        &session,
+        id.as_deref(),
+        graph_file.as_deref(),
+        seed,
+        "zeroshot",
+    )?;
     let best = generalize::zeroshot(&session, &store, &task, samples, seed)?;
     println!(
-        "{id}: zero-shot best {}",
+        "{}: zero-shot best {}",
+        task.id,
         if best.best_valid { format!("{:.4}s", best.best_time) } else { "OOM".into() }
     );
     println!(
@@ -521,7 +578,28 @@ fn serve_cfg_from(args: &Args) -> Result<gdp::serve::ServeConfig> {
             .u64_or("idle-timeout-ms", 30_000)
             .map_err(|e| anyhow!(e))?,
         fault_spec,
+        cache_file: args.get("cache-file").map(str::to_string),
     })
+}
+
+/// Parse a `--listen`/`--connect` endpoint: `unix:PATH` selects a Unix
+/// domain socket, anything else is a TCP `HOST:PORT`.
+enum Endpoint {
+    Tcp(String),
+    Unix(String),
+}
+
+fn parse_endpoint(addr: &str) -> Result<Endpoint> {
+    match addr.strip_prefix("unix:") {
+        Some(path) => {
+            if cfg!(unix) {
+                Ok(Endpoint::Unix(path.to_string()))
+            } else {
+                bail!("unix: endpoints need a Unix platform")
+            }
+        }
+        None => Ok(Endpoint::Tcp(addr.to_string())),
+    }
 }
 
 /// Open a session and parameters for the daemon: a checkpoint when given
@@ -548,9 +626,9 @@ fn serve_session_from(
 }
 
 /// `gdp serve`: load a checkpoint once into a warm engine and answer
-/// newline-delimited JSON placement requests (stdio, or TCP with
-/// `--listen`) until a `{"cmd":"shutdown"}` frame or EOF; then write the
-/// serving metrics to `--bench-out`.
+/// newline-delimited JSON placement requests (stdio, TCP, or a Unix
+/// socket via `--listen unix:PATH`) until a `{"cmd":"shutdown"}` frame
+/// or EOF; then write the serving metrics to `--bench-out`.
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serve_cfg_from(args)?;
     let listen = args.get("listen").map(str::to_string);
@@ -571,7 +649,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         service.config().max_nodes,
     );
     let transport = match listen {
-        Some(addr) => gdp::serve::Transport::Tcp(addr),
+        Some(addr) => match parse_endpoint(&addr)? {
+            Endpoint::Tcp(a) => gdp::serve::Transport::Tcp(a),
+            #[cfg(unix)]
+            Endpoint::Unix(p) => gdp::serve::Transport::Unix(p),
+            #[cfg(not(unix))]
+            Endpoint::Unix(_) => unreachable!("parse_endpoint bails on non-unix"),
+        },
         None => gdp::serve::Transport::Stdio,
     };
     gdp::serve::daemon::run(&service, transport, Some(&bench_out))?;
@@ -581,7 +665,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `gdp loadgen`: replay the workload registry as traffic — closed-loop
 /// by default, open-loop Poisson with `--rate`. Default target is
 /// in-process (starts the daemon itself — the CI smoke path);
-/// `--connect host:port` targets a running `gdp serve --listen` daemon.
+/// `--connect host:port` (or `--connect unix:PATH`) targets a running
+/// `gdp serve --listen` daemon.
 /// `--chaos <spec>` interleaves client-side faults (malformed frames,
 /// hangups, oversized graphs, slow writers); chaos needs a real socket,
 /// so without `--connect` a loopback TCP daemon is spawned in-process.
@@ -621,7 +706,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 "[loadgen] {} requests x {} clients -> {addr} (mix {:?})",
                 lcfg.requests, lcfg.clients, lcfg.mix
             );
-            gdp::serve::loadgen::run(&gdp::serve::Target::Tcp(addr), &lcfg)?
+            let target = match parse_endpoint(&addr)? {
+                Endpoint::Tcp(a) => gdp::serve::Target::Tcp(a),
+                #[cfg(unix)]
+                Endpoint::Unix(p) => gdp::serve::Target::Unix(p),
+                #[cfg(not(unix))]
+                Endpoint::Unix(_) => unreachable!("parse_endpoint bails on non-unix"),
+            };
+            gdp::serve::loadgen::run(&target, &lcfg)?
         }
         None => {
             let cfg = serve_cfg_from(args)?;
@@ -700,6 +792,85 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             "chaos: {} faults injected, {} still answered structurally",
             report.chaos_injected, report.chaos_answered
         );
+    }
+    Ok(())
+}
+
+/// `gdp fuzz`: the paper-scale DAG fuzzing harness. Generates seeded
+/// random DAGs (layered / blocked / skip topologies) plus a structured
+/// mutation battery, pushes every document through import -> coarsen ->
+/// featurize -> place, and asserts the robustness invariant: every input
+/// yields a valid placement whose fingerprint and predicted time are
+/// finite and reproducible, or a structured error — never a panic.
+/// Per-stage timings and peak workspace go to `--out` (BENCH_FUZZ.json);
+/// a violated invariant exits non-zero (the CI gate).
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    let variant = args.str_or("variant", "full");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let ckpt = args.get("checkpoint").map(PathBuf::from);
+    let samples = args.usize_or("samples", 2).map_err(|e| anyhow!(e))?;
+    let out = args.str_or("out", "BENCH_FUZZ.json");
+    let mut cfg = gdp::workloads::fuzz::FuzzConfig::default();
+    cfg.seeds = args.usize_or("seeds", cfg.seeds).map_err(|e| anyhow!(e))?;
+    cfg.seed = args.u64_or("seed", cfg.seed).map_err(|e| anyhow!(e))?;
+    cfg.repro_every =
+        args.usize_or("repro-every", cfg.repro_every).map_err(|e| anyhow!(e))?;
+    if let Some(r) = args.get("nodes") {
+        let parsed = r.split_once("..").and_then(|(a, b)| {
+            Some((a.trim().parse::<usize>().ok()?, b.trim().parse::<usize>().ok()?))
+        });
+        let (lo, hi) = parsed.filter(|&(a, b)| a >= 3 && a <= b).ok_or_else(|| {
+            anyhow!("--nodes expects MIN..MAX (e.g. 1000..100000), got {r:?}")
+        })?;
+        cfg.min_nodes = lo;
+        cfg.max_nodes = hi;
+    }
+    let backend = backend_from(args)?;
+    args.finish().map_err(|e| anyhow!(e))?;
+
+    let session = Session::open_with(&artifacts, &variant, backend)?;
+    let store = match &ckpt {
+        Some(p) => session.load_params(p)?,
+        None => session.init_params()?,
+    };
+    eprintln!(
+        "[fuzz] {} seeded DAGs ({}..{} nodes) + mutation battery | \
+         variant={variant} backend={} samples={samples}",
+        cfg.seeds,
+        cfg.min_nodes,
+        cfg.max_nodes,
+        session.policy.backend_name(),
+    );
+    let place = |task: &gdp::policy::PlacementTask,
+                 s: u64|
+     -> Result<gdp::workloads::fuzz::PlaceOutcome> {
+        let best = coordinator::infer(&session.policy, &store, task, samples, s)?;
+        Ok(gdp::workloads::fuzz::PlaceOutcome {
+            placement: best.best_placement.devices,
+            predicted_time: best.best_valid.then_some(best.best_time),
+        })
+    };
+    let mut rec = gdp::util::bench::BenchRecorder::new("fuzz");
+    let report = gdp::workloads::fuzz::run(&cfg, session.feat_dims(), &place, &mut rec);
+    rec.write(&out)?;
+    println!(
+        "fuzz: {} cases | {} accepted, {} rejected {:?} | panics {} | \
+         repro failures {} | unexpected rejects {} | invariant violations {} | \
+         max {} nodes, peak workspace {:.1} MB -> {}",
+        report.cases,
+        report.accepted,
+        report.rejected,
+        report.reject_by_class,
+        report.panics,
+        report.repro_failures,
+        report.unexpected_rejects,
+        report.invariant_violations,
+        report.max_nodes_seen,
+        report.peak_task_bytes as f64 / (1024.0 * 1024.0),
+        out,
+    );
+    if !report.ok() {
+        bail!("fuzz invariant violated (see counters above)");
     }
     Ok(())
 }

@@ -8,8 +8,24 @@
 //! stay a single hash probe. The cache itself is not synchronized; the
 //! service wraps it in a `Mutex` (probes are far cheaper than the policy
 //! forward they shortcut, so one lock is never the bottleneck).
+//!
+//! **Persistence** (`gdp serve --cache-file`). [`to_file_json`] /
+//! [`load_file_json`](PlacementCache::load_file_json) serialize the
+//! entries in LRU order so a restarted daemon resumes with a warm cache.
+//! Keys are 64-bit fingerprint-derived values that do not fit JSON's
+//! f64, so they are written as hex strings. The file carries a format
+//! version and the policy's device width `d`; a mismatch on either (or
+//! any structurally invalid entry) rejects the whole file — a daemon
+//! never trusts placements produced under a different policy shape.
+//!
+//! [`to_file_json`]: PlacementCache::to_file_json
 
 use std::collections::HashMap;
+
+use crate::util::json::Json;
+
+/// Format version of the `--cache-file` artifact; bump on layout change.
+pub const CACHE_FILE_VERSION: usize = 1;
 
 /// The reusable part of an answer: everything except per-request
 /// metadata (latency, batch occupancy).
@@ -117,6 +133,115 @@ impl PlacementCache {
             self.hits as f64 / probes as f64
         }
     }
+
+    /// Serialize the entries (oldest first, so reloading in order
+    /// recreates the LRU recency) together with the format version and
+    /// the policy device width `d` the placements were computed under.
+    pub fn to_file_json(&self, d: usize) -> Json {
+        let mut entries: Vec<(&u64, &Entry)> = self.map.iter().collect();
+        entries.sort_by_key(|(_, e)| e.stamp);
+        Json::obj(vec![
+            ("version", Json::num(CACHE_FILE_VERSION as f64)),
+            ("d", Json::num(d as f64)),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .into_iter()
+                        .map(|(k, e)| {
+                            Json::obj(vec![
+                                ("key", Json::str(format!("{k:016x}"))),
+                                (
+                                    "placement",
+                                    Json::Arr(
+                                        e.value
+                                            .placement
+                                            .iter()
+                                            .map(|&dv| Json::num(dv as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "predicted_time",
+                                    match e.value.predicted_time {
+                                        Some(t) => Json::num(t),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                ("valid", Json::Bool(e.value.valid)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore entries from a [`to_file_json`](Self::to_file_json)
+    /// document. All-or-nothing: a version or device-width mismatch, or
+    /// any structurally invalid entry (bad key, device index >= `d`,
+    /// non-finite predicted time), rejects the file and leaves the cache
+    /// untouched. Returns the number of entries restored (bounded by
+    /// capacity: the oldest spill over the LRU edge as usual).
+    pub fn load_file_json(&mut self, j: &Json, d: usize) -> Result<usize, String> {
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or("cache file: missing version")?;
+        if version != CACHE_FILE_VERSION {
+            return Err(format!(
+                "cache file: version {version} != supported {CACHE_FILE_VERSION}"
+            ));
+        }
+        let file_d = j.get("d").and_then(|v| v.as_usize()).ok_or("cache file: missing d")?;
+        if file_d != d {
+            return Err(format!(
+                "cache file: written for {file_d} devices, this policy has {d}"
+            ));
+        }
+        let entries = j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .ok_or("cache file: missing entries array")?;
+        let mut parsed: Vec<(u64, CachedPlacement)> = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let key = e
+                .get("key")
+                .and_then(|k| k.as_str())
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| format!("cache file entry {i}: bad key"))?;
+            let placement: Vec<usize> = e
+                .get("placement")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| format!("cache file entry {i}: missing placement"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .filter(|&f| f.fract() == 0.0 && f >= 0.0 && (f as usize) < d)
+                        .map(|f| f as usize)
+                        .ok_or_else(|| {
+                            format!("cache file entry {i}: device index out of range")
+                        })
+                })
+                .collect::<Result<_, _>>()?;
+            let predicted_time = match e.get("predicted_time") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().filter(|t| t.is_finite()).ok_or_else(
+                    || format!("cache file entry {i}: non-finite predicted_time"),
+                )?),
+            };
+            let valid = e
+                .get("valid")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| format!("cache file entry {i}: missing valid"))?;
+            parsed.push((key, CachedPlacement { placement, predicted_time, valid }));
+        }
+        let n = parsed.len().min(self.capacity);
+        for (key, value) in parsed {
+            self.put(key, value);
+        }
+        Ok(n)
+    }
 }
 
 #[cfg(test)]
@@ -172,5 +297,73 @@ mod tests {
         assert!(c.get(1).is_none());
         assert_eq!(c.len(), 0);
         assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn file_round_trip_preserves_entries_and_lru_order() {
+        let mut c = PlacementCache::new(3);
+        // Big keys exercise the hex path (u64 doesn't fit JSON f64).
+        let k1 = 0xDEAD_BEEF_CAFE_F00Du64;
+        c.put(k1, v(1));
+        c.put(2, v(2));
+        c.put(3, v(3));
+        assert!(c.get(k1).is_some()); // refresh: 2 is now LRU
+        let text = c.to_file_json(4).to_string();
+
+        let mut c2 = PlacementCache::new(3);
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(c2.load_file_json(&j, 4), Ok(3));
+        assert_eq!(c2.get(k1), Some(v(1)));
+        assert_eq!(c2.get(3), Some(v(3)));
+        // LRU order survived the round trip: inserting a 4th evicts 2.
+        c2.put(4, v(4));
+        assert!(c2.get(2).is_none(), "2 was LRU in the source cache");
+        assert!(c2.get(k1).is_some());
+    }
+
+    #[test]
+    fn file_load_rejects_mismatches_and_corruption() {
+        let mut c = PlacementCache::new(4);
+        c.put(1, v(1));
+        let good = c.to_file_json(4);
+
+        let mut fresh = PlacementCache::new(4);
+        // Wrong device width (placements computed under another policy).
+        let err = fresh.load_file_json(&good, 8).unwrap_err();
+        assert!(err.contains("devices"), "{err}");
+        // Wrong version.
+        let bad = crate::util::json::parse(
+            &good.to_string().replace("\"version\":1", "\"version\":99"),
+        )
+        .unwrap();
+        let err = fresh.load_file_json(&bad, 4).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+        // Device index out of the declared range.
+        let mut big = PlacementCache::new(4);
+        big.put(
+            7,
+            CachedPlacement {
+                placement: vec![9],
+                predicted_time: Some(1.0),
+                valid: true,
+            },
+        );
+        let doc = big.to_file_json(4); // d=4 but placement holds device 9
+        let err = fresh.load_file_json(&doc, 4).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        // All rejects left the cache untouched.
+        assert!(fresh.is_empty());
+        // And a predicted-time of None round-trips as null.
+        let mut none = PlacementCache::new(4);
+        none.put(
+            5,
+            CachedPlacement { placement: vec![0], predicted_time: None, valid: false },
+        );
+        let text = none.to_file_json(2).to_string();
+        assert!(text.contains("null"), "{text}");
+        let j = crate::util::json::parse(&text).unwrap();
+        let mut back = PlacementCache::new(4);
+        assert_eq!(back.load_file_json(&j, 2), Ok(1));
+        assert_eq!(back.get(5).unwrap().predicted_time, None);
     }
 }

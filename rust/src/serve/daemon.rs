@@ -1,12 +1,16 @@
-//! Daemon transports for the placement service: stdio (default) and TCP.
+//! Daemon transports for the placement service: stdio (default), TCP,
+//! and Unix-domain sockets (`--listen unix:/path`, Unix only).
 //!
-//! Both speak the same newline-delimited protocol ([`super::proto`]).
-//! Stdio serves one client (the parent process pipe); TCP accepts up to
-//! `max_conns` connections, one handler thread each, all sharing the one
-//! warm [`PlacementService`]. Excess connections are answered with a
-//! structured `overloaded` error frame and closed, never silently
-//! dropped. Idle connections (no complete line within `idle_timeout_ms`)
-//! are reaped so slow or wedged clients cannot pin handler threads.
+//! All speak the same newline-delimited protocol ([`super::proto`]).
+//! Stdio serves one client (the parent process pipe); TCP and Unix
+//! sockets accept up to `max_conns` connections, one handler thread
+//! each, all sharing the one warm [`PlacementService`] — the accept
+//! loop and connection handler are generic over the socket type, so
+//! both transports get identical semantics. Excess connections are
+//! answered with a structured `overloaded` error frame and closed,
+//! never silently dropped. Idle connections (no complete line within
+//! `idle_timeout_ms`) are reaped so slow or wedged clients cannot pin
+//! handler threads.
 //!
 //! **Lifecycle.** A `{"cmd":"shutdown"}` frame stops the daemon after
 //! in-flight lines finish. A `{"cmd":"drain"}` frame — or SIGINT/SIGTERM
@@ -35,6 +39,93 @@ pub enum Transport {
     Stdio,
     /// TCP socket, e.g. `127.0.0.1:7077`.
     Tcp(String),
+    /// Unix-domain socket path, e.g. `/tmp/gdp.sock`.
+    #[cfg(unix)]
+    Unix(String),
+}
+
+/// What the shared connection handler needs from a socket; implemented
+/// for TCP and Unix streams so both transports run the same code.
+pub(crate) trait ConnStream:
+    std::io::Read + std::io::Write + Send + Sized + 'static
+{
+    fn try_clone_stream(&self) -> std::io::Result<Self>;
+    fn set_read_timeout_ms(&self, ms: u64) -> std::io::Result<()>;
+    /// Transport-specific tuning (TCP_NODELAY; no-op elsewhere).
+    fn tune(&self) {}
+}
+
+impl ConnStream for TcpStream {
+    fn try_clone_stream(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_read_timeout_ms(&self, ms: u64) -> std::io::Result<()> {
+        self.set_read_timeout(Some(Duration::from_millis(ms)))
+    }
+
+    fn tune(&self) {
+        self.set_nodelay(true).ok();
+    }
+}
+
+#[cfg(unix)]
+impl ConnStream for std::os::unix::net::UnixStream {
+    fn try_clone_stream(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_read_timeout_ms(&self, ms: u64) -> std::io::Result<()> {
+        self.set_read_timeout(Some(Duration::from_millis(ms)))
+    }
+}
+
+/// The listener side of [`ConnStream`]: non-blocking accept plus a
+/// display label for the handler thread's name.
+pub(crate) trait ConnListener {
+    type Stream: ConnStream;
+    fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()>;
+    fn accept_stream(&self) -> std::io::Result<(Self::Stream, String)>;
+}
+
+impl ConnListener for TcpListener {
+    type Stream = TcpStream;
+
+    fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        TcpListener::set_nonblocking(self, nonblocking)
+    }
+
+    fn accept_stream(&self) -> std::io::Result<(TcpStream, String)> {
+        self.accept().map(|(s, peer)| (s, peer.to_string()))
+    }
+}
+
+#[cfg(unix)]
+impl ConnListener for std::os::unix::net::UnixListener {
+    type Stream = std::os::unix::net::UnixStream;
+
+    fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        std::os::unix::net::UnixListener::set_nonblocking(self, nonblocking)
+    }
+
+    fn accept_stream(
+        &self,
+    ) -> std::io::Result<(std::os::unix::net::UnixStream, String)> {
+        self.accept().map(|(s, _)| (s, "unix".to_string()))
+    }
+}
+
+/// Remove a stale socket file left by a previous daemon. Only socket
+/// files are removed — a regular file at the path is left alone (bind
+/// will then fail with a clear error instead of destroying user data).
+#[cfg(unix)]
+fn remove_stale_socket(path: &str) {
+    use std::os::unix::fs::FileTypeExt;
+    if let Ok(meta) = std::fs::symlink_metadata(path) {
+        if meta.file_type().is_socket() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
 }
 
 /// SIGINT/SIGTERM -> graceful drain, installed via the raw C `signal`
@@ -91,6 +182,16 @@ pub fn run(
             eprintln!("[serve] listening on {}", listener.local_addr()?);
             accept_loop(service, listener)?;
         }
+        #[cfg(unix)]
+        Transport::Unix(path) => {
+            remove_stale_socket(&path);
+            let listener = std::os::unix::net::UnixListener::bind(&path)
+                .with_context(|| format!("binding unix:{path}"))?;
+            eprintln!("[serve] listening on unix:{path}");
+            let res = accept_loop(service, listener);
+            remove_stale_socket(&path);
+            res?;
+        }
     }
     service.stop();
     let snap = service.snapshot();
@@ -136,6 +237,24 @@ pub fn spawn_tcp(
     Ok((handle, local))
 }
 
+/// Unix-socket analog of [`spawn_tcp`]: bind `path` (removing a stale
+/// socket file first) and serve it on a background thread.
+#[cfg(unix)]
+pub fn spawn_unix(
+    service: &Arc<PlacementService>,
+    path: &str,
+) -> Result<std::thread::JoinHandle<Result<()>>> {
+    remove_stale_socket(path);
+    let listener = std::os::unix::net::UnixListener::bind(path)
+        .with_context(|| format!("binding unix:{path}"))?;
+    let svc = Arc::clone(service);
+    let handle = std::thread::Builder::new()
+        .name("gdp-serve-accept-unix".into())
+        .spawn(move || accept_loop(&svc, listener))
+        .context("spawning accept loop")?;
+    Ok(handle)
+}
+
 /// Write a snapshot as a `BenchRecorder` artifact (suite "serve").
 pub fn write_artifact(snap: &super::metrics::Snapshot, path: &str) -> Result<()> {
     let mut rec = BenchRecorder::new("serve");
@@ -171,7 +290,10 @@ fn serve_stdio(service: &Arc<PlacementService>) -> Result<()> {
     Ok(())
 }
 
-fn accept_loop(service: &Arc<PlacementService>, listener: TcpListener) -> Result<()> {
+fn accept_loop<L: ConnListener>(
+    service: &Arc<PlacementService>,
+    listener: L,
+) -> Result<()> {
     // Non-blocking accept so the loop can observe the shutdown/drain
     // flags set by a connection handler or a signal.
     listener.set_nonblocking(true)?;
@@ -183,7 +305,7 @@ fn accept_loop(service: &Arc<PlacementService>, listener: TcpListener) -> Result
             service.request_drain();
             break;
         }
-        match listener.accept() {
+        match listener.accept_stream() {
             Ok((stream, peer)) => {
                 if max_conns > 0 && live.load(Ordering::SeqCst) >= max_conns {
                     reject_conn(service, stream, max_conns);
@@ -222,7 +344,11 @@ fn accept_loop(service: &Arc<PlacementService>, listener: TcpListener) -> Result
 
 /// Answer an over-cap connection with a structured `overloaded` frame —
 /// the client learns why instead of seeing a bare RST.
-fn reject_conn(service: &Arc<PlacementService>, mut stream: TcpStream, cap: usize) {
+fn reject_conn<S: ConnStream>(
+    service: &Arc<PlacementService>,
+    mut stream: S,
+    cap: usize,
+) {
     service.note_conn_rejected();
     let frame = WireError::new(
         None,
@@ -235,18 +361,16 @@ fn reject_conn(service: &Arc<PlacementService>, mut stream: TcpStream, cap: usiz
     let _ = stream.flush();
 }
 
-fn handle_conn(
+fn handle_conn<S: ConnStream>(
     service: &Arc<PlacementService>,
-    stream: TcpStream,
+    stream: S,
     idle_timeout_ms: u64,
 ) -> Result<()> {
-    stream.set_nodelay(true).ok();
+    stream.tune();
     if idle_timeout_ms > 0 {
-        stream
-            .set_read_timeout(Some(Duration::from_millis(idle_timeout_ms)))
-            .ok();
+        stream.set_read_timeout_ms(idle_timeout_ms).ok();
     }
-    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut writer = stream.try_clone_stream().context("cloning stream")?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = match line {

@@ -34,6 +34,8 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -151,6 +153,9 @@ pub enum Target {
     InProc(Arc<PlacementService>),
     /// Connect each client to a remote `gdp serve --listen` daemon.
     Tcp(String),
+    /// Connect each client to a `gdp serve --listen unix:PATH` daemon.
+    #[cfg(unix)]
+    Unix(String),
 }
 
 /// Client-observed outcome of a loadgen run.
@@ -205,6 +210,8 @@ impl ClientReport {
 enum Conn {
     InProc(Arc<PlacementService>),
     Tcp { reader: BufReader<TcpStream>, writer: TcpStream },
+    #[cfg(unix)]
+    Unix { reader: BufReader<UnixStream>, writer: UnixStream },
 }
 
 impl Conn {
@@ -218,23 +225,66 @@ impl Conn {
                 let reader = BufReader::new(stream.try_clone()?);
                 Ok(Conn::Tcp { reader, writer: stream })
             }
+            #[cfg(unix)]
+            Target::Unix(path) => {
+                let stream = UnixStream::connect(path)
+                    .with_context(|| format!("connecting to unix:{path}"))?;
+                let reader = BufReader::new(stream.try_clone()?);
+                Ok(Conn::Unix { reader, writer: stream })
+            }
+        }
+    }
+
+    /// Write raw bytes to the socket WITHOUT flushing — chaos faults
+    /// need sub-line wire control. Errs for the in-process target,
+    /// which has no wire.
+    fn wire_write(&mut self, bytes: &[u8]) -> Result<()> {
+        match self {
+            Conn::InProc(_) => bail!("wire-level fault needs a socket target"),
+            Conn::Tcp { writer, .. } => Ok(writer.write_all(bytes)?),
+            #[cfg(unix)]
+            Conn::Unix { writer, .. } => Ok(writer.write_all(bytes)?),
+        }
+    }
+
+    fn wire_flush(&mut self) -> Result<()> {
+        match self {
+            Conn::InProc(_) => bail!("wire-level fault needs a socket target"),
+            Conn::Tcp { writer, .. } => Ok(writer.flush()?),
+            #[cfg(unix)]
+            Conn::Unix { writer, .. } => Ok(writer.flush()?),
+        }
+    }
+
+    /// Read one response line; `None` means the server closed (or reaped)
+    /// the connection.
+    fn wire_read_line(&mut self) -> Result<Option<String>> {
+        fn read_one<R: BufRead>(reader: &mut R) -> Result<Option<String>> {
+            let mut resp = String::new();
+            match reader.read_line(&mut resp) {
+                Ok(0) => Ok(None),
+                Ok(_) => Ok(Some(resp)),
+                Err(_) => Ok(None),
+            }
+        }
+        match self {
+            Conn::InProc(_) => bail!("wire-level fault needs a socket target"),
+            Conn::Tcp { reader, .. } => read_one(reader),
+            #[cfg(unix)]
+            Conn::Unix { reader, .. } => read_one(reader),
         }
     }
 
     fn call(&mut self, line: &str) -> Result<String> {
-        match self {
-            Conn::InProc(svc) => Ok(svc.call(line)),
-            Conn::Tcp { reader, writer } => {
-                writer.write_all(line.as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
-                let mut resp = String::new();
-                let n = reader.read_line(&mut resp)?;
-                if n == 0 {
-                    bail!("server closed the connection");
-                }
-                Ok(resp)
-            }
+        if let Conn::InProc(svc) = self {
+            return Ok(svc.call(line));
+        }
+        self.wire_write(line.as_bytes())?;
+        self.wire_write(b"\n")?;
+        self.wire_flush()?;
+        match self.wire_read_line()? {
+            Some(resp) => Ok(resp),
+            None => bail!("server closed the connection"),
         }
     }
 }
@@ -308,61 +358,49 @@ fn inject_chaos(
             *conn = Some(c);
             Ok(true)
         }
-        ChaosKind::Truncated => match &mut c {
-            Conn::Tcp { writer, .. } => {
-                // Half a frame, no newline, then hang up: the server
-                // sees EOF mid-line and must just drop the connection.
-                writer.write_all(
-                    format!(r#"{{"id":"chaos{i}","workload":"incep"#).as_bytes(),
-                )?;
-                writer.flush()?;
-                // `c` is not put back: dropped on return = hang up.
-                Ok(false)
-            }
-            Conn::InProc(_) => bail!("truncated chaos needs a TCP target"),
-        },
-        ChaosKind::Disconnect => match &mut c {
-            Conn::Tcp { writer, .. } => {
-                // A full valid request — then vanish before the reply.
-                // The server computes an answer nobody reads; the write
-                // error must only kill this handler, not the daemon.
-                writer.write_all(
-                    format!(r#"{{"id":"chaos{i}","workload":"inception","samples":1}}"#)
-                        .as_bytes(),
-                )?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
-                // `c` is not put back: dropped before reading the reply.
-                Ok(false)
-            }
-            Conn::InProc(_) => bail!("disconnect chaos needs a TCP target"),
-        },
-        ChaosKind::SlowWrite => match &mut c {
-            Conn::Tcp { reader, writer } => {
-                let line =
-                    format!(r#"{{"id":"chaos{i}","workload":"inception","samples":1}}"#);
-                let bytes = line.as_bytes();
-                let mid = bytes.len() / 2;
-                writer.write_all(&bytes[..mid])?;
-                writer.flush()?;
-                std::thread::sleep(Duration::from_millis(spec.slow_write_ms));
-                writer.write_all(&bytes[mid..])?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
-                let mut resp = String::new();
-                match reader.read_line(&mut resp) {
-                    Ok(n) if n > 0 => {
-                        tally.absorb(&resp);
-                        *conn = Some(c);
-                        Ok(true)
-                    }
-                    // Reaped by the idle timeout (or the server closed):
-                    // that is the guard working, not a daemon failure.
-                    _ => Ok(false),
+        ChaosKind::Truncated => {
+            // Half a frame, no newline, then hang up: the server sees
+            // EOF mid-line and must just drop the connection.
+            c.wire_write(format!(r#"{{"id":"chaos{i}","workload":"incep"#).as_bytes())?;
+            c.wire_flush()?;
+            // `c` is not put back: dropped on return = hang up.
+            Ok(false)
+        }
+        ChaosKind::Disconnect => {
+            // A full valid request — then vanish before the reply. The
+            // server computes an answer nobody reads; the write error
+            // must only kill this handler, not the daemon.
+            c.wire_write(
+                format!(r#"{{"id":"chaos{i}","workload":"inception","samples":1}}"#)
+                    .as_bytes(),
+            )?;
+            c.wire_write(b"\n")?;
+            c.wire_flush()?;
+            // `c` is not put back: dropped before reading the reply.
+            Ok(false)
+        }
+        ChaosKind::SlowWrite => {
+            let line =
+                format!(r#"{{"id":"chaos{i}","workload":"inception","samples":1}}"#);
+            let bytes = line.as_bytes();
+            let mid = bytes.len() / 2;
+            c.wire_write(&bytes[..mid])?;
+            c.wire_flush()?;
+            std::thread::sleep(Duration::from_millis(spec.slow_write_ms));
+            c.wire_write(&bytes[mid..])?;
+            c.wire_write(b"\n")?;
+            c.wire_flush()?;
+            match c.wire_read_line()? {
+                Some(resp) => {
+                    tally.absorb(&resp);
+                    *conn = Some(c);
+                    Ok(true)
                 }
+                // Reaped by the idle timeout (or the server closed):
+                // that is the guard working, not a daemon failure.
+                None => Ok(false),
             }
-            Conn::InProc(_) => bail!("slowwrite chaos needs a TCP target"),
-        },
+        }
     }
 }
 
@@ -397,8 +435,8 @@ pub fn run(target: &Target, cfg: &LoadgenConfig) -> Result<ClientReport> {
     }
     if cfg.chaos.is_some() && matches!(target, Target::InProc(_)) {
         bail!(
-            "chaos faults are transport-level and need a TCP target \
-             (the CLI spawns an in-process TCP daemon automatically)"
+            "chaos faults are transport-level and need a TCP or Unix socket \
+             target (the CLI spawns an in-process TCP daemon automatically)"
         );
     }
     // Seeded Poisson schedule: cumulative arrival offsets in seconds.
@@ -604,6 +642,40 @@ mod tests {
         let r2 = run(&Target::InProc(Arc::clone(&svc)), &cfg).unwrap();
         assert_eq!(r1.offered_rps, r2.offered_rps);
         svc.stop();
+    }
+
+    /// Unix-socket transport: same daemon, same protocol, same answers
+    /// as TCP (the conn handling is shared code).
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_daemon_round_trips() {
+        let svc = service(ServeConfig { warmup: false, ..Default::default() });
+        let path = std::env::temp_dir()
+            .join(format!("gdp-loadgen-test-{}.sock", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let accept =
+            super::super::daemon::spawn_unix(&svc, &path_s).expect("spawn unix");
+        let target = Target::Unix(path_s.clone());
+        let cfg = LoadgenConfig {
+            requests: 6,
+            clients: 2,
+            mix: vec!["inception".into(), "rnnlm2".into()],
+            samples: 1,
+            seed: 3,
+            rate: 0.0,
+            chaos: None,
+        };
+        let report = run(&target, &cfg).unwrap();
+        assert_eq!(report.ok, 6, "{report:?}");
+        assert_eq!(report.errors, 0, "{report:?}");
+        // Still answering, then clean shutdown over the same socket.
+        let mut probe = Conn::open(&target).unwrap();
+        let pong = probe.call(r#"{"id":"p","cmd":"ping"}"#).unwrap();
+        assert!(pong.contains("true"), "{pong}");
+        let _ = probe.call(r#"{"id":"q","cmd":"shutdown"}"#).unwrap();
+        accept.join().expect("accept loop").expect("accept ok");
+        svc.stop();
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

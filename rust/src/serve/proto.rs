@@ -41,8 +41,9 @@
 //! `"degraded_reason"` code ([`reason`]) mark a placement produced by the
 //! deterministic topo-greedy fallback instead of the policy.
 
-use crate::graph::{OpGraph, OpKind, OpNode};
+use crate::graph::OpGraph;
 use crate::util::json::{self, Json};
+use crate::workloads::import;
 
 /// Machine-readable error categories (the `error.code` field).
 pub mod code {
@@ -240,8 +241,12 @@ pub fn parse_frame(line: &str) -> Result<Frame, WireError> {
             GraphSource::Workload(wid.to_string())
         }
         (None, Some(gj)) => {
-            let g = graph_from_json(gj)
-                .map_err(|e| fail(code::BAD_REQUEST, format!("bad graph: {e}")))?;
+            // The shared ingestion validator: inline wire graphs go
+            // through exactly the same checks as `--graph-file` inputs,
+            // and its taxonomy maps straight onto the wire codes
+            // (parse / bad_request / too_large).
+            let g = import::import_graph_value(gj, &import::ImportLimits::default())
+                .map_err(|e| fail(e.wire_code(), format!("bad graph: {e}")))?;
             GraphSource::Inline(Box::new(g))
         }
         (Some(_), Some(_)) => {
@@ -408,92 +413,14 @@ pub fn graph_to_json(g: &OpGraph) -> Json {
 }
 
 /// Parse, validate and freeze a graph from the wire JSON object.
+///
+/// Thin wrapper over [`import::import_graph_value`] (the shared
+/// ingestion validator) with the default limits: duplicate/self-loop/
+/// dangling-edge rejection naming the offending ids, an O(V+E) Kahn
+/// cycle check, and NaN/negative/extreme-cost rejection.
 pub fn graph_from_json(j: &Json) -> Result<OpGraph, String> {
-    let name = j.get("name").and_then(|x| x.as_str()).unwrap_or("inline").to_string();
-    let num_devices = j
-        .req("num_devices")?
-        .as_usize()
-        .filter(|&d| d >= 1)
-        .ok_or("num_devices must be a positive integer")?;
-    let nodes_j = j.req("nodes")?.as_arr().ok_or("nodes must be an array")?;
-    let mut g = OpGraph::new(name, num_devices);
-    for (i, nj) in nodes_j.iter().enumerate() {
-        let kind_s = nj
-            .req("kind")
-            .map_err(|e| format!("node {i}: {e}"))?
-            .as_str()
-            .ok_or_else(|| format!("node {i}: kind must be a string"))?;
-        let kind = OpKind::from_name(kind_s)
-            .ok_or_else(|| format!("node {i}: unknown op kind {kind_s:?}"))?;
-        let nname = nj
-            .get("name")
-            .and_then(|x| x.as_str())
-            .map(str::to_string)
-            .unwrap_or_else(|| format!("n{i}"));
-        let mut node = OpNode::new(nname, kind);
-        node.flops = nj.get("flops").and_then(|x| x.as_f64()).unwrap_or(0.0);
-        if !node.flops.is_finite() || node.flops < 0.0 {
-            return Err(format!("node {i}: flops must be finite and >= 0"));
-        }
-        node.output_bytes =
-            nj.get("output_bytes").and_then(|x| x.as_f64()).unwrap_or(0.0).max(0.0) as u64;
-        node.param_bytes =
-            nj.get("param_bytes").and_then(|x| x.as_f64()).unwrap_or(0.0).max(0.0) as u64;
-        if let Some(sh) = nj.get("out_shape") {
-            let arr = sh.as_arr().ok_or_else(|| format!("node {i}: out_shape must be an array"))?;
-            if arr.len() > 4 {
-                return Err(format!("node {i}: out_shape rank > 4"));
-            }
-            for (k, dj) in arr.iter().enumerate() {
-                node.out_shape[k] = dj
-                    .as_usize()
-                    .ok_or_else(|| format!("node {i}: out_shape entries must be integers"))?
-                    as u32;
-            }
-        }
-        node.layer = nj.get("layer").and_then(|x| x.as_usize()).unwrap_or(0) as u32;
-        g.nodes.push(node);
-    }
-    let edges_j = j.req("edges")?.as_arr().ok_or("edges must be an array")?;
-    for (i, ej) in edges_j.iter().enumerate() {
-        let pair = ej.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
-            format!("edge {i}: must be a [producer, consumer] pair")
-        })?;
-        let u = pair[0].as_usize().ok_or_else(|| format!("edge {i}: bad producer"))?;
-        let v = pair[1].as_usize().ok_or_else(|| format!("edge {i}: bad consumer"))?;
-        g.edges.push((u as u32, v as u32));
-    }
-    g.validate()?;
-    // validate() catches out-of-range/self-loop/duplicate edges; freeze()
-    // would panic on a cycle, so detect it here and report instead.
-    if has_cycle(&g) {
-        return Err("graph has a cycle".into());
-    }
-    g.freeze();
-    Ok(g)
-}
-
-/// Kahn cycle check without panicking (freeze() asserts on cycles).
-fn has_cycle(g: &OpGraph) -> bool {
-    let n = g.n();
-    let mut indeg = vec![0usize; n];
-    for &(_, v) in &g.edges {
-        indeg[v as usize] += 1;
-    }
-    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
-    let mut seen = 0usize;
-    while let Some(u) = queue.pop() {
-        seen += 1;
-        for &(a, b) in &g.edges {
-            if a as usize == u {
-                indeg[b as usize] -= 1;
-                if indeg[b as usize] == 0 {
-                    queue.push(b as usize);
-                }
-            }
-        }
-    }
-    seen != n
+    import::import_graph_value(j, &import::ImportLimits::default())
+        .map_err(|e| e.message)
 }
 
 #[cfg(test)]
@@ -683,5 +610,48 @@ mod tests {
             "nodes":[{"kind":"MatMul"}],
             "edges":[[0,5]]}"#;
         assert!(graph_from_json(&json::parse(oob).unwrap()).is_err());
+    }
+
+    #[test]
+    fn inline_graph_rejections_carry_import_taxonomy_codes() {
+        // Self-loops and duplicates are named explicitly with node ids.
+        let e = graph_from_json(
+            &json::parse(
+                r#"{"num_devices":2,
+                    "nodes":[{"kind":"MatMul","name":"m"},{"kind":"Output"}],
+                    "edges":[[0,0]]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("self loop at node 0"), "{e}");
+        let e = graph_from_json(
+            &json::parse(
+                r#"{"num_devices":2,
+                    "nodes":[{"kind":"MatMul"},{"kind":"Output"}],
+                    "edges":[[0,1],[0,1]]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap_err();
+        assert!(e.contains("duplicate edge (0, 1)"), "{e}");
+        // Through the full frame parser, the import class picks the
+        // wire code: structural problems are bad_request, resource
+        // blowups are too_large.
+        let e = parse_frame(
+            r#"{"id":"q","graph":{"num_devices":2,
+                "nodes":[{"kind":"MatMul","flops":-3}],"edges":[]}}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.code, code::BAD_REQUEST);
+        assert_eq!(e.id.as_deref(), Some("q"));
+        let huge_edges = format!(
+            r#"{{"id":"q2","graph":{{"num_devices":2,
+                "nodes":[{{"kind":"MatMul"}},{{"kind":"Output"}}],
+                "edges":[{}]}}}}"#,
+            vec!["[0,1]"; 2_000_001].join(",")
+        );
+        let e = parse_frame(&huge_edges).unwrap_err();
+        assert_eq!(e.code, code::TOO_LARGE);
     }
 }

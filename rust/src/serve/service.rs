@@ -101,6 +101,10 @@ pub struct ServeConfig {
     /// Deterministic policy-fault injection (chaos harness); inactive
     /// by default.
     pub fault_spec: FaultSpec,
+    /// Cross-process cache persistence: reload this JSON file at
+    /// startup (ignored with a warning if stale or incompatible) and
+    /// rewrite it on `stop()`. `None` = in-memory only.
+    pub cache_file: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -119,6 +123,7 @@ impl Default for ServeConfig {
             max_conns: 256,
             idle_timeout_ms: 30_000,
             fault_spec: FaultSpec::default(),
+            cache_file: None,
         }
     }
 }
@@ -169,13 +174,33 @@ impl PlacementService {
     ) -> Arc<Self> {
         let dims = policy.manifest().dims;
         let feat_dims = FeatDims { n: dims.n, k: dims.k, f: dims.f, d: dims.d };
+        let mut cache = PlacementCache::new(cfg.cache_capacity);
+        if let Some(path) = &cfg.cache_file {
+            // A bad cache file must never stop the daemon: warn and
+            // start cold (version/device-width mismatches included).
+            match std::fs::read_to_string(path) {
+                Ok(text) => {
+                    let loaded = crate::util::json::parse(&text)
+                        .map_err(|e| format!("cache file: malformed JSON: {e}"))
+                        .and_then(|j| cache.load_file_json(&j, dims.d));
+                    match loaded {
+                        Ok(n) => eprintln!(
+                            "[serve] cache: restored {n} entries from {path}"
+                        ),
+                        Err(e) => eprintln!("[serve] cache: ignoring {path}: {e}"),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => eprintln!("[serve] cache: cannot read {path}: {e}"),
+            }
+        }
         let (tx, rx) = mpsc::channel::<Job>();
         let svc = Arc::new(Self {
             policy,
             store: Arc::new(store),
             feat_dims,
             cfg: cfg.clone(),
-            cache: Mutex::new(PlacementCache::new(cfg.cache_capacity)),
+            cache: Mutex::new(cache),
             metrics: Mutex::new(ServeMetrics::new(dims.b)),
             breaker: Mutex::new(CircuitBreaker::new(
                 cfg.breaker_threshold,
@@ -661,11 +686,20 @@ impl PlacementService {
         &self.cfg
     }
 
-    /// Stop the dispatcher (drains pending jobs first) and join it.
+    /// Stop the dispatcher (drains pending jobs first), join it, and —
+    /// when `cache_file` is configured — persist the placement cache so
+    /// the next process starts warm.
     pub fn stop(&self) {
         self.tx.lock().unwrap().take();
         if let Some(h) = self.dispatcher.lock().unwrap().take() {
             let _ = h.join();
+        }
+        if let Some(path) = &self.cfg.cache_file {
+            let doc = self.cache.lock().unwrap().to_file_json(self.feat_dims.d);
+            match std::fs::write(path, doc.to_string()) {
+                Ok(()) => eprintln!("[serve] cache: persisted to {path}"),
+                Err(e) => eprintln!("[serve] cache: cannot write {path}: {e}"),
+            }
         }
     }
 }
@@ -944,5 +978,43 @@ mod tests {
         let snap = svc.snapshot();
         assert_eq!(snap.shed, 1);
         svc.stop();
+    }
+
+    #[test]
+    fn cache_file_survives_restart_and_tolerates_corruption() {
+        let path = std::env::temp_dir()
+            .join(format!("gdp-cache-test-{}.json", std::process::id()));
+        let path_s = path.to_string_lossy().into_owned();
+        let _ = std::fs::remove_file(&path);
+
+        let cfg = ServeConfig {
+            warmup: false,
+            cache_file: Some(path_s.clone()),
+            ..Default::default()
+        };
+        let line = r#"{"id":"a","workload":"inception","samples":1,"seed":3}"#;
+
+        // First process: a cold miss, then stop() persists the cache.
+        let svc = service(cfg.clone());
+        let p1 = place_of(&svc.call(line));
+        assert!(!p1.cached);
+        svc.stop();
+        assert!(path.exists(), "stop() must write the cache file");
+
+        // Second process: same file, the very first request is a hit.
+        let svc = service(cfg.clone());
+        let p2 = place_of(&svc.call(line));
+        assert!(p2.cached, "reloaded cache must answer warm");
+        assert_eq!(p1.placement, p2.placement);
+        assert_eq!(p1.predicted_time, p2.predicted_time);
+        svc.stop();
+
+        // Corrupt file: the daemon starts cold but still serves.
+        std::fs::write(&path, "{not json").unwrap();
+        let svc = service(cfg);
+        let p3 = place_of(&svc.call(line));
+        assert!(!p3.cached, "corrupt cache file must be ignored");
+        svc.stop();
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -143,9 +143,15 @@ impl Json {
     }
 }
 
+/// Nesting cap: the parser recurses per container level, so adversarial
+/// documents like `[[[[...` would otherwise overflow the stack. 128 is far
+/// beyond anything the repo's formats (manifests, wire frames, graph
+/// files) nest while keeping worst-case stack use trivially bounded.
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document. Returns the value and errors with byte offset.
 pub fn parse(text: &str) -> Result<Json, String> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -158,6 +164,7 @@ pub fn parse(text: &str) -> Result<Json, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -275,12 +282,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return self.err(&format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
+        self.enter()?;
         self.eat(b'[')?;
         self.ws();
         let mut v = Vec::new();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -291,6 +308,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return self.err("expected , or ]"),
@@ -299,11 +317,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
+        self.enter()?;
         self.eat(b'{')?;
         self.ws();
         let mut m = BTreeMap::new();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -319,6 +339,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return self.err("expected , or }"),
@@ -380,5 +401,19 @@ mod tests {
     fn integers_written_without_fraction() {
         assert_eq!(Json::num(42.0).to_string(), "42");
         assert_eq!(Json::num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn deep_nesting_rejected_not_overflowed() {
+        // One past the cap fails with a structured error...
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let err = parse(&deep).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // ...while the cap itself parses, and siblings don't accumulate
+        // depth (each container releases its level on close).
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        assert!(parse(&ok).is_ok());
+        let siblings = format!("[{}]", vec!["[[1]]"; 200].join(","));
+        assert!(parse(&siblings).is_ok());
     }
 }

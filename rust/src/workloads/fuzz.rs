@@ -1,0 +1,752 @@
+//! Seeded DAG fuzzing harness for the ingestion pipeline (`gdp fuzz`).
+//!
+//! Generates deterministic random dataflow graphs at paper scale
+//! (1k–100k nodes; 8-layer GNMT is ~50k) in three topology families —
+//! layered, blocked (inception-like), and skip-connection chains — plus
+//! structured mutations of a valid document (truncation, field
+//! deletion, cost extremes, near-cyclic rewires, limit breaches), and
+//! drives every case through the full external-graph path:
+//!
+//! ```text
+//! JSON text -> import (shared validator) -> coarsen -> featurize
+//!           -> policy place -> simulate
+//! ```
+//!
+//! The invariant under test: **every input either yields a valid
+//! placement whose fingerprint and predicted time are finite and
+//! reproducible, or a structured [`ImportError`] — never a panic or a
+//! hang.** Each case runs under `catch_unwind`; a subset re-runs to
+//! assert bit-reproducibility. Per-stage wall times are bucketed by
+//! node-count tier and written to `BENCH_FUZZ.json` together with
+//! rejection-class counts and the peak task memory footprint.
+//!
+//! Generation is pure function of the seed: the same
+//! `--seed/--seeds/--nodes` reproduce the same case list, so a CI
+//! failure names a case label that replays locally.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+use crate::graph::features::FeatDims;
+use crate::graph::OpGraph;
+use crate::policy::task::PlacementTask;
+use crate::serve::fingerprint::graph_fingerprint;
+use crate::util::bench::{BenchRecorder, BenchStats};
+use crate::util::json::{self, Json};
+use crate::util::Rng;
+use crate::workloads::import::{import_graph_text, ImportErrorKind, ImportLimits};
+
+/// DAG topology families the generator emits.
+#[derive(Clone, Copy, Debug)]
+pub enum DagShape {
+    /// `L` layers of width `w`; every node consumes 1–3 nodes of the
+    /// previous layer (GNMT/RNN-like grids).
+    Layered,
+    /// Sequential blocks of entry → parallel middles → exit
+    /// (inception-like).
+    Blocked,
+    /// A long chain with random forward skip connections
+    /// (residual-net-like).
+    Skip,
+}
+
+impl DagShape {
+    pub const ALL: [DagShape; 3] = [DagShape::Layered, DagShape::Blocked, DagShape::Skip];
+
+    pub fn key(self) -> &'static str {
+        match self {
+            DagShape::Layered => "layered",
+            DagShape::Blocked => "blocked",
+            DagShape::Skip => "skip",
+        }
+    }
+}
+
+/// Op kinds the generator samples for compute nodes.
+const GEN_KINDS: &[&str] = &[
+    "MatMul", "Conv2D", "RnnCell", "Attention", "Elementwise", "Norm", "Softmax",
+    "Concat", "Reduce",
+];
+
+/// Append one random compute node (helper for [`gen_dag_doc`]).
+fn push_node(nodes: &mut Vec<Json>, rng: &mut Rng, layer: usize) {
+    let kind = GEN_KINDS[rng.below(GEN_KINDS.len())];
+    let flops = 10f64.powf(3.0 + 9.0 * rng.next_f64()); // 1e3..1e12
+    let out_bytes = 10f64.powf(2.0 + 7.0 * rng.next_f64()).round(); // 1e2..1e9
+    let mut fields = vec![
+        ("kind", Json::str(kind)),
+        ("flops", Json::num(flops)),
+        ("output_bytes", Json::num(out_bytes)),
+        ("layer", Json::num(layer as f64)),
+    ];
+    if rng.below(8) == 0 {
+        fields.push(("param_bytes", Json::num((out_bytes * 4.0).round())));
+    }
+    nodes.push(Json::obj(fields));
+}
+
+/// Generate a valid graph document with roughly `n` nodes. Node ids are
+/// assigned in topological order and every edge goes id-low → id-high,
+/// so the output is a DAG by construction.
+pub fn gen_dag_doc(rng: &mut Rng, n: usize, shape: DagShape) -> String {
+    let n = n.max(3);
+    let num_devices = 2 + rng.below(7); // 2..=8
+    let mut nodes: Vec<Json> = Vec::with_capacity(n);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+
+    match shape {
+        DagShape::Layered => {
+            let width = 4 + rng.below(61); // 4..=64
+            while nodes.len() < n {
+                let layer = nodes.len() / width;
+                push_node(&mut nodes, rng, layer);
+                let id = nodes.len() - 1;
+                if layer > 0 {
+                    let lo = (layer - 1) * width;
+                    let hi = layer * width; // previous layer is complete
+                    let want = 1 + rng.below(3);
+                    let mut picked: Vec<usize> = Vec::with_capacity(want);
+                    for _ in 0..want {
+                        let p = lo + rng.below(hi - lo);
+                        if !picked.contains(&p) {
+                            picked.push(p);
+                            edges.push((p, id));
+                        }
+                    }
+                }
+            }
+        }
+        DagShape::Blocked => {
+            let middles = 3 + rng.below(13); // 3..=15 per block
+            let mut prev_exit: Option<usize> = None;
+            let mut block = 0usize;
+            while nodes.len() + middles + 2 <= n || prev_exit.is_none() {
+                push_node(&mut nodes, rng, block);
+                let entry = nodes.len() - 1;
+                if let Some(x) = prev_exit {
+                    edges.push((x, entry));
+                }
+                let mut mids = Vec::with_capacity(middles);
+                for _ in 0..middles {
+                    push_node(&mut nodes, rng, block);
+                    let m = nodes.len() - 1;
+                    edges.push((entry, m));
+                    mids.push(m);
+                }
+                push_node(&mut nodes, rng, block);
+                let exit = nodes.len() - 1;
+                for m in mids {
+                    edges.push((m, exit));
+                }
+                prev_exit = Some(exit);
+                block += 1;
+            }
+        }
+        DagShape::Skip => {
+            for i in 0..n {
+                push_node(&mut nodes, rng, i / 8);
+                if i > 0 {
+                    edges.push((i - 1, i));
+                }
+            }
+            let mut seen: std::collections::HashSet<(usize, usize)> =
+                std::collections::HashSet::new();
+            for _ in 0..n / 4 {
+                let u = rng.below(n - 2);
+                let span = (n - 1 - u).min(64);
+                if span < 2 {
+                    continue;
+                }
+                let v = u + 2 + rng.below(span - 1);
+                if v < n && seen.insert((u, v)) {
+                    edges.push((u, v));
+                }
+            }
+        }
+    }
+
+    Json::obj(vec![
+        ("name", Json::str(format!("fuzz_{}", shape.key()))),
+        ("num_devices", Json::num(num_devices as f64)),
+        ("nodes", Json::Arr(nodes)),
+        (
+            "edges",
+            Json::Arr(
+                edges
+                    .iter()
+                    .map(|&(u, v)| {
+                        Json::arr(vec![Json::num(u as f64), Json::num(v as f64)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string()
+}
+
+/// What the harness expects a case to do (bookkeeping only — the no-
+/// panic/reproducibility invariant applies to every case regardless).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Expect {
+    /// Generated valid DAG: must import and place.
+    Valid,
+    /// Mutated document: must be rejected with a structured error.
+    Reject,
+}
+
+/// One fuzz input: a document, the limits to import it under, and the
+/// generator's intent.
+pub struct FuzzCase {
+    pub label: String,
+    pub text: String,
+    pub limits: ImportLimits,
+    pub expect: Expect,
+}
+
+/// Mutable-access helpers for editing a parsed document in place.
+fn obj(v: &mut Json) -> &mut BTreeMap<String, Json> {
+    match v {
+        Json::Obj(m) => m,
+        _ => unreachable!("expected object"),
+    }
+}
+
+fn arr(v: &mut Json) -> &mut Vec<Json> {
+    match v {
+        Json::Arr(a) => a,
+        _ => unreachable!("expected array"),
+    }
+}
+
+/// The structured-mutation battery: every class of broken input the
+/// importer taxonomizes, derived deterministically from `rng`.
+pub fn mutation_cases(rng: &mut Rng) -> Vec<FuzzCase> {
+    let base_text = gen_dag_doc(rng, 240, DagShape::Layered);
+    let base = json::parse(&base_text).expect("generated doc parses");
+    let lim = ImportLimits::default();
+    let case = |label: &str, text: String, limits: ImportLimits| FuzzCase {
+        label: format!("mut_{label}"),
+        text,
+        limits,
+        expect: Expect::Reject,
+    };
+    let mutate = |f: &dyn Fn(&mut Json)| -> String {
+        let mut v = base.clone();
+        f(&mut v);
+        v.to_string()
+    };
+
+    let first_edge = base
+        .get("edges")
+        .and_then(|e| e.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|p| p.as_arr())
+        .map(|p| (p[0].as_usize().unwrap(), p[1].as_usize().unwrap()))
+        .expect("base doc has edges");
+    let n_nodes = base.get("nodes").and_then(|x| x.as_arr()).unwrap().len();
+
+    let mut cases = vec![
+        // -- parse class --
+        case("truncated", base_text[..base_text.len() * 2 / 3].to_string(), lim),
+        case(
+            "deep_nesting",
+            "[".repeat(json::MAX_DEPTH + 8) + &"]".repeat(json::MAX_DEPTH + 8),
+            lim,
+        ),
+        case("garbage", "{\"nodes\": [{,]}".into(), lim),
+        // -- invalid class: schema --
+        case("not_object", "[1,2,3]".into(), lim),
+        case(
+            "missing_num_devices",
+            mutate(&|v| {
+                obj(v).remove("num_devices");
+            }),
+            lim,
+        ),
+        case(
+            "missing_kind",
+            mutate(&|v| {
+                let nodes = obj(v).get_mut("nodes").unwrap();
+                obj(&mut arr(nodes)[0]).remove("kind");
+            }),
+            lim,
+        ),
+        case(
+            "unknown_kind",
+            mutate(&|v| {
+                let nodes = obj(v).get_mut("nodes").unwrap();
+                obj(&mut arr(nodes)[0]).insert("kind".into(), Json::str("Quantum"));
+            }),
+            lim,
+        ),
+        // -- invalid class: cost extremes (inf via 1e999, negative, cap) --
+        case(
+            "inf_flops",
+            mutate(&|v| {
+                let nodes = obj(v).get_mut("nodes").unwrap();
+                obj(&mut arr(nodes)[1]).insert("flops".into(), Json::str("PLACEHOLDER"));
+            })
+            .replace("\"PLACEHOLDER\"", "1e999"),
+            lim,
+        ),
+        case(
+            "negative_flops",
+            mutate(&|v| {
+                let nodes = obj(v).get_mut("nodes").unwrap();
+                obj(&mut arr(nodes)[1]).insert("flops".into(), Json::num(-5.0));
+            }),
+            lim,
+        ),
+        case(
+            "extreme_flops",
+            mutate(&|v| {
+                let nodes = obj(v).get_mut("nodes").unwrap();
+                obj(&mut arr(nodes)[1]).insert("flops".into(), Json::num(1e30));
+            }),
+            lim,
+        ),
+        case(
+            "negative_bytes",
+            mutate(&|v| {
+                let nodes = obj(v).get_mut("nodes").unwrap();
+                obj(&mut arr(nodes)[2]).insert("output_bytes".into(), Json::num(-64.0));
+            }),
+            lim,
+        ),
+        // -- invalid class: edge structure --
+        case(
+            "self_loop",
+            mutate(&|v| {
+                let edges = obj(v).get_mut("edges").unwrap();
+                arr(edges).push(Json::arr(vec![Json::num(5.0), Json::num(5.0)]));
+            }),
+            lim,
+        ),
+        case(
+            "duplicate_edge",
+            mutate(&|v| {
+                let edges = obj(v).get_mut("edges").unwrap();
+                let dup = arr(edges)[0].clone();
+                arr(edges).push(dup);
+            }),
+            lim,
+        ),
+        case(
+            "dangling_edge",
+            mutate(&|v| {
+                let edges = obj(v).get_mut("edges").unwrap();
+                arr(edges).push(Json::arr(vec![
+                    Json::num(0.0),
+                    Json::num((n_nodes * 10) as f64),
+                ]));
+            }),
+            lim,
+        ),
+        case(
+            "cycle_rewire",
+            mutate(&|v| {
+                let edges = obj(v).get_mut("edges").unwrap();
+                arr(edges).push(Json::arr(vec![
+                    Json::num(first_edge.1 as f64),
+                    Json::num(first_edge.0 as f64),
+                ]));
+            }),
+            lim,
+        ),
+        case(
+            "bad_transfer_bytes",
+            mutate(&|v| {
+                let edges = obj(v).get_mut("edges").unwrap();
+                let pair = arr(&mut arr(edges)[0]);
+                pair.push(Json::num(-1.0));
+            }),
+            lim,
+        ),
+    ];
+    // -- too_large class: same documents, tighter resource limits --
+    let mut node_lim = lim;
+    node_lim.max_nodes = n_nodes / 2;
+    cases.push(case("node_limit", base_text.clone(), node_lim));
+    let mut edge_lim = lim;
+    edge_lim.max_edges = 4;
+    cases.push(case("edge_limit", base_text.clone(), edge_lim));
+    let mut byte_lim = lim;
+    byte_lim.max_input_bytes = 64;
+    cases.push(case("byte_limit", base_text.clone(), byte_lim));
+    cases
+}
+
+/// The placement stage the harness drives after import: build a task,
+/// run the policy (or a baseline), return the full-graph placement and
+/// the simulated time of the best candidate.
+pub struct PlaceOutcome {
+    pub placement: Vec<usize>,
+    pub predicted_time: Option<f64>,
+}
+
+pub type PlaceFn<'a> =
+    &'a (dyn Fn(&PlacementTask, u64) -> anyhow::Result<PlaceOutcome> + 'a);
+
+#[derive(Clone, Copy, Debug)]
+pub struct FuzzConfig {
+    /// Generated valid DAG cases (mutation cases ride on top).
+    pub seeds: usize,
+    pub min_nodes: usize,
+    pub max_nodes: usize,
+    pub seed: u64,
+    /// Re-run every k-th accepted case and require bit-identical
+    /// fingerprint, placement and predicted time.
+    pub repro_every: usize,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        Self { seeds: 200, min_nodes: 1000, max_nodes: 100_000, seed: 7, repro_every: 4 }
+    }
+}
+
+/// Aggregate fuzz outcome; [`FuzzReport::ok`] is the CI gate.
+#[derive(Clone, Debug, Default)]
+pub struct FuzzReport {
+    pub cases: usize,
+    pub accepted: usize,
+    pub rejected: usize,
+    /// Rejection counts by taxonomy class key.
+    pub reject_by_class: BTreeMap<&'static str, usize>,
+    /// Pipeline panics caught (invariant: 0).
+    pub panics: usize,
+    /// Accepted cases whose re-run diverged (invariant: 0).
+    pub repro_failures: usize,
+    /// Valid-intent documents the importer rejected (generator/validator
+    /// disagreement; invariant: 0).
+    pub unexpected_rejects: usize,
+    /// Accepted cases with a malformed outcome: wrong placement length,
+    /// out-of-range device, non-finite predicted time (invariant: 0).
+    pub invariant_violations: usize,
+    pub max_nodes_seen: usize,
+    pub peak_task_bytes: usize,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.panics == 0
+            && self.repro_failures == 0
+            && self.unexpected_rejects == 0
+            && self.invariant_violations == 0
+    }
+}
+
+/// Node-count tier for per-stage timing buckets.
+fn tier(n: usize) -> &'static str {
+    if n < 3_000 {
+        "1k"
+    } else if n < 30_000 {
+        "10k"
+    } else {
+        "100k"
+    }
+}
+
+enum CaseOutcome {
+    Accepted {
+        nodes: usize,
+        fingerprint: u64,
+        placement: Vec<usize>,
+        time_bits: Option<u64>,
+        task_bytes: usize,
+        violation: Option<String>,
+    },
+    Rejected(ImportErrorKind),
+    PlaceError(String),
+}
+
+fn run_case(
+    case: &FuzzCase,
+    dims: FeatDims,
+    place: PlaceFn,
+    seed: u64,
+    timings: Option<&mut BTreeMap<String, Vec<f64>>>,
+) -> CaseOutcome {
+    let mut local: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let sink = match timings {
+        Some(t) => t,
+        None => &mut local,
+    };
+
+    let t0 = Instant::now();
+    let g: OpGraph = match import_graph_text(&case.text, &case.limits) {
+        Ok(g) => g,
+        Err(e) => return CaseOutcome::Rejected(e.kind),
+    };
+    let import_ns = t0.elapsed().as_nanos() as f64;
+    let n = g.n();
+    let tr = tier(n);
+    sink.entry(format!("import_{tr}")).or_default().push(import_ns);
+
+    let t1 = Instant::now();
+    let task = PlacementTask::new(case.label.clone(), g, dims, seed);
+    sink.entry(format!("task_build_{tr}"))
+        .or_default()
+        .push(t1.elapsed().as_nanos() as f64);
+
+    // Resident task footprint: feature tensors + neighbor lists + the
+    // expansion/placement buffers the evaluation path touches.
+    let task_bytes = task.feats.feats.len() * 4
+        + task.feats.nbr_idx.len() * 4
+        + task.feats.nbr_mask.len() * 4
+        + task.feats.node_mask.len() * 4
+        + task.graph.n() * 2 * std::mem::size_of::<usize>()
+        + task.graph.edges.len() * 8;
+
+    let t2 = Instant::now();
+    let out = match place(&task, seed) {
+        Ok(o) => o,
+        Err(e) => return CaseOutcome::PlaceError(format!("{e:#}")),
+    };
+    sink.entry(format!("place_{tr}"))
+        .or_default()
+        .push(t2.elapsed().as_nanos() as f64);
+
+    let fingerprint = graph_fingerprint(&task.graph);
+    let mut violation = None;
+    if out.placement.len() != task.graph.n() {
+        violation = Some(format!(
+            "{}: placement length {} != {} nodes",
+            case.label,
+            out.placement.len(),
+            task.graph.n()
+        ));
+    } else if let Some(&d) = out.placement.iter().find(|&&d| d >= task.graph.num_devices)
+    {
+        violation = Some(format!("{}: device {d} out of range", case.label));
+    } else if out.predicted_time.is_some_and(|t| !t.is_finite()) {
+        violation = Some(format!("{}: non-finite predicted time", case.label));
+    }
+    CaseOutcome::Accepted {
+        nodes: n,
+        fingerprint,
+        placement: out.placement,
+        time_bits: out.predicted_time.map(f64::to_bits),
+        task_bytes,
+        violation,
+    }
+}
+
+/// Run the full harness: generated cases + mutation battery, no-panic /
+/// reproducibility invariants, per-stage timings into `rec`.
+pub fn run(
+    cfg: &FuzzConfig,
+    dims: FeatDims,
+    place: PlaceFn,
+    rec: &mut BenchRecorder,
+) -> FuzzReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut cases: Vec<FuzzCase> = Vec::with_capacity(cfg.seeds + 24);
+    let lo = cfg.min_nodes.max(3);
+    let hi = cfg.max_nodes.max(lo);
+    for i in 0..cfg.seeds {
+        let frac = if cfg.seeds > 1 { i as f64 / (cfg.seeds - 1) as f64 } else { 0.0 };
+        let jitter = 0.8 + 0.4 * rng.next_f64();
+        let n = ((lo as f64 * (hi as f64 / lo as f64).powf(frac) * jitter) as usize)
+            .clamp(lo, hi);
+        let shape = DagShape::ALL[i % DagShape::ALL.len()];
+        let mut crng = rng.fork(i as u64);
+        let text = gen_dag_doc(&mut crng, n, shape);
+        cases.push(FuzzCase {
+            label: format!("gen{i}_{}_{n}n", shape.key()),
+            text,
+            limits: ImportLimits::default(),
+            expect: Expect::Valid,
+        });
+    }
+    let mut mrng = rng.fork(0xB105_F00D);
+    cases.extend(mutation_cases(&mut mrng));
+
+    let mut report = FuzzReport { cases: cases.len(), ..FuzzReport::default() };
+    let mut timings: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+
+    for (idx, case) in cases.iter().enumerate() {
+        let seed = cfg.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_case(case, dims, place, seed, Some(&mut timings))
+        }));
+        match outcome {
+            Err(_) => {
+                report.panics += 1;
+                eprintln!("[fuzz] PANIC in case {}", case.label);
+            }
+            Ok(CaseOutcome::Rejected(kind)) => {
+                report.rejected += 1;
+                *report.reject_by_class.entry(kind.key()).or_insert(0) += 1;
+                if case.expect == Expect::Valid {
+                    report.unexpected_rejects += 1;
+                    eprintln!("[fuzz] generated case {} was rejected", case.label);
+                }
+            }
+            Ok(CaseOutcome::PlaceError(e)) => {
+                // A structured placement-stage error is not a panic, but
+                // valid imports are expected to place.
+                report.invariant_violations += 1;
+                eprintln!("[fuzz] place error in {}: {e}", case.label);
+            }
+            Ok(CaseOutcome::Accepted {
+                nodes,
+                fingerprint,
+                placement,
+                time_bits,
+                task_bytes,
+                violation,
+            }) => {
+                report.accepted += 1;
+                report.max_nodes_seen = report.max_nodes_seen.max(nodes);
+                report.peak_task_bytes = report.peak_task_bytes.max(task_bytes);
+                if case.expect == Expect::Reject {
+                    report.invariant_violations += 1;
+                    eprintln!("[fuzz] mutation {} was accepted", case.label);
+                }
+                if let Some(v) = violation {
+                    report.invariant_violations += 1;
+                    eprintln!("[fuzz] invariant violation: {v}");
+                } else if cfg.repro_every > 0 && idx % cfg.repro_every == 0 {
+                    // Re-run outside the timing sinks; everything must
+                    // be bit-identical.
+                    let rerun = catch_unwind(AssertUnwindSafe(|| {
+                        run_case(case, dims, place, seed, None)
+                    }));
+                    let same = matches!(
+                        rerun,
+                        Ok(CaseOutcome::Accepted {
+                            fingerprint: f2,
+                            placement: ref p2,
+                            time_bits: t2,
+                            ..
+                        }) if f2 == fingerprint && *p2 == placement && t2 == time_bits
+                    );
+                    if !same {
+                        report.repro_failures += 1;
+                        eprintln!("[fuzz] non-reproducible case {}", case.label);
+                    }
+                }
+            }
+        }
+        if (idx + 1) % 50 == 0 {
+            eprintln!(
+                "[fuzz] {}/{} cases ({} accepted, {} rejected, {} panics)",
+                idx + 1,
+                cases.len(),
+                report.accepted,
+                report.rejected,
+                report.panics
+            );
+        }
+    }
+
+    for (key, mut ns) in timings {
+        ns.sort_by(|a, b| a.total_cmp(b));
+        let iters = ns.len();
+        rec.add(
+            key,
+            BenchStats {
+                iters,
+                mean_ns: ns.iter().sum::<f64>() / iters as f64,
+                median_ns: ns[iters / 2],
+                min_ns: ns[0],
+            },
+        );
+    }
+    rec.metric("cases", report.cases as f64);
+    rec.metric("accepted", report.accepted as f64);
+    rec.metric("rejected", report.rejected as f64);
+    rec.metric("panics", report.panics as f64);
+    rec.metric("repro_failures", report.repro_failures as f64);
+    rec.metric("unexpected_rejects", report.unexpected_rejects as f64);
+    rec.metric("invariant_violations", report.invariant_violations as f64);
+    rec.metric("max_nodes_seen", report.max_nodes_seen as f64);
+    rec.metric("peak_task_bytes", report.peak_task_bytes as f64);
+    for (class, count) in &report.reject_by_class {
+        rec.metric(format!("reject_{class}"), *count as f64);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::topo_greedy_place;
+    use crate::sim::simulate_default;
+
+    fn dims() -> FeatDims {
+        FeatDims { n: 256, k: 8, f: 48, d: 8 }
+    }
+
+    /// Policy-free placement stage: deterministic topo-greedy + one
+    /// simulator pass (the same fallback the serve daemon degrades to).
+    fn greedy_place(task: &PlacementTask, _seed: u64) -> anyhow::Result<PlaceOutcome> {
+        let p = topo_greedy_place(&task.graph);
+        let rep = simulate_default(&task.graph, &p.devices);
+        Ok(PlaceOutcome {
+            placement: p.devices,
+            predicted_time: if rep.valid { Some(rep.step_time) } else { None },
+        })
+    }
+
+    #[test]
+    fn generated_docs_are_valid_and_deterministic() {
+        for (i, shape) in DagShape::ALL.iter().enumerate() {
+            let mut a = Rng::new(42 + i as u64);
+            let mut b = Rng::new(42 + i as u64);
+            let doc_a = gen_dag_doc(&mut a, 600, *shape);
+            let doc_b = gen_dag_doc(&mut b, 600, *shape);
+            assert_eq!(doc_a, doc_b, "{}", shape.key());
+            let g = import_graph_text(&doc_a, &ImportLimits::default())
+                .unwrap_or_else(|e| panic!("{}: {e}", shape.key()));
+            assert!(g.n() >= 300, "{}: {}", shape.key(), g.n());
+        }
+    }
+
+    #[test]
+    fn mutation_battery_covers_every_reject_class() {
+        let mut rng = Rng::new(9);
+        let cases = mutation_cases(&mut rng);
+        let mut classes = BTreeMap::new();
+        for c in &cases {
+            match import_graph_text(&c.text, &c.limits) {
+                Ok(_) => panic!("mutation {} was accepted", c.label),
+                Err(e) => *classes.entry(e.kind.key()).or_insert(0usize) += 1,
+            }
+        }
+        assert!(classes.get("parse").copied().unwrap_or(0) >= 2, "{classes:?}");
+        assert!(classes.get("invalid").copied().unwrap_or(0) >= 8, "{classes:?}");
+        assert!(classes.get("too_large").copied().unwrap_or(0) >= 3, "{classes:?}");
+    }
+
+    #[test]
+    fn small_fuzz_run_upholds_the_invariant() {
+        let cfg = FuzzConfig {
+            seeds: 9,
+            min_nodes: 60,
+            max_nodes: 1200,
+            seed: 11,
+            repro_every: 3,
+        };
+        let mut rec = BenchRecorder::new("fuzz");
+        let report = run(&cfg, dims(), &greedy_place, &mut rec);
+        assert!(report.ok(), "{report:?}");
+        assert_eq!(report.accepted, 9, "{report:?}");
+        assert!(report.rejected >= 10, "{report:?}");
+        assert!(report.reject_by_class.len() >= 3, "{report:?}");
+        // the artifact carries the timings and counters
+        let text = rec.to_json().to_string();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("metrics").unwrap().get("panics").unwrap().as_f64(),
+            Some(0.0)
+        );
+        assert!(back
+            .get("results")
+            .unwrap()
+            .get("import_1k")
+            .is_some());
+    }
+}

@@ -1,0 +1,635 @@
+//! Hardened external-graph ingestion: arbitrary dataflow-graph JSON →
+//! validated, frozen [`OpGraph`].
+//!
+//! Every graph that does not come from the trusted registry generators
+//! enters the pipeline through this module — the serve wire path
+//! (`proto::graph_from_json`), the `--graph-file` CLI flags, and the
+//! `gdp fuzz` harness all share the one validator, so an input class
+//! rejected here is rejected identically everywhere with the same
+//! taxonomized error code.
+//!
+//! The accepted document is the wire graph schema (see
+//! [`crate::serve::proto`]): `{name?, num_devices, nodes:[{kind, name?,
+//! flops?, output_bytes?, param_bytes?, out_shape?, layer?}], edges:
+//! [[u,v] | [u,v,transfer_bytes]]}`. Per-edge transfer bytes are
+//! optional; the graph model carries one output size per producer, so a
+//! third element folds into the producer's `output_bytes` via max.
+//!
+//! Validation order (each stage only runs if the previous passed, so
+//! error messages always refer to structurally sound earlier stages):
+//!
+//! 1. input byte-size limit (text/file entry points);
+//! 2. JSON parse — depth-limited, so deep nesting cannot overflow the
+//!    stack ([`crate::util::json::MAX_DEPTH`]);
+//! 3. document shape: top-level object, `num_devices`, `nodes`, `edges`;
+//! 4. node/edge count resource limits;
+//! 5. per-node fields: known op kind, finite non-negative costs under
+//!    the per-node caps (NaN, negatives and cost extremes rejected),
+//!    integer shape/layer entries in range;
+//! 6. per-edge endpoint checks naming the offending ids: dangling
+//!    (out-of-range), self-loop, duplicate;
+//! 7. O(V+E) Kahn cycle check (freeze would panic; we report instead).
+//!
+//! Nothing in this module panics on any input; every rejection is an
+//! [`ImportError`] whose [`ImportError::wire_code`] maps onto the serve
+//! error-frame codes (`parse` / `bad_request` / `too_large`).
+
+use std::path::Path;
+
+use crate::graph::{OpGraph, OpKind, OpNode};
+use crate::serve::proto::code;
+use crate::util::json::{self, Json};
+
+/// Resource caps applied during import. The defaults comfortably admit
+/// the paper-scale graphs the fuzzer generates (100k nodes) while
+/// bounding memory for adversarial inputs; the serve daemon's own
+/// `--max-nodes` policy limit is enforced separately, after import.
+#[derive(Clone, Copy, Debug)]
+pub struct ImportLimits {
+    /// Maximum input document size in bytes (text/file entry points).
+    pub max_input_bytes: usize,
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    /// Device-count ceiling (the simulator topology supports up to 8).
+    pub max_devices: usize,
+    /// Per-node cost caps: values beyond these would push simulated
+    /// times toward overflow, so "cost extreme" inputs are rejected
+    /// rather than producing non-finite predictions downstream.
+    pub max_flops_per_node: f64,
+    pub max_bytes_per_node: f64,
+}
+
+impl Default for ImportLimits {
+    fn default() -> Self {
+        Self {
+            max_input_bytes: 64 << 20,
+            max_nodes: 150_000,
+            max_edges: 2_000_000,
+            max_devices: 8,
+            max_flops_per_node: 1e18,
+            max_bytes_per_node: 1e15,
+        }
+    }
+}
+
+/// The stable rejection taxonomy. Each class maps onto one serve
+/// error-frame code, so wire clients and CLI users see one vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImportErrorKind {
+    /// Unreadable input: I/O failure, oversized document, malformed or
+    /// too-deeply-nested JSON.
+    Parse,
+    /// Well-formed JSON that is not a valid graph: schema violations,
+    /// unknown kinds, NaN/negative/extreme costs, dangling/self-loop/
+    /// duplicate edges, cycles.
+    Invalid,
+    /// Structurally valid but beyond the node/edge resource limits.
+    TooLarge,
+}
+
+impl ImportErrorKind {
+    /// The serve error-frame code this class surfaces as on the wire.
+    pub fn wire_code(self) -> &'static str {
+        match self {
+            ImportErrorKind::Parse => code::PARSE,
+            ImportErrorKind::Invalid => code::BAD_REQUEST,
+            ImportErrorKind::TooLarge => code::TOO_LARGE,
+        }
+    }
+
+    /// Short stable key for metrics/fuzz accounting.
+    pub fn key(self) -> &'static str {
+        match self {
+            ImportErrorKind::Parse => "parse",
+            ImportErrorKind::Invalid => "invalid",
+            ImportErrorKind::TooLarge => "too_large",
+        }
+    }
+}
+
+/// A structured import rejection: taxonomy class + human message naming
+/// the offending node/edge where applicable.
+#[derive(Clone, Debug)]
+pub struct ImportError {
+    pub kind: ImportErrorKind,
+    pub message: String,
+}
+
+impl ImportError {
+    fn new(kind: ImportErrorKind, message: impl Into<String>) -> Self {
+        Self { kind, message: message.into() }
+    }
+
+    /// The serve error-frame code for this rejection.
+    pub fn wire_code(&self) -> &'static str {
+        self.kind.wire_code()
+    }
+}
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for ImportError {}
+
+fn invalid(msg: impl Into<String>) -> ImportError {
+    ImportError::new(ImportErrorKind::Invalid, msg)
+}
+
+fn too_large(msg: impl Into<String>) -> ImportError {
+    ImportError::new(ImportErrorKind::TooLarge, msg)
+}
+
+/// Import a graph from a file path (size-checked before reading).
+pub fn import_graph_file(
+    path: &Path,
+    limits: &ImportLimits,
+) -> Result<OpGraph, ImportError> {
+    let meta = std::fs::metadata(path).map_err(|e| {
+        ImportError::new(
+            ImportErrorKind::Parse,
+            format!("cannot read {}: {e}", path.display()),
+        )
+    })?;
+    if meta.len() > limits.max_input_bytes as u64 {
+        return Err(too_large(format!(
+            "graph file {} is {} bytes > limit {}",
+            path.display(),
+            meta.len(),
+            limits.max_input_bytes
+        )));
+    }
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        ImportError::new(
+            ImportErrorKind::Parse,
+            format!("cannot read {}: {e}", path.display()),
+        )
+    })?;
+    import_graph_text(&text, limits)
+}
+
+/// Import a graph from a JSON document string.
+pub fn import_graph_text(
+    text: &str,
+    limits: &ImportLimits,
+) -> Result<OpGraph, ImportError> {
+    if text.len() > limits.max_input_bytes {
+        return Err(too_large(format!(
+            "graph document is {} bytes > limit {}",
+            text.len(),
+            limits.max_input_bytes
+        )));
+    }
+    let v = json::parse(text)
+        .map_err(|e| ImportError::new(ImportErrorKind::Parse, format!("malformed JSON: {e}")))?;
+    import_graph_value(&v, limits)
+}
+
+/// Import a graph from an already-parsed JSON value (the serve wire path
+/// lands here — `parse_frame` has already consumed the frame).
+pub fn import_graph_value(
+    j: &Json,
+    limits: &ImportLimits,
+) -> Result<OpGraph, ImportError> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(invalid("graph must be a JSON object"));
+    }
+    let name = j.get("name").and_then(|x| x.as_str()).unwrap_or("inline").to_string();
+
+    let num_devices = j
+        .get("num_devices")
+        .ok_or_else(|| invalid("missing key \"num_devices\""))?
+        .as_f64()
+        .filter(|&f| f.fract() == 0.0 && f >= 1.0 && f <= limits.max_devices as f64)
+        .ok_or_else(|| {
+            invalid(format!(
+                "num_devices must be an integer in [1, {}]",
+                limits.max_devices
+            ))
+        })? as usize;
+
+    let nodes_j = j
+        .get("nodes")
+        .ok_or_else(|| invalid("missing key \"nodes\""))?
+        .as_arr()
+        .ok_or_else(|| invalid("nodes must be an array"))?;
+    if nodes_j.is_empty() {
+        return Err(invalid("graph has no nodes"));
+    }
+    if nodes_j.len() > limits.max_nodes {
+        return Err(too_large(format!(
+            "graph has {} nodes > limit {}",
+            nodes_j.len(),
+            limits.max_nodes
+        )));
+    }
+    let edges_j = j
+        .get("edges")
+        .ok_or_else(|| invalid("missing key \"edges\""))?
+        .as_arr()
+        .ok_or_else(|| invalid("edges must be an array"))?;
+    if edges_j.len() > limits.max_edges {
+        return Err(too_large(format!(
+            "graph has {} edges > limit {}",
+            edges_j.len(),
+            limits.max_edges
+        )));
+    }
+
+    let mut g = OpGraph::new(name, num_devices);
+    g.nodes.reserve(nodes_j.len());
+    for (i, nj) in nodes_j.iter().enumerate() {
+        g.nodes.push(node_from_json(i, nj, limits)?);
+    }
+
+    let n = g.nodes.len();
+    g.edges.reserve(edges_j.len());
+    let mut seen = std::collections::HashSet::with_capacity(edges_j.len());
+    for (i, ej) in edges_j.iter().enumerate() {
+        let trip = ej
+            .as_arr()
+            .filter(|a| a.len() == 2 || a.len() == 3)
+            .ok_or_else(|| {
+                invalid(format!(
+                    "edge {i}: must be a [producer, consumer] pair \
+                     (optionally [producer, consumer, transfer_bytes])"
+                ))
+            })?;
+        let endpoint = |slot: usize, what: &str| {
+            trip[slot]
+                .as_f64()
+                .filter(|&f| f.fract() == 0.0 && f >= 0.0 && f <= u32::MAX as f64)
+                .map(|f| f as usize)
+                .ok_or_else(|| {
+                    invalid(format!("edge {i}: {what} must be a non-negative integer"))
+                })
+        };
+        let u = endpoint(0, "producer")?;
+        let v = endpoint(1, "consumer")?;
+        for (id, what) in [(u, "producer"), (v, "consumer")] {
+            if id >= n {
+                return Err(invalid(format!(
+                    "edge {i}: dangling {what} node {id} (graph has {n} nodes)"
+                )));
+            }
+        }
+        if u == v {
+            return Err(invalid(format!(
+                "edge {i}: self loop at node {u} ({:?})",
+                g.nodes[u].name
+            )));
+        }
+        if !seen.insert(((u as u64) << 32) | v as u64) {
+            return Err(invalid(format!(
+                "edge {i}: duplicate edge ({u}, {v}) ({:?} -> {:?})",
+                g.nodes[u].name, g.nodes[v].name
+            )));
+        }
+        if trip.len() == 3 {
+            let bytes = trip[2]
+                .as_f64()
+                .filter(|&f| f.is_finite() && f >= 0.0 && f <= limits.max_bytes_per_node)
+                .ok_or_else(|| {
+                    invalid(format!(
+                        "edge {i}: transfer_bytes must be finite in [0, {}]",
+                        limits.max_bytes_per_node
+                    ))
+                })?;
+            // One output size per producer: the largest declared
+            // transfer along its out-edges wins.
+            g.nodes[u].output_bytes = g.nodes[u].output_bytes.max(bytes as u64);
+        }
+        g.edges.push((u as u32, v as u32));
+    }
+
+    if let Some(node) = find_cycle_node(n, &g.edges) {
+        return Err(invalid(format!(
+            "graph has a cycle (through node {node} {:?})",
+            g.nodes[node].name
+        )));
+    }
+    // Belt over suspenders: the generic validator re-checks everything
+    // above (and anything future fields add) before freeze() may assert.
+    g.validate().map_err(invalid)?;
+    g.freeze();
+    Ok(g)
+}
+
+fn node_from_json(
+    i: usize,
+    nj: &Json,
+    limits: &ImportLimits,
+) -> Result<OpNode, ImportError> {
+    if !matches!(nj, Json::Obj(_)) {
+        return Err(invalid(format!("node {i}: must be a JSON object")));
+    }
+    let kind_s = nj
+        .get("kind")
+        .ok_or_else(|| invalid(format!("node {i}: missing key \"kind\"")))?
+        .as_str()
+        .ok_or_else(|| invalid(format!("node {i}: kind must be a string")))?;
+    let kind = OpKind::from_name(kind_s)
+        .ok_or_else(|| invalid(format!("node {i}: unknown op kind {kind_s:?}")))?;
+    let name = nj
+        .get("name")
+        .and_then(|x| x.as_str())
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("n{i}"));
+    let mut node = OpNode::new(name, kind);
+
+    node.flops = match nj.get("flops") {
+        None => 0.0,
+        Some(x) => x
+            .as_f64()
+            .filter(|&f| f.is_finite() && f >= 0.0 && f <= limits.max_flops_per_node)
+            .ok_or_else(|| {
+                invalid(format!(
+                    "node {i}: flops must be finite in [0, {}]",
+                    limits.max_flops_per_node
+                ))
+            })?,
+    };
+    let mut byte_field = |key: &str| -> Result<u64, ImportError> {
+        match nj.get(key) {
+            None => Ok(0),
+            Some(x) => x
+                .as_f64()
+                .filter(|&f| f.is_finite() && f >= 0.0 && f <= limits.max_bytes_per_node)
+                .map(|f| f as u64)
+                .ok_or_else(|| {
+                    invalid(format!(
+                        "node {i}: {key} must be finite in [0, {}]",
+                        limits.max_bytes_per_node
+                    ))
+                }),
+        }
+    };
+    node.output_bytes = byte_field("output_bytes")?;
+    node.param_bytes = byte_field("param_bytes")?;
+
+    if let Some(sh) = nj.get("out_shape") {
+        let arr = sh
+            .as_arr()
+            .ok_or_else(|| invalid(format!("node {i}: out_shape must be an array")))?;
+        if arr.len() > 4 {
+            return Err(invalid(format!("node {i}: out_shape rank > 4")));
+        }
+        for (k, dj) in arr.iter().enumerate() {
+            node.out_shape[k] = dj
+                .as_f64()
+                .filter(|&f| f.fract() == 0.0 && f >= 0.0 && f <= u32::MAX as f64)
+                .ok_or_else(|| {
+                    invalid(format!(
+                        "node {i}: out_shape entries must be integers in [0, 2^32)"
+                    ))
+                })? as u32;
+        }
+    }
+    node.layer = match nj.get("layer") {
+        None => 0,
+        Some(x) => x
+            .as_f64()
+            .filter(|&f| f.fract() == 0.0 && f >= 0.0 && f <= u32::MAX as f64)
+            .ok_or_else(|| {
+                invalid(format!("node {i}: layer must be an integer in [0, 2^32)"))
+            })? as u32,
+    };
+    Ok(node)
+}
+
+/// O(V+E) Kahn pass; `Some(node)` names a node on (or downstream of) a
+/// cycle when one exists. `freeze()` asserts on cycles, so this runs
+/// first on every untrusted graph.
+fn find_cycle_node(n: usize, edges: &[(u32, u32)]) -> Option<usize> {
+    let mut indeg = vec![0u32; n];
+    let mut off = vec![0usize; n + 1];
+    for &(u, v) in edges {
+        off[u as usize + 1] += 1;
+        indeg[v as usize] += 1;
+    }
+    for i in 0..n {
+        off[i + 1] += off[i];
+    }
+    let mut adj = vec![0u32; edges.len()];
+    let mut fill = off.clone();
+    for &(u, v) in edges {
+        adj[fill[u as usize]] = v;
+        fill[u as usize] += 1;
+    }
+    let mut queue: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(u) = queue.pop() {
+        seen += 1;
+        for &v in &adj[off[u as usize]..off[u as usize + 1]] {
+            indeg[v as usize] -= 1;
+            if indeg[v as usize] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    if seen == n {
+        None
+    } else {
+        (0..n).find(|&i| indeg[i] > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lim() -> ImportLimits {
+        ImportLimits::default()
+    }
+
+    fn import(text: &str) -> Result<OpGraph, ImportError> {
+        import_graph_text(text, &lim())
+    }
+
+    #[test]
+    fn minimal_graph_imports_and_freezes() {
+        let g = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"Input"},{"kind":"MatMul","flops":1e9},
+                         {"kind":"Output"}],
+                "edges":[[0,1],[1,2]]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.topo_order().len(), 3);
+        assert_eq!(g.nodes[1].flops, 1e9);
+    }
+
+    #[test]
+    fn single_node_and_disconnected_graphs_import() {
+        let g = import(r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[]}"#)
+            .unwrap();
+        assert_eq!(g.n(), 1);
+        let g = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"Input"},{"kind":"Input"},{"kind":"MatMul"}],
+                "edges":[[0,2]]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.n(), 3);
+    }
+
+    #[test]
+    fn edge_transfer_bytes_fold_into_producer_output() {
+        let g = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"Input","output_bytes":16},{"kind":"Output"}],
+                "edges":[[0,1,4096]]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.nodes[0].output_bytes, 4096);
+    }
+
+    #[test]
+    fn rejections_name_the_offending_ids() {
+        let dangling = import(
+            r#"{"num_devices":2,"nodes":[{"kind":"Input"}],"edges":[[0,7]]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(dangling.kind, ImportErrorKind::Invalid);
+        assert!(dangling.message.contains("dangling consumer node 7"), "{dangling}");
+
+        let selfloop = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"Input","name":"a"},{"kind":"Output"}],
+                "edges":[[0,0]]}"#,
+        )
+        .unwrap_err();
+        assert!(selfloop.message.contains("self loop at node 0"), "{selfloop}");
+        assert!(selfloop.message.contains("\"a\""), "{selfloop}");
+
+        let dup = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"Input","name":"a"},{"kind":"Output","name":"b"}],
+                "edges":[[0,1],[0,1]]}"#,
+        )
+        .unwrap_err();
+        assert!(dup.message.contains("duplicate edge (0, 1)"), "{dup}");
+        assert!(dup.message.contains("\"b\""), "{dup}");
+
+        let cyc = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"MatMul","name":"p"},{"kind":"MatMul"}],
+                "edges":[[0,1],[1,0]]}"#,
+        )
+        .unwrap_err();
+        assert!(cyc.message.contains("cycle"), "{cyc}");
+        assert!(cyc.message.contains("node"), "{cyc}");
+    }
+
+    #[test]
+    fn nan_negative_and_extreme_costs_rejected() {
+        for doc in [
+            // json::parse has no NaN literal, so NaN arrives as 1e999 = inf
+            r#"{"num_devices":2,"nodes":[{"kind":"MatMul","flops":1e999}],"edges":[]}"#,
+            r#"{"num_devices":2,"nodes":[{"kind":"MatMul","flops":-1}],"edges":[]}"#,
+            r#"{"num_devices":2,"nodes":[{"kind":"MatMul","flops":1e30}],"edges":[]}"#,
+            r#"{"num_devices":2,"nodes":[{"kind":"MatMul","output_bytes":-4}],"edges":[]}"#,
+            r#"{"num_devices":2,"nodes":[{"kind":"MatMul","param_bytes":1e30}],"edges":[]}"#,
+        ] {
+            let e = import(doc).unwrap_err();
+            assert_eq!(e.kind, ImportErrorKind::Invalid, "{doc}: {e}");
+            assert_eq!(e.wire_code(), code::BAD_REQUEST);
+        }
+    }
+
+    #[test]
+    fn resource_limits_classify_as_too_large() {
+        let mut small = lim();
+        small.max_nodes = 2;
+        let e = import_graph_text(
+            r#"{"num_devices":1,
+                "nodes":[{"kind":"Input"},{"kind":"Input"},{"kind":"Input"}],
+                "edges":[]}"#,
+            &small,
+        )
+        .unwrap_err();
+        assert_eq!(e.kind, ImportErrorKind::TooLarge);
+        assert_eq!(e.wire_code(), code::TOO_LARGE);
+
+        let mut tiny = lim();
+        tiny.max_input_bytes = 8;
+        let e = import_graph_text("{\"num_devices\":1}", &tiny).unwrap_err();
+        assert_eq!(e.kind, ImportErrorKind::TooLarge);
+
+        let mut few = lim();
+        few.max_edges = 1;
+        let e = import_graph_text(
+            r#"{"num_devices":1,
+                "nodes":[{"kind":"Input"},{"kind":"MatMul"},{"kind":"Output"}],
+                "edges":[[0,1],[1,2]]}"#,
+            &few,
+        )
+        .unwrap_err();
+        assert_eq!(e.kind, ImportErrorKind::TooLarge);
+    }
+
+    #[test]
+    fn parse_class_covers_malformed_and_deep_inputs() {
+        let e = import("{nope").unwrap_err();
+        assert_eq!(e.kind, ImportErrorKind::Parse);
+        assert_eq!(e.wire_code(), code::PARSE);
+        let deep = "[".repeat(json::MAX_DEPTH + 1) + &"]".repeat(json::MAX_DEPTH + 1);
+        let e = import(&deep).unwrap_err();
+        assert_eq!(e.kind, ImportErrorKind::Parse);
+        let e = import_graph_file(Path::new("/nonexistent/gdp-graph.json"), &lim())
+            .unwrap_err();
+        assert_eq!(e.kind, ImportErrorKind::Parse);
+    }
+
+    #[test]
+    fn schema_violations_rejected_with_context() {
+        for (doc, needle) in [
+            (r#"[1,2,3]"#, "object"),
+            (r#"{"nodes":[],"edges":[]}"#, "num_devices"),
+            (r#"{"num_devices":0,"nodes":[{"kind":"Input"}],"edges":[]}"#, "num_devices"),
+            (r#"{"num_devices":99,"nodes":[{"kind":"Input"}],"edges":[]}"#, "num_devices"),
+            (r#"{"num_devices":1,"nodes":[],"edges":[]}"#, "no nodes"),
+            (r#"{"num_devices":1,"nodes":[{}],"edges":[]}"#, "kind"),
+            (r#"{"num_devices":1,"nodes":[{"kind":"Warp"}],"edges":[]}"#, "unknown op kind"),
+            (
+                r#"{"num_devices":1,"nodes":[{"kind":"Input","out_shape":[1,2,3,4,5]}],"edges":[]}"#,
+                "rank",
+            ),
+            (
+                r#"{"num_devices":1,"nodes":[{"kind":"Input","out_shape":[1.5]}],"edges":[]}"#,
+                "out_shape",
+            ),
+            (
+                r#"{"num_devices":1,"nodes":[{"kind":"Input","layer":-1}],"edges":[]}"#,
+                "layer",
+            ),
+            (r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[[0]]}"#, "pair"),
+            (
+                r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[["a","b"]]}"#,
+                "producer",
+            ),
+        ] {
+            let e = import(doc).unwrap_err();
+            assert_eq!(e.kind, ImportErrorKind::Invalid, "{doc}");
+            assert!(e.message.contains(needle), "{doc} -> {e}");
+        }
+    }
+
+    #[test]
+    fn registry_graphs_survive_the_round_trip() {
+        for id in ["inception", "rnnlm2", "gnmt4"] {
+            let g = crate::workloads::by_id(id).unwrap();
+            let j = crate::serve::proto::graph_to_json(&g);
+            let back = import_graph_value(&j, &lim()).unwrap();
+            assert_eq!(back.n(), g.n());
+            assert_eq!(back.edges, g.edges);
+            for (a, b) in g.nodes.iter().zip(&back.nodes) {
+                assert_eq!(a.flops.to_bits(), b.flops.to_bits(), "{id}");
+                assert_eq!(a.output_bytes, b.output_bytes);
+            }
+        }
+    }
+}

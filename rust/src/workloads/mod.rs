@@ -16,13 +16,16 @@
 
 pub mod amoebanet;
 pub mod corpus;
+pub mod fuzz;
 pub mod gnmt;
+pub mod import;
 pub mod inception;
 pub mod rnnlm;
 pub mod transformer_xl;
 pub mod wavenet;
 
 pub use corpus::{holdout_ids, pretrain_corpus, CorpusItem, CorpusLevel};
+pub use import::{ImportError, ImportErrorKind, ImportLimits};
 
 use crate::graph::OpGraph;
 

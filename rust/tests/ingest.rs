@@ -1,0 +1,108 @@
+//! External-graph ingestion contract (DESIGN.md §Ingestion): a registry
+//! workload exported to JSON and re-imported must be indistinguishable
+//! from the registry-built original — same fingerprint, bit-identical
+//! features, and a bit-identical placement from the same seed — and the
+//! serve wire path must reject bad graphs with the importer's error
+//! codes, so every entry point into the pipeline enforces one taxonomy.
+
+use std::path::Path;
+
+use gdp::coordinator::{self, Session};
+use gdp::policy::PlacementTask;
+use gdp::serve::{graph_fingerprint, proto, PlacementService, ServeConfig};
+use gdp::workloads::{self, import, ImportErrorKind, ImportLimits};
+
+#[test]
+fn json_round_trip_reproduces_the_registry_placement_bit_for_bit() {
+    let session = Session::open(Path::new("artifacts"), "full").unwrap();
+    let store = session.init_params().unwrap();
+    for id in ["inception", "rnnlm2", "gnmt4"] {
+        let reg_task = session.task(id, 5).unwrap();
+        let doc = proto::graph_to_json(&workloads::by_id(id).unwrap()).to_string();
+        let g = import::import_graph_text(&doc, &ImportLimits::default())
+            .unwrap_or_else(|e| panic!("{id}: re-import rejected: {e}"));
+        let imp_task = PlacementTask::new(g.name.clone(), g, session.feat_dims(), 5);
+
+        assert_eq!(
+            graph_fingerprint(&reg_task.graph),
+            graph_fingerprint(&imp_task.graph),
+            "{id}: fingerprint drifted through JSON"
+        );
+        assert_eq!(
+            reg_task.feats.feats, imp_task.feats.feats,
+            "{id}: features drifted through JSON"
+        );
+
+        let a = coordinator::infer(&session.policy, &store, &reg_task, 2, 11).unwrap();
+        let b = coordinator::infer(&session.policy, &store, &imp_task, 2, 11).unwrap();
+        assert_eq!(
+            a.best_placement.devices, b.best_placement.devices,
+            "{id}: placement differs between registry and imported graph"
+        );
+        assert_eq!(a.best_valid, b.best_valid, "{id}");
+        assert_eq!(
+            a.best_time.to_bits(),
+            b.best_time.to_bits(),
+            "{id}: predicted time not bit-identical"
+        );
+    }
+}
+
+/// A file on disk goes through the exact same validator as an inline
+/// string (the file front-end only adds the size pre-check).
+#[test]
+fn file_and_text_imports_agree() {
+    let doc = proto::graph_to_json(&workloads::by_id("inception").unwrap()).to_string();
+    let dir = std::env::temp_dir().join(format!("gdp_ingest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("inception.json");
+    std::fs::write(&path, &doc).unwrap();
+
+    let from_text = import::import_graph_text(&doc, &ImportLimits::default()).unwrap();
+    let from_file = import::import_graph_file(&path, &ImportLimits::default()).unwrap();
+    assert_eq!(graph_fingerprint(&from_text), graph_fingerprint(&from_file));
+    assert_eq!(from_text.edges, from_file.edges);
+
+    // the file front-end enforces the byte limit before reading
+    let tight = ImportLimits { max_input_bytes: 16, ..ImportLimits::default() };
+    let err = import::import_graph_file(&path, &tight).unwrap_err();
+    assert_eq!(err.kind, ImportErrorKind::TooLarge);
+    // and a missing file is a structured parse error, not a panic
+    let err = import::import_graph_file(&dir.join("nope.json"), &ImportLimits::default())
+        .unwrap_err();
+    assert_eq!(err.kind, ImportErrorKind::Parse);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The serve wire path surfaces the importer's taxonomy: each rejection
+/// class maps onto the matching error-frame code.
+#[test]
+fn serve_inline_graph_errors_match_the_import_taxonomy() {
+    let session = Session::open(Path::new("artifacts"), "full").unwrap();
+    let store = session.init_params().unwrap();
+    let svc = PlacementService::start(
+        session.shared_policy(),
+        store,
+        ServeConfig { warmup: false, ..ServeConfig::default() },
+    );
+
+    // Invalid -> bad_request: a self-loop, named in the message.
+    let bad = r#"{"id":"x","graph":{"num_devices":2,"nodes":[
+        {"kind":"MatMul"},{"kind":"MatMul"}],"edges":[[1,1]]}}"#
+        .replace('\n', " ");
+    let resp = svc.call(&bad);
+    assert_eq!(ImportErrorKind::Invalid.wire_code(), "bad_request");
+    assert!(resp.contains("bad_request"), "{resp}");
+    assert!(resp.contains("self loop"), "{resp}");
+
+    // Parse stays parse on the wire (frame-level, same code string).
+    assert_eq!(ImportErrorKind::Parse.wire_code(), "parse");
+    let resp = svc.call("{broken");
+    assert!(resp.contains("\"parse\""), "{resp}");
+
+    // A well-formed inline graph built by the exporter still places.
+    let g = proto::graph_to_json(&workloads::by_id("gnmt4").unwrap());
+    let resp = svc.call(&format!(r#"{{"id":"ok","graph":{}}}"#, g.to_string()));
+    assert!(resp.contains("placement"), "{resp}");
+    svc.stop();
+}
