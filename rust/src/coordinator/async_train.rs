@@ -1,0 +1,803 @@
+//! Supervised asynchronous actor/learner PPO pre-training
+//! (DESIGN.md §Training "Supervision semantics").
+//!
+//! N rollout **actors** each own a policy-engine replica (own forward
+//! workspace), an [`EvalPool`] shard and a batch cache; they produce
+//! `(rollout, reward)` batches over a bounded channel that one
+//! **learner** consumes, applying the exact serial update math
+//! ([`LearnerCore::consume_rollout`]). Mirhoseini et al. (1706.04972)
+//! trained this controller with distributed replicas; here the split
+//! additionally buys *fault isolation* for long corpus runs:
+//!
+//! - every rollout executes under `catch_unwind`; a panicking rollout is
+//!   retried on the same actor after exponential backoff (supervised
+//!   restart), bounded by a per-actor budget (`--max-restarts`), with
+//!   structured `actor_restarts` accounting;
+//! - batches whose loss goes non-finite are **quarantined** by the
+//!   learner's rollback guard (never retried forever) and counted in
+//!   the checkpointed `quarantined_batches`;
+//! - actors heartbeat through shared atomics; the learner's watchdog
+//!   turns a stalled or dead actor into an actionable error instead of
+//!   a hang;
+//! - autosave/resume compose: the learner writes the same GDPCKPT v2
+//!   snapshots at the same step boundaries as the serial loop.
+//!
+//! **Determinism contract.** With `--deterministic`, the schedule is
+//! pinned: step `s` runs on actor `s % N`, driven by a ticket carrying
+//! the learner's RNG state; the actor samples with it and returns the
+//! advanced state. Because rollout and consumption share the serial
+//! code paths and run in step order, the parameters — and every
+//! autosaved checkpoint — are **bit-identical** to the serial run
+//! (enforced in `tests/crash_safety.rs`). Free-running mode instead
+//! lets actors claim steps from an atomic counter and the learner
+//! consume in arrival order (stale-params PPO, maximum overlap); resume
+//! then preserves the total update count but may permute step
+//! identities near the crash point.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::graph::features::GraphFeatures;
+use crate::policy::{PlacementTask, Sample};
+use crate::runtime::checkpoint::{self, TrainState};
+use crate::runtime::{Batch, ParamStore, PolicyBackend};
+use crate::serve::fault::FaultInjector;
+use crate::sim::EvalPool;
+use crate::util::Rng;
+
+use super::trainer::{
+    rollout_from_logits, row_assignment, LearnerCore, SupervisionStats,
+    TrainConfig, TrainResult,
+};
+
+/// Deterministic-mode work order: "run step `step` with this RNG state".
+struct Ticket {
+    step: usize,
+    rng: [u64; 4],
+}
+
+/// One finished rollout, crossing the actor→learner channel.
+struct RolloutMsg {
+    step: usize,
+    /// Post-rollout RNG state (deterministic mode only) so the learner
+    /// continues the exact serial stream.
+    rng_after: Option<[u64; 4]>,
+    samples: Vec<Option<Sample>>,
+    outcomes: Vec<(f64, bool, f64)>,
+}
+
+/// `usize::MAX` in `current_step` = idle (not mid-rollout).
+const IDLE: usize = usize::MAX;
+
+/// Per-actor supervision state, written by the actor, read by the
+/// learner's watchdog.
+struct ActorState {
+    /// Millis since run start at the last sign of life.
+    beat_ms: AtomicU64,
+    /// Step currently being rolled out ([`IDLE`] when between steps).
+    current_step: AtomicUsize,
+    /// Supervised restarts so far (each recovered panic/error).
+    restarts: AtomicUsize,
+    /// Restart budget exhausted; the actor thread has exited.
+    dead: AtomicBool,
+    /// Human-readable cause of the most recent failure.
+    last_error: Mutex<String>,
+}
+
+impl ActorState {
+    fn new() -> Self {
+        Self {
+            beat_ms: AtomicU64::new(0),
+            current_step: AtomicUsize::new(IDLE),
+            restarts: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+            last_error: Mutex::new(String::new()),
+        }
+    }
+
+    fn beat(&self, now_ms: u64) {
+        self.beat_ms.store(now_ms, Ordering::SeqCst);
+    }
+}
+
+/// State shared between the learner and every actor thread.
+struct Shared {
+    shutdown: AtomicBool,
+    /// Free-running step dispenser (next unclaimed absolute step).
+    next_step: AtomicUsize,
+    /// Steps claimed by actors that died before delivering them
+    /// (free-running mode); re-dispensed to surviving claimants or, as
+    /// a last resort, executed inline by the learner.
+    abandoned: Mutex<Vec<usize>>,
+    t0: Instant,
+    actors: Vec<ActorState>,
+}
+
+impl Shared {
+    fn new(n: usize, start_step: usize) -> Self {
+        Self {
+            shutdown: AtomicBool::new(false),
+            next_step: AtomicUsize::new(start_step),
+            abandoned: Mutex::new(Vec::new()),
+            t0: Instant::now(),
+            actors: (0..n).map(|_| ActorState::new()).collect(),
+        }
+    }
+
+    fn elapsed_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
+    fn stopping(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    fn pop_abandoned(&self) -> Option<usize> {
+        self.abandoned
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop()
+    }
+
+    fn push_abandoned(&self, step: usize) {
+        self.abandoned
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(step);
+    }
+
+    fn last_error(&self, a: usize) -> String {
+        let msg = self.actors[a]
+            .last_error
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
+        if msg.is_empty() {
+            "<none recorded>".to_string()
+        } else {
+            msg
+        }
+    }
+
+    /// One-line per-actor roll-up appended to watchdog errors.
+    fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .actors
+            .iter()
+            .enumerate()
+            .map(|(a, st)| {
+                format!(
+                    "actor {a}: {} restart(s){}{}",
+                    st.restarts.load(Ordering::SeqCst),
+                    if st.dead.load(Ordering::SeqCst) { ", dead" } else { "" },
+                    {
+                        let e = self.last_error(a);
+                        if e == "<none recorded>" {
+                            String::new()
+                        } else {
+                            format!(", last error: {e}")
+                        }
+                    }
+                )
+            })
+            .collect();
+        format!(" [{}]", parts.join("; "))
+    }
+
+    fn describe_dead(&self, a: usize, cfg: &TrainConfig) -> String {
+        format!(
+            "rollout actor {a} is dead: {} failures exceeded the supervised \
+             restart budget (--max-restarts {}); last error: {}. Raise \
+             --max-restarts or remove the fault to let the run proceed.",
+            self.actors[a].restarts.load(Ordering::SeqCst),
+            cfg.max_restarts,
+            self.last_error(a)
+        )
+    }
+}
+
+/// Stateless per-step RNG for free-running rollouts: retries and
+/// orphan re-execution reproduce the same draw for the same step.
+fn step_seed(seed: u64, step: usize) -> u64 {
+    seed ^ (step as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+/// Marshal (and cache) the batch for one row assignment.
+fn batch_for<'c>(
+    policy: &dyn PolicyBackend,
+    tasks: &[PlacementTask],
+    cache: &'c mut HashMap<Vec<usize>, Batch>,
+    row_tasks: &[usize],
+) -> Result<&'c Batch> {
+    if !cache.contains_key(row_tasks) {
+        let rows: Vec<&GraphFeatures> =
+            row_tasks.iter().map(|&ti| &tasks[ti].feats).collect();
+        cache.insert(
+            row_tasks.to_vec(),
+            Batch::from_rows(policy.manifest(), &rows)?,
+        );
+    }
+    Ok(&cache[row_tasks])
+}
+
+/// One rollout attempt on an actor thread. The params read-lock is held
+/// only for the forward; sampling and simulation run lock-free so the
+/// learner's updates never wait on a slow simulation.
+#[allow(clippy::too_many_arguments)]
+fn rollout_once(
+    a: usize,
+    policy: &dyn PolicyBackend,
+    store: &RwLock<ParamStore>,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    shared: &Shared,
+    injector: &FaultInjector,
+    pool: &EvalPool,
+    cache: &mut HashMap<Vec<usize>, Batch>,
+    step: usize,
+    rng_state: Option<[u64; 4]>,
+) -> Result<RolloutMsg> {
+    let dims = policy.manifest().dims;
+    let row_tasks = row_assignment(step, dims.b, tasks.len());
+    let batch = batch_for(policy, tasks, cache, &row_tasks)?;
+    let mut rng = match rng_state {
+        Some(s) => Rng::from_state(s),
+        None => Rng::new(step_seed(cfg.seed, step)),
+    };
+    // Actor-side fault injection (panic/slow fire here, inside the
+    // supervisor's catch_unwind; nan poisons the sampled log-probs
+    // below so it flows into a non-finite loss → learner quarantine).
+    let fidx = injector.next_forward();
+    injector.before_forward(fidx);
+    let logits = {
+        let guard = store.read().unwrap_or_else(|p| p.into_inner());
+        policy.forward(&guard, batch)?
+    };
+    shared.actors[a].beat(shared.elapsed_ms());
+    let (mut samples, outcomes) = rollout_from_logits(
+        policy, tasks, cfg, batch, step, &row_tasks, &logits, &mut rng, pool,
+    )?;
+    if let Some(s) = samples.iter_mut().flatten().next() {
+        injector.poison_logits(fidx, &mut s.logp);
+    }
+    Ok(RolloutMsg {
+        step,
+        rng_after: rng_state.map(|_| rng.state()),
+        samples,
+        outcomes,
+    })
+}
+
+/// An actor thread: acquire work (a ticket in deterministic mode, an
+/// atomic step claim otherwise), roll it out under `catch_unwind`, and
+/// deliver over the bounded channel. Failures are retried on the *same*
+/// step after exponential backoff until the restart budget runs out,
+/// at which point the actor marks itself dead (abandoning its claim in
+/// free-running mode) and exits.
+#[allow(clippy::too_many_arguments)]
+fn actor_main(
+    a: usize,
+    policy: &dyn PolicyBackend,
+    store: &RwLock<ParamStore>,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    shared: &Shared,
+    injector: &FaultInjector,
+    tx: mpsc::SyncSender<RolloutMsg>,
+    tickets: Option<mpsc::Receiver<Ticket>>,
+    shard_threads: usize,
+) {
+    let pool = EvalPool::new(shard_threads);
+    let mut cache: HashMap<Vec<usize>, Batch> = HashMap::new();
+    let me = &shared.actors[a];
+    // Work that failed and must be retried (same step, same RNG state —
+    // a retried deterministic rollout is indistinguishable from an
+    // untroubled one).
+    let mut pending: Option<(usize, Option<[u64; 4]>)> = None;
+    let mut consecutive = 0u32;
+    'supervise: loop {
+        if shared.stopping() {
+            break;
+        }
+        let (step, rng_state) = match pending.take() {
+            Some(w) => w,
+            None => match &tickets {
+                Some(rx) => match rx.recv() {
+                    Ok(t) => (t.step, Some(t.rng)),
+                    Err(_) => break, // learner finished / errored
+                },
+                None => {
+                    let s = match shared.pop_abandoned() {
+                        Some(s) => s,
+                        None => {
+                            let s = shared.next_step.fetch_add(1, Ordering::SeqCst);
+                            if s >= cfg.steps {
+                                break;
+                            }
+                            s
+                        }
+                    };
+                    (s, None)
+                }
+            },
+        };
+        me.current_step.store(step, Ordering::SeqCst);
+        me.beat(shared.elapsed_ms());
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            rollout_once(
+                a, policy, store, tasks, cfg, shared, injector, &pool, &mut cache,
+                step, rng_state,
+            )
+        }));
+        let outcome: std::result::Result<RolloutMsg, String> = match attempt {
+            Ok(Ok(msg)) => Ok(msg),
+            Ok(Err(e)) => Err(format!("{e:#}")),
+            Err(p) => Err(panic_text(p)),
+        };
+        match outcome {
+            Ok(mut msg) => {
+                consecutive = 0;
+                // Bounded-channel delivery: poll with heartbeats so a
+                // full channel (learner busy) never looks like a stall.
+                loop {
+                    match tx.try_send(msg) {
+                        Ok(()) => break,
+                        Err(mpsc::TrySendError::Full(back)) => {
+                            if shared.stopping() {
+                                break 'supervise;
+                            }
+                            msg = back;
+                            me.beat(shared.elapsed_ms());
+                            thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => break 'supervise,
+                    }
+                }
+                me.current_step.store(IDLE, Ordering::SeqCst);
+                me.beat(shared.elapsed_ms());
+            }
+            Err(text) => {
+                *me.last_error.lock().unwrap_or_else(|p| p.into_inner()) =
+                    text.clone();
+                let total = me.restarts.fetch_add(1, Ordering::SeqCst) + 1;
+                consecutive += 1;
+                if cfg.verbose {
+                    eprintln!(
+                        "[pretrain] actor {a}: step {step} rollout failed \
+                         ({text}); supervised restart {total} (budget {})",
+                        cfg.max_restarts
+                    );
+                }
+                if total > cfg.max_restarts {
+                    me.dead.store(true, Ordering::SeqCst);
+                    if tickets.is_none() {
+                        shared.push_abandoned(step);
+                    }
+                    break;
+                }
+                pending = Some((step, rng_state));
+                // Exponential backoff (10ms·2^k, capped at 500ms),
+                // heartbeating throughout so the watchdog sees a live,
+                // recovering actor rather than a stall.
+                let mut left = (10u64 << consecutive.min(6)).min(500);
+                while left > 0 {
+                    if shared.stopping() {
+                        break 'supervise;
+                    }
+                    let d = left.min(50);
+                    thread::sleep(Duration::from_millis(d));
+                    me.beat(shared.elapsed_ms());
+                    left -= d;
+                }
+            }
+        }
+    }
+    me.current_step.store(IDLE, Ordering::SeqCst);
+}
+
+enum Got {
+    Batch(RolloutMsg),
+    /// Free-running only: a claim abandoned by a dead actor that no
+    /// surviving actor will pick up; the learner runs it inline.
+    Orphan(usize),
+}
+
+/// Block for the next finished rollout, enforcing the watchdog: a dead
+/// scheduled actor, a busy actor with no heartbeat inside
+/// `--watchdog-ms`, or an undeliverable ticket all become actionable
+/// errors instead of hangs. `det_waiting` is `Some((actor, issue_ms))`
+/// when a deterministic ticket is outstanding.
+fn wait_next(
+    rx: &mpsc::Receiver<RolloutMsg>,
+    shared: &Shared,
+    cfg: &TrainConfig,
+    det_waiting: Option<(usize, u64)>,
+) -> Result<Got> {
+    let poll = Duration::from_millis(cfg.watchdog_ms.clamp(10, 250));
+    loop {
+        match rx.recv_timeout(poll) {
+            Ok(m) => return Ok(Got::Batch(m)),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if det_waiting.is_none() {
+                    if let Some(s) = shared.pop_abandoned() {
+                        return Ok(Got::Orphan(s));
+                    }
+                }
+                bail!(
+                    "all rollout actors exited with work outstanding{}",
+                    shared.summary()
+                );
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        let now = shared.elapsed_ms();
+        if let Some((a, _)) = det_waiting {
+            if shared.actors[a].dead.load(Ordering::SeqCst) {
+                bail!("{}", shared.describe_dead(a, cfg));
+            }
+        }
+        if shared.actors.iter().all(|st| st.dead.load(Ordering::SeqCst)) {
+            if det_waiting.is_none() {
+                if let Some(s) = shared.pop_abandoned() {
+                    return Ok(Got::Orphan(s));
+                }
+            }
+            bail!(
+                "all {} rollout actors are dead (restart budget \
+                 --max-restarts {} exhausted){}",
+                shared.actors.len(),
+                cfg.max_restarts,
+                shared.summary()
+            );
+        }
+        for (a, st) in shared.actors.iter().enumerate() {
+            if st.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            let step = st.current_step.load(Ordering::SeqCst);
+            if step == IDLE {
+                continue;
+            }
+            let idle = now.saturating_sub(st.beat_ms.load(Ordering::SeqCst));
+            if idle > cfg.watchdog_ms {
+                bail!(
+                    "watchdog: actor {a} stalled on step {step} — no heartbeat \
+                     for {idle} ms (--watchdog-ms {}); last error: {}. Raise \
+                     --watchdog-ms if rollouts legitimately take this long.",
+                    cfg.watchdog_ms,
+                    shared.last_error(a)
+                );
+            }
+        }
+        if let Some((a, issued)) = det_waiting {
+            let st = &shared.actors[a];
+            if st.current_step.load(Ordering::SeqCst) == IDLE
+                && now.saturating_sub(issued) > cfg.watchdog_ms
+            {
+                bail!(
+                    "watchdog: actor {a} never picked up the ticket issued \
+                     {} ms ago (--watchdog-ms {}){}",
+                    now.saturating_sub(issued),
+                    cfg.watchdog_ms,
+                    shared.summary()
+                );
+            }
+        }
+        if det_waiting.is_none() {
+            if let Some(s) = shared.pop_abandoned() {
+                return Ok(Got::Orphan(s));
+            }
+        }
+    }
+}
+
+/// Fold one rollout into the learner state under the params write lock.
+#[allow(clippy::too_many_arguments)]
+fn consume(
+    policy: &dyn PolicyBackend,
+    store: &RwLock<ParamStore>,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    core: &mut LearnerCore,
+    cache: &mut HashMap<Vec<usize>, Batch>,
+    step: usize,
+    samples: &[Option<Sample>],
+    outcomes: &[(f64, bool, f64)],
+) -> Result<()> {
+    let dims = policy.manifest().dims;
+    let row_tasks = row_assignment(step, dims.b, tasks.len());
+    let batch = batch_for(policy, tasks, cache, &row_tasks)?;
+    let mut guard = store.write().unwrap_or_else(|p| p.into_inner());
+    core.consume_rollout(
+        policy, &mut guard, tasks, cfg, batch, step, &row_tasks, samples, outcomes,
+    )?;
+    Ok(())
+}
+
+/// Autosave at a step boundary (same cadence and bytes as the serial
+/// loop — deterministic mode's checkpoints `cmp` equal to serial's).
+fn autosave_boundary(
+    policy: &dyn PolicyBackend,
+    store: &RwLock<ParamStore>,
+    cfg: &TrainConfig,
+    core: &LearnerCore,
+    next_step: usize,
+    rng: &Rng,
+    final_save: bool,
+) -> Result<()> {
+    let Some(a) = &cfg.autosave else { return Ok(()) };
+    let on_cadence = a.every > 0 && next_step % a.every == 0;
+    if !on_cadence && !final_save {
+        return Ok(());
+    }
+    let state = core.capture(next_step, rng);
+    let guard = store.read().unwrap_or_else(|p| p.into_inner());
+    checkpoint::save_train(policy.manifest(), &guard, &state, &a.path)?;
+    Ok(())
+}
+
+/// The learner: schedule (deterministic) or collect (free-running)
+/// rollouts, apply updates in one place, autosave, watchdog.
+#[allow(clippy::too_many_arguments)]
+fn learner_loop(
+    policy: &dyn PolicyBackend,
+    store: &RwLock<ParamStore>,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    shared: &Shared,
+    core: &mut LearnerCore,
+    rng: &mut Rng,
+    start_step: usize,
+    ticket_txs: Vec<mpsc::Sender<Ticket>>,
+    rx: mpsc::Receiver<RolloutMsg>,
+) -> Result<()> {
+    let mut cache: HashMap<Vec<usize>, Batch> = HashMap::new();
+    let dims = policy.manifest().dims;
+    let actors = shared.actors.len();
+    if cfg.deterministic {
+        for step in start_step..cfg.steps {
+            if cfg.halt_after == Some(step) {
+                bail!("simulated crash: halting before step {step} (--halt-after)");
+            }
+            let a = step % actors;
+            if shared.actors[a].dead.load(Ordering::SeqCst) {
+                bail!("{}", shared.describe_dead(a, cfg));
+            }
+            let issued = shared.elapsed_ms();
+            if ticket_txs[a].send(Ticket { step, rng: rng.state() }).is_err() {
+                bail!("{}", shared.describe_dead(a, cfg));
+            }
+            let msg = match wait_next(&rx, shared, cfg, Some((a, issued)))? {
+                Got::Batch(m) => m,
+                Got::Orphan(_) => unreachable!("no orphans in deterministic mode"),
+            };
+            debug_assert_eq!(msg.step, step, "lock-step schedule violated");
+            *rng = Rng::from_state(
+                msg.rng_after
+                    .expect("deterministic actors return the advanced RNG state"),
+            );
+            consume(
+                policy, store, tasks, cfg, core, &mut cache, step, &msg.samples,
+                &msg.outcomes,
+            )?;
+            autosave_boundary(policy, store, cfg, core, step + 1, rng, false)?;
+        }
+    } else {
+        let fallback_pool = EvalPool::new(1);
+        let total = cfg.steps - start_step;
+        let mut consumed = 0usize;
+        while consumed < total {
+            if cfg.halt_after == Some(start_step + consumed) {
+                bail!(
+                    "simulated crash: halting before step {} (--halt-after)",
+                    start_step + consumed
+                );
+            }
+            let (step, samples, outcomes) = match wait_next(&rx, shared, cfg, None)? {
+                Got::Batch(m) => (m.step, m.samples, m.outcomes),
+                Got::Orphan(step) => {
+                    // Last resort: every actor that could run this claim
+                    // is gone; the learner rolls it out inline so the
+                    // run still completes (or fails structurally).
+                    let row_tasks = row_assignment(step, dims.b, tasks.len());
+                    let batch = batch_for(policy, tasks, &mut cache, &row_tasks)?;
+                    let mut r = Rng::new(step_seed(cfg.seed, step));
+                    let logits = {
+                        let guard =
+                            store.read().unwrap_or_else(|p| p.into_inner());
+                        policy.forward(&guard, batch)?
+                    };
+                    let (sa, o) = rollout_from_logits(
+                        policy, tasks, cfg, batch, step, &row_tasks, &logits,
+                        &mut r, &fallback_pool,
+                    )?;
+                    (step, sa, o)
+                }
+            };
+            consume(
+                policy, store, tasks, cfg, core, &mut cache, step, &samples,
+                &outcomes,
+            )?;
+            consumed += 1;
+            autosave_boundary(
+                policy, store, cfg, core, start_step + consumed, rng, false,
+            )?;
+        }
+    }
+    // Final snapshot: `--resume` on a completed run is a no-op and the
+    // autosave always reflects the returned parameters (serial parity).
+    autosave_boundary(policy, store, cfg, core, cfg.steps, rng, true)?;
+    Ok(())
+}
+
+/// Asynchronous [`super::trainer::train_from`]: same inputs, same
+/// result contract, plus [`SupervisionStats`] in the result. Takes the
+/// store by value (it lives in an `RwLock` shared with the actors for
+/// the duration) and returns it trained.
+pub fn train_async_from(
+    policy: &Arc<dyn PolicyBackend>,
+    store: ParamStore,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    resume: Option<&TrainState>,
+) -> Result<(ParamStore, TrainResult)> {
+    assert!(!tasks.is_empty());
+    let actors = cfg.actors;
+    assert!(actors > 1, "train_async_from requires cfg.actors > 1");
+    let t_start = Instant::now();
+    let xla_start = policy.exec_secs_total();
+    let (mut core, mut rng, start_step) = LearnerCore::init(tasks, cfg, resume)?;
+    let resumed_quarantined = core.skipped_batches;
+
+    if start_step >= cfg.steps {
+        // Completed-run resume is a no-op (serial parity: no I/O).
+        return Ok((
+            store,
+            TrainResult {
+                per_task: core.bests,
+                history: core.history,
+                wall_secs: t_start.elapsed().as_secs_f64(),
+                sim_evals: core.sim_evals,
+                xla_secs: 0.0,
+                skipped_batches: core.skipped_batches,
+                supervision: Some(SupervisionStats {
+                    actors,
+                    deterministic: cfg.deterministic,
+                    actor_restarts: 0,
+                    restarts_by_actor: vec![0; actors],
+                    quarantined_batches: 0,
+                    faults_injected: 0,
+                    corpus_steps_per_sec: 0.0,
+                }),
+            },
+        ));
+    }
+
+    let shared = Shared::new(actors, start_step);
+    let injector = FaultInjector::new(cfg.inject);
+    let cap = if cfg.channel_cap > 0 { cfg.channel_cap } else { 2 * actors };
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<RolloutMsg>(cap.max(1));
+    // Each actor gets an engine replica when the backend supports it
+    // (own workspace → truly concurrent forwards); otherwise the shared
+    // engine is used and forwards serialize on its workspace mutex.
+    let replicas: Vec<Arc<dyn PolicyBackend>> = (0..actors)
+        .map(|_| {
+            policy
+                .replicate()
+                .map(Arc::<dyn PolicyBackend>::from)
+                .unwrap_or_else(|| Arc::clone(policy))
+        })
+        .collect();
+    // Shard the eval-thread budget across actors (actor-level
+    // parallelism replaces pool-level width).
+    let eval_budget = if cfg.eval_threads == 0 {
+        thread::available_parallelism().map(|x| x.get()).unwrap_or(1)
+    } else {
+        cfg.eval_threads
+    };
+    let shard = (eval_budget / actors).max(1);
+    let store_lock = RwLock::new(store);
+    let mut ticket_txs: Vec<mpsc::Sender<Ticket>> = Vec::new();
+    let mut ticket_rxs: Vec<Option<mpsc::Receiver<Ticket>>> = Vec::new();
+    for _ in 0..actors {
+        if cfg.deterministic {
+            let (t, r) = mpsc::channel::<Ticket>();
+            ticket_txs.push(t);
+            ticket_rxs.push(Some(r));
+        } else {
+            ticket_rxs.push(None);
+        }
+    }
+
+    let learn_res: Result<()> = thread::scope(|s| {
+        for (a, trx) in ticket_rxs.drain(..).enumerate() {
+            let replica = Arc::clone(&replicas[a]);
+            let tx = batch_tx.clone();
+            let (shared, injector, store_lock) = (&shared, &injector, &store_lock);
+            s.spawn(move || {
+                actor_main(
+                    a,
+                    replica.as_ref(),
+                    store_lock,
+                    tasks,
+                    cfg,
+                    shared,
+                    injector,
+                    tx,
+                    trx,
+                    shard,
+                )
+            });
+        }
+        drop(batch_tx); // learner only receives; actors own the senders
+        let r = learner_loop(
+            policy.as_ref(),
+            &store_lock,
+            tasks,
+            cfg,
+            &shared,
+            &mut core,
+            &mut rng,
+            start_step,
+            ticket_txs,
+            batch_rx,
+        );
+        // Stop every actor (error or success) before the scope joins:
+        // ticket/batch channels are already dropped by learner_loop's
+        // return, and the flag unblocks delivery/backoff polls.
+        shared.shutdown.store(true, Ordering::SeqCst);
+        r
+    });
+
+    let store = store_lock.into_inner().unwrap_or_else(|p| p.into_inner());
+    learn_res?;
+
+    let wall = t_start.elapsed().as_secs_f64();
+    let executed = cfg.steps - start_step;
+    let restarts_by_actor: Vec<usize> = shared
+        .actors
+        .iter()
+        .map(|st| st.restarts.load(Ordering::SeqCst))
+        .collect();
+    let replica_xla: f64 = replicas
+        .iter()
+        .filter(|r| !Arc::ptr_eq(r, policy))
+        .map(|r| r.exec_secs_total())
+        .sum();
+    Ok((
+        store,
+        TrainResult {
+            per_task: core.bests,
+            history: core.history,
+            wall_secs: wall,
+            sim_evals: core.sim_evals,
+            xla_secs: (policy.exec_secs_total() - xla_start) + replica_xla,
+            skipped_batches: core.skipped_batches,
+            supervision: Some(SupervisionStats {
+                actors,
+                deterministic: cfg.deterministic,
+                actor_restarts: restarts_by_actor.iter().sum(),
+                restarts_by_actor,
+                quarantined_batches: core.skipped_batches - resumed_quarantined,
+                faults_injected: injector.injected(),
+                corpus_steps_per_sec: executed as f64 / wall.max(1e-9),
+            }),
+        },
+    ))
+}

@@ -80,25 +80,29 @@ mod tests {
     use crate::workloads;
 
     #[test]
-    fn baselines_produce_results_on_table1_graphs() {
+    fn baselines_produce_results_on_table1_graphs() -> anyhow::Result<()> {
         for id in ["rnnlm2", "inception"] {
-            let g = workloads::by_id(id).unwrap();
+            let g = workloads::by_id(id)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload {id:?}"))?;
             let h = eval_human(&g);
             assert!(h.step_time.is_some(), "{id}: human OOM?");
             let m = eval_metis(&g);
             // METIS may OOM (that is the point); but it must return.
             let _ = m;
         }
+        Ok(())
     }
 
     #[test]
-    fn pooled_heuristics_match_individual_evals() {
-        let g = workloads::by_id("rnnlm2").unwrap();
+    fn pooled_heuristics_match_individual_evals() -> anyhow::Result<()> {
+        let g = workloads::by_id("rnnlm2")
+            .ok_or_else(|| anyhow::anyhow!("unknown workload \"rnnlm2\""))?;
         let both = eval_heuristics(&g);
         assert_eq!(both.len(), 2);
         assert_eq!(both[0].name, "human");
         assert_eq!(both[0].step_time, eval_human(&g).step_time);
         assert_eq!(both[1].name, "metis");
         assert_eq!(both[1].step_time, eval_metis(&g).step_time);
+        Ok(())
     }
 }

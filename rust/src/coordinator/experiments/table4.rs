@@ -173,6 +173,25 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             ]),
         ),
         ("checkpoint", Json::str(ckpt.display().to_string())),
+        (
+            "pretrain",
+            Json::obj(vec![
+                ("steps", Json::num(opts.pretrain_steps as f64)),
+                ("wall_secs", Json::num(pre.wall_secs)),
+                ("sim_evals", Json::num(pre.sim_evals as f64)),
+                (
+                    "corpus_steps_per_sec",
+                    Json::num(
+                        pre.supervision
+                            .as_ref()
+                            .map(|s| s.corpus_steps_per_sec)
+                            .unwrap_or(
+                                opts.pretrain_steps as f64 / pre.wall_secs.max(1e-9),
+                            ),
+                    ),
+                ),
+            ]),
+        ),
         ("rows", Json::arr(rows)),
         ("finetune_wins", Json::num(ft_wins as f64)),
         ("holdouts", Json::num(holdout_ids().len() as f64)),

@@ -81,6 +81,17 @@ pub fn pretrain_from(
         Some((store, state)) => (store, Some(state)),
         None => (session.init_params()?, None),
     };
+    if cfg.actors > 1 {
+        // Supervised actor/learner path (deterministic mode replays the
+        // serial loop bit-identically; see coordinator::async_train).
+        return crate::coordinator::async_train::train_async_from(
+            &session.policy,
+            store,
+            &tasks,
+            cfg,
+            state.as_ref(),
+        );
+    }
     let result =
         train_from(&*session.policy, &mut store, &tasks, cfg, state.as_ref())?;
     Ok((store, result))

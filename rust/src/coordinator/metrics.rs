@@ -58,6 +58,67 @@ impl RunLogger {
     }
 }
 
+/// Best-effort wrapper around [`RunLogger`]: telemetry I/O failures are
+/// reported once to stderr and then swallowed. A full disk or revoked
+/// permission on the log directory must never abort a training run —
+/// the metrics are derivable from the checkpoint; the run itself is
+/// not. Used by the `pretrain` CLI (`--log-dir`).
+pub struct LossyLogger {
+    inner: Option<RunLogger>,
+    /// Whether a write failed and telemetry was disabled mid-run.
+    pub degraded: bool,
+}
+
+impl LossyLogger {
+    /// `dir = None` disables logging (every write is a no-op). A
+    /// creation failure degrades immediately instead of erroring.
+    pub fn create(dir: Option<&Path>, name: &str) -> Self {
+        let (inner, degraded) = match dir {
+            None => (None, false),
+            Some(d) => match RunLogger::create(d, name) {
+                Ok(lg) => (Some(lg), false),
+                Err(e) => {
+                    eprintln!(
+                        "[metrics] telemetry disabled: cannot create run log \
+                         ({e:#}); training continues without it"
+                    );
+                    (None, true)
+                }
+            },
+        };
+        Self { inner, degraded }
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.inner.as_ref().map(|lg| lg.path())
+    }
+
+    pub fn log_step(&mut self, task: &str, s: &StepLog) {
+        if let Some(lg) = self.inner.as_mut() {
+            if let Err(e) = lg.log_step(task, s) {
+                self.disable("step-log", e);
+            }
+        }
+    }
+
+    pub fn log_result(&mut self, label: &str, r: &TrainResult) {
+        if let Some(lg) = self.inner.as_mut() {
+            if let Err(e) = lg.log_result(label, r) {
+                self.disable("result-log", e);
+            }
+        }
+    }
+
+    fn disable(&mut self, what: &str, e: anyhow::Error) {
+        eprintln!(
+            "[metrics] {what} write failed ({e:#}); dropping further \
+             telemetry, training continues"
+        );
+        self.degraded = true;
+        self.inner = None;
+    }
+}
+
 /// Write a pretty JSON results document (experiment harness outputs).
 pub fn write_json(path: &Path, value: &Json) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -71,11 +132,12 @@ pub fn write_json(path: &Path, value: &Json) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use anyhow::anyhow;
 
     #[test]
-    fn jsonl_lines_parse_back() {
+    fn jsonl_lines_parse_back() -> Result<()> {
         let dir = std::env::temp_dir().join("gdp_test_metrics");
-        let mut lg = RunLogger::create(&dir, "t").unwrap();
+        let mut lg = RunLogger::create(&dir, "t")?;
         lg.log_step(
             "w",
             &StepLog {
@@ -86,11 +148,39 @@ mod tests {
                 entropy: 1.9,
                 approx_kl: 0.01,
             },
-        )
-        .unwrap();
-        let text = std::fs::read_to_string(lg.path()).unwrap();
-        let v = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
-        assert_eq!(v.get("step").unwrap().as_usize(), Some(3));
+        )?;
+        let text = std::fs::read_to_string(lg.path())?;
+        let first = text.lines().next().ok_or_else(|| anyhow!("empty log"))?;
+        let v = crate::util::json::parse(first).map_err(|e| anyhow!(e))?;
+        assert_eq!(v.get("step").and_then(Json::as_usize), Some(3));
         std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    }
+
+    #[test]
+    fn lossy_logger_swallows_io_failure() {
+        // A directory path that cannot be created (parent is a file).
+        let blocker = std::env::temp_dir().join("gdp_test_metrics_blocker");
+        std::fs::write(&blocker, b"not a dir").ok();
+        let bad = blocker.join("sub");
+        let mut lossy = LossyLogger::create(Some(&bad), "t");
+        assert!(lossy.degraded, "creation into a file path must degrade");
+        // Every write is a silent no-op from here on.
+        lossy.log_step(
+            "w",
+            &StepLog {
+                step: 0,
+                mean_reward: 0.0,
+                best_time: 0.0,
+                loss: 0.0,
+                entropy: 0.0,
+                approx_kl: 0.0,
+            },
+        );
+        assert!(lossy.path().is_none());
+        // And `None` means logging is simply off, not degraded.
+        let off = LossyLogger::create(None, "t");
+        assert!(!off.degraded);
+        std::fs::remove_file(&blocker).ok();
     }
 }

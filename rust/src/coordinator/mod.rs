@@ -5,6 +5,7 @@
 //! module is the transfer pipeline (pre-train → checkpoint → fine-tune /
 //! zero-shot on hold-out graphs, GDP §3.3).
 
+pub mod async_train;
 pub mod baseline_eval;
 pub mod experiments;
 pub mod generalize;
@@ -12,8 +13,8 @@ pub mod metrics;
 pub mod trainer;
 
 pub use trainer::{
-    infer, infer_from_logits, train, train_from, AutosaveCfg, TaskBest, TrainConfig,
-    TrainResult,
+    infer, infer_from_logits, train, train_from, AutosaveCfg, SupervisionStats,
+    TaskBest, TrainConfig, TrainResult,
 };
 
 use std::path::{Path, PathBuf};

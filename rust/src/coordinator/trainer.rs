@@ -20,20 +20,32 @@
 //! the uninterrupted run at every subsequent step. `TrainConfig.autosave`
 //! writes such a snapshot atomically every K steps; a non-finite
 //! loss/entropy/KL after `train_step` rolls parameters and optimizer
-//! state back to the pre-step snapshot and skips the poisoned batch
-//! (counted in `TrainResult::skipped_batches`) instead of letting one
-//! bad batch destroy the run.
+//! state back to the pre-step snapshot and quarantines the poisoned
+//! batch (counted in `TrainResult::skipped_batches`) instead of letting
+//! one bad batch destroy the run.
+//!
+//! **Actor/learner split.** The per-step work factors into a pure
+//! *rollout* half ([`rollout_step`]: forward + sampling + simulator
+//! rewards, no mutable training state beyond the RNG) and a *learner*
+//! half ([`LearnerCore::consume_rollout`]: baselines, incumbents,
+//! advantages, the PPO updates, and the non-finite quarantine guard).
+//! The serial loop below composes the two inline;
+//! [`crate::coordinator::async_train`] runs the rollout half on N
+//! supervised actor threads and feeds the same learner core over a
+//! bounded channel — sharing this code is what makes the deterministic
+//! async schedule bit-identical to the serial path.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::placement::Placement;
 use crate::policy::{greedy_from_logits, sample_from_logits, PlacementTask, Sample};
 use crate::runtime::checkpoint::{self, TaskTrainState, TrainState};
 use crate::runtime::{Batch, ParamStore, PolicyBackend};
+use crate::serve::fault::FaultSpec;
 use crate::sim::{reward, EvalPool, INVALID_REWARD};
 use crate::util::stats::ConvergenceTracker;
 use crate::util::{Ema, Rng};
@@ -61,7 +73,8 @@ pub struct TrainConfig {
     pub verbose: bool,
     /// Worker threads for batch reward evaluation (0 = one per core).
     /// Results are identical for any value — sampling stays sequential
-    /// and rewards are consumed in row order.
+    /// and rewards are consumed in row order. In async mode this budget
+    /// is sharded across the actors.
     pub eval_threads: usize,
     /// Periodic crash-safe checkpointing (None = off).
     pub autosave: Option<AutosaveCfg>,
@@ -72,6 +85,28 @@ pub struct TrainConfig {
     /// Poison the advantage vector at this absolute step, exercising the
     /// non-finite guard end to end (test hook).
     pub inject_nan_step: Option<usize>,
+    /// Rollout actors for the asynchronous pre-train path (0 or 1 =
+    /// serial). Only `generalize::pretrain*` honors values > 1; the
+    /// plain serial entry points reject them.
+    pub actors: usize,
+    /// Async mode only: pin the actor→step schedule (actor `s % N` runs
+    /// step `s`, consumed in step order) so the run is bit-identical to
+    /// the serial path. Off = free-running (maximum overlap, telemetry
+    /// order follows batch arrival).
+    pub deterministic: bool,
+    /// Async mode only: deterministic actor-side fault injection
+    /// (`panic=E[:B],nan=E,slow=E:MS`, keyed on the rollout counter).
+    pub inject: FaultSpec,
+    /// Async mode only: per-actor supervised-restart budget; an actor
+    /// that panics more than this many times is declared dead.
+    pub max_restarts: usize,
+    /// Async mode only: learner watchdog — if no batch and no actor
+    /// heartbeat lands within this window the run fails with an
+    /// actionable error instead of hanging.
+    pub watchdog_ms: u64,
+    /// Async mode only: bounded rollout-channel capacity (0 = auto,
+    /// 2 per actor).
+    pub channel_cap: usize,
 }
 
 impl Default for TrainConfig {
@@ -90,6 +125,12 @@ impl Default for TrainConfig {
             autosave: None,
             halt_after: None,
             inject_nan_step: None,
+            actors: 1,
+            deterministic: false,
+            inject: FaultSpec::default(),
+            max_restarts: 5,
+            watchdog_ms: 30_000,
+            channel_cap: 0,
         }
     }
 }
@@ -115,6 +156,27 @@ pub struct TaskBest {
     pub tracker: ConvergenceTracker,
 }
 
+/// Supervision accounting for the asynchronous actor/learner path
+/// (`None` on [`TrainResult`] for serial runs).
+#[derive(Clone, Debug)]
+pub struct SupervisionStats {
+    /// Rollout actors the run was configured with.
+    pub actors: usize,
+    /// Whether the fixed (bit-reproducible) schedule was active.
+    pub deterministic: bool,
+    /// Total supervised actor restarts (panics recovered via backoff).
+    pub actor_restarts: usize,
+    /// Restarts per actor index.
+    pub restarts_by_actor: Vec<usize>,
+    /// Batches discarded by the non-finite guard this run (equals
+    /// `TrainResult::skipped_batches` minus any resumed-in count).
+    pub quarantined_batches: usize,
+    /// Faults actually fired by the `--inject` spec.
+    pub faults_injected: u64,
+    /// Corpus training steps completed per wall-clock second.
+    pub corpus_steps_per_sec: f64,
+}
+
 pub struct TrainResult {
     pub per_task: Vec<TaskBest>,
     pub history: Vec<StepLog>,
@@ -123,8 +185,11 @@ pub struct TrainResult {
     pub sim_evals: usize,
     /// Total XLA execute seconds (fwd + train).
     pub xla_secs: f64,
-    /// Batches discarded by the non-finite guard (params rolled back).
+    /// Batches quarantined by the non-finite guard (params rolled back).
+    /// Cumulative across `--resume` (the count is part of the autosave).
     pub skipped_batches: usize,
+    /// Actor/learner supervision accounting (async pre-train only).
+    pub supervision: Option<SupervisionStats>,
 }
 
 impl TrainResult {
@@ -144,175 +209,243 @@ pub fn train(
     train_from(policy, store, tasks, cfg, None)
 }
 
-/// Capture the loop state at a step boundary (`next_step` not yet run).
-fn capture_state(
-    next_step: usize,
-    rng: &Rng,
-    baselines: &[Ema],
-    bests: &[TaskBest],
-) -> TrainState {
-    TrainState {
-        next_step,
-        rng: rng.state(),
-        tasks: bests
-            .iter()
-            .zip(baselines)
-            .map(|(b, ema)| TaskTrainState {
-                baseline: ema.value(),
-                best_time: b.best_time,
-                best_valid: b.best_valid,
-                best_placement: b.best_placement.devices.clone(),
-                evals: b.tracker.evals,
-                tracker_best: b.tracker.best,
-            })
-            .collect(),
-    }
+/// The batch-row → task assignment for one step (round-robin over
+/// tasks). Pure function of the step index: the async schedule reuses
+/// it so every mode trains on identical row mixes.
+pub(crate) fn row_assignment(step: usize, b: usize, n_tasks: usize) -> Vec<usize> {
+    (0..b).map(|i| (step * b + i) % n_tasks).collect()
 }
 
-/// [`train`] with crash-safe resume: when `resume` is given (a state
-/// loaded from a version-2 checkpoint alongside its `ParamStore`), the
-/// loop continues from `resume.next_step` with the RNG stream, EMA
-/// baselines, incumbents, and convergence counters restored — the
-/// remaining steps replay bit-identically to a run that never stopped.
-pub fn train_from(
+/// Temperature annealing: explore early (1.5x), exploit late (0.5x).
+pub(crate) fn anneal_temp(cfg: &TrainConfig, step: usize) -> f32 {
+    let frac = step as f32 / cfg.steps.max(1) as f32;
+    cfg.temperature * (1.5 - frac)
+}
+
+/// The rollout half of one PPO step: policy forward over `batch`,
+/// sequential per-row sampling (the RNG stream is part of the
+/// reproducibility contract), and parallel reward evaluation on `pool`.
+/// No mutable training state is touched beyond `rng` — this is exactly
+/// the work an async actor performs against a (possibly stale) params
+/// snapshot.
+///
+/// Filler rows (`batch.real == false`) are never sampled or simulated
+/// and carry zero actions/advantage into train_step, which excludes
+/// them from the loss statistics. (Row assignment currently always
+/// fills all B rows, so this path guards future under-filled batches.)
+pub(crate) fn rollout_step(
     policy: &dyn PolicyBackend,
-    store: &mut ParamStore,
+    store: &ParamStore,
     tasks: &[PlacementTask],
     cfg: &TrainConfig,
-    resume: Option<&TrainState>,
-) -> Result<TrainResult> {
-    assert!(!tasks.is_empty());
-    let dims = policy.manifest().dims;
-    let t_start = Instant::now();
-    let xla_start = policy.exec_secs_total();
+    batch: &Batch,
+    step: usize,
+    row_tasks: &[usize],
+    rng: &mut Rng,
+    pool: &EvalPool,
+) -> Result<(Vec<Option<Sample>>, Vec<(f64, bool, f64)>)> {
+    let logits = policy.forward(store, batch)?;
+    rollout_from_logits(
+        policy, tasks, cfg, batch, step, row_tasks, &logits, rng, pool,
+    )
+}
 
-    let mut rng;
-    let mut baselines: Vec<Ema>;
-    let mut bests: Vec<TaskBest>;
-    let start_step;
-    match resume {
-        Some(state) => {
-            if state.tasks.len() != tasks.len() {
-                bail!(
-                    "resume state has {} tasks but {} were given",
-                    state.tasks.len(),
-                    tasks.len()
-                );
+/// [`rollout_step`] minus the forward pass: sampling + reward
+/// evaluation over precomputed logits. The async actors call this
+/// directly so the params read-lock is held only for the forward, not
+/// across the (much longer) simulator evaluation.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rollout_from_logits(
+    policy: &dyn PolicyBackend,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    batch: &Batch,
+    step: usize,
+    row_tasks: &[usize],
+    logits: &[f32],
+    rng: &mut Rng,
+    pool: &EvalPool,
+) -> Result<(Vec<Option<Sample>>, Vec<(f64, bool, f64)>)> {
+    let dims = policy.manifest().dims;
+    let temp = anneal_temp(cfg, step);
+    let stride = dims.n * dims.d;
+    let samples: Vec<Option<Sample>> = row_tasks
+        .iter()
+        .enumerate()
+        .map(|(bi, &ti)| {
+            if !batch.real[bi] {
+                return None;
             }
-            rng = Rng::from_state(state.rng);
-            baselines = state
-                .tasks
-                .iter()
-                .map(|t| Ema::restore(cfg.baseline_alpha, t.baseline))
-                .collect();
-            bests = tasks
-                .iter()
-                .zip(&state.tasks)
-                .map(|(task, t)| TaskBest {
-                    task_id: task.id.clone(),
-                    best_time: t.best_time,
-                    best_valid: t.best_valid,
-                    best_placement: Placement::new(t.best_placement.clone()),
-                    tracker: ConvergenceTracker {
-                        // Improvement history is reporting-only telemetry;
-                        // evals + best fully determine the training math.
-                        improvements: Vec::new(),
-                        evals: t.evals,
-                        best: t.tracker_best,
+            let task = &tasks[ti];
+            Some(sample_from_logits(
+                &logits[bi * stride..(bi + 1) * stride],
+                dims.n,
+                dims.d,
+                task.n_coarse(),
+                task.graph.num_devices,
+                temp,
+                rng,
+            ))
+        })
+        .collect();
+    let rows: Vec<(usize, &[usize])> = row_tasks
+        .iter()
+        .zip(&samples)
+        .filter_map(|(&ti, s)| s.as_ref().map(|s| (ti, s.placement.as_slice())))
+        .collect();
+    // (reward, valid, step_time) per real row — no per-candidate clone.
+    let outcomes: Vec<(f64, bool, f64)> = pool
+        .try_map(&rows, |ws, &(ti, p)| {
+            let rep = tasks[ti].evaluate_ref(ws, p);
+            (reward(rep), rep.valid, rep.step_time)
+        })
+        .with_context(|| format!("evaluating rollout rewards for step {step}"))?;
+    Ok((samples, outcomes))
+}
+
+/// All mutable learner-side training state: per-task EMA baselines,
+/// incumbents, telemetry, and the quarantine counter. Both the serial
+/// loop and the async learner drive one of these — the consumption math
+/// lives in exactly one place so the deterministic async schedule stays
+/// bit-identical to serial.
+pub(crate) struct LearnerCore {
+    pub baselines: Vec<Ema>,
+    pub bests: Vec<TaskBest>,
+    pub history: Vec<StepLog>,
+    pub sim_evals: usize,
+    pub skipped_batches: usize,
+}
+
+impl LearnerCore {
+    /// Fresh state, or state restored bit-exactly from a resume
+    /// checkpoint. Returns `(core, rng, start_step)`.
+    pub(crate) fn init(
+        tasks: &[PlacementTask],
+        cfg: &TrainConfig,
+        resume: Option<&TrainState>,
+    ) -> Result<(Self, Rng, usize)> {
+        let (core, rng, start_step) = match resume {
+            Some(state) => {
+                if state.tasks.len() != tasks.len() {
+                    bail!(
+                        "resume state has {} tasks but {} were given",
+                        state.tasks.len(),
+                        tasks.len()
+                    );
+                }
+                let baselines = state
+                    .tasks
+                    .iter()
+                    .map(|t| Ema::restore(cfg.baseline_alpha, t.baseline))
+                    .collect();
+                let bests = tasks
+                    .iter()
+                    .zip(&state.tasks)
+                    .map(|(task, t)| TaskBest {
+                        task_id: task.id.clone(),
+                        best_time: t.best_time,
+                        best_valid: t.best_valid,
+                        best_placement: Placement::new(t.best_placement.clone()),
+                        tracker: ConvergenceTracker {
+                            // Improvement history is reporting-only
+                            // telemetry; evals + best fully determine
+                            // the training math.
+                            improvements: Vec::new(),
+                            evals: t.evals,
+                            best: t.tracker_best,
+                        },
+                    })
+                    .collect();
+                (
+                    Self {
+                        baselines,
+                        bests,
+                        history: Vec::new(),
+                        sim_evals: 0,
+                        skipped_batches: state.quarantined_batches,
                     },
-                })
-                .collect();
-            start_step = state.next_step;
-        }
-        None => {
-            rng = Rng::new(cfg.seed);
-            baselines =
-                tasks.iter().map(|_| Ema::new(cfg.baseline_alpha)).collect();
-            bests = tasks
+                    Rng::from_state(state.rng),
+                    state.next_step,
+                )
+            }
+            None => {
+                let baselines =
+                    tasks.iter().map(|_| Ema::new(cfg.baseline_alpha)).collect();
+                let bests = tasks
+                    .iter()
+                    .map(|t| TaskBest {
+                        task_id: t.id.clone(),
+                        best_time: f64::INFINITY,
+                        best_valid: false,
+                        best_placement: Placement::single(t.graph.n()),
+                        tracker: ConvergenceTracker::new(),
+                    })
+                    .collect();
+                (
+                    Self {
+                        baselines,
+                        bests,
+                        history: Vec::new(),
+                        sim_evals: 0,
+                        skipped_batches: 0,
+                    },
+                    Rng::new(cfg.seed),
+                    0,
+                )
+            }
+        };
+        Ok((core, rng, start_step))
+    }
+
+    /// Capture the loop state at a step boundary (`next_step` not yet
+    /// run) for the v2 autosave.
+    pub(crate) fn capture(&self, next_step: usize, rng: &Rng) -> TrainState {
+        TrainState {
+            next_step,
+            rng: rng.state(),
+            tasks: self
+                .bests
                 .iter()
-                .map(|t| TaskBest {
-                    task_id: t.id.clone(),
-                    best_time: f64::INFINITY,
-                    best_valid: false,
-                    best_placement: Placement::single(t.graph.n()),
-                    tracker: ConvergenceTracker::new(),
+                .zip(&self.baselines)
+                .map(|(b, ema)| TaskTrainState {
+                    baseline: ema.value(),
+                    best_time: b.best_time,
+                    best_valid: b.best_valid,
+                    best_placement: b.best_placement.devices.clone(),
+                    evals: b.tracker.evals,
+                    tracker_best: b.tracker.best,
                 })
-                .collect();
-            start_step = 0;
+                .collect(),
+            quarantined_batches: self.skipped_batches,
         }
     }
-    let mut history = Vec::with_capacity(cfg.steps.saturating_sub(start_step));
-    let mut sim_evals = 0usize;
-    let mut skipped_batches = 0usize;
-    let pool = EvalPool::new(cfg.eval_threads);
 
-    // Cache marshalled batches per unique row assignment (GDP-one: 1 entry;
-    // GDP-batch with T tasks: gcd-cycle of assignments).
-    let mut batch_cache: HashMap<Vec<usize>, Batch> = HashMap::new();
-
-    for step in start_step..cfg.steps {
-        if cfg.halt_after == Some(step) {
-            bail!("simulated crash: halting before step {step} (--halt-after)");
-        }
-        // --- assemble batch rows (round-robin over tasks) ---
-        let row_tasks: Vec<usize> =
-            (0..dims.b).map(|i| (step * dims.b + i) % tasks.len()).collect();
-        if !batch_cache.contains_key(&row_tasks) {
-            let rows: Vec<&crate::graph::features::GraphFeatures> =
-                row_tasks.iter().map(|&ti| &tasks[ti].feats).collect();
-            batch_cache
-                .insert(row_tasks.clone(), Batch::from_rows(policy.manifest(), &rows)?);
-        }
-        let batch = &batch_cache[&row_tasks];
-
-        // --- rollout ---
-        // Temperature annealing: explore early (1.5x), exploit late (0.5x).
-        let frac = step as f32 / cfg.steps.max(1) as f32;
-        let temp = cfg.temperature * (1.5 - frac);
-        let logits = policy.forward(store, batch)?;
-        let stride = dims.n * dims.d;
+    /// The learner half of one PPO step: fold a finished rollout into
+    /// baselines/incumbents, build the advantage vector, run
+    /// `ppo_epochs` x `train_step`, and quarantine the batch (bit-exact
+    /// parameter rollback) if the loss goes non-finite. Returns whether
+    /// the update was applied (false = quarantined).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn consume_rollout(
+        &mut self,
+        policy: &dyn PolicyBackend,
+        store: &mut ParamStore,
+        tasks: &[PlacementTask],
+        cfg: &TrainConfig,
+        batch: &Batch,
+        step: usize,
+        row_tasks: &[usize],
+        samples: &[Option<Sample>],
+        outcomes: &[(f64, bool, f64)],
+    ) -> Result<bool> {
+        let dims = policy.manifest().dims;
         let mut actions = Vec::with_capacity(dims.b * dims.n);
         let mut logp_old = Vec::with_capacity(dims.b * dims.n);
         let mut adv = Vec::with_capacity(dims.b);
         let mut mean_reward = 0.0;
-        // Sample all real rows first (sequential: the RNG stream is part of
-        // the reproducibility contract), then evaluate rewards in parallel.
-        // Filler rows (batch.real == false) are never sampled or simulated
-        // and carry zero actions/advantage into train_step, which excludes
-        // them from the loss statistics. (row_tasks currently always fills
-        // all B rows, so this path guards future under-filled batches.)
-        let samples: Vec<Option<Sample>> = row_tasks
-            .iter()
-            .enumerate()
-            .map(|(bi, &ti)| {
-                if !batch.real[bi] {
-                    return None;
-                }
-                let task = &tasks[ti];
-                Some(sample_from_logits(
-                    &logits[bi * stride..(bi + 1) * stride],
-                    dims.n,
-                    dims.d,
-                    task.n_coarse(),
-                    task.graph.num_devices,
-                    temp,
-                    &mut rng,
-                ))
-            })
-            .collect();
-        let rows: Vec<(usize, &[usize])> = row_tasks
-            .iter()
-            .zip(&samples)
-            .filter_map(|(&ti, s)| s.as_ref().map(|s| (ti, s.placement.as_slice())))
-            .collect();
-        // (reward, valid, step_time) per real row — no per-candidate clone.
-        let outcomes: Vec<(f64, bool, f64)> = pool.map(&rows, |ws, &(ti, p)| {
-            let rep = tasks[ti].evaluate_ref(ws, p);
-            (reward(rep), rep.valid, rep.step_time)
-        });
         let mut oi = 0usize;
         let mut real_rows = 0usize;
-        for (&ti, sample) in row_tasks.iter().zip(&samples) {
+        for (&ti, sample) in row_tasks.iter().zip(samples) {
             let Some(sample) = sample else {
                 actions.extend(std::iter::repeat(0).take(dims.n));
                 logp_old.extend(std::iter::repeat(0f32).take(dims.n));
@@ -323,22 +456,26 @@ pub fn train_from(
             oi += 1;
             real_rows += 1;
             let task = &tasks[ti];
-            sim_evals += 1;
+            self.sim_evals += 1;
             mean_reward += r;
             let objective = if valid { step_time } else { f64::INFINITY };
-            if objective < bests[ti].best_time {
-                bests[ti].best_time = objective;
-                bests[ti].best_valid = valid;
-                bests[ti].best_placement = task.expand(&sample.placement);
+            if objective < self.bests[ti].best_time {
+                self.bests[ti].best_time = objective;
+                self.bests[ti].best_valid = valid;
+                self.bests[ti].best_placement = task.expand(&sample.placement);
             }
-            bests[ti]
+            self.bests[ti]
                 .tracker
                 .observe(if objective.is_finite() { objective } else { 1e9 });
             // Advantage vs per-graph EMA baseline (paper: average of
             // previous trial rewards as the bias term).
-            let b = if bests[ti].tracker.evals <= 1 { r } else { baselines[ti].get() };
+            let b = if self.bests[ti].tracker.evals <= 1 {
+                r
+            } else {
+                self.baselines[ti].get()
+            };
             adv.push((r - b) as f32);
-            baselines[ti].update(r);
+            self.baselines[ti].update(r);
             actions.extend_from_slice(&sample.actions);
             logp_old.extend_from_slice(&sample.logp);
             let _ = INVALID_REWARD; // (reward() applied it already)
@@ -350,9 +487,9 @@ pub fn train_from(
         }
 
         // --- PPO updates ---
-        // Snapshot params + optimizer state so one poisoned batch (NaN/Inf
-        // anywhere in the gradient math) rolls back instead of corrupting
-        // the run.
+        // Snapshot params + optimizer state so one poisoned batch
+        // (NaN/Inf anywhere in the gradient math) rolls back instead of
+        // corrupting the run.
         let snapshot =
             (store.values.clone(), store.m.clone(), store.v.clone(), store.step);
         let mut last = None;
@@ -374,29 +511,24 @@ pub fn train_from(
             || !stats.approx_kl.is_finite()
         {
             // Non-finite guard: discard the update, restore the pre-step
-            // snapshot bit-exactly, and move on. The RNG/baseline advance
-            // from the rollout is kept — replays remain deterministic.
+            // snapshot bit-exactly, and move on. The RNG/baseline
+            // advance from the rollout is kept — replays remain
+            // deterministic.
             (store.values, store.m, store.v, store.step) = snapshot;
-            skipped_batches += 1;
+            self.skipped_batches += 1;
             if cfg.verbose {
                 eprintln!(
-                    "[train] step {step:4} non-finite loss — batch skipped, \
+                    "[train] step {step:4} non-finite loss — batch quarantined, \
                      params restored"
                 );
             }
-            if let Some(a) = &cfg.autosave {
-                if a.every > 0 && (step + 1) % a.every == 0 {
-                    let state = capture_state(step + 1, &rng, &baselines, &bests);
-                    checkpoint::save_train(policy.manifest(), store, &state, &a.path)?;
-                }
-            }
-            continue;
+            return Ok(false);
         }
         let best_now = row_tasks
             .iter()
-            .map(|&ti| bests[ti].best_time)
+            .map(|&ti| self.bests[ti].best_time)
             .fold(f64::INFINITY, f64::min);
-        history.push(StepLog {
+        self.history.push(StepLog {
             step,
             mean_reward,
             best_time: best_now,
@@ -411,9 +543,65 @@ pub fn train_from(
                 stats.loss, stats.entropy, stats.approx_kl
             );
         }
+        Ok(true)
+    }
+}
+
+/// [`train`] with crash-safe resume: when `resume` is given (a state
+/// loaded from a version-2 checkpoint alongside its `ParamStore`), the
+/// loop continues from `resume.next_step` with the RNG stream, EMA
+/// baselines, incumbents, and convergence counters restored — the
+/// remaining steps replay bit-identically to a run that never stopped.
+pub fn train_from(
+    policy: &dyn PolicyBackend,
+    store: &mut ParamStore,
+    tasks: &[PlacementTask],
+    cfg: &TrainConfig,
+    resume: Option<&TrainState>,
+) -> Result<TrainResult> {
+    assert!(!tasks.is_empty());
+    if cfg.actors > 1 {
+        bail!(
+            "cfg.actors = {} but this is the serial entry point — the \
+             actor/learner path is generalize::pretrain (gdp pretrain --actors N)",
+            cfg.actors
+        );
+    }
+    let dims = policy.manifest().dims;
+    let t_start = Instant::now();
+    let xla_start = policy.exec_secs_total();
+
+    let (mut core, mut rng, start_step) = LearnerCore::init(tasks, cfg, resume)?;
+    let pool = EvalPool::new(cfg.eval_threads);
+
+    // Cache marshalled batches per unique row assignment (GDP-one: 1 entry;
+    // GDP-batch with T tasks: gcd-cycle of assignments).
+    let mut batch_cache: HashMap<Vec<usize>, Batch> = HashMap::new();
+
+    for step in start_step..cfg.steps {
+        if cfg.halt_after == Some(step) {
+            bail!("simulated crash: halting before step {step} (--halt-after)");
+        }
+        // --- assemble batch rows (round-robin over tasks) ---
+        let row_tasks = row_assignment(step, dims.b, tasks.len());
+        if !batch_cache.contains_key(&row_tasks) {
+            let rows: Vec<&crate::graph::features::GraphFeatures> =
+                row_tasks.iter().map(|&ti| &tasks[ti].feats).collect();
+            batch_cache
+                .insert(row_tasks.clone(), Batch::from_rows(policy.manifest(), &rows)?);
+        }
+        let batch = &batch_cache[&row_tasks];
+
+        // --- rollout, then the learner update ---
+        let (samples, outcomes) = rollout_step(
+            policy, store, tasks, cfg, batch, step, &row_tasks, &mut rng, &pool,
+        )?;
+        core.consume_rollout(
+            policy, store, tasks, cfg, batch, step, &row_tasks, &samples, &outcomes,
+        )?;
         if let Some(a) = &cfg.autosave {
             if a.every > 0 && (step + 1) % a.every == 0 {
-                let state = capture_state(step + 1, &rng, &baselines, &bests);
+                let state = core.capture(step + 1, &rng);
                 checkpoint::save_train(policy.manifest(), store, &state, &a.path)?;
             }
         }
@@ -423,18 +611,19 @@ pub fn train_from(
     // autosave file always reflects the returned parameters).
     if let Some(a) = &cfg.autosave {
         if cfg.steps > start_step {
-            let state = capture_state(cfg.steps, &rng, &baselines, &bests);
+            let state = core.capture(cfg.steps, &rng);
             checkpoint::save_train(policy.manifest(), store, &state, &a.path)?;
         }
     }
 
     Ok(TrainResult {
-        per_task: bests,
-        history,
+        per_task: core.bests,
+        history: core.history,
         wall_secs: t_start.elapsed().as_secs_f64(),
-        sim_evals,
+        sim_evals: core.sim_evals,
         xla_secs: policy.exec_secs_total() - xla_start,
-        skipped_batches,
+        skipped_batches: core.skipped_batches,
+        supervision: None,
     })
 }
 

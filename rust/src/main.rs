@@ -58,6 +58,9 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
   gdp pretrain [--corpus base|diverse] [--steps N] [--save ckpt]
             [--autosave train.ckpt] [--autosave-every N] [--resume]
             [--halt-after N] [--variant V] [--backend B] [--seed N]
+            [--actors N] [--deterministic] [--eval-threads N]
+            [--inject panic=E[:B],nan=E,slow=E:MS] [--max-restarts N]
+            [--watchdog-ms N] [--bench-out BENCH.json] [--log-dir DIR]
             [--quiet]
   gdp finetune <workload> --checkpoint ckpt [--steps N] [--lr X]
             [--unfrozen] [--save out.ckpt] [--autosave train.ckpt]
@@ -360,6 +363,18 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     cfg.steps = args.usize_or("steps", 240).map_err(|e| anyhow!(e))?;
     let autosave = crash_safety_flags(args, &mut cfg)?;
     let resume = args.flag("resume");
+    // Supervised actor/learner knobs (coordinator::async_train).
+    cfg.actors = args.usize_or("actors", 1).map_err(|e| anyhow!(e))?;
+    cfg.deterministic = args.flag("deterministic");
+    cfg.eval_threads = args.usize_or("eval-threads", 0).map_err(|e| anyhow!(e))?;
+    cfg.max_restarts = args.usize_or("max-restarts", 5).map_err(|e| anyhow!(e))?;
+    cfg.watchdog_ms = args.u64_or("watchdog-ms", 30_000).map_err(|e| anyhow!(e))?;
+    if let Some(spec) = args.get("inject") {
+        cfg.inject = gdp::serve::FaultSpec::parse(spec)
+            .map_err(|e| anyhow!("--inject: {e}"))?;
+    }
+    let bench_out = args.get("bench-out").map(str::to_string);
+    let log_dir = args.get("log-dir").map(PathBuf::from);
     args.finish().map_err(|e| anyhow!(e))?;
 
     let session = Session::open_with(&artifacts, &variant, backend)?;
@@ -381,13 +396,25 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     };
     eprintln!(
         "[pretrain] variant={variant} backend={} corpus={} graphs ({level_s}) \
-         steps={} hold-outs {:?} never seen",
+         steps={} actors={}{} hold-outs {:?} never seen",
         session.policy.backend_name(),
         items.len(),
         cfg.steps,
+        cfg.actors,
+        if cfg.deterministic { " (deterministic)" } else { "" },
         corpus::holdout_ids()
     );
+    let executed_from = init.as_ref().map(|(_, s)| s.next_step).unwrap_or(0);
     let (store, result) = generalize::pretrain_from(&session, &items, &cfg, init)?;
+    let mut logger =
+        gdp::coordinator::metrics::LossyLogger::create(log_dir.as_deref(), "pretrain");
+    for s in &result.history {
+        logger.log_step("corpus", s);
+    }
+    logger.log_result("pretrain", &result);
+    if let Some(p) = logger.path() {
+        eprintln!("[pretrain] step log -> {}", p.display());
+    }
     for t in &result.per_task {
         println!(
             "{:<16} best {}",
@@ -396,6 +423,18 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
         );
     }
     session.save_checkpoint(&store, &save)?;
+    if let Some(sup) = &result.supervision {
+        println!(
+            "supervision: {} actors ({}) | {} restarts | {} quarantined | \
+             {} faults injected | {:.2} corpus-steps/sec",
+            sup.actors,
+            if sup.deterministic { "deterministic" } else { "free-running" },
+            sup.actor_restarts,
+            sup.quarantined_batches,
+            sup.faults_injected,
+            sup.corpus_steps_per_sec
+        );
+    }
     println!(
         "wall {:.1}s | {} sim evals{} | checkpoint -> {}",
         result.wall_secs,
@@ -407,6 +446,47 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
         },
         save.display()
     );
+    if let Some(path) = bench_out {
+        let executed = cfg.steps.saturating_sub(executed_from);
+        let steps_per_sec = result
+            .supervision
+            .as_ref()
+            .map(|s| s.corpus_steps_per_sec)
+            .unwrap_or(executed as f64 / result.wall_secs.max(1e-9));
+        let mut rec = gdp::util::bench::BenchRecorder::new("pretrain");
+        rec.metric("steps", executed as f64);
+        rec.metric("actors", cfg.actors as f64);
+        rec.metric("deterministic", if cfg.deterministic { 1.0 } else { 0.0 });
+        rec.metric("wall_secs", result.wall_secs);
+        rec.metric("sim_evals", result.sim_evals as f64);
+        rec.metric(
+            "quarantined_batches",
+            result
+                .supervision
+                .as_ref()
+                .map(|s| s.quarantined_batches as f64)
+                .unwrap_or(result.skipped_batches as f64),
+        );
+        rec.metric(
+            "actor_restarts",
+            result
+                .supervision
+                .as_ref()
+                .map(|s| s.actor_restarts as f64)
+                .unwrap_or(0.0),
+        );
+        rec.metric(
+            "faults_injected",
+            result
+                .supervision
+                .as_ref()
+                .map(|s| s.faults_injected as f64)
+                .unwrap_or(0.0),
+        );
+        rec.metric("corpus_steps_per_sec", steps_per_sec);
+        rec.write(&path)?;
+        println!("bench metrics -> {path}");
+    }
     Ok(())
 }
 

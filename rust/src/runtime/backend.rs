@@ -128,4 +128,19 @@ pub trait PolicyBackend: Send + Sync {
 
     /// Cumulative policy-execution wall seconds (perf accounting).
     fn exec_secs_total(&self) -> f64;
+
+    /// Construct an independent engine replica sharing **no mutable
+    /// state** with `self` (notably its own forward workspace), so
+    /// concurrent rollout actors don't serialize on the shared
+    /// workspace mutex. Parameters are *not* part of the engine — every
+    /// call still takes a `ParamStore` — so replicas stay
+    /// bit-equivalent to the original by construction.
+    ///
+    /// Default `None`: callers must fall back to sharing `self` (which
+    /// stays correct, merely serialized). The PJRT path cannot
+    /// replicate a loaded AOT executable; the native engine can always
+    /// rebuild from its manifest.
+    fn replicate(&self) -> Option<Box<dyn PolicyBackend>> {
+        None
+    }
 }

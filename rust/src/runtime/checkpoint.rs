@@ -96,6 +96,10 @@ pub struct TrainState {
     /// xoshiro256** state at the top of step `next_step`.
     pub rng: [u64; 4],
     pub tasks: Vec<TaskTrainState>,
+    /// Cumulative batches quarantined by the non-finite guard over the
+    /// whole run (resume continues the count; absent in older v2 files,
+    /// which read back as 0).
+    pub quarantined_batches: usize,
 }
 
 /// Encode an f64 that may be infinite (JSON has no Infinity literal;
@@ -159,6 +163,7 @@ fn train_state_json(state: &TrainState) -> Json {
         ("next_step", Json::num(state.next_step as f64)),
         ("rng", rng),
         ("tasks", tasks),
+        ("quarantined", Json::num(state.quarantined_batches as f64)),
     ])
 }
 
@@ -220,7 +225,10 @@ fn parse_train_state(v: &Json) -> Result<TrainState> {
             tracker_best: parse_maybe_inf(t.get("tracker_best"), "tracker_best")?,
         });
     }
-    Ok(TrainState { next_step, rng, tasks })
+    // Optional (older v2 autosaves predate the quarantine counter).
+    let quarantined_batches =
+        v.get("quarantined").and_then(Json::as_usize).unwrap_or(0);
+    Ok(TrainState { next_step, rng, tasks, quarantined_batches })
 }
 
 /// Named dims fields, for field-by-field mismatch reporting. Keys match
@@ -681,6 +689,7 @@ mod tests {
                     tracker_best: f64::INFINITY,
                 },
             ],
+            quarantined_batches: 3,
         };
         let dir = std::env::temp_dir().join("gdp_ckpt_unit_train");
         let path = dir.join("auto.ckpt");

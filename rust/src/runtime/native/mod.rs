@@ -566,6 +566,15 @@ impl PolicyBackend for NativePolicy {
     fn exec_secs_total(&self) -> f64 {
         self.exec_secs.total()
     }
+
+    fn replicate(&self) -> Option<Box<dyn PolicyBackend>> {
+        // Rebuilding from the manifest is cheap (workspace allocation
+        // only) and yields an engine with its own workspace mutex, so
+        // actor forwards run truly concurrently.
+        NativePolicy::new(self.manifest.clone())
+            .ok()
+            .map(|p| Box::new(p) as Box<dyn PolicyBackend>)
+    }
 }
 
 // The serve daemon shares one warm engine across threads

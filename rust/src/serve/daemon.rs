@@ -19,7 +19,9 @@
 //! and the metrics artifact is flushed before exit. Either way the
 //! server metrics snapshot is written to `BENCH_SERVE.json`
 //! (configurable) in the same `BenchRecorder` artifact shape as the
-//! other BENCH_*.json files.
+//! other BENCH_*.json files, and a configured `--cache-file` is
+//! persisted via `PlacementService::stop` — including when the
+//! transport loop itself exits with an error.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -174,13 +176,18 @@ pub fn run(
     bench_out: Option<&str>,
 ) -> Result<super::metrics::Snapshot> {
     sig::install();
-    match transport {
-        Transport::Stdio => serve_stdio(service)?,
+    // Hold the transport result instead of `?`-propagating: stop() below
+    // must ALWAYS run so a configured `--cache-file` is persisted even
+    // when the transport loop exits with an error (e.g. a broken stdin
+    // pipe racing a SIGTERM). Losing the warm cache on the drain path
+    // would silently undo the whole point of `--cache-file`.
+    let served: Result<()> = match transport {
+        Transport::Stdio => serve_stdio(service),
         Transport::Tcp(addr) => {
             let listener =
                 TcpListener::bind(&addr).with_context(|| format!("binding {addr}"))?;
             eprintln!("[serve] listening on {}", listener.local_addr()?);
-            accept_loop(service, listener)?;
+            accept_loop(service, listener)
         }
         #[cfg(unix)]
         Transport::Unix(path) => {
@@ -190,10 +197,11 @@ pub fn run(
             eprintln!("[serve] listening on unix:{path}");
             let res = accept_loop(service, listener);
             remove_stale_socket(&path);
-            res?;
+            res
         }
-    }
+    };
     service.stop();
+    served?;
     let snap = service.snapshot();
     if let Some(path) = bench_out {
         write_artifact(&snap, path)?;
@@ -267,7 +275,16 @@ fn serve_stdio(service: &Arc<PlacementService>) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     for line in stdin.lock().lines() {
-        let line = line.context("reading stdin")?;
+        let line = match line {
+            Ok(l) => l,
+            // A read interrupted/failed after SIGINT/SIGTERM is the drain
+            // path, not an error: finish up so stop() persists the cache.
+            Err(_) if sig::fired() => {
+                service.request_drain();
+                break;
+            }
+            Err(e) => return Err(e).context("reading stdin"),
+        };
         if line.trim().is_empty() {
             continue;
         }

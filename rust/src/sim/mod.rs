@@ -13,7 +13,7 @@ pub mod workspace;
 pub use cost::CostModel;
 pub use device::{DeviceSpec, Topology};
 pub use engine::{SimPlan, SimReport, Simulator};
-pub use pool::EvalPool;
+pub use pool::{EvalPool, EvalPoolError};
 pub use trace::Trace;
 pub use workspace::SimWorkspace;
 

@@ -9,12 +9,57 @@
 //! sequential on the caller so RNG streams are unchanged. PPO rollout
 //! rewards, zero-shot extra samples, HDP's per-step sample batch and
 //! random search all funnel through here (EXPERIMENTS.md §Perf).
+//!
+//! **Panic isolation.** A panicking payload no longer aborts the whole
+//! `thread::scope` or leaves workspace mutexes poisoned for every later
+//! caller: each worker runs its items under `catch_unwind`, a poisoned
+//! slot is recreated with a fresh workspace, and [`EvalPool::try_map`]
+//! returns a structured [`EvalPoolError`] naming the first candidate
+//! that failed (plus its panic message). [`EvalPool::map`] keeps its
+//! infallible signature for callers that treat a failed evaluation as a
+//! bug, re-raising the structured message as a clean panic — but the
+//! pool itself stays usable either way.
 
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Mutex, MutexGuard};
 use std::thread;
 
 use crate::sim::engine::{SimReport, Simulator};
 use crate::sim::workspace::SimWorkspace;
+
+/// A payload panicked while evaluating one candidate. `item` is the
+/// index into the `items` slice handed to `try_map`/`map` (input order,
+/// not worker order), so callers can name the offending candidate.
+#[derive(Clone, Debug)]
+pub struct EvalPoolError {
+    /// Input index of the first item whose evaluation panicked.
+    pub item: usize,
+    /// Stringified panic payload (`"<non-string panic>"` otherwise).
+    pub message: String,
+}
+
+impl std::fmt::Display for EvalPoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "evaluation worker panicked on candidate {}: {}",
+            self.item, self.message
+        )
+    }
+}
+
+impl std::error::Error for EvalPoolError {}
+
+/// Render a `catch_unwind` payload for error reporting.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
 
 pub struct EvalPool {
     threads: usize,
@@ -41,44 +86,106 @@ impl EvalPool {
         self.threads
     }
 
+    /// Lock a worker slot, recovering (and resetting) a workspace whose
+    /// mutex was poisoned by an earlier panicking payload. The workspace
+    /// is pure scratch — every simulate call re-derives its contents —
+    /// so a fresh one is always a safe replacement.
+    fn slot(&self, wi: usize) -> MutexGuard<'_, SimWorkspace> {
+        match self.workspaces[wi].lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let mut g = poisoned.into_inner();
+                *g = SimWorkspace::new();
+                g
+            }
+        }
+    }
+
     /// Apply `f` to every item, each worker borrowing one of the pool's
     /// cached `SimWorkspace`s. `results[i]` always corresponds to
     /// `items[i]`; with one thread (or fewer than two items) everything
     /// runs inline on the caller.
+    ///
+    /// Infallible variant: a panicking payload surfaces as a clean panic
+    /// carrying the [`EvalPoolError`] message (candidate index + payload)
+    /// instead of a poisoned-mutex unwrap, and the pool remains usable.
     pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
     where
         T: Sync,
         R: Send,
         F: Fn(&mut SimWorkspace, &T) -> R + Sync,
     {
-        if self.threads == 1 || items.len() < 2 {
-            let mut ws = self.workspaces[0].lock().unwrap();
-            return items.iter().map(|it| f(&mut ws, it)).collect();
+        match self.try_map(items, f) {
+            Ok(out) => out,
+            Err(e) => panic!("{e}"),
         }
-        let workers = self.threads.min(items.len());
-        let chunk = (items.len() + workers - 1) / workers;
+    }
+
+    /// Fallible [`EvalPool::map`]: per-item panics are caught, the
+    /// touched workspace is recreated, and the first failure (in input
+    /// order) is reported as an [`EvalPoolError`] naming the candidate.
+    /// Items after a failing one in the same worker chunk are skipped;
+    /// other workers run to completion so the pool is left clean.
+    pub fn try_map<T, R, F>(&self, items: &[T], f: F) -> Result<Vec<R>, EvalPoolError>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&mut SimWorkspace, &T) -> R + Sync,
+    {
+        let run_chunk = |wi: usize,
+                         base: usize,
+                         in_chunk: &[T],
+                         out_chunk: &mut [Option<R>]|
+         -> Option<EvalPoolError> {
+            let mut ws = self.slot(wi);
+            for (off, (it, out)) in
+                in_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+            {
+                match catch_unwind(AssertUnwindSafe(|| f(&mut ws, it))) {
+                    Ok(r) => *out = Some(r),
+                    Err(p) => {
+                        // Scratch state is suspect after an unwind
+                        // mid-simulation; reset before releasing.
+                        *ws = SimWorkspace::new();
+                        return Some(EvalPoolError {
+                            item: base + off,
+                            message: panic_message(p.as_ref()),
+                        });
+                    }
+                }
+            }
+            None
+        };
+
         let mut results: Vec<Option<R>> = Vec::with_capacity(items.len());
         results.resize_with(items.len(), || None);
-        let fref = &f;
-        thread::scope(|s| {
-            for (wi, (in_chunk, out_chunk)) in items
-                .chunks(chunk)
-                .zip(results.chunks_mut(chunk))
-                .enumerate()
-            {
-                let slot = &self.workspaces[wi];
-                s.spawn(move || {
-                    let mut ws = slot.lock().unwrap();
-                    for (it, out) in in_chunk.iter().zip(out_chunk.iter_mut()) {
-                        *out = Some(fref(&mut ws, it));
-                    }
-                });
-            }
-        });
-        results
+        let failure: Option<EvalPoolError>;
+        if self.threads == 1 || items.len() < 2 {
+            failure = run_chunk(0, 0, items, &mut results);
+        } else {
+            let workers = self.threads.min(items.len());
+            let chunk = (items.len() + workers - 1) / workers;
+            let failures: Vec<Option<EvalPoolError>> = thread::scope(|s| {
+                let handles: Vec<_> = items
+                    .chunks(chunk)
+                    .zip(results.chunks_mut(chunk))
+                    .enumerate()
+                    .map(|(wi, (in_chunk, out_chunk))| {
+                        let run = &run_chunk;
+                        s.spawn(move || run(wi, wi * chunk, in_chunk, out_chunk))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("eval worker supervisor panicked")).collect()
+            });
+            failure = failures.into_iter().flatten().min_by_key(|e| e.item);
+        }
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        Ok(results
             .into_iter()
             .map(|r| r.expect("eval worker filled every slot"))
-            .collect()
+            .collect())
     }
 
     /// Evaluate a batch of placements on one simulator. Deterministic:
@@ -173,5 +280,73 @@ mod tests {
         let items: Vec<usize> = (0..10).collect();
         let out = pool.map(&items, |_ws, &x| x * 2);
         assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_item_yields_structured_error_and_pool_survives() {
+        for threads in [1, 3] {
+            let pool = EvalPool::new(threads);
+            let items: Vec<usize> = (0..9).collect();
+            let err = pool
+                .try_map(&items, |_ws, &x| {
+                    if x == 5 {
+                        panic!("boom on {x}");
+                    }
+                    x + 1
+                })
+                .unwrap_err();
+            assert_eq!(err.item, 5, "t={threads}");
+            assert!(err.message.contains("boom on 5"), "t={threads}: {err}");
+            assert!(err.to_string().contains("candidate 5"), "t={threads}");
+            // the pool is immediately reusable: no poisoned slots
+            let ok = pool.try_map(&items, |_ws, &x| x + 1).unwrap();
+            assert_eq!(ok, (1..=9).collect::<Vec<_>>(), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn earliest_failing_candidate_reported_across_workers() {
+        let pool = EvalPool::new(4);
+        let items: Vec<usize> = (0..16).collect();
+        // Panic in two different workers' chunks; input order must win.
+        let err = pool
+            .try_map(&items, |_ws, &x| {
+                if x == 3 || x == 13 {
+                    panic!("bad candidate");
+                }
+                x
+            })
+            .unwrap_err();
+        assert_eq!(err.item, 3);
+        // evaluate() still matches serial results after recovery
+        let g = diamond_chain(6);
+        let topo = Topology::p100_pcie(4);
+        let sim = Simulator::new(&g, &topo);
+        let ps: Vec<Vec<usize>> = (0..5).map(|i| vec![i % 4; g.n()]).collect();
+        let serial: Vec<SimReport> = ps.iter().map(|p| sim.simulate(p)).collect();
+        let out = pool.evaluate(&sim, &ps);
+        for (a, b) in out.iter().zip(&serial) {
+            assert_eq!(a.step_time.to_bits(), b.step_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn infallible_map_repanics_with_candidate_name() {
+        let pool = EvalPool::new(2);
+        let items: Vec<usize> = (0..4).collect();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(&items, |_ws, &x| {
+                if x == 2 {
+                    panic!("kaput");
+                }
+                x
+            })
+        }))
+        .unwrap_err();
+        let msg = panic_message(caught.as_ref());
+        assert!(msg.contains("candidate 2"), "{msg}");
+        assert!(msg.contains("kaput"), "{msg}");
+        // pool still usable through the infallible path too
+        assert_eq!(pool.map(&items, |_ws, &x| x), items);
     }
 }

@@ -169,6 +169,7 @@ fn corrupted_v2_checkpoints_error_structurally_never_panic() {
             evals: 9,
             tracker_best: 0.25,
         }],
+        quarantined_batches: 0,
     };
     let path = dir.join("good.ckpt");
     checkpoint::save_train(&manifest, &store, &state, &path).unwrap();

@@ -126,6 +126,194 @@ fn killed_pretrain_resumes_bit_identical() {
     assert_stores_bit_identical(&ref_store, &noop_store, "no-op resume");
 }
 
+/// 4-actor deterministic mode (ISSUE 9 tentpole). `steps` kept small so
+/// the whole suite stays CI-friendly.
+fn async_cfg(steps: usize, actors: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        verbose: false,
+        actors,
+        deterministic: true,
+        eval_threads: 2,
+        ..Default::default()
+    }
+}
+
+/// The async tentpole's headline guarantee: `--actors 4 --deterministic`
+/// replays the serial schedule bit-identically — returned parameters,
+/// step history, AND the autosaved GDPCKPT files compare byte-equal.
+#[test]
+fn deterministic_async_pretrain_matches_serial_bit_identical() {
+    let dir = tmpdir("det_async");
+    let session = session();
+    let items = pretrain_corpus(CorpusLevel::Base);
+    let items = &items[..2.min(items.len())];
+    let steps = 6;
+
+    let serial_auto = dir.join("serial.ckpt");
+    let mut serial_cfg = cfg(steps);
+    serial_cfg.autosave = Some(AutosaveCfg { path: serial_auto.clone(), every: 2 });
+    let (serial_store, serial_result) =
+        generalize::pretrain(&session, items, &serial_cfg).unwrap();
+    assert!(serial_result.supervision.is_none(), "serial runs have no actors");
+
+    let async_auto = dir.join("async.ckpt");
+    let mut a_cfg = async_cfg(steps, 4);
+    a_cfg.autosave = Some(AutosaveCfg { path: async_auto.clone(), every: 2 });
+    let (async_store, async_result) =
+        generalize::pretrain(&session, items, &a_cfg).unwrap();
+
+    assert_stores_bit_identical(
+        &serial_store,
+        &async_store,
+        "4-actor deterministic vs serial",
+    );
+    let sup = async_result.supervision.expect("async runs report supervision");
+    assert_eq!(sup.actors, 4);
+    assert!(sup.deterministic);
+    assert_eq!(sup.actor_restarts, 0, "clean run must not restart anyone");
+    assert_eq!(sup.quarantined_batches, 0);
+    assert!(sup.corpus_steps_per_sec > 0.0);
+
+    assert_eq!(async_result.history.len(), serial_result.history.len());
+    for (x, y) in async_result.history.iter().zip(&serial_result.history) {
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "step {} loss", x.step);
+        assert_eq!(
+            x.mean_reward.to_bits(),
+            y.mean_reward.to_bits(),
+            "step {} reward",
+            x.step
+        );
+    }
+
+    let a = std::fs::read(&serial_auto).unwrap();
+    let b = std::fs::read(&async_auto).unwrap();
+    assert_eq!(
+        a, b,
+        "autosaved checkpoints differ between serial and deterministic async"
+    );
+}
+
+/// Kill-and-resume through the async path: crash a 4-actor deterministic
+/// run mid-flight, resume from its autosave, and end bit-identical to an
+/// uninterrupted serial run.
+#[test]
+fn killed_async_pretrain_resumes_bit_identical() {
+    let dir = tmpdir("async_resume");
+    let auto = dir.join("train.ckpt");
+    let _ = std::fs::remove_file(&auto);
+    let session = session();
+    let items = pretrain_corpus(CorpusLevel::Base);
+    let items = &items[..2.min(items.len())];
+    let steps = 6;
+
+    let (ref_store, _) = generalize::pretrain(&session, items, &cfg(steps)).unwrap();
+
+    let mut crash_cfg = async_cfg(steps, 4);
+    crash_cfg.autosave = Some(AutosaveCfg { path: auto.clone(), every: 2 });
+    crash_cfg.halt_after = Some(3);
+    let err = generalize::pretrain(&session, items, &crash_cfg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("simulated crash"), "unexpected error: {err}");
+    assert!(auto.exists(), "autosave missing after async crash");
+
+    let (store, state) = session.load_train_checkpoint(&auto).unwrap();
+    assert_eq!(state.next_step, 2, "expected the step-2 autosave");
+    let mut resume_cfg = async_cfg(steps, 4);
+    resume_cfg.autosave = Some(AutosaveCfg { path: auto.clone(), every: 2 });
+    let (res_store, res_result) =
+        generalize::pretrain_from(&session, items, &resume_cfg, Some((store, state)))
+            .unwrap();
+
+    assert_stores_bit_identical(
+        &ref_store,
+        &res_store,
+        "async resumed vs serial uninterrupted",
+    );
+    assert_eq!(res_result.history.len(), steps - 2);
+    assert_eq!(res_result.history.first().unwrap().step, 2);
+
+    // Resuming the completed run is a no-op through the async path too.
+    let (store2, state2) = session.load_train_checkpoint(&auto).unwrap();
+    assert_eq!(state2.next_step, steps);
+    let (noop_store, noop_result) = generalize::pretrain_from(
+        &session,
+        items,
+        &async_cfg(steps, 4),
+        Some((store2, state2)),
+    )
+    .unwrap();
+    assert!(noop_result.history.is_empty());
+    assert_stores_bit_identical(&ref_store, &noop_store, "async no-op resume");
+}
+
+/// Chaos: injected actor panics are absorbed by supervised restarts and
+/// injected NaNs are quarantined by the learner's rollback guard — the
+/// run completes, with full accounting in [`SupervisionStats`].
+#[test]
+fn chaos_run_restarts_actors_and_quarantines_poisoned_batches() {
+    let session = session();
+    let items = pretrain_corpus(CorpusLevel::Base);
+    let items = &items[..2.min(items.len())];
+    let steps = 8;
+    let mut chaos = TrainConfig {
+        steps,
+        verbose: false,
+        actors: 4,
+        eval_threads: 2,
+        max_restarts: 50,
+        ..Default::default()
+    };
+    chaos.inject = gdp::serve::FaultSpec::parse("panic=5,nan=3").unwrap();
+
+    let (_store, result) = generalize::pretrain(&session, items, &chaos)
+        .expect("chaos run must complete (restarts absorb the panics)");
+    let sup = result.supervision.expect("supervision stats");
+    assert!(sup.actor_restarts > 0, "panic faults should force restarts");
+    assert_eq!(
+        sup.actor_restarts,
+        sup.restarts_by_actor.iter().sum::<usize>(),
+        "per-actor restart accounting must add up"
+    );
+    assert!(sup.quarantined_batches > 0, "nan faults should quarantine");
+    assert_eq!(result.skipped_batches, sup.quarantined_batches);
+    assert!(
+        sup.faults_injected >= (sup.actor_restarts + sup.quarantined_batches) as u64,
+        "every restart/quarantine here traces back to an injected fault \
+         ({} injected, {} restarts, {} quarantined)",
+        sup.faults_injected,
+        sup.actor_restarts,
+        sup.quarantined_batches
+    );
+    // Quarantined steps contribute no history entry; everything else does.
+    assert_eq!(result.history.len() + sup.quarantined_batches, steps);
+}
+
+/// A wedged actor (slow fault far beyond the watchdog window) must
+/// surface as an actionable error naming the knob — never a hang.
+#[test]
+fn watchdog_turns_stalled_actor_into_actionable_error() {
+    let session = session();
+    let items = pretrain_corpus(CorpusLevel::Base);
+    let items = &items[..1.min(items.len())];
+    let mut wedged = TrainConfig {
+        steps: 4,
+        verbose: false,
+        actors: 2,
+        eval_threads: 1,
+        watchdog_ms: 150,
+        ..Default::default()
+    };
+    wedged.inject = gdp::serve::FaultSpec::parse("slow=1:2000").unwrap();
+    let err = generalize::pretrain(&session, items, &wedged)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("watchdog"), "expected a watchdog error, got: {err}");
+    assert!(err.contains("--watchdog-ms"), "error must name the knob: {err}");
+}
+
 #[test]
 fn poisoned_batch_is_skipped_with_params_rolled_back() {
     let session = session();

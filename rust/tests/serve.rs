@@ -217,3 +217,111 @@ fn tcp_daemon_serves_survives_garbage_and_writes_artifact() {
     assert_eq!(m.get("server_requests").unwrap().as_usize(), Some(2));
     assert!(m.get("server_latency_p99_ms").is_some());
 }
+
+/// Real-process SIGTERM drain: the daemon must exit cleanly (status 0,
+/// no hang) and persist its `--cache-file` on the signal path — the
+/// warm cache is the whole point of the flag, so losing it on the most
+/// common way daemons die (orchestrator SIGTERM) would be a regression.
+#[cfg(unix)]
+#[test]
+fn sigterm_drain_persists_cache_file() {
+    use std::io::Read;
+    use std::process::{Command, Stdio};
+
+    let dir = tmpdir("sigterm");
+    let cache = dir.join("cache.json");
+    let bench = dir.join("BENCH_SERVE.json");
+    let _ = std::fs::remove_file(&cache);
+    let mut child = Command::new(env!("CARGO_BIN_EXE_gdp"))
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--cache-file",
+            cache.to_str().unwrap(),
+            "--bench-out",
+            bench.to_str().unwrap(),
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning gdp serve");
+
+    // The ephemeral port is announced on stderr.
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let addr = loop {
+        let mut line = String::new();
+        let n = stderr.read_line(&mut line).expect("daemon stderr");
+        assert!(n > 0, "daemon exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("[serve] listening on ") {
+            break rest.to_string();
+        }
+    };
+    // Keep draining stderr so the daemon can never block on a full pipe;
+    // the tail is also where "cache: persisted" must show up.
+    let tail_thread = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = stderr.read_to_string(&mut rest);
+        rest
+    });
+
+    // One real placement so the cache has something worth persisting.
+    let stream = TcpStream::connect(&addr).expect("connecting to daemon");
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer
+        .write_all(b"{\"id\":\"r1\",\"workload\":\"rnnlm2\",\"samples\":1,\"seed\":3}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    match proto::parse_response(resp.trim()).expect("parseable response") {
+        ResponseFrame::Place(p) => assert!(!p.placement.is_empty()),
+        ResponseFrame::Error(e) => {
+            panic!("expected placement, got error {}: {}", e.code, e.message)
+        }
+        _ => panic!("expected placement, got ack: {resp}"),
+    }
+    // Close our connection first so the drain has nothing in flight.
+    drop(writer);
+    drop(reader);
+
+    let kill = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .expect("sending SIGTERM");
+    assert!(kill.success(), "kill -TERM failed");
+
+    // Graceful drain, bounded: a hang here is exactly the bug this test
+    // exists to catch.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let status = loop {
+        match child.try_wait().expect("try_wait") {
+            Some(s) => break s,
+            None => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "daemon did not exit within 30s of SIGTERM"
+                );
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    assert!(status.success(), "daemon exited non-zero after SIGTERM: {status}");
+    let tail = tail_thread.join().expect("stderr drain thread");
+    assert!(
+        tail.contains("cache: persisted"),
+        "no cache persistence on the signal path; stderr tail:\n{tail}"
+    );
+
+    // The persisted file is valid and holds the placement we requested.
+    let text = std::fs::read_to_string(&cache).expect("cache file persisted");
+    let j = gdp::util::json::parse(&text).expect("cache file parses");
+    assert!(j.get("version").is_some(), "cache file missing version: {text}");
+    let entries =
+        j.get("entries").and_then(|e| e.as_arr()).map(|a| a.len()).unwrap_or(0);
+    assert!(entries >= 1, "expected >= 1 cached placement, got: {text}");
+    // And the bench artifact was flushed on the same path.
+    let bench_text = std::fs::read_to_string(&bench).expect("bench artifact");
+    assert!(bench_text.contains("\"serve\""), "{bench_text}");
+}
