@@ -67,7 +67,7 @@ pub struct HdpSearch<'a> {
 
 impl<'a> HdpSearch<'a> {
     pub fn new(g: &'a OpGraph, cfg: HdpConfig) -> Self {
-        let topo = Topology::p100_pcie(g.num_devices);
+        let topo = g.topology();
         // Grouping stage: contiguous topological chunks balanced by
         // compute — the effect of HDP's feature-averaging grouper, which
         // collapses nearby ops into a single decision unit.

@@ -6,11 +6,13 @@
 pub mod hdp;
 pub mod human;
 pub mod metis;
+pub mod optimal;
 pub mod random;
 pub mod topo_greedy;
 
 pub use hdp::HdpSearch;
 pub use human::human_expert;
 pub use metis::metis_place;
+pub use optimal::{optimal_place, optimal_place_cfg, OptimalConfig, OptimalResult};
 pub use random::random_place;
 pub use topo_greedy::topo_greedy_place;

@@ -1,0 +1,485 @@
+//! Provably-optimal placement references (Tarnawski et al., 2006.16423).
+//!
+//! Two modes, picked automatically by [`optimal_place`]:
+//!
+//! - **Exhaustive**: enumerate all `d^n` placements through the real
+//!   simulator and keep the best feasible one. Bit-exact ground truth,
+//!   applicable only when `d^n` fits the eval budget (tiny graphs — the
+//!   `tests/optimal_baseline.rs` battery and the `hx_tiny*` scenarios).
+//! - **Contiguous-split DP**: dynamic program over one topological order
+//!   that cuts it into at most `d` contiguous segments and assigns each
+//!   segment to a distinct device (a subset-bitmask DP, so heterogeneous
+//!   fleets may use any device permutation). This is Tarnawski et al.'s
+//!   pipeline-splitting setting: optimal *within the contiguous-split
+//!   family under the DP's surrogate cost* (per-segment compute sums,
+//!   boundary-cut transfer bytes, segment memory against each device's
+//!   capacity), not over all `d^n` placements. The winning split is
+//!   re-simulated so the reported time is always the real simulator's.
+//!
+//! Everything is deterministic: fixed iteration order, strict-improvement
+//! comparisons, no RNG — repeated runs return identical placements.
+
+use crate::graph::coarsen::coarsen;
+use crate::graph::OpGraph;
+use crate::placement::Placement;
+use crate::sim::{CostModel, SimWorkspace, Simulator};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimalMode {
+    /// Full `d^n` enumeration — exact global optimum.
+    Exhaustive,
+    /// Contiguous-split DP — optimal within its split family.
+    ContiguousDp,
+}
+
+#[derive(Clone, Debug)]
+pub struct OptimalConfig {
+    /// Use exhaustive enumeration when `d^n` is at most this.
+    pub max_exhaustive_evals: u128,
+    /// Coarsen graphs above this many nodes before running the DP.
+    pub dp_max_nodes: usize,
+    /// Subset-bitmask DP is `O(n^2 * 2^d * d)`; beyond this device count
+    /// fall back to the ordered-device DP (`O(n^2 * d)`), which fixes the
+    /// segment->device order but still allows skipping devices.
+    pub dp_max_subset_devices: usize,
+}
+
+impl Default for OptimalConfig {
+    fn default() -> Self {
+        Self {
+            max_exhaustive_evals: 300_000,
+            dp_max_nodes: 128,
+            dp_max_subset_devices: 10,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OptimalResult {
+    pub placement: Placement,
+    /// Real simulator step time of `placement`.
+    pub step_time: f64,
+    /// Whether `placement` is feasible (no device OOMs).
+    pub valid: bool,
+    /// Simulator evaluations spent.
+    pub evals: usize,
+    pub mode: OptimalMode,
+}
+
+/// Best placement under the automatic mode choice (see module docs).
+pub fn optimal_place(g: &OpGraph) -> OptimalResult {
+    optimal_place_cfg(g, &OptimalConfig::default())
+}
+
+pub fn optimal_place_cfg(g: &OpGraph, cfg: &OptimalConfig) -> OptimalResult {
+    let d = g.num_devices.max(1) as u128;
+    let space = d.checked_pow(g.n().min(u32::MAX as usize) as u32);
+    match space {
+        Some(s) if s <= cfg.max_exhaustive_evals => exhaustive_place(g),
+        _ => dp_place(g, cfg),
+    }
+}
+
+/// `(candidate_valid, candidate_time)` strictly better than the incumbent:
+/// feasibility first, then time. Strict `<` keeps the first (lexicographic
+/// in enumeration order) placement on exact ties — determinism.
+fn better(valid: bool, time: f64, best_valid: bool, best_time: f64) -> bool {
+    if valid != best_valid {
+        return valid;
+    }
+    time < best_time
+}
+
+/// Exhaustive `d^n` enumeration through the real simulator.
+pub fn exhaustive_place(g: &OpGraph) -> OptimalResult {
+    let n = g.n();
+    let d = g.num_devices.max(1);
+    let topo = g.topology();
+    let sim = Simulator::new(g, &topo);
+    let mut ws = SimWorkspace::new();
+
+    let mut p = vec![0usize; n];
+    let mut best = p.clone();
+    let mut best_time = f64::INFINITY;
+    let mut best_valid = false;
+    let mut evals = 0usize;
+    loop {
+        let rep = sim.simulate_into(&mut ws, &p);
+        evals += 1;
+        if better(rep.valid, rep.step_time, best_valid, best_time) {
+            best_valid = rep.valid;
+            best_time = rep.step_time;
+            best.copy_from_slice(&p);
+        }
+        // Odometer increment, last node fastest (lexicographic order).
+        let mut i = n;
+        loop {
+            if i == 0 {
+                return OptimalResult {
+                    placement: Placement::new(best),
+                    step_time: best_time,
+                    valid: best_valid,
+                    evals,
+                    mode: OptimalMode::Exhaustive,
+                };
+            }
+            i -= 1;
+            p[i] += 1;
+            if p[i] < d {
+                break;
+            }
+            p[i] = 0;
+        }
+    }
+}
+
+/// Surrogate tables shared by both DP variants, built over one
+/// topological order of (a possibly coarsened view of) `g`.
+struct DpTables {
+    /// `order[pos]` = node id at topological position `pos`.
+    order: Vec<u32>,
+    /// `comp[k][i]`: total fwd+bwd compute seconds of positions `< i` on
+    /// device `k` (prefix sums; segment cost is a difference).
+    comp: Vec<Vec<f64>>,
+    /// `mem[i]`: training-resident bytes of positions `< i`
+    /// (engine model: 4*param + output per node).
+    mem: Vec<u64>,
+    /// `cut[j]`: bytes crossing the boundary between positions `< j` and
+    /// `>= j` (edges whose producer sits before and consumer at/after).
+    cut: Vec<u64>,
+    /// `bw_in[k]`: worst-case incoming link bandwidth of device `k`.
+    bw_in: Vec<f64>,
+    mem_cap: Vec<u64>,
+}
+
+impl DpTables {
+    fn build(g: &OpGraph) -> Self {
+        let n = g.n();
+        let topo = g.topology();
+        let d = topo.d();
+        let cost = CostModel::default();
+        let order = g.topo_order().to_vec();
+        let mut pos = vec![0usize; n];
+        for (i, &u) in order.iter().enumerate() {
+            pos[u as usize] = i;
+        }
+        let mut comp = vec![vec![0f64; n + 1]; d];
+        let mut mem = vec![0u64; n + 1];
+        for (i, &u) in order.iter().enumerate() {
+            let node = &g.nodes[u as usize];
+            for (k, col) in comp.iter_mut().enumerate() {
+                let dev = &topo.devices[k];
+                col[i + 1] = col[i] + cost.op_time(node, dev) + cost.op_time_bwd(node, dev);
+            }
+            mem[i + 1] = mem[i]
+                + crate::sim::engine::PARAM_MEM_FACTOR * node.param_bytes
+                + node.output_bytes;
+        }
+        // Boundary cuts via a difference array: edge (u,v) crosses every
+        // boundary j in (pos[u], pos[v]].
+        let mut diff = vec![0i64; n + 2];
+        for &(u, v) in &g.edges {
+            let (a, b) = (pos[u as usize], pos[v as usize]);
+            let bytes = g.nodes[u as usize].output_bytes as i64;
+            let (lo, hi) = (a.min(b), a.max(b));
+            diff[lo + 1] += bytes;
+            diff[hi + 1] -= bytes;
+        }
+        let mut cut = vec![0u64; n + 1];
+        let mut acc = 0i64;
+        for j in 0..=n {
+            acc += diff[j];
+            cut[j] = acc.max(0) as u64;
+        }
+        let bw_in = (0..d)
+            .map(|k| {
+                (0..d)
+                    .filter(|&a| a != k)
+                    .map(|a| topo.bw(a, k))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let mem_cap = topo.devices.iter().map(|s| s.mem_bytes).collect();
+        Self { order, comp, mem, cut, bw_in, mem_cap }
+    }
+
+    fn n(&self) -> usize {
+        self.order.len()
+    }
+
+    fn d(&self) -> usize {
+        self.comp.len()
+    }
+
+    /// Surrogate cost of running positions `[j, i)` on device `k`:
+    /// compute plus the fwd+bwd transfer of the incoming boundary cut.
+    /// Infinite when the segment's resident bytes exceed the device.
+    fn seg_cost(&self, j: usize, i: usize, k: usize) -> f64 {
+        if self.mem[i] - self.mem[j] > self.mem_cap[k] {
+            return f64::INFINITY;
+        }
+        let mut t = self.comp[k][i] - self.comp[k][j];
+        if j > 0 && self.cut[j] > 0 {
+            t += 2.0 * self.cut[j] as f64 / self.bw_in[k];
+        }
+        t
+    }
+}
+
+/// Contiguous-split DP. Coarsens first when the graph is large, expands
+/// the winning split back to the full graph, and re-simulates it so the
+/// reported time is the real simulator's.
+pub fn dp_place(g: &OpGraph, cfg: &OptimalConfig) -> OptimalResult {
+    let (coarse, seg_devices) = if g.n() > cfg.dp_max_nodes {
+        let c = coarsen(g, cfg.dp_max_nodes);
+        let mut cg = c.graph.clone();
+        if let Some(t) = g.carried_topology() {
+            cg.set_topology(t.clone());
+        }
+        let devices = dp_segment(&cg, cfg);
+        (Some(c), devices)
+    } else {
+        (None, dp_segment(g, cfg))
+    };
+    let devices = match coarse {
+        Some(c) => c.expand(&seg_devices),
+        None => seg_devices,
+    };
+    let topo = g.topology();
+    let rep = Simulator::new(g, &topo).simulate(&devices);
+    OptimalResult {
+        placement: Placement::new(devices),
+        step_time: rep.step_time,
+        valid: rep.valid,
+        evals: 1,
+        mode: OptimalMode::ContiguousDp,
+    }
+}
+
+/// The DP proper: returns a per-node device assignment for `g`.
+fn dp_segment(g: &OpGraph, cfg: &OptimalConfig) -> Vec<usize> {
+    let t = DpTables::build(g);
+    let seg = if t.d() <= cfg.dp_max_subset_devices {
+        dp_subset(&t)
+    } else {
+        dp_ordered(&t)
+    };
+    // Map (position -> device) back to (node -> device).
+    let mut devices = vec![0usize; t.n()];
+    for (i, &u) in t.order.iter().enumerate() {
+        devices[u as usize] = seg[i];
+    }
+    devices
+}
+
+/// Bitmask DP: `f[i][s]` = best bottleneck cost of placing positions
+/// `< i` on exactly the device subset `s` (one contiguous segment per
+/// used device, any assignment order).
+fn dp_subset(t: &DpTables) -> Vec<usize> {
+    let (n, d) = (t.n(), t.d());
+    let masks = 1usize << d;
+    let mut f = vec![vec![f64::INFINITY; masks]; n + 1];
+    // `choice[i][s]` = (segment start, device) realizing `f[i][s]`.
+    let mut choice = vec![vec![(usize::MAX, usize::MAX); masks]; n + 1];
+    f[0][0] = 0.0;
+    for i in 1..=n {
+        for s in 1usize..masks {
+            let mut best = f64::INFINITY;
+            let mut arg = (usize::MAX, usize::MAX);
+            for k in 0..d {
+                if s & (1 << k) == 0 {
+                    continue;
+                }
+                let prev_mask = s & !(1 << k);
+                for j in 0..i {
+                    let base = f[j][prev_mask];
+                    if base >= best {
+                        continue;
+                    }
+                    let cost = base.max(t.seg_cost(j, i, k));
+                    if cost < best {
+                        best = cost;
+                        arg = (j, k);
+                    }
+                }
+            }
+            f[i][s] = best;
+            choice[i][s] = arg;
+        }
+    }
+    let mut best_mask = 0usize;
+    let mut best = f64::INFINITY;
+    for s in 1..masks {
+        if f[n][s] < best {
+            best = f[n][s];
+            best_mask = s;
+        }
+    }
+    // Infeasible even for the surrogate (every split OOMs): fall back to
+    // everything-on-device-0 and let the simulator flag it.
+    if best_mask == 0 {
+        return vec![0; n];
+    }
+    let mut seg = vec![0usize; n];
+    let (mut i, mut s) = (n, best_mask);
+    while i > 0 {
+        let (j, k) = choice[i][s];
+        for slot in seg.iter_mut().take(i).skip(j) {
+            *slot = k;
+        }
+        s &= !(1 << k);
+        i = j;
+    }
+    seg
+}
+
+/// Ordered-device DP for wide fleets: segments are assigned to devices in
+/// index order (devices may be skipped). `f[i][k]` = best bottleneck cost
+/// of placing positions `< i` using only devices `< k`.
+fn dp_ordered(t: &DpTables) -> Vec<usize> {
+    let (n, d) = (t.n(), t.d());
+    let mut f = vec![vec![f64::INFINITY; d + 1]; n + 1];
+    let mut choice = vec![vec![usize::MAX; d + 1]; n + 1];
+    for k in 0..=d {
+        f[0][k] = 0.0;
+    }
+    for i in 1..=n {
+        for k in 1..=d {
+            // Skip device k-1 entirely…
+            let mut best = f[i][k - 1];
+            let mut arg = i; // sentinel: "empty segment"
+            // …or give it the segment [j, i).
+            for j in 0..i {
+                let base = f[j][k - 1];
+                if base >= best {
+                    continue;
+                }
+                let cost = base.max(t.seg_cost(j, i, k - 1));
+                if cost < best {
+                    best = cost;
+                    arg = j;
+                }
+            }
+            f[i][k] = best;
+            choice[i][k] = arg;
+        }
+    }
+    if !f[n][d].is_finite() {
+        return vec![0; n];
+    }
+    let mut seg = vec![0usize; n];
+    let (mut i, mut k) = (n, d);
+    while i > 0 && k > 0 {
+        let j = choice[i][k];
+        if j < i {
+            for slot in seg.iter_mut().take(i).skip(j) {
+                *slot = k - 1;
+            }
+            i = j;
+        }
+        k -= 1;
+    }
+    seg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, OpKind};
+    use crate::sim::Topology;
+
+    fn chain(n: usize, devices: usize) -> OpGraph {
+        let mut b = GraphBuilder::new("chain", devices);
+        let mut prev = None;
+        for i in 0..n {
+            let mut op = b.op(format!("n{i}"), OpKind::MatMul);
+            op = op.flops(1e9 * (i + 1) as f64).out_bytes(1 << 20);
+            if let Some(p) = prev {
+                op = op.after(&[p]);
+            }
+            prev = Some(op.id());
+        }
+        b.build()
+    }
+
+    #[test]
+    fn exhaustive_beats_or_matches_everything() {
+        let g = chain(5, 2);
+        let r = optimal_place(&g);
+        assert_eq!(r.mode, OptimalMode::Exhaustive);
+        assert_eq!(r.evals, 32);
+        assert!(r.valid);
+        // No placement can beat it.
+        let single = crate::sim::simulate_default(&g, &vec![0; 5]);
+        assert!(r.step_time <= single.step_time);
+    }
+
+    #[test]
+    fn dp_is_deterministic_and_feasible_on_registry_graphs() {
+        for id in ["rnnlm2", "gnmt4"] {
+            let g = crate::workloads::by_id(id).unwrap();
+            let cfg = OptimalConfig::default();
+            let a = dp_place(&g, &cfg);
+            let b = dp_place(&g, &cfg);
+            assert_eq!(a.placement.devices, b.placement.devices, "{id}");
+            assert_eq!(a.step_time.to_bits(), b.step_time.to_bits(), "{id}");
+            assert!(a.valid, "{id}: DP split should fit");
+        }
+    }
+
+    #[test]
+    fn dp_cannot_beat_exhaustive() {
+        let g = chain(6, 2);
+        let ex = exhaustive_place(&g);
+        let dp = dp_place(&g, &OptimalConfig::default());
+        assert!(
+            dp.step_time >= ex.step_time - 1e-12,
+            "dp {} < exhaustive {}",
+            dp.step_time,
+            ex.step_time
+        );
+    }
+
+    #[test]
+    fn dp_handles_wide_heterogeneous_fleets() {
+        // 12 devices: beyond the subset-DP gate, exercises dp_ordered.
+        let mut g = chain(8, 12);
+        g.set_topology(Topology::v100_nvlink(12, 4));
+        let r = dp_place(&g, &OptimalConfig::default());
+        assert!(r.valid);
+        assert!(r.placement.devices.iter().all(|&dev| dev < 12));
+    }
+
+    #[test]
+    fn dp_respects_memory_caps() {
+        // Two nodes of 1 GiB resident each; caps sized so no single
+        // device holds both. The DP must split.
+        let mut b = GraphBuilder::new("mem", 2);
+        let a = b
+            .op("a", OpKind::MatMul)
+            .flops(1e9)
+            .params(1 << 28) // 4*256 MiB = 1 GiB resident
+            .out_bytes(1 << 10)
+            .id();
+        b.op("b", OpKind::MatMul)
+            .flops(1e9)
+            .params(1 << 28)
+            .out_bytes(1 << 10)
+            .after(&[a]);
+        let mut g = b.build();
+        let caps = Topology::uniform(
+            vec![
+                crate::sim::DeviceSpec::p100().with_mem_bytes(3 << 29),
+                crate::sim::DeviceSpec::p100().with_mem_bytes(3 << 29),
+            ],
+            12e9,
+            15e-6,
+        );
+        g.set_topology(caps);
+        let cfg = OptimalConfig { max_exhaustive_evals: 0, ..Default::default() };
+        let r = optimal_place_cfg(&g, &cfg);
+        assert_eq!(r.mode, OptimalMode::ContiguousDp);
+        assert!(r.valid, "DP picked an OOM split");
+        assert_ne!(r.placement.devices[0], r.placement.devices[1]);
+    }
+}

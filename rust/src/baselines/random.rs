@@ -2,7 +2,7 @@
 
 use crate::graph::OpGraph;
 use crate::placement::Placement;
-use crate::sim::{EvalPool, Simulator, Topology};
+use crate::sim::{EvalPool, Simulator};
 use crate::util::Rng;
 
 /// Uniform random device per node.
@@ -15,7 +15,7 @@ pub fn random_place(g: &OpGraph, rng: &mut Rng) -> Placement {
 /// evaluated in parallel batches; the first strictly-better candidate in
 /// draw order wins, so the result is independent of thread count.
 pub fn random_search(g: &OpGraph, n: usize, seed: u64) -> (Placement, f64) {
-    let topo = Topology::p100_pcie(g.num_devices);
+    let topo = g.topology();
     let sim = Simulator::new(g, &topo);
     let pool = EvalPool::new(0);
     let mut rng = Rng::new(seed);

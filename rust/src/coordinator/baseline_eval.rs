@@ -2,9 +2,11 @@
 //! HP / METIS / HDP columns of Table 1.
 
 use crate::baselines::hdp::{HdpConfig, HdpSearch};
-use crate::baselines::{human_expert, metis_place};
+use crate::baselines::{
+    human_expert, metis_place, optimal_place_cfg, topo_greedy_place, OptimalConfig,
+};
 use crate::graph::OpGraph;
-use crate::sim::{SimReport, SimWorkspace, Simulator, Topology};
+use crate::sim::{SimReport, SimWorkspace, Simulator};
 
 /// Result of one baseline on one workload.
 #[derive(Clone, Debug)]
@@ -25,24 +27,46 @@ fn time_of(rep: &SimReport) -> Option<f64> {
 }
 
 pub fn eval_human(g: &OpGraph) -> BaselineResult {
-    let topo = Topology::p100_pcie(g.num_devices);
+    let topo = g.topology();
     let p = human_expert(g);
     let rep = Simulator::new(g, &topo).simulate(&p.devices);
     BaselineResult { name: "human", step_time: time_of(&rep), search_evals: 0 }
 }
 
 pub fn eval_metis(g: &OpGraph) -> BaselineResult {
-    let topo = Topology::p100_pcie(g.num_devices);
+    let topo = g.topology();
     let p = metis_place(g);
     let rep = Simulator::new(g, &topo).simulate(&p.devices);
     BaselineResult { name: "metis", step_time: time_of(&rep), search_evals: 0 }
+}
+
+/// The deterministic list scheduler (serve's degraded-mode placer). It is
+/// deliberately memory- and heterogeneity-blind, so on binding-capacity
+/// scenarios it may OOM — the Table column that motivates learned and
+/// optimal placers.
+pub fn eval_topo_greedy(g: &OpGraph) -> BaselineResult {
+    let topo = g.topology();
+    let p = topo_greedy_place(g);
+    let rep = Simulator::new(g, &topo).simulate(&p.devices);
+    BaselineResult { name: "topo_greedy", step_time: time_of(&rep), search_evals: 0 }
+}
+
+/// Tarnawski-style optimal reference (`baselines::optimal`): exact on
+/// small graphs (exhaustive), contiguous-split DP above the budget.
+pub fn eval_optimal(g: &OpGraph, cfg: &OptimalConfig) -> BaselineResult {
+    let r = optimal_place_cfg(g, cfg);
+    BaselineResult {
+        name: "optimal",
+        step_time: if r.valid { Some(r.step_time) } else { None },
+        search_evals: r.evals,
+    }
 }
 
 /// Both one-shot heuristics on one shared simulator: the cost tables are
 /// built once and both placements run through one reused workspace (two
 /// evals don't warrant thread fan-out).
 pub fn eval_heuristics(g: &OpGraph) -> Vec<BaselineResult> {
-    let topo = Topology::p100_pcie(g.num_devices);
+    let topo = g.topology();
     let sim = Simulator::new(g, &topo);
     let mut ws = SimWorkspace::new();
     [("human", human_expert(g)), ("metis", metis_place(g))]

@@ -1,0 +1,175 @@
+//! Heterogeneous-fleet benchmark (`gdp experiment --id hetero`): GDP vs
+//! HDP vs the memory-blind topo-greedy list scheduler vs the optimal
+//! reference (`baselines::optimal`) on the `hx_*` scenario family —
+//! CPU+GPU mixes, NVLink islands and binding memory capacities.
+//!
+//! Two things make this harness different from the Table-1 sweep:
+//!
+//! 1. The policy runs with a widened feature width (`F = 72`) so the
+//!    per-device feature block fits fleets up to 8 devices
+//!    (`DEVICE_BLOCK + 4*d <= F`); the homogeneous harnesses keep the
+//!    AOT default `F = 48`, where the block is simply absent.
+//! 2. Every scenario is scored against the optimal reference, so the
+//!    artifact records GDP's *gap to optimum*, not just baseline
+//!    speedups. On the `hx_tiny*` scenarios the reference is the exact
+//!    exhaustive optimum; elsewhere it is the contiguous-split DP.
+//!
+//! The run writes `BENCH_HETERO.json` (CI's hetero-smoke artifact) with
+//! per-scenario step times for gdp/hdp/topo_greedy/optimal, the count of
+//! scenarios where the memory-blind greedy is infeasible (>= 1 by
+//! construction: `hx_bind_chain`), and the worst GDP-vs-optimal gap.
+
+use anyhow::Result;
+
+use super::common::*;
+use crate::baselines::optimal::OptimalMode;
+use crate::baselines::{optimal_place_cfg, OptimalConfig};
+use crate::coordinator::baseline_eval::{eval_hdp, eval_topo_greedy};
+use crate::coordinator::metrics::write_json;
+use crate::coordinator::train;
+use crate::graph::features::{layout, FeatDims};
+use crate::policy::task::PlacementTask;
+use crate::runtime::native::init_param_store;
+use crate::runtime::{Dims, Manifest, NativePolicy};
+use crate::util::bench::BenchRecorder;
+use crate::util::json::Json;
+use crate::workloads::hetero::hetero_registry;
+
+/// Model dims for heterogeneous fleets: default AOT dims with the
+/// feature width grown to hold the device block for up to 8 devices.
+pub fn hetero_dims() -> Dims {
+    let base = Dims::default_aot();
+    let f = layout::DEVICE_BLOCK + layout::DEVICE_FEATS * base.d;
+    Dims { f: f.max(base.f), ..base }
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let dims = hetero_dims();
+    let fd = FeatDims { n: dims.n, k: dims.k, f: dims.f, d: dims.d };
+    let manifest = Manifest::synthesize_variant(dims, &opts.variant)?;
+    let policy = NativePolicy::new(manifest.clone())?;
+
+    let all = hetero_registry();
+    let specs: Vec<_> = if opts.quick {
+        // The two exhaustive-optimal scenarios, the binding-memory
+        // scenario and one real model — enough for every CI assertion.
+        all.into_iter()
+            .filter(|s| {
+                matches!(
+                    s.id,
+                    "hx_tiny_mix" | "hx_tiny_nvlink" | "hx_bind_chain" | "hx_cpu_gpu_rnn"
+                )
+            })
+            .collect()
+    } else {
+        all
+    };
+
+    println!("\n=== Heterogeneous fleets: GDP vs HDP / topo-greedy / optimal ===");
+    println!("(policy F={} with per-device features; optimal = exhaustive or DP)", fd.f);
+    println!(
+        "{:<44} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "Scenario (#devices)", "GDP", "HDP", "greedy", "optimal", "mode", "gap v opt"
+    );
+    print_rule(106);
+
+    let mut rec = BenchRecorder::new("hetero");
+    let mut rows = Vec::new();
+    let mut greedy_infeasible = 0usize;
+    let mut max_gap_pct: f64 = 0.0;
+    let mut gap_count = 0usize;
+    let ocfg = OptimalConfig::default();
+
+    for spec in &specs {
+        let g = (spec.build)();
+
+        // GDP: train a fresh policy instance on this scenario alone
+        // (the GDP-one protocol, like Table 1, but device-aware).
+        let task = PlacementTask::new(spec.id, g.clone(), fd, opts.seed);
+        let mut store = init_param_store(&manifest, opts.seed)?;
+        let cfg = opts.train_cfg(opts.steps, fxhash(spec.id));
+        let result = train(&policy, &mut store, &[task], &cfg)?;
+        let best = &result.per_task[0];
+        let gdp = if best.best_valid { Some(best.best_time) } else { None };
+
+        let (hdp, _) = eval_hdp(&g, opts.hdp_steps, opts.seed ^ 0x48_44_50);
+        let greedy = eval_topo_greedy(&g);
+        let optimal = optimal_place_cfg(&g, &ocfg);
+        let opt_t = if optimal.valid { Some(optimal.step_time) } else { None };
+        let mode = match optimal.mode {
+            OptimalMode::Exhaustive => "exhaustive",
+            OptimalMode::ContiguousDp => "dp",
+        };
+
+        if greedy.step_time.is_none() {
+            greedy_infeasible += 1;
+        }
+        // GDP's gap to the optimal reference, in percent (>= 0 up to
+        // search noise; the exhaustive reference is a true lower bound).
+        let gap_pct = match (gdp, opt_t) {
+            (Some(g_t), Some(o_t)) if o_t > 0.0 => Some((g_t - o_t) / o_t * 100.0),
+            _ => None,
+        };
+        if let Some(gp) = gap_pct {
+            max_gap_pct = max_gap_pct.max(gp);
+            gap_count += 1;
+        }
+
+        println!(
+            "{:<44} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10}",
+            spec.display,
+            fmt_time(gdp),
+            fmt_time(hdp.step_time),
+            fmt_time(greedy.step_time),
+            fmt_time(opt_t),
+            mode,
+            gap_pct.map_or("-".to_string(), |g| format!("{g:+.1}%")),
+        );
+
+        let num = |o: Option<f64>| o.map(Json::num).unwrap_or(Json::Null);
+        rows.push(Json::obj(vec![
+            ("scenario", Json::str(spec.id)),
+            ("display", Json::str(spec.display)),
+            ("gdp", num(gdp)),
+            ("hdp", num(hdp.step_time)),
+            ("topo_greedy", num(greedy.step_time)),
+            ("optimal", num(opt_t)),
+            ("optimal_mode", Json::str(mode)),
+            ("optimal_evals", Json::num(optimal.evals as f64)),
+            ("gdp_optimal_gap_pct", num(gap_pct)),
+        ]));
+        let m = |o: Option<f64>| o.unwrap_or(-1.0);
+        rec.metric(format!("{}_gdp", spec.id), m(gdp));
+        rec.metric(format!("{}_hdp", spec.id), m(hdp.step_time));
+        rec.metric(format!("{}_topo_greedy", spec.id), m(greedy.step_time));
+        rec.metric(format!("{}_optimal", spec.id), m(opt_t));
+        if let Some(gp) = gap_pct {
+            rec.metric(format!("{}_gdp_optimal_gap_pct", spec.id), gp);
+        }
+    }
+
+    print_rule(106);
+    println!(
+        "{} scenarios; greedy infeasible on {}; worst GDP gap to optimal {:+.1}%\n",
+        specs.len(),
+        greedy_infeasible,
+        max_gap_pct
+    );
+
+    rec.metric("scenarios", specs.len() as f64);
+    rec.metric("greedy_infeasible", greedy_infeasible as f64);
+    rec.metric("gap_recorded", gap_count as f64);
+    rec.metric("max_gdp_optimal_gap_pct", max_gap_pct);
+    rec.metric("feat_width", fd.f as f64);
+    rec.write("BENCH_HETERO.json")?;
+
+    write_json(
+        &opts.out_dir.join("hetero.json"),
+        &Json::obj(vec![
+            ("rows", Json::arr(rows)),
+            ("greedy_infeasible", Json::num(greedy_infeasible as f64)),
+            ("max_gdp_optimal_gap_pct", Json::num(max_gap_pct)),
+        ]),
+    )?;
+    Ok(())
+}

@@ -8,6 +8,7 @@ pub mod common;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod hetero;
 pub mod table1;
 pub mod table2;
 pub mod table3;
@@ -19,8 +20,10 @@ use crate::util::cli::Args;
 use common::ExpOpts;
 
 /// CLI entry:
-/// `gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>`
-/// (`fig4_transfer` is an alias for `table4`, the generalization harness).
+/// `gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|hetero|all>`
+/// (`fig4_transfer` is an alias for `table4`, the generalization harness;
+/// `hetero` is the heterogeneous-fleet benchmark and is NOT part of
+/// `all`, which stays the paper's homogeneous table/figure set).
 pub fn run_from_cli(args: &Args) -> Result<()> {
     let id = args.str_or("id", "all");
     let opts = ExpOpts::from_args(args)?;
@@ -37,6 +40,7 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<()> {
         "fig2" => fig2::run(opts),
         "fig3" => fig3::run(opts),
         "fig4" => fig4::run(opts),
+        "hetero" => hetero::run(opts),
         "all" => {
             table1::run(opts)?;
             table2::run(opts)?;

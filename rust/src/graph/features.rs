@@ -10,6 +10,7 @@
 //! `python/compile/config.py` dims (F=48, K, N) — append-only.
 
 use super::{OpGraph, NUM_OP_KINDS};
+use crate::sim::device::Topology;
 use crate::util::Rng;
 
 /// Static shapes of the lowered policy (subset of manifest "dims").
@@ -55,13 +56,67 @@ pub mod layout {
     pub const NUM_DEVICES: usize = NUM_OP_KINDS + 18;
     pub const GRAPH_FILL: usize = NUM_OP_KINDS + 19;
     pub const USED: usize = NUM_OP_KINDS + 20; // 40; rest reserved
+    /// Optional per-device block appended after the reserved gap when a
+    /// heterogeneous topology is carried AND it fits in F:
+    /// `DEVICE_FEATS` slots per device at `DEVICE_BLOCK + DEVICE_FEATS*j`
+    /// (log-ratio peak_flops, mem_bytes, mem_bw vs the P100 reference,
+    /// then mean log-ratio outgoing link bandwidth vs PCIe). All four are
+    /// exactly 0.0 on the default homogeneous fleet, so legacy rows (and
+    /// checkpoints trained on them) are bit-identical.
+    pub const DEVICE_BLOCK: usize = USED;
+    pub const DEVICE_FEATS: usize = 4;
+}
+
+/// Per-device feature block (see [`layout::DEVICE_BLOCK`]). Log-ratios
+/// against the historical P100/PCIe reference, squashed by 1/8 so one
+/// slot spans roughly e^-8..e^8 of relative capability in [-1, 1].
+fn device_block(topo: &Topology) -> Vec<f32> {
+    const REF_FLOPS: f64 = 10.6e12;
+    const REF_MEM: f64 = (16u64 << 30) as f64;
+    const REF_MEM_BW: f64 = 720e9;
+    const REF_LINK_BW: f64 = 12e9;
+    const SCALE: f64 = 1.0 / 8.0;
+    let d = topo.d();
+    let mut block = vec![0f32; d * layout::DEVICE_FEATS];
+    for (j, dev) in topo.devices.iter().enumerate() {
+        let o = j * layout::DEVICE_FEATS;
+        block[o] = ((dev.peak_flops / REF_FLOPS).ln() * SCALE) as f32;
+        block[o + 1] = ((dev.mem_bytes as f64 / REF_MEM).ln() * SCALE) as f32;
+        block[o + 2] = ((dev.mem_bw / REF_MEM_BW).ln() * SCALE) as f32;
+        if d > 1 {
+            let sum: f64 = (0..d)
+                .filter(|&k| k != j)
+                .map(|k| (topo.bw(j, k) / REF_LINK_BW).ln())
+                .sum();
+            block[o + 3] = (sum / (d - 1) as f64 * SCALE) as f32;
+        }
+    }
+    block
 }
 
 /// Featurize a (already coarsened) graph into one padded batch row.
 ///
 /// `seed` controls neighbor sampling only; with the same seed the output is
 /// bit-stable, so rollout batches are reproducible.
+///
+/// Compatibility path: no device block is written, so homogeneous feature
+/// rows are byte-identical to every pre-heterogeneity release.
 pub fn featurize(g: &OpGraph, dims: FeatDims, seed: u64) -> GraphFeatures {
+    featurize_topo(g, None, dims, seed)
+}
+
+/// [`featurize`] with an optional device topology. When `topo` is `Some`
+/// and `F` has room for `num_devices` blocks past the reserved gap, each
+/// real node row additionally carries the per-device spec block (the
+/// policy input that lets it distinguish devices). The block is passed
+/// explicitly (rather than read off `g`) because coarsened graphs don't
+/// carry the original's topology.
+pub fn featurize_topo(
+    g: &OpGraph,
+    topo: Option<&Topology>,
+    dims: FeatDims,
+    seed: u64,
+) -> GraphFeatures {
     let n = g.n();
     assert!(
         n <= dims.n,
@@ -90,6 +145,15 @@ pub fn featurize(g: &OpGraph, dims: FeatDims, seed: u64) -> GraphFeatures {
     let max_layer = g.max_layer().max(1) as f32;
     let mut rng = Rng::new(seed ^ 0x5EED_F00D);
 
+    // Device block, written only when it fits (compat: F=48 holds up to
+    // two devices; wider fleets need a larger-F manifest to see it).
+    let dev_block: Option<Vec<f32>> = topo
+        .filter(|t| {
+            t.d() == g.num_devices
+                && layout::DEVICE_BLOCK + layout::DEVICE_FEATS * g.num_devices <= dims.f
+        })
+        .map(device_block);
+
     for v in 0..n {
         let node = &g.nodes[v];
         let row = &mut feats[v * dims.f..(v + 1) * dims.f];
@@ -114,6 +178,10 @@ pub fn featurize(g: &OpGraph, dims: FeatDims, seed: u64) -> GraphFeatures {
         row[layout::IS_COMPUTE] = node.kind.is_compute() as u8 as f32;
         row[layout::NUM_DEVICES] = g.num_devices as f32 / dims.d as f32;
         row[layout::GRAPH_FILL] = n as f32 / dims.n as f32;
+        if let Some(block) = &dev_block {
+            row[layout::DEVICE_BLOCK..layout::DEVICE_BLOCK + block.len()]
+                .copy_from_slice(block);
+        }
         node_mask[v] = 1.0;
 
         // Undirected neighbor union, K sampled without replacement.
@@ -215,6 +283,36 @@ mod tests {
         let c = featurize(&g, dims(), 8);
         // features identical (seed only affects sampling; deg<=K here)
         assert_eq!(a.feats, c.feats);
+    }
+
+    #[test]
+    fn homogeneous_topology_is_bit_compatible() {
+        let g = small();
+        let dims = FeatDims { n: 16, k: 4, f: 64, d: 8 };
+        let legacy = featurize(&g, dims, 3);
+        let topo = Topology::p100_pcie(4);
+        let with_topo = featurize_topo(&g, Some(&topo), dims, 3);
+        // ln(1) = 0 for every reference ratio: same bytes as the legacy path.
+        assert_eq!(legacy.feats, with_topo.feats);
+        assert_eq!(legacy.nbr_idx, with_topo.nbr_idx);
+    }
+
+    #[test]
+    fn device_block_written_when_it_fits() {
+        let g = small(); // 4 devices -> block needs F >= 40 + 16
+        let wide = FeatDims { n: 16, k: 4, f: 64, d: 8 };
+        let topo = Topology::cpu_gpu(3);
+        let f = featurize_topo(&g, Some(&topo), wide, 0);
+        let row = &f.feats[..wide.f];
+        // CPU (device 0) is slower than the P100 reference -> negative slot.
+        assert!(row[layout::DEVICE_BLOCK] < 0.0, "{}", row[layout::DEVICE_BLOCK]);
+        // V100 (device 1) is faster -> positive slot.
+        let v = layout::DEVICE_BLOCK + layout::DEVICE_FEATS;
+        assert!(row[v] > 0.0, "{}", row[v]);
+        // At F=48 the 4-device block does not fit: silently skipped.
+        let narrow = FeatDims { n: 16, k: 4, f: 48, d: 8 };
+        let f48 = featurize_topo(&g, Some(&topo), narrow, 0);
+        assert_eq!(f48.feats, featurize(&g, narrow, 0).feats);
     }
 
     #[test]

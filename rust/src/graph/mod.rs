@@ -173,6 +173,10 @@ pub struct OpGraph {
     /// (producer, consumer) data-dependency edges.
     pub edges: Vec<(u32, u32)>,
     csr: Option<Csr>,
+    /// Carried device topology; `None` means the historical default
+    /// (`Topology::p100_pcie(num_devices)`). Kept private so the only
+    /// way in is `set_topology`, which can enforce consistency.
+    topology: Option<crate::sim::device::Topology>,
 }
 
 /// CSR adjacency (built lazily, not serialized).
@@ -193,6 +197,33 @@ impl OpGraph {
             nodes: vec![],
             edges: vec![],
             csr: None,
+            topology: None,
+        }
+    }
+
+    /// Attach a heterogeneous device topology. The topology's device
+    /// count must match `num_devices` (checked again by `validate`).
+    pub fn set_topology(&mut self, topo: crate::sim::device::Topology) {
+        assert_eq!(
+            topo.d(),
+            self.num_devices,
+            "topology device count must match graph num_devices"
+        );
+        self.topology = Some(topo);
+    }
+
+    /// The carried topology, if one was attached (imported graphs and the
+    /// heterogeneous registry); `None` for historical homogeneous graphs.
+    pub fn carried_topology(&self) -> Option<&crate::sim::device::Topology> {
+        self.topology.as_ref()
+    }
+
+    /// The topology placements on this graph are simulated against:
+    /// carried if present, else the default homogeneous P100/PCIe fleet.
+    pub fn topology(&self) -> crate::sim::device::Topology {
+        match &self.topology {
+            Some(t) => t.clone(),
+            None => crate::sim::device::Topology::p100_pcie(self.num_devices),
         }
     }
 
@@ -286,8 +317,18 @@ impl OpGraph {
         if self.nodes.is_empty() {
             return Err("empty graph".into());
         }
-        if self.num_devices == 0 || self.num_devices > 8 {
+        if self.num_devices == 0 {
             return Err(format!("num_devices={} out of range", self.num_devices));
+        }
+        if let Some(t) = &self.topology {
+            t.validate()?;
+            if t.d() != self.num_devices {
+                return Err(format!(
+                    "topology has {} devices but graph targets {}",
+                    t.d(),
+                    self.num_devices
+                ));
+            }
         }
         let mut seen = std::collections::HashSet::new();
         for &(u, v) in &self.edges {

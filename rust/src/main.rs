@@ -39,7 +39,7 @@ use gdp::coordinator::experiments;
 use gdp::coordinator::{self, generalize, Session, TrainConfig};
 use gdp::coordinator::baseline_eval::{eval_hdp, eval_heuristics};
 use gdp::runtime::PolicyBackend;
-use gdp::sim::{simulate_default, Topology};
+use gdp::sim::simulate_default;
 use gdp::util::cli::Args;
 use gdp::workloads;
 use gdp::workloads::corpus::{self, CorpusLevel};
@@ -87,7 +87,7 @@ const USAGE: &str = "usage: gdp <list|simulate|trace|train|infer|pretrain|finetu
             [--repro-every N] [--checkpoint ckpt]
             [--out BENCH_FUZZ.json] [--variant V] [--backend B]
             [--artifacts DIR]
-  gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|all>
+  gdp experiment --id <table1|table2|table3|table4|fig2|fig3|fig4|hetero|all>
             [--steps N] [--quick] [--out runs/]";
 
 fn main() {
@@ -123,11 +123,14 @@ fn run() -> Result<()> {
 }
 
 fn cmd_list(_args: &Args) -> Result<()> {
-    println!("{:<12} {:<30} {:>8} {:>8} {:>10}", "id", "display", "#dev", "nodes", "GFLOP");
-    for spec in workloads::registry() {
+    println!("{:<14} {:<44} {:>8} {:>8} {:>10}", "id", "display", "#dev", "nodes", "GFLOP");
+    for spec in workloads::registry()
+        .into_iter()
+        .chain(workloads::hetero::hetero_registry())
+    {
         let g = (spec.build)();
         println!(
-            "{:<12} {:<30} {:>8} {:>8} {:>10.1}",
+            "{:<14} {:<44} {:>8} {:>8} {:>10.1}",
             spec.id,
             spec.display,
             spec.num_devices,
@@ -343,7 +346,6 @@ fn cmd_infer(args: &Args) -> Result<()> {
     );
     let hist = best.best_placement.histogram(task.graph.num_devices);
     println!("  device histogram: {hist:?}");
-    let _ = Topology::p100_pcie(task.graph.num_devices);
     Ok(())
 }
 
@@ -978,7 +980,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "single" => vec![0; g.n()],
         other => bail!("unknown placement {other:?} (human|metis|single)"),
     };
-    let topo = Topology::p100_pcie(g.num_devices);
+    let topo = g.topology();
     let sim = gdp::sim::Simulator::new(&g, &topo);
     let (rep, trace) = sim.simulate_traced(&placement);
     if let Some(dir) = out.parent() {

@@ -20,7 +20,7 @@
 use std::sync::Mutex;
 
 use crate::graph::coarsen::{coarsen, Coarsened};
-use crate::graph::features::{featurize, FeatDims, GraphFeatures};
+use crate::graph::features::{featurize_topo, FeatDims, GraphFeatures};
 use crate::graph::OpGraph;
 use crate::placement::Placement;
 use crate::sim::{
@@ -52,8 +52,12 @@ const _: () = {
 impl PlacementTask {
     pub fn new(id: impl Into<String>, graph: OpGraph, dims: FeatDims, seed: u64) -> Self {
         let coarse = coarsen(&graph, dims.n);
-        let feats = featurize(&coarse.graph, dims, seed);
-        let topo = Topology::p100_pcie(graph.num_devices);
+        // The topology is passed explicitly: coarsening rebuilds the graph
+        // without the carried topology, and device features describe the
+        // fleet the ORIGINAL graph runs on.
+        let feats =
+            featurize_topo(&coarse.graph, graph.carried_topology(), dims, seed);
+        let topo = graph.topology();
         let cost = CostModel::default();
         let plan = SimPlan::build(&graph, &topo, &cost);
         Self {

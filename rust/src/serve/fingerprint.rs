@@ -16,6 +16,7 @@
 //! of a cached answer.
 
 use crate::graph::OpGraph;
+use crate::sim::Topology;
 
 /// splitmix64 finalizer: the avalanche core of every mix below.
 #[inline]
@@ -49,6 +50,31 @@ fn node_hash(g: &OpGraph, v: usize) -> u64 {
     mix(h, n.layer as u64)
 }
 
+/// Digest of a heterogeneous device topology: every device spec plus the
+/// off-diagonal link matrices, in device order (device identity is
+/// positional — placements index devices, so device order is part of the
+/// graph's identity and must NOT be canonicalized away). The diagonal is
+/// skipped: serve's JSON wire format writes it as 0 and the importer
+/// re-normalizes to INF, so including it would break the round trip.
+fn topology_digest(t: &Topology) -> u64 {
+    let d = t.d();
+    let mut h = mix(0x70_0E_0D16, d as u64);
+    for s in &t.devices {
+        h = mix(h, s.peak_flops.to_bits());
+        h = mix(h, s.mem_bytes);
+        h = mix(h, s.mem_bw.to_bits());
+    }
+    for i in 0..d {
+        for j in 0..d {
+            if i != j {
+                h = mix(h, t.link_bw[i * d + j].to_bits());
+                h = mix(h, t.link_lat[i * d + j].to_bits());
+            }
+        }
+    }
+    h
+}
+
 /// Permutation-invariant structural fingerprint of a frozen graph.
 pub fn graph_fingerprint(g: &OpGraph) -> u64 {
     let n = g.n();
@@ -80,6 +106,13 @@ pub fn graph_fingerprint(g: &OpGraph) -> u64 {
     acc = mix(acc, g.num_devices as u64);
     for x in h {
         acc = mix(acc, x);
+    }
+    // Carried (heterogeneous) topologies are part of the identity: the
+    // same graph on different hardware gets different placements, so the
+    // cache must not conflate them. Graphs without a carried topology
+    // keep the pre-topology fingerprint bit-for-bit.
+    if let Some(t) = g.carried_topology() {
+        acc = mix(acc, topology_digest(t));
     }
     acc
 }
@@ -185,6 +218,30 @@ mod tests {
         for spec in crate::workloads::registry() {
             assert!(fps.insert(graph_fingerprint(&(spec.build)())), "{} collided", spec.id);
         }
+    }
+
+    #[test]
+    fn carried_topology_changes_fingerprint() {
+        let base = line_graph(
+            &[("a", OpKind::Input, 0.0), ("b", OpKind::MatMul, 1e9), ("c", OpKind::Output, 0.0)],
+            &[(0, 1), (1, 2)],
+        );
+        let fp0 = graph_fingerprint(&base);
+        // Attaching the default topology explicitly still distinguishes
+        // the graph from one with no carried topology (serve treats "the
+        // request pinned hardware" as part of the identity).
+        let mut pinned = base.clone();
+        pinned.set_topology(crate::sim::Topology::p100_pcie(2));
+        let fp_pinned = graph_fingerprint(&pinned);
+        assert_ne!(fp0, fp_pinned);
+        // Different hardware, different fingerprint.
+        let mut hetero = base.clone();
+        hetero.set_topology(crate::sim::Topology::cpu_gpu(1));
+        assert_ne!(fp_pinned, graph_fingerprint(&hetero));
+        // Same hardware twice agrees.
+        let mut pinned2 = base.clone();
+        pinned2.set_topology(crate::sim::Topology::p100_pcie(2));
+        assert_eq!(fp_pinned, graph_fingerprint(&pinned2));
     }
 
     #[test]

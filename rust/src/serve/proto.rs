@@ -366,9 +366,12 @@ pub fn parse_response(line: &str) -> Result<ResponseFrame, String> {
 
 // ---- OpGraph JSON codec (inline requests; also a graph export format) ----
 
-/// Serialize a graph as the wire JSON object.
+/// Serialize a graph as the wire JSON object. A carried heterogeneous
+/// topology is emitted under `"topology"` (diagonal link entries are
+/// written as 0 — JSON has no infinity — and re-normalized on import, so
+/// export -> import round-trips losslessly).
 pub fn graph_to_json(g: &OpGraph) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(g.name.clone())),
         ("num_devices", Json::num(g.num_devices as f64)),
         (
@@ -409,7 +412,45 @@ pub fn graph_to_json(g: &OpGraph) -> Json {
                     .collect(),
             ),
         ),
-    ])
+    ];
+    if let Some(t) = g.carried_topology() {
+        let d = t.d();
+        let finite_or_zero = |f: f64| Json::num(if f.is_finite() { f } else { 0.0 });
+        fields.push((
+            "topology",
+            Json::obj(vec![
+                (
+                    "devices",
+                    Json::arr(
+                        t.devices
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("name", Json::str(s.name.clone())),
+                                    ("peak_flops", Json::num(s.peak_flops)),
+                                    ("mem_bytes", Json::num(s.mem_bytes as f64)),
+                                    ("mem_bw", Json::num(s.mem_bw)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "link_bw",
+                    Json::arr(
+                        (0..d * d).map(|i| finite_or_zero(t.link_bw[i])).collect(),
+                    ),
+                ),
+                (
+                    "link_lat",
+                    Json::arr(
+                        (0..d * d).map(|i| finite_or_zero(t.link_lat[i])).collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 /// Parse, validate and freeze a graph from the wire JSON object.

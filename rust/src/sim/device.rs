@@ -27,7 +27,58 @@ impl DeviceSpec {
             mem_bw: 720e9,
         }
     }
+
+    /// Nvidia V100 (16 GB, ~15.7 TFLOP/s fp32, ~900 GB/s HBM2).
+    pub fn v100() -> Self {
+        Self {
+            name: "v100".into(),
+            peak_flops: 15.7e12,
+            mem_bytes: 16 << 30,
+            mem_bw: 900e9,
+        }
+    }
+
+    /// Host CPU socket (64 GB DDR4, ~1 TFLOP/s f32, ~100 GB/s).
+    pub fn cpu_host() -> Self {
+        Self {
+            name: "cpu".into(),
+            peak_flops: 1.0e12,
+            mem_bytes: 64 << 30,
+            mem_bw: 100e9,
+        }
+    }
+
+    /// The same device with a shrunk memory capacity (binding-memory
+    /// scenarios: capacities small enough that naive placements OOM).
+    pub fn with_mem_bytes(mut self, bytes: u64) -> Self {
+        self.mem_bytes = bytes;
+        self
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if !(self.peak_flops.is_finite() && self.peak_flops > 0.0) {
+            return Err(format!("device {:?}: bad peak_flops", self.name));
+        }
+        if self.mem_bytes == 0 {
+            return Err(format!("device {:?}: mem_bytes == 0", self.name));
+        }
+        if !(self.mem_bw.is_finite() && self.mem_bw > 0.0) {
+            return Err(format!("device {:?}: bad mem_bw", self.name));
+        }
+        Ok(())
+    }
 }
+
+/// PCIe-like link: ~12 GB/s effective per direction, 15 us latency.
+pub const PCIE_BW: f64 = 12e9;
+pub const PCIE_LAT: f64 = 15e-6;
+/// NVLink-like intra-island link (~150 GB/s aggregate, 5 us).
+pub const NVLINK_BW: f64 = 150e9;
+pub const NVLINK_LAT: f64 = 5e-6;
+/// Host<->device staging path (~10 GB/s, 20 us; slower than peer PCIe
+/// because transfers bounce through pinned host memory).
+pub const HOST_BW: f64 = 10e9;
+pub const HOST_LAT: f64 = 20e-6;
 
 /// A set of devices plus the pairwise interconnect.
 #[derive(Clone, Debug)]
@@ -43,24 +94,134 @@ impl Topology {
     /// `d` P100s behind a PCIe-like switch: ~12 GB/s effective per direction,
     /// 15 us latency (the paper's single-machine multi-GPU setting).
     pub fn p100_pcie(d: usize) -> Self {
-        assert!((1..=8).contains(&d));
-        let mut link_bw = vec![12e9; d * d];
-        let mut link_lat = vec![15e-6; d * d];
-        for i in 0..d {
-            link_bw[i * d + i] = f64::INFINITY;
-            link_lat[i * d + i] = 0.0;
-        }
-        Self {
-            devices: (0..d)
+        assert!(d >= 1, "topology needs at least one device");
+        let mut t = Self::uniform(
+            (0..d)
                 .map(|i| {
                     let mut s = DeviceSpec::p100();
                     s.name = format!("p100:{i}");
                     s
                 })
                 .collect(),
-            link_bw,
-            link_lat,
+            PCIE_BW,
+            PCIE_LAT,
+        );
+        t.normalize_diagonal();
+        t
+    }
+
+    /// All-pairs uniform interconnect over an arbitrary device list.
+    pub fn uniform(devices: Vec<DeviceSpec>, bw: f64, lat: f64) -> Self {
+        let d = devices.len();
+        assert!(d >= 1, "topology needs at least one device");
+        let mut t = Self {
+            devices,
+            link_bw: vec![bw; d * d],
+            link_lat: vec![lat; d * d],
+        };
+        t.normalize_diagonal();
+        t
+    }
+
+    /// One host CPU plus `gpus` V100s. Device 0 is the CPU; GPU<->GPU
+    /// links are peer PCIe, CPU<->GPU links go through the slower host
+    /// staging path.
+    pub fn cpu_gpu(gpus: usize) -> Self {
+        assert!(gpus >= 1, "cpu_gpu needs at least one GPU");
+        let mut devices = vec![{
+            let mut s = DeviceSpec::cpu_host();
+            s.name = "cpu:0".into();
+            s
+        }];
+        for i in 0..gpus {
+            let mut s = DeviceSpec::v100();
+            s.name = format!("v100:{i}");
+            devices.push(s);
         }
+        let mut t = Self::uniform(devices, PCIE_BW, PCIE_LAT);
+        let d = t.d();
+        for j in 1..d {
+            t.link_bw[j] = HOST_BW; // cpu -> gpu
+            t.link_lat[j] = HOST_LAT;
+            t.link_bw[j * d] = HOST_BW; // gpu -> cpu
+            t.link_lat[j * d] = HOST_LAT;
+        }
+        t.normalize_diagonal();
+        t
+    }
+
+    /// `d` V100s grouped into NVLink islands of `island` devices; links
+    /// inside an island are NVLink-class, links across islands fall back
+    /// to PCIe.
+    pub fn v100_nvlink(d: usize, island: usize) -> Self {
+        assert!(d >= 1 && island >= 1, "bad nvlink topology shape");
+        let mut t = Self::uniform(
+            (0..d)
+                .map(|i| {
+                    let mut s = DeviceSpec::v100();
+                    s.name = format!("v100:{i}");
+                    s
+                })
+                .collect(),
+            PCIE_BW,
+            PCIE_LAT,
+        );
+        for a in 0..d {
+            for b in 0..d {
+                if a != b && a / island == b / island {
+                    t.link_bw[a * d + b] = NVLINK_BW;
+                    t.link_lat[a * d + b] = NVLINK_LAT;
+                }
+            }
+        }
+        t.normalize_diagonal();
+        t
+    }
+
+    /// Force the diagonal to the canonical same-device values
+    /// (bw = inf, lat = 0) regardless of how the matrices were built.
+    pub fn normalize_diagonal(&mut self) {
+        let d = self.d();
+        for i in 0..d {
+            self.link_bw[i * d + i] = f64::INFINITY;
+            self.link_lat[i * d + i] = 0.0;
+        }
+    }
+
+    /// Structural validity: square matrices, positive finite specs and
+    /// off-diagonal links. The diagonal is ignored (`transfer_time`
+    /// short-circuits same-device transfers).
+    pub fn validate(&self) -> Result<(), String> {
+        let d = self.d();
+        if d == 0 {
+            return Err("topology has no devices".into());
+        }
+        if self.link_bw.len() != d * d || self.link_lat.len() != d * d {
+            return Err(format!(
+                "link matrices must be {d}x{d} row-major (got bw={}, lat={})",
+                self.link_bw.len(),
+                self.link_lat.len()
+            ));
+        }
+        for spec in &self.devices {
+            spec.validate()?;
+        }
+        for a in 0..d {
+            for b in 0..d {
+                if a == b {
+                    continue;
+                }
+                let bw = self.link_bw[a * d + b];
+                if !(bw.is_finite() && bw > 0.0) {
+                    return Err(format!("link ({a},{b}): bad bandwidth {bw}"));
+                }
+                let lat = self.link_lat[a * d + b];
+                if !(lat.is_finite() && lat >= 0.0) {
+                    return Err(format!("link ({a},{b}): bad latency {lat}"));
+                }
+            }
+        }
+        Ok(())
     }
 
     pub fn d(&self) -> usize {
@@ -99,5 +260,48 @@ mod tests {
         assert_eq!(t.transfer_time(1, 1, 1 << 20), 0.0);
         let tt = t.transfer_time(0, 1, 12_000_000);
         assert!((tt - (15e-6 + 1e-3)).abs() < 1e-9, "{tt}");
+    }
+
+    #[test]
+    fn wide_homogeneous_topologies_allowed() {
+        // The old 1..=8 cap is gone: imported graphs may carry wider fleets.
+        let t = Topology::p100_pcie(16);
+        assert_eq!(t.d(), 16);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn cpu_gpu_tiers() {
+        let t = Topology::cpu_gpu(2);
+        assert_eq!(t.d(), 3);
+        assert_eq!(t.devices[0].name, "cpu:0");
+        assert_eq!(t.bw(0, 1), HOST_BW);
+        assert_eq!(t.bw(1, 0), HOST_BW);
+        assert_eq!(t.bw(1, 2), PCIE_BW);
+        assert!(t.devices[0].peak_flops < t.devices[1].peak_flops);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn nvlink_islands() {
+        let t = Topology::v100_nvlink(4, 2);
+        assert_eq!(t.bw(0, 1), NVLINK_BW);
+        assert_eq!(t.bw(2, 3), NVLINK_BW);
+        assert_eq!(t.bw(1, 2), PCIE_BW);
+        assert_eq!(t.lat(0, 1), NVLINK_LAT);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_links() {
+        let mut t = Topology::p100_pcie(2);
+        t.link_bw[1] = -3.0;
+        assert!(t.validate().is_err());
+        let mut t = Topology::p100_pcie(2);
+        t.link_lat[2] = f64::NAN;
+        assert!(t.validate().is_err());
+        let mut t = Topology::p100_pcie(2);
+        t.devices[1].mem_bytes = 0;
+        assert!(t.validate().is_err());
     }
 }

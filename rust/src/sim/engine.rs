@@ -28,6 +28,11 @@ use crate::sim::heap::DaryHeap;
 use crate::sim::trace::{OpSpan, Trace, TransferSpan};
 use crate::sim::workspace::{EvKind, Event, SimWorkspace};
 
+/// Parameters cost 4x their size under training: weights + gradients +
+/// two Adam slots (the memory model below; public so offline placers like
+/// `baselines::optimal` can reproduce the exact resident-bytes formula).
+pub const PARAM_MEM_FACTOR: u64 = 4;
+
 /// Result of simulating one training step.
 #[derive(Clone, Debug)]
 pub struct SimReport {
@@ -195,10 +200,6 @@ impl<'a> Simulator<'a> {
         }
 
         // ---- memory model (training: params + activations + recv copies) --
-        // Parameters cost 4x their size under training: weights + gradients
-        // + two Adam slots. Activations stay resident through the backward
-        // pass, so every op's output counts toward its device's peak.
-        const PARAM_MEM_FACTOR: u64 = 4;
         ws.report.peak_mem.clear();
         ws.report.peak_mem.resize(d, 0);
         for (v, node) in g.nodes.iter().enumerate() {

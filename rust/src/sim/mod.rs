@@ -19,9 +19,10 @@ pub use workspace::SimWorkspace;
 
 use crate::graph::OpGraph;
 
-/// Convenience: simulate a placement on the workload's default topology.
+/// Convenience: simulate a placement on the workload's topology (carried
+/// heterogeneous topology if present, else the default P100/PCIe fleet).
 pub fn simulate_default(graph: &OpGraph, placement: &[usize]) -> SimReport {
-    let topo = Topology::p100_pcie(graph.num_devices);
+    let topo = graph.topology();
     Simulator::new(graph, &topo).simulate(placement)
 }
 

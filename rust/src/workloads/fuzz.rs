@@ -86,6 +86,51 @@ fn push_node(nodes: &mut Vec<Json>, rng: &mut Rng, layer: usize) {
     nodes.push(Json::obj(fields));
 }
 
+/// Generate a valid heterogeneous topology object for `d` devices (any
+/// width): mixed CPU/GPU-class specs and, half the time, an explicit
+/// tiered link-bandwidth matrix with the diagonal written as 0 — the
+/// same convention serve's exporter uses, so the importer's diagonal
+/// normalization is exercised too.
+fn gen_topology_value(rng: &mut Rng, d: usize) -> Json {
+    let mut devices = Vec::with_capacity(d);
+    for i in 0..d {
+        let gpu = rng.below(4) != 0; // mostly GPUs, some CPU hosts
+        let (flops, mem, bw) = if gpu {
+            (
+                1e12 * (8 + rng.below(12)) as f64,
+                ((12 + rng.below(21)) as u64) << 30,
+                1e9 * (300 + rng.below(700)) as f64,
+            )
+        } else {
+            (1e12, 64u64 << 30, 100e9)
+        };
+        devices.push(Json::obj(vec![
+            ("name", Json::str(format!("{}:{i}", if gpu { "gpu" } else { "cpu" }))),
+            ("peak_flops", Json::num(flops)),
+            ("mem_bytes", Json::num(mem as f64)),
+            ("mem_bw", Json::num(bw)),
+        ]));
+    }
+    let mut fields = vec![("devices", Json::Arr(devices))];
+    if rng.below(2) == 0 {
+        // NVLink-fast inside the first half of the fleet, PCIe elsewhere.
+        let mut bw = Vec::with_capacity(d * d);
+        for i in 0..d {
+            for j in 0..d {
+                bw.push(Json::num(if i == j {
+                    0.0
+                } else if i < d / 2 && j < d / 2 {
+                    150e9
+                } else {
+                    12e9
+                }));
+            }
+        }
+        fields.push(("link_bw", Json::Arr(bw)));
+    }
+    Json::obj(fields)
+}
+
 /// Generate a valid graph document with roughly `n` nodes. Node ids are
 /// assigned in topological order and every edge goes id-low → id-high,
 /// so the output is a DAG by construction.
@@ -166,7 +211,7 @@ pub fn gen_dag_doc(rng: &mut Rng, n: usize, shape: DagShape) -> String {
         }
     }
 
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(format!("fuzz_{}", shape.key()))),
         ("num_devices", Json::num(num_devices as f64)),
         ("nodes", Json::Arr(nodes)),
@@ -181,8 +226,14 @@ pub fn gen_dag_doc(rng: &mut Rng, n: usize, shape: DagShape) -> String {
                     .collect(),
             ),
         ),
-    ])
-    .to_string()
+    ];
+    // Drawn AFTER the node/edge stream so topology emission never
+    // perturbs the generated structure for a given seed. A third of the
+    // documents carry an explicit heterogeneous topology.
+    if rng.below(3) == 0 {
+        fields.push(("topology", gen_topology_value(rng, num_devices)));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// What the harness expects a case to do (bookkeeping only — the no-
@@ -245,6 +296,19 @@ pub fn mutation_cases(rng: &mut Rng) -> Vec<FuzzCase> {
         .map(|p| (p[0].as_usize().unwrap(), p[1].as_usize().unwrap()))
         .expect("base doc has edges");
     let n_nodes = base.get("nodes").and_then(|x| x.as_arr()).unwrap().len();
+    let nd = base
+        .get("num_devices")
+        .and_then(|x| x.as_usize())
+        .expect("base doc has num_devices");
+    // A well-formed device object (the topology mutations below each
+    // break exactly one thing around it).
+    let topo_dev = |flops: f64| {
+        Json::obj(vec![
+            ("peak_flops", Json::num(flops)),
+            ("mem_bytes", Json::num((16u64 << 30) as f64)),
+            ("mem_bw", Json::num(900e9)),
+        ])
+    };
 
     let mut cases = vec![
         // -- parse class --
@@ -360,6 +424,60 @@ pub fn mutation_cases(rng: &mut Rng) -> Vec<FuzzCase> {
                 let edges = obj(v).get_mut("edges").unwrap();
                 let pair = arr(&mut arr(edges)[0]);
                 pair.push(Json::num(-1.0));
+            }),
+            lim,
+        ),
+        // -- invalid class: device topology --
+        case(
+            "topo_device_count",
+            mutate(&|v| {
+                obj(v).insert(
+                    "topology".into(),
+                    Json::obj(vec![(
+                        "devices",
+                        Json::Arr((0..nd + 1).map(|_| topo_dev(1e13)).collect()),
+                    )]),
+                );
+            }),
+            lim,
+        ),
+        case(
+            "topo_bad_flops",
+            mutate(&|v| {
+                let mut devs: Vec<Json> = (0..nd).map(|_| topo_dev(1e13)).collect();
+                devs[0] = topo_dev(-1.0);
+                obj(v).insert(
+                    "topology".into(),
+                    Json::obj(vec![("devices", Json::Arr(devs))]),
+                );
+            }),
+            lim,
+        ),
+        case(
+            "topo_negative_bw",
+            mutate(&|v| {
+                let mut bw = vec![Json::num(12e9); nd * nd];
+                bw[1] = Json::num(-5.0); // off-diagonal (0, 1)
+                obj(v).insert(
+                    "topology".into(),
+                    Json::obj(vec![
+                        ("devices", Json::Arr((0..nd).map(|_| topo_dev(1e13)).collect())),
+                        ("link_bw", Json::Arr(bw)),
+                    ]),
+                );
+            }),
+            lim,
+        ),
+        case(
+            "topo_matrix_len",
+            mutate(&|v| {
+                obj(v).insert(
+                    "topology".into(),
+                    Json::obj(vec![
+                        ("devices", Json::Arr((0..nd).map(|_| topo_dev(1e13)).collect())),
+                        ("link_bw", Json::Arr(vec![Json::num(12e9); 3])),
+                    ]),
+                );
             }),
             lim,
         ),

@@ -1,0 +1,265 @@
+//! Heterogeneous scenario family (`hx_*`): workloads whose graphs carry a
+//! non-default [`Topology`] — asymmetric compute (CPU + GPU mixes), tiered
+//! interconnects (NVLink islands vs PCIe vs host links) and **binding**
+//! memory capacities (shrunk `mem_bytes` so naive single-device and
+//! memory-blind greedy placements OOM).
+//!
+//! These live outside [`super::registry`] (which stays the paper's 13
+//! homogeneous Table-1 configurations): `by_id`/`spec_by_id` resolve both
+//! families, but the pre-train corpus and Table-1 harnesses only iterate
+//! the homogeneous registry. The `experiment --id hetero` harness and
+//! `tests/baseline_quality.rs` consume this family.
+
+use super::WorkloadSpec;
+use crate::graph::{GraphBuilder, OpGraph, OpKind};
+use crate::sim::{DeviceSpec, Topology};
+
+/// All heterogeneous scenarios. The two `hx_tiny*` graphs are small enough
+/// for the exhaustive optimal baseline (`d^n` under the eval budget); the
+/// rest exercise the contiguous-split DP. `hx_bind_chain` is the
+/// binding-memory scenario: its fastest placement (everything on one
+/// device, zero transfers) OOMs, so every memory-blind placer is
+/// infeasible on it.
+pub fn hetero_registry() -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec {
+            id: "hx_tiny_mix",
+            display: "6-op pipeline, 1 CPU + 2 V100 (3)",
+            num_devices: 3,
+            build: build_tiny_mix,
+        },
+        WorkloadSpec {
+            id: "hx_tiny_nvlink",
+            display: "6-op branched cell, 4 V100 in 2 NVLink islands (4)",
+            num_devices: 4,
+            build: build_tiny_nvlink,
+        },
+        WorkloadSpec {
+            id: "hx_bind_chain",
+            display: "8-op 2 GiB-param chain, 2 V100 capped at 5 GiB (2)",
+            num_devices: 2,
+            build: build_bind_chain,
+        },
+        WorkloadSpec {
+            id: "hx_cpu_gpu_rnn",
+            display: "2-layer RNNLM, 1 CPU + 2 V100 (3)",
+            num_devices: 3,
+            build: build_cpu_gpu_rnn,
+        },
+        WorkloadSpec {
+            id: "hx_nvlink_txl",
+            display: "4-layer Transformer-XL, 4 V100 in 2 NVLink islands (4)",
+            num_devices: 4,
+            build: build_nvlink_txl,
+        },
+        WorkloadSpec {
+            id: "hx_fleet_gnmt",
+            display: "8-layer GNMT, 1 CPU + 7 V100 (8)",
+            num_devices: 8,
+            build: build_fleet_gnmt,
+        },
+    ]
+}
+
+pub fn hetero_ids() -> Vec<&'static str> {
+    hetero_registry().iter().map(|w| w.id).collect()
+}
+
+/// 6-op encoder/decoder pipeline on 1 CPU + 2 V100: small enough for the
+/// exact exhaustive optimum (3^6 = 729 placements), compute-asymmetric
+/// enough that device choice matters.
+fn build_tiny_mix() -> OpGraph {
+    let mut b = GraphBuilder::new("hx_tiny_mix", 3);
+    let inp = b.op("in", OpKind::Input).out_bytes(1 << 20).shape([64, 4096, 0, 0]).id();
+    let emb = b
+        .op("embed", OpKind::Embedding)
+        .flops(2e9)
+        .out_bytes(8 << 20)
+        .params(32 << 20)
+        .after(&[inp])
+        .id();
+    let enc = b
+        .op("enc", OpKind::RnnCell)
+        .flops(4e11)
+        .out_bytes(8 << 20)
+        .params(64 << 20)
+        .layer(1)
+        .after(&[emb])
+        .id();
+    let attn = b
+        .op("attn", OpKind::Attention)
+        .flops(2e11)
+        .out_bytes(8 << 20)
+        .params(16 << 20)
+        .layer(2)
+        .after(&[enc])
+        .id();
+    let dec = b
+        .op("dec", OpKind::RnnCell)
+        .flops(4e11)
+        .out_bytes(8 << 20)
+        .params(64 << 20)
+        .layer(3)
+        .after(&[attn, enc])
+        .id();
+    b.op("loss", OpKind::Loss)
+        .flops(1e9)
+        .out_bytes(4 << 10)
+        .layer(4)
+        .after(&[dec]);
+    let mut g = b.build();
+    g.set_topology(Topology::cpu_gpu(2));
+    g
+}
+
+/// 6-op two-branch cell on 4 V100s split into 2 NVLink islands: the
+/// optimal split keeps each branch inside one island (cross-island links
+/// are PCIe-slow). 4^6 = 4096 placements — still exhaustive.
+fn build_tiny_nvlink() -> OpGraph {
+    let mut b = GraphBuilder::new("hx_tiny_nvlink", 4);
+    let inp = b.op("in", OpKind::Input).out_bytes(16 << 20).shape([32, 2048, 0, 0]).id();
+    let l = b
+        .op("branch_l", OpKind::MatMul)
+        .flops(6e11)
+        .out_bytes(16 << 20)
+        .params(48 << 20)
+        .layer(1)
+        .after(&[inp])
+        .id();
+    let r = b
+        .op("branch_r", OpKind::MatMul)
+        .flops(6e11)
+        .out_bytes(16 << 20)
+        .params(48 << 20)
+        .layer(1)
+        .after(&[inp])
+        .id();
+    let l2 = b
+        .op("branch_l2", OpKind::Attention)
+        .flops(3e11)
+        .out_bytes(16 << 20)
+        .params(16 << 20)
+        .layer(2)
+        .after(&[l])
+        .id();
+    let r2 = b
+        .op("branch_r2", OpKind::Attention)
+        .flops(3e11)
+        .out_bytes(16 << 20)
+        .params(16 << 20)
+        .layer(2)
+        .after(&[r])
+        .id();
+    b.op("join", OpKind::Concat)
+        .out_bytes(32 << 20)
+        .layer(3)
+        .after(&[l2, r2]);
+    let mut g = b.build();
+    g.set_topology(Topology::v100_nvlink(4, 2));
+    g
+}
+
+/// Binding-memory chain: 8 RnnCells x 256 MiB params (1 GiB resident each
+/// under the 4x training factor) on two V100s capped at 5 GiB. Any device
+/// holding >= 5 cells OOMs, so the fastest placement — the whole chain on
+/// one device, zero transfers — is infeasible; only balanced 4/4 splits
+/// are valid. Memory-blind greedy placers pile the chain onto device 0.
+fn build_bind_chain() -> OpGraph {
+    let mut b = GraphBuilder::new("hx_bind_chain", 2);
+    let mut prev = None;
+    for i in 0..8u32 {
+        let mut op = b.op(format!("cell{i}"), OpKind::RnnCell);
+        op = op
+            .flops(2e11)
+            .out_bytes(1 << 20)
+            .params(1 << 28)
+            .layer(i);
+        if let Some(p) = prev {
+            op = op.after(&[p]);
+        }
+        prev = Some(op.id());
+    }
+    let mut g = b.build();
+    g.set_topology(Topology::uniform(
+        vec![
+            name_dev(DeviceSpec::v100().with_mem_bytes(5 << 30), "v100:0"),
+            name_dev(DeviceSpec::v100().with_mem_bytes(5 << 30), "v100:1"),
+        ],
+        crate::sim::device::PCIE_BW,
+        crate::sim::device::PCIE_LAT,
+    ));
+    g
+}
+
+fn name_dev(mut s: DeviceSpec, name: &str) -> DeviceSpec {
+    s.name = name.into();
+    s
+}
+
+fn build_cpu_gpu_rnn() -> OpGraph {
+    let mut g = super::rnnlm::build(2, 3);
+    g.name = "hx_cpu_gpu_rnn".into();
+    g.set_topology(Topology::cpu_gpu(2));
+    g
+}
+
+fn build_nvlink_txl() -> OpGraph {
+    let mut g = super::transformer_xl::build(4, 4);
+    g.name = "hx_nvlink_txl".into();
+    g.set_topology(Topology::v100_nvlink(4, 2));
+    g
+}
+
+fn build_fleet_gnmt() -> OpGraph {
+    let mut g = super::gnmt::build(8, 8);
+    g.name = "hx_fleet_gnmt".into();
+    g.set_topology(Topology::cpu_gpu(7));
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Simulator;
+
+    #[test]
+    fn hetero_registry_buildable_and_carries_topologies() {
+        let reg = hetero_registry();
+        assert!(reg.len() >= 5);
+        for spec in reg {
+            let g = (spec.build)();
+            assert_eq!(g.num_devices, spec.num_devices, "{}", spec.id);
+            assert!(g.validate().is_ok(), "{}: {:?}", spec.id, g.validate());
+            let t = g.carried_topology().unwrap_or_else(|| {
+                panic!("{}: hetero scenario without a topology", spec.id)
+            });
+            t.validate().unwrap();
+            assert_eq!(t.d(), g.num_devices, "{}", spec.id);
+        }
+    }
+
+    #[test]
+    fn ids_do_not_collide_with_registry() {
+        let base: Vec<&str> = super::super::registry().iter().map(|w| w.id).collect();
+        for id in hetero_ids() {
+            assert!(id.starts_with("hx_"), "{id}");
+            assert!(!base.contains(&id), "{id} collides with the registry");
+        }
+    }
+
+    #[test]
+    fn bind_chain_oomes_on_one_device_but_splits_fit() {
+        let g = (hetero_registry()[2].build)();
+        assert_eq!(g.name, "hx_bind_chain");
+        let topo = g.topology();
+        let sim = Simulator::new(&g, &topo);
+        let single = sim.simulate(&vec![0; g.n()]);
+        assert!(!single.valid, "chain should not fit on one capped device");
+        assert_eq!(single.oom_devices, vec![0]);
+        let split: Vec<usize> = (0..g.n()).map(|i| (i >= 4) as usize).collect();
+        let rep = sim.simulate(&split);
+        assert!(rep.valid, "4/4 split must fit: {:?}", rep.peak_mem);
+        // Feasible is necessarily slower: the split pays the cut transfer.
+        assert!(rep.step_time > single.step_time);
+    }
+}

@@ -38,6 +38,7 @@ use std::path::Path;
 
 use crate::graph::{OpGraph, OpKind, OpNode};
 use crate::serve::proto::code;
+use crate::sim::{DeviceSpec, Topology};
 use crate::util::json::{self, Json};
 
 /// Resource caps applied during import. The defaults comfortably admit
@@ -310,11 +311,109 @@ pub fn import_graph_value(
             g.nodes[node].name
         )));
     }
+
+    if let Some(tj) = j.get("topology") {
+        g.set_topology(topology_from_json(tj, num_devices, limits)?);
+    }
+
     // Belt over suspenders: the generic validator re-checks everything
     // above (and anything future fields add) before freeze() may assert.
     g.validate().map_err(invalid)?;
     g.freeze();
     Ok(g)
+}
+
+/// Parse and validate an optional heterogeneous device topology:
+/// `{"devices": [{name?, peak_flops, mem_bytes, mem_bw}; num_devices],
+/// "link_bw"?: [d*d], "link_lat"?: [d*d]}` (row-major matrices; absent
+/// matrices default to the uniform PCIe fleet interconnect; diagonal
+/// entries are ignored and normalized).
+fn topology_from_json(
+    tj: &Json,
+    num_devices: usize,
+    limits: &ImportLimits,
+) -> Result<Topology, ImportError> {
+    if !matches!(tj, Json::Obj(_)) {
+        return Err(invalid("topology must be a JSON object"));
+    }
+    let devices_j = tj
+        .get("devices")
+        .ok_or_else(|| invalid("topology: missing key \"devices\""))?
+        .as_arr()
+        .ok_or_else(|| invalid("topology: devices must be an array"))?;
+    if devices_j.len() != num_devices {
+        return Err(invalid(format!(
+            "topology: has {} devices but num_devices is {num_devices}",
+            devices_j.len()
+        )));
+    }
+    let mut devices = Vec::with_capacity(num_devices);
+    for (i, dj) in devices_j.iter().enumerate() {
+        if !matches!(dj, Json::Obj(_)) {
+            return Err(invalid(format!("topology device {i}: must be a JSON object")));
+        }
+        let field = |key: &str, max: f64| -> Result<f64, ImportError> {
+            dj.get(key)
+                .ok_or_else(|| invalid(format!("topology device {i}: missing key {key:?}")))?
+                .as_f64()
+                .filter(|&f| f.is_finite() && f > 0.0 && f <= max)
+                .ok_or_else(|| {
+                    invalid(format!(
+                        "topology device {i}: {key} must be finite in (0, {max:e}]"
+                    ))
+                })
+        };
+        let mut spec = DeviceSpec::p100();
+        spec.name = dj
+            .get("name")
+            .and_then(|x| x.as_str())
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("dev{i}"));
+        spec.peak_flops = field("peak_flops", limits.max_flops_per_node)?;
+        spec.mem_bytes = field("mem_bytes", limits.max_bytes_per_node)? as u64;
+        spec.mem_bw = field("mem_bw", limits.max_bytes_per_node)?;
+        devices.push(spec);
+    }
+
+    let d = num_devices;
+    let matrix = |key: &str, default: f64, max: f64| -> Result<Vec<f64>, ImportError> {
+        match tj.get(key) {
+            None => Ok(vec![default; d * d]),
+            Some(mj) => {
+                let arr = mj.as_arr().filter(|a| a.len() == d * d).ok_or_else(|| {
+                    invalid(format!(
+                        "topology: {key} must be a flat row-major array of {} numbers",
+                        d * d
+                    ))
+                })?;
+                let mut out = Vec::with_capacity(d * d);
+                for (i, x) in arr.iter().enumerate() {
+                    // Diagonal entries are normalized below; off-diagonal
+                    // must be positive (bandwidth) / non-negative (latency).
+                    let lo_ok = |f: f64| if key == "link_lat" { f >= 0.0 } else { f > 0.0 };
+                    let f = x
+                        .as_f64()
+                        .filter(|&f| {
+                            i / d == i % d || (f.is_finite() && lo_ok(f) && f <= max)
+                        })
+                        .ok_or_else(|| {
+                            invalid(format!(
+                                "topology: {key}[{i}] must be finite in (0, {max:e}]"
+                            ))
+                        })?;
+                    out.push(f);
+                }
+                Ok(out)
+            }
+        }
+    };
+    let link_bw = matrix("link_bw", 12e9, limits.max_bytes_per_node)?;
+    let link_lat = matrix("link_lat", 15e-6, 1.0)?;
+
+    let mut topo = Topology { devices, link_bw, link_lat };
+    topo.normalize_diagonal();
+    topo.validate().map_err(invalid)?;
+    Ok(topo)
 }
 
 fn node_from_json(
@@ -460,6 +559,77 @@ mod tests {
         assert_eq!(g.n(), 3);
         assert_eq!(g.topo_order().len(), 3);
         assert_eq!(g.nodes[1].flops, 1e9);
+    }
+
+    #[test]
+    fn topology_imports_and_is_carried() {
+        let g = import(
+            r#"{"num_devices":2,
+                "nodes":[{"kind":"Input"},{"kind":"MatMul","flops":1e9}],
+                "edges":[[0,1]],
+                "topology":{
+                  "devices":[
+                    {"name":"cpu","peak_flops":1e12,"mem_bytes":6.8719476736e10,"mem_bw":1e11},
+                    {"peak_flops":1.57e13,"mem_bytes":1.7179869184e10,"mem_bw":9e11}],
+                  "link_bw":[0,1e10,1e10,0],
+                  "link_lat":[0,2e-5,2e-5,0]}}"#,
+        )
+        .unwrap();
+        let t = g.carried_topology().expect("topology not carried");
+        assert_eq!(t.d(), 2);
+        assert_eq!(t.devices[0].name, "cpu");
+        assert_eq!(t.devices[1].name, "dev1");
+        assert_eq!(t.devices[1].peak_flops, 1.57e13);
+        assert_eq!(t.bw(0, 1), 1e10);
+        assert_eq!(t.lat(1, 0), 2e-5);
+        // Diagonal normalized regardless of the document's values.
+        assert_eq!(t.bw(0, 0), f64::INFINITY);
+        assert_eq!(t.lat(1, 1), 0.0);
+    }
+
+    #[test]
+    fn topology_link_matrices_default_to_pcie() {
+        let g = import(
+            r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[],
+                "topology":{"devices":[
+                  {"peak_flops":1e12,"mem_bytes":1e9,"mem_bw":1e11}]}}"#,
+        )
+        .unwrap();
+        assert!(g.carried_topology().is_some());
+    }
+
+    #[test]
+    fn bad_topologies_reject_with_invalid() {
+        let cases = [
+            // wrong device count
+            r#"{"num_devices":2,"nodes":[{"kind":"Input"},{"kind":"Input"}],"edges":[],
+                "topology":{"devices":[{"peak_flops":1e12,"mem_bytes":1e9,"mem_bw":1e11}]}}"#,
+            // missing spec field
+            r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[],
+                "topology":{"devices":[{"peak_flops":1e12,"mem_bytes":1e9}]}}"#,
+            // non-finite peak_flops (1e999 parses to inf)
+            r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[],
+                "topology":{"devices":[{"peak_flops":1e999,"mem_bytes":1e9,"mem_bw":1e11}]}}"#,
+            // negative off-diagonal bandwidth
+            r#"{"num_devices":2,"nodes":[{"kind":"Input"},{"kind":"Input"}],"edges":[],
+                "topology":{"devices":[
+                  {"peak_flops":1e12,"mem_bytes":1e9,"mem_bw":1e11},
+                  {"peak_flops":1e12,"mem_bytes":1e9,"mem_bw":1e11}],
+                  "link_bw":[0,-5,1e10,0]}}"#,
+            // wrong matrix length
+            r#"{"num_devices":2,"nodes":[{"kind":"Input"},{"kind":"Input"}],"edges":[],
+                "topology":{"devices":[
+                  {"peak_flops":1e12,"mem_bytes":1e9,"mem_bw":1e11},
+                  {"peak_flops":1e12,"mem_bytes":1e9,"mem_bw":1e11}],
+                  "link_lat":[0,1e-5]}}"#,
+            // topology not an object
+            r#"{"num_devices":1,"nodes":[{"kind":"Input"}],"edges":[],"topology":7}"#,
+        ];
+        for (i, text) in cases.iter().enumerate() {
+            let e = import(text).unwrap_err();
+            assert_eq!(e.kind, ImportErrorKind::Invalid, "case {i}: {}", e.message);
+            assert!(e.message.contains("topology"), "case {i}: {}", e.message);
+        }
     }
 
     #[test]
@@ -629,6 +799,38 @@ mod tests {
             for (a, b) in g.nodes.iter().zip(&back.nodes) {
                 assert_eq!(a.flops.to_bits(), b.flops.to_bits(), "{id}");
                 assert_eq!(a.output_bytes, b.output_bytes);
+            }
+            // Homogeneous registry graphs export without a topology key.
+            assert!(back.carried_topology().is_none(), "{id}");
+        }
+    }
+
+    #[test]
+    fn hetero_scenarios_survive_the_round_trip() {
+        for spec in crate::workloads::hetero::hetero_registry() {
+            let g = (spec.build)();
+            let j = crate::serve::proto::graph_to_json(&g);
+            let back = import_graph_value(&j, &lim()).unwrap();
+            let (a, b) = (g.carried_topology().unwrap(), back.carried_topology().unwrap());
+            assert_eq!(a.d(), b.d(), "{}", spec.id);
+            for (x, y) in a.devices.iter().zip(&b.devices) {
+                assert_eq!(x.name, y.name, "{}", spec.id);
+                assert_eq!(x.peak_flops.to_bits(), y.peak_flops.to_bits());
+                assert_eq!(x.mem_bytes, y.mem_bytes);
+                assert_eq!(x.mem_bw.to_bits(), y.mem_bw.to_bits());
+            }
+            // Off-diagonal links round-trip bit-exactly; the diagonal is
+            // normalized to (inf, 0) on both sides.
+            for i in 0..a.d() {
+                for k in 0..a.d() {
+                    assert_eq!(
+                        a.bw(i, k).to_bits(),
+                        b.bw(i, k).to_bits(),
+                        "{} bw ({i},{k})",
+                        spec.id
+                    );
+                    assert_eq!(a.lat(i, k).to_bits(), b.lat(i, k).to_bits());
+                }
             }
         }
     }

@@ -18,6 +18,7 @@ pub mod amoebanet;
 pub mod corpus;
 pub mod fuzz;
 pub mod gnmt;
+pub mod hetero;
 pub mod import;
 pub mod inception;
 pub mod rnnlm;
@@ -70,12 +71,17 @@ pub fn table1_ids() -> Vec<&'static str> {
     registry().iter().map(|w| w.id).filter(|&id| id != "rnnlm8").collect()
 }
 
+/// Resolve a workload id from the homogeneous registry or the
+/// heterogeneous `hx_*` family ([`hetero::hetero_registry`]).
 pub fn by_id(id: &str) -> Option<OpGraph> {
-    registry().iter().find(|w| w.id == id).map(|w| (w.build)())
+    spec_by_id(id).map(|w| (w.build)())
 }
 
 pub fn spec_by_id(id: &str) -> Option<WorkloadSpec> {
-    registry().into_iter().find(|w| w.id == id)
+    registry()
+        .into_iter()
+        .chain(hetero::hetero_registry())
+        .find(|w| w.id == id)
 }
 
 #[cfg(test)]

@@ -3,7 +3,15 @@
 
 use gdp::baselines::hdp::{HdpConfig, HdpSearch};
 use gdp::baselines::metis::cut_weight;
-use gdp::baselines::{human_expert, metis_place, random_place};
+use gdp::baselines::optimal::OptimalMode;
+use gdp::baselines::{
+    human_expert, metis_place, optimal_place, random_place, topo_greedy_place,
+};
+use gdp::coordinator::{train, TrainConfig};
+use gdp::graph::features::{layout, FeatDims};
+use gdp::policy::PlacementTask;
+use gdp::runtime::native::init_param_store;
+use gdp::runtime::{Dims, NativePolicy};
 use gdp::sim::{simulate_default, Simulator, Topology};
 use gdp::util::Rng;
 use gdp::workloads;
@@ -132,6 +140,82 @@ fn expert_pipelining_beats_random_on_recurrent_models() {
             "{id}: expert {} !< random mean {}",
             hp.step_time,
             rand_mean
+        );
+    }
+}
+
+#[test]
+fn binding_memory_separates_memory_aware_from_blind_placers() {
+    // hx_bind_chain: the globally fastest placement (the whole chain on
+    // one device, zero transfers) OOMs its 5 GiB cap, so the best
+    // FEASIBLE placement is strictly slower than the best infeasible one
+    // — the scenario that makes memory-blindness an error, not a tradeoff.
+    let g = workloads::by_id("hx_bind_chain").unwrap();
+    let single = simulate_default(&g, &vec![0; g.n()]);
+    assert!(!single.valid, "single-device run should OOM");
+
+    let opt = optimal_place(&g);
+    assert_eq!(opt.mode, OptimalMode::Exhaustive); // 2^8 placements
+    assert!(opt.valid, "optimal must return a feasible placement");
+    assert!(
+        opt.step_time > single.step_time,
+        "best feasible ({}) must be slower than the infeasible optimum ({})",
+        opt.step_time,
+        single.step_time
+    );
+
+    // Every memory-aware baseline stays feasible under the binding caps.
+    for (name, p) in [("human", human_expert(&g)), ("metis", metis_place(&g))] {
+        let rep = simulate_default(&g, &p.devices);
+        assert!(rep.valid, "{name} OOMs: {:?}", rep.peak_mem);
+    }
+    let hdp = HdpSearch::new(&g, HdpConfig { steps: 80, seed: 9, ..Default::default() }).run();
+    assert!(hdp.best_valid, "hdp found no feasible placement");
+    assert!(hdp.best_time >= opt.step_time - 1e-12, "hdp beat the exhaustive optimum");
+
+    // The deliberately memory-blind list scheduler does NOT.
+    let greedy = topo_greedy_place(&g);
+    let rep = simulate_default(&g, &greedy.devices);
+    assert!(!rep.valid, "topo-greedy unexpectedly fit the capped devices");
+}
+
+#[test]
+fn gdp_gap_to_optimum_is_bounded_on_tiny_hetero_graphs() {
+    // Short in-suite GDP training on the exhaustively-solvable hx_tiny*
+    // scenarios, scored against the brute-force optimum (verified
+    // bit-exact against an independent enumeration in
+    // tests/optimal_baseline.rs). The optimum is a hard lower bound; GDP
+    // must land within 2x of it on these 6-8-node graphs, and must be
+    // feasible even under hx_bind_chain's binding memory caps.
+    let dims = Dims {
+        f: layout::DEVICE_BLOCK + layout::DEVICE_FEATS * 8,
+        ..Dims::default_aot()
+    };
+    let fd = FeatDims { n: dims.n, k: dims.k, f: dims.f, d: dims.d };
+    let policy = NativePolicy::for_variant(dims, "full").unwrap();
+    for id in ["hx_tiny_mix", "hx_tiny_nvlink", "hx_bind_chain"] {
+        let g = workloads::by_id(id).unwrap();
+        let opt = optimal_place(&g);
+        assert_eq!(opt.mode, OptimalMode::Exhaustive, "{id}");
+        assert!(opt.valid, "{id}: optimal infeasible");
+
+        let task = PlacementTask::new(id, g, fd, 5);
+        let mut store = init_param_store(&policy.manifest, 5).unwrap();
+        let cfg = TrainConfig { steps: 60, seed: 5, verbose: false, ..Default::default() };
+        let res = train(&policy, &mut store, &[task], &cfg).unwrap();
+        let best = &res.per_task[0];
+        assert!(best.best_valid, "{id}: GDP found no feasible placement");
+        assert!(
+            best.best_time >= opt.step_time - 1e-9,
+            "{id}: GDP ({}) beat the exhaustive optimum ({})",
+            best.best_time,
+            opt.step_time
+        );
+        let gap = (best.best_time - opt.step_time) / opt.step_time;
+        assert!(
+            gap <= 1.0,
+            "{id}: GDP gap to optimum {:.1}% exceeds 100%",
+            gap * 100.0
         );
     }
 }

@@ -1,0 +1,113 @@
+//! Device-aware feature contract (graph/features.rs device block):
+//!
+//! 1. Feature rows are invariant under device RENAMING — names are
+//!    cosmetic, only specs and links may influence the policy input.
+//! 2. Rows CHANGE when a device spec changes (the policy can actually
+//!    see heterogeneity).
+//! 3. Homogeneous graphs reproduce the pre-device-block feature bytes
+//!    exactly — both with no topology, with the explicit default
+//!    topology (all-zero block), and at the legacy width F=48 where a
+//!    wide heterogeneous block simply does not fit.
+
+use gdp::graph::features::{featurize, featurize_topo, layout, FeatDims};
+use gdp::sim::Topology;
+use gdp::workloads;
+
+fn dims(f: usize) -> FeatDims {
+    FeatDims { n: 256, k: 8, f, d: 8 }
+}
+
+/// F wide enough for a `d`-device block.
+fn wide_f(d: usize) -> usize {
+    layout::DEVICE_BLOCK + layout::DEVICE_FEATS * d
+}
+
+#[test]
+fn rows_invariant_under_device_renaming() {
+    let g = workloads::by_id("hx_tiny_nvlink").unwrap();
+    let topo = g.carried_topology().unwrap().clone();
+    let fd = dims(wide_f(topo.d()));
+    let base = featurize_topo(&g, Some(&topo), fd, 7);
+
+    let mut renamed = topo.clone();
+    for (i, dev) in renamed.devices.iter_mut().enumerate() {
+        dev.name = format!("totally-different-{i}");
+    }
+    let other = featurize_topo(&g, Some(&renamed), fd, 7);
+    assert_eq!(base.feats, other.feats, "renaming a device changed features");
+    assert_eq!(base.nbr_idx, other.nbr_idx);
+    assert_eq!(base.nbr_mask, other.nbr_mask);
+    assert_eq!(base.node_mask, other.node_mask);
+    assert_eq!(base.dev_mask, other.dev_mask);
+}
+
+#[test]
+fn rows_change_when_a_spec_changes() {
+    let g = workloads::by_id("hx_tiny_nvlink").unwrap();
+    let topo = g.carried_topology().unwrap().clone();
+    let fd = dims(wide_f(topo.d()));
+    let base = featurize_topo(&g, Some(&topo), fd, 7);
+
+    let mut faster = topo.clone();
+    faster.devices[1].peak_flops *= 2.0;
+    let other = featurize_topo(&g, Some(&faster), fd, 7);
+    assert_ne!(base.feats, other.feats, "doubling a device's flops was invisible");
+
+    // The change lands exactly in device 1's flops slot of every real row
+    // and nowhere else.
+    let slot = layout::DEVICE_BLOCK + layout::DEVICE_FEATS;
+    for v in 0..g.n() {
+        let (a, b) = (&base.feats[v * fd.f..(v + 1) * fd.f], &other.feats[v * fd.f..(v + 1) * fd.f]);
+        for i in 0..fd.f {
+            if i == slot {
+                assert_ne!(a[i], b[i], "row {v}: flops slot unchanged");
+            } else {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "row {v} slot {i} drifted");
+            }
+        }
+    }
+
+    // Shrinking memory moves the mem slot; slowing a link moves the
+    // link-bandwidth summary slot.
+    let mut small_mem = topo.clone();
+    small_mem.devices[0].mem_bytes /= 2;
+    let mem = featurize_topo(&g, Some(&small_mem), fd, 7);
+    assert_ne!(
+        base.feats[layout::DEVICE_BLOCK + 1].to_bits(),
+        mem.feats[layout::DEVICE_BLOCK + 1].to_bits()
+    );
+}
+
+#[test]
+fn homogeneous_rows_reproduce_legacy_bytes() {
+    let g = workloads::by_id("hx_tiny_nvlink").unwrap(); // 4 devices
+    let d = g.num_devices;
+
+    // (a) Explicit default P100/PCIe fleet == no topology at all, at a
+    // width where the block WOULD fit: every block entry is a log-ratio
+    // against the P100/PCIe reference, so the block is exactly zero.
+    let fd = dims(wide_f(d));
+    let legacy = featurize(&g, fd, 3);
+    let explicit = featurize_topo(&g, Some(&Topology::p100_pcie(d)), fd, 3);
+    assert_eq!(legacy.feats, explicit.feats, "default fleet produced a nonzero block");
+
+    // (b) At the legacy width F=48 a 4-device block does not fit, so even
+    // a genuinely heterogeneous topology leaves the bytes untouched —
+    // existing F=48 checkpoints stay valid on these graphs.
+    let fd48 = dims(48);
+    let legacy48 = featurize(&g, fd48, 3);
+    let hetero48 =
+        featurize_topo(&g, Some(&Topology::v100_nvlink(d, 2)), fd48, 3);
+    assert_eq!(legacy48.feats, hetero48.feats);
+
+    // (c) Everything past the documented layout is zero in legacy rows.
+    for v in 0..g.n() {
+        for (i, x) in legacy48.feats[v * fd48.f..(v + 1) * fd48.f]
+            .iter()
+            .enumerate()
+            .skip(layout::USED)
+        {
+            assert_eq!(*x, 0.0, "row {v} slot {i} not zero");
+        }
+    }
+}

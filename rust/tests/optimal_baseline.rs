@@ -1,0 +1,168 @@
+//! The optimal baseline's correctness contract: on every graph small
+//! enough for exhaustive enumeration, `baselines::optimal` must return
+//! the brute-force `d^n` optimum BIT-EXACTLY — same step time, same
+//! feasibility flag, same placement (both enumerate lexicographically,
+//! so even exact ties must agree). Checked over a seeded battery of
+//! random <= 8-node DAGs, homogeneous AND heterogeneous, plus the DP's
+//! lower-bound relationship to the exhaustive optimum.
+
+use gdp::baselines::optimal::{
+    dp_place, optimal_place, OptimalConfig, OptimalMode,
+};
+use gdp::graph::{OpGraph, OpKind, OpNode};
+use gdp::sim::{DeviceSpec, Simulator, Topology};
+use gdp::util::Rng;
+
+const KINDS: &[OpKind] = &[
+    OpKind::MatMul,
+    OpKind::RnnCell,
+    OpKind::Attention,
+    OpKind::Elementwise,
+    OpKind::Conv2D,
+];
+
+/// Random connected DAG with `n` nodes: a chain (so every node is
+/// reachable) plus random forward skip edges.
+fn rand_graph(rng: &mut Rng, n: usize, d: usize) -> OpGraph {
+    let mut g = OpGraph::new(format!("battery_{n}n_{d}d"), d);
+    for i in 0..n {
+        let mut node = OpNode::new(format!("n{i}"), KINDS[rng.below(KINDS.len())]);
+        node.flops = 10f64.powf(9.0 + 3.0 * rng.next_f64()); // 1e9..1e12
+        node.output_bytes = 1u64 << (10 + rng.below(12)); // 1 KiB..2 MiB
+        if rng.below(3) == 0 {
+            node.param_bytes = 1u64 << (18 + rng.below(6));
+        }
+        node.layer = (i / 2) as u32;
+        g.nodes.push(node);
+    }
+    for i in 1..n {
+        g.edges.push((i as u32 - 1, i as u32));
+    }
+    for u in 0..n {
+        for v in (u + 2)..n {
+            if rng.below(4) == 0 {
+                g.edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    g.freeze();
+    g
+}
+
+/// A deliberately asymmetric topology for `d` devices (distinct compute
+/// classes and tiered links — nothing the homogeneous default shares).
+fn hetero_topology(rng: &mut Rng, d: usize) -> Topology {
+    match d {
+        3 => Topology::cpu_gpu(2),
+        4 => Topology::v100_nvlink(4, 2),
+        _ => {
+            let devices = (0..d)
+                .map(|i| {
+                    let mut s = if i % 2 == 0 { DeviceSpec::v100() } else { DeviceSpec::p100() };
+                    s.peak_flops *= 1.0 + 0.25 * rng.below(4) as f64;
+                    s
+                })
+                .collect();
+            Topology::uniform(devices, 12e9, 15e-6)
+        }
+    }
+}
+
+/// Independent brute force: enumerate all `d^n` placements by integer
+/// code (node 0 most significant — the same lexicographic order the
+/// odometer in `optimal.rs` uses, so tie-breaks are comparable),
+/// feasibility-first with strict improvement.
+fn brute_force(g: &OpGraph) -> (Vec<usize>, f64, bool, usize) {
+    let n = g.n();
+    let d = g.num_devices;
+    let topo = g.topology();
+    let sim = Simulator::new(g, &topo);
+    let total = (d as u64).pow(n as u32);
+    let mut best = vec![0usize; n];
+    let mut best_time = f64::INFINITY;
+    let mut best_valid = false;
+    for code in 0..total {
+        let mut p = vec![0usize; n];
+        let mut c = code;
+        for i in (0..n).rev() {
+            p[i] = (c % d as u64) as usize;
+            c /= d as u64;
+        }
+        let rep = sim.simulate(&p);
+        let wins = if rep.valid != best_valid { rep.valid } else { rep.step_time < best_time };
+        if wins {
+            best_valid = rep.valid;
+            best_time = rep.step_time;
+            best = p;
+        }
+    }
+    (best, best_time, best_valid, total as usize)
+}
+
+fn check_graph(g: &OpGraph, label: &str) {
+    let (bf_place, bf_time, bf_valid, bf_evals) = brute_force(g);
+    let r = optimal_place(g);
+    assert_eq!(r.mode, OptimalMode::Exhaustive, "{label}: wrong mode");
+    assert_eq!(r.evals, bf_evals, "{label}: eval count");
+    assert_eq!(r.valid, bf_valid, "{label}: feasibility");
+    assert_eq!(
+        r.step_time.to_bits(),
+        bf_time.to_bits(),
+        "{label}: optimal {} != brute force {}",
+        r.step_time,
+        bf_time
+    );
+    assert_eq!(r.placement.devices, bf_place, "{label}: placement");
+}
+
+#[test]
+fn optimal_matches_brute_force_homogeneous() {
+    let mut rng = Rng::new(0x0971_1A1);
+    for case in 0..12usize {
+        let n = 2 + rng.below(7); // 2..=8
+        let d = 2 + rng.below(if n <= 6 { 3 } else { 2 }); // keep d^n small
+        let g = rand_graph(&mut rng, n, d);
+        check_graph(&g, &format!("homog case {case} ({n}n, {d}d)"));
+    }
+}
+
+#[test]
+fn optimal_matches_brute_force_heterogeneous() {
+    let mut rng = Rng::new(0x4E7E_60);
+    for case in 0..12usize {
+        let n = 2 + rng.below(7);
+        let d = 2 + rng.below(if n <= 6 { 3 } else { 2 });
+        let mut g = rand_graph(&mut rng, n, d);
+        g.set_topology(hetero_topology(&mut rng, d));
+        check_graph(&g, &format!("hetero case {case} ({n}n, {d}d)"));
+    }
+}
+
+#[test]
+fn dp_never_beats_the_exhaustive_optimum() {
+    // The DP is optimal only within the contiguous-split family, so its
+    // (re-simulated) time is a valid upper bound on the true optimum —
+    // never below it. Checked on both homogeneous and heterogeneous
+    // graphs from the same generator.
+    let mut rng = Rng::new(0xDB_0B0);
+    let cfg = OptimalConfig { max_exhaustive_evals: 0, ..Default::default() };
+    for case in 0..8usize {
+        let n = 4 + rng.below(5); // 4..=8
+        let d = 2 + rng.below(2);
+        let mut g = rand_graph(&mut rng, n, d);
+        if case % 2 == 1 {
+            g.set_topology(hetero_topology(&mut rng, d));
+        }
+        let (_, bf_time, bf_valid, _) = brute_force(&g);
+        let dp = dp_place(&g, &cfg);
+        assert_eq!(dp.mode, OptimalMode::ContiguousDp);
+        if bf_valid && dp.valid {
+            assert!(
+                dp.step_time >= bf_time - 1e-12,
+                "case {case}: dp {} beat the true optimum {}",
+                dp.step_time,
+                bf_time
+            );
+        }
+    }
+}

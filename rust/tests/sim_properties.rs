@@ -256,3 +256,61 @@ fn placement_helpers_consistent() {
 fn from_hex_hack(s: &str) -> u64 {
     s.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64))
 }
+
+#[test]
+fn binding_memory_peaks_are_exact_on_the_hetero_chain() {
+    // hx_bind_chain pins the engine's memory model end-to-end: 8 cells of
+    // 256 MiB params (x4 training factor) + 1 MiB activations on two
+    // V100s capped at 5 GiB. The numbers below are the model's closed
+    // form — any drift in PARAM_MEM_FACTOR, activation accounting or the
+    // received-copy dedup changes them.
+    let g = workloads::by_id("hx_bind_chain").unwrap();
+    let topo = g.topology();
+    let sim = Simulator::new(&g, &topo);
+    let cell: u64 = 4 * (1 << 28) + (1 << 20); // resident bytes per cell
+    let cap: u64 = 5 << 30;
+    assert_eq!(topo.devices[0].mem_bytes, cap);
+    assert_eq!(topo.devices[1].mem_bytes, cap);
+
+    // All on one device: fastest (zero transfers) but over the cap.
+    let single = sim.simulate(&vec![0; g.n()]);
+    assert!(!single.valid);
+    assert_eq!(single.oom_devices, vec![0]);
+    assert_eq!(single.peak_mem, vec![8 * cell, 0]);
+
+    // Balanced 4/4 split: device 1 additionally holds exactly one
+    // received copy (cell3's 1 MiB output crossing the cut).
+    let split: Vec<usize> = (0..g.n()).map(|i| usize::from(i >= 4)).collect();
+    let rep = sim.simulate(&split);
+    assert!(rep.valid, "{:?}", rep.oom_devices);
+    assert_eq!(rep.peak_mem, vec![4 * cell, 4 * cell + (1 << 20)]);
+
+    // The feasible split is strictly slower than the infeasible
+    // single-device run: memory caps genuinely bind the optimum.
+    assert!(rep.step_time > single.step_time);
+}
+
+#[test]
+fn heterogeneous_topologies_uphold_simulator_invariants() {
+    // The random-placement invariants hold on carried (non-default)
+    // topologies too: finite positive step times and memory conservation
+    // regardless of how asymmetric the fleet is.
+    for id in ["hx_tiny_mix", "hx_tiny_nvlink", "hx_bind_chain"] {
+        let g = workloads::by_id(id).unwrap();
+        let topo = g.topology();
+        let sim = Simulator::new(&g, &topo);
+        prop::check(12, from_hex_hack(id), |gen| {
+            let p = gen.placement(g.n(), g.num_devices);
+            let rep = sim.simulate(&p);
+            if !rep.step_time.is_finite() || rep.step_time <= 0.0 {
+                return Err(format!("{id}: non-finite step time"));
+            }
+            let total: u64 = rep.peak_mem.iter().sum();
+            let expect = 4 * g.total_param_bytes() + g.total_output_bytes();
+            if total < expect {
+                return Err(format!("{id}: peak mem {total} < conserved {expect}"));
+            }
+            Ok(())
+        });
+    }
+}
